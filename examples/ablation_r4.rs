@@ -1,0 +1,36 @@
+//! Ablation example (paper Appendix A.2 / Table 2): local rotation on
+//! the *online* R4 — helps under activation quantization (W2A4), ~noise
+//! under weight-only (W2). Prints the 2×2 grid plus the per-config PPL
+//! deltas, and notes the TPU-systems observation from DESIGN.md §5
+//! (grouped transforms tile *better* than global ones, unlike on GPU).
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example ablation_r4 [windows]`
+
+use std::path::Path;
+
+use gsr::eval::tables::{table2, EvalOpts};
+
+fn main() {
+    let windows = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let opts = EvalOpts { windows, tasks_per_kind: 0 };
+    match table2(dir, opts) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("Reading: R4 GH→LH should move the W2A4 column much more than W2.");
+            println!();
+            println!("Systems note (DESIGN.md §5): the paper reports local R4 defeats the");
+            println!("CUDA fast-hadamard-transform; with VMEM/BlockSpec tiling the grouped");
+            println!("butterfly is *more* parallel — see `cargo bench --bench transform_perf`.");
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

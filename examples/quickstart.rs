@@ -1,0 +1,74 @@
+//! Quickstart: the GSR library in five minutes, no artifacts needed.
+//!
+//! Builds the paper's four R1 rotations, shows the sequency structure,
+//! quantizes a structured weight under each, and prints why GSR wins —
+//! the whole §3.2/Fig.2 story through the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gsr::analysis::sequency::structured_weight;
+use gsr::analysis::{outlier_spread, sequency_variance_report};
+use gsr::quant::{gptq_quantize, rtn_quantize};
+use gsr::rng::SplitMix64;
+use gsr::transform::{build_r1, hadamard, walsh, Mat, R1Kind};
+
+fn main() {
+    // 1. Sequency ordering: Walsh = Hadamard rows sorted by sign flips.
+    let h = hadamard(8);
+    let w = walsh(8);
+    println!("Hadamard (natural order) row sequencies:");
+    let seq = |m: &Mat| -> Vec<u32> {
+        (0..8).map(|i| gsr::transform::sequency::sequency_of_row(m.row(i))).collect()
+    };
+    println!("  H8: {:?}  (the paper's 0,7,3,4,1,6,2,5 example)", seq(&h));
+    println!("  W8: {:?}  (ascending — the Walsh re-ordering)\n", seq(&w));
+
+    // 2. The four R1 kinds of Table 1.
+    let (n, group) = (256, 64);
+    println!("R1 kinds on d={n}, group={group}:");
+    for kind in R1Kind::ALL {
+        let mut rng = SplitMix64::new(42);
+        let r = build_r1(kind, n, group, &mut rng);
+        println!(
+            "  {kind:4}  orthogonality defect {:.1e}  local={}",
+            r.orthogonality_defect(),
+            kind.is_local()
+        );
+    }
+
+    // 3. §3.2 — sequency variance drives group-quant error.
+    println!("\nIntra-group sequency variance → 2-bit group-RTN error:");
+    for r in sequency_variance_report(n, group, 64, 2, 7) {
+        println!(
+            "  {:4}  variance {:>8.2}   rotated-weight MSE {:.4e}",
+            r.kind.to_string(),
+            r.mean_group_variance,
+            r.rotated_quant_mse
+        );
+    }
+
+    // 4. Fig. 2 — outlier confinement.
+    println!("\nOutlier energy spread (participation ratio / in-group fraction):");
+    for s in outlier_spread(n, group, 11) {
+        println!(
+            "  {:4}  PR {:>6.1}   in-group {:.3}",
+            s.kind.to_string(),
+            s.participation_ratio,
+            s.in_group_energy
+        );
+    }
+
+    // 5. End to end on one weight: rotate → GPTQ → measure.
+    println!("\n2-bit GPTQ error on a structured weight (identity Hessian):");
+    let weight = structured_weight(n, 64, 5);
+    let base = rtn_quantize(&weight, 2, group, true).mse(&weight);
+    println!("  no rotation: {base:.4e}");
+    for kind in R1Kind::ALL {
+        let mut rng = SplitMix64::new(77);
+        let r1 = build_r1(kind, n, group, &mut rng);
+        let rotated = r1.transpose().matmul(&weight);
+        let q = gptq_quantize(&rotated, &Mat::identity(n), 2, group, true);
+        println!("  {kind:4}       : {:.4e}", q.mse(&rotated));
+    }
+    println!("\nNext: `make artifacts` then `cargo run --release --example reproduce_table1`");
+}

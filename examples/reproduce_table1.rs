@@ -1,0 +1,39 @@
+//! **End-to-end driver** (DESIGN.md §4): loads the AOT-quantized model
+//! variants through the PJRT runtime, evaluates perplexity on the
+//! held-out corpus split and zero-shot accuracy on the task suite, and
+//! prints the paper's Table 1 — the headline experiment of the
+//! reproduction. Also records fp (W16A16) as the ceiling row.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example reproduce_table1 [windows] [tasks]`
+
+use std::path::Path;
+
+use gsr::eval::tables::{table1, EvalOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let windows = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let tasks = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let opts = EvalOpts { windows, tasks_per_kind: tasks };
+    let t0 = std::time::Instant::now();
+    match table1(dir, opts, true) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("evaluated in {:?} with {opts:?}", t0.elapsed());
+            println!();
+            println!("Shape expectations (paper, Llama-2-7B):");
+            println!("  within each method/bits block, PPL: GH ≥ GW ≥ LH ≥ GSR;");
+            println!("  0-shot accuracy reversed; GSR training-free ≈ learned pipelines.");
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

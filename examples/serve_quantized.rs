@@ -1,0 +1,78 @@
+//! Serving example: run the L3 coordinator with multiple quantized
+//! variants resident, fire a mixed request load, and report batching
+//! efficiency + latency percentiles — the vLLM-router-shaped deployment
+//! story for GSR-quantized models.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example serve_quantized [n_requests]`
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use gsr::coordinator::{BatchPolicy, Request, RoutePolicy, Router, Server};
+use gsr::runtime::Artifacts;
+
+fn main() {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let dir = Path::new("artifacts");
+    let arts = match Artifacts::load(dir) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("run `make artifacts` first ({e})");
+            std::process::exit(1);
+        }
+    };
+    // Serve fp next to the best training-free variant (GSR) and the
+    // QuaRot baseline — a realistic A/B deployment.
+    let mut variants = vec!["fp".to_string()];
+    for name in ["quarot_w2a16_gsr_r4gh", "quarot_w2a16_gh_r4gh"] {
+        if arts.variant(name).is_some() {
+            variants.push(name.to_string());
+        }
+    }
+    println!("starting server with {} resident variants: {variants:?}", variants.len());
+    let policy = BatchPolicy { max_batch: arts.batch, max_wait: Duration::from_millis(3) };
+    let server = Server::start(dir, &variants, policy).expect("server start");
+
+    // Router assigns unpinned requests round-robin across variants.
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    for v in &variants {
+        router.register(v);
+    }
+
+    let seq = arts.seq;
+    let text = arts.test_split().to_vec();
+    let t0 = Instant::now();
+    let mut replies = Vec::new();
+    for i in 0..n_requests {
+        let variant = router.route(None).unwrap();
+        let start = (i * 53) % (text.len() - seq - 1);
+        let tokens: Vec<i32> = text[start..start + seq].iter().map(|&b| b as i32).collect();
+        let (tx, rx) = mpsc::channel();
+        server
+            .submit(Request { variant: variant.clone(), tokens, reply: tx })
+            .expect("submit");
+        replies.push((variant, rx));
+    }
+    let mut ok = 0;
+    for (variant, rx) in replies {
+        let resp = rx.recv().expect("reply");
+        match resp.logits {
+            Ok(logits) => {
+                assert_eq!(logits.len(), seq * arts.cfg.vocab);
+                ok += 1;
+            }
+            Err(e) => eprintln!("{variant}: {e}"),
+        }
+        router.complete(&variant);
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    println!("completed {ok}/{n_requests} requests in {wall:?}");
+    println!("{}", metrics.report(wall));
+    println!(
+        "router drained cleanly: total in-flight = {}",
+        router.total_in_flight()
+    );
+}

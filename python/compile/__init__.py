@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model, Pallas kernels, PTQ pipelines, AOT export.
+
+Nothing in this package runs at request time — `make artifacts` invokes it
+once; the Rust coordinator consumes only `artifacts/`.
+"""

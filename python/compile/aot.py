@@ -1,0 +1,220 @@
+"""AOT build driver: corpus → train → quantize sweep → HLO text + manifest.
+
+``make artifacts`` runs ``python -m compile.aot --out-dir ../artifacts``
+exactly once; every product is cached (re-runs are incremental no-ops
+unless ``--force``). The Rust binary consumes only the output directory.
+
+Interchange format is **HLO text** (not serialized HloModuleProto): the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .corpus import SEED_CORPUS, generate_corpus
+from .model import (
+    ModelCfg,
+    fp_param_spec,
+    make_fp_forward,
+    make_quant_forward,
+    quant_param_spec,
+)
+from .quantize import (
+    A_BITS,
+    all_variants,
+    calib_tokens,
+    capture_fp_sites,
+    quantize_variant,
+    sanity_ppl,
+    shared_rotations,
+    variant_name,
+    write_blob,
+)
+from .train import train
+
+BATCH = 4
+SEQ = 128
+CORPUS_BYTES = 1 << 20
+TRAIN_FRAC = 0.9
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_graph(fn, spec, out_path: str) -> None:
+    """Lower ``fn(tokens, *params)`` at the fixed eval shape → HLO text."""
+    dt = {"f32": jnp.float32, "u8": jnp.uint8}
+    tokens_spec = jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32)
+    param_specs = [jax.ShapeDtypeStruct(shape, dt[d]) for _, shape, d in spec]
+    lowered = jax.jit(fn).lower(tokens_spec, *param_specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {out_path} ({len(text)/1e6:.1f} MB)")
+
+
+def write_fp_blob(params, cfg: ModelCfg, path: str) -> None:
+    with open(path, "wb") as f:
+        for name, shape, _dt in fp_param_spec(cfg):
+            if name.startswith("layers."):
+                _, idx, field = name.split(".")
+                t = params["layers"][int(idx)][field]
+            else:
+                t = params[name]
+            f.write(np.ascontiguousarray(np.asarray(t, np.float32).reshape(shape)).tobytes())
+
+
+def read_fp_blob(path: str, cfg: ModelCfg):
+    params: dict = {"layers": [{} for _ in range(cfg.n_layers)]}
+    with open(path, "rb") as f:
+        for name, shape, _dt in fp_param_spec(cfg):
+            n = int(np.prod(shape))
+            arr = np.frombuffer(f.read(n * 4), np.float32).reshape(shape)
+            t = jnp.asarray(arr)
+            if name.startswith("layers."):
+                _, idx, field = name.split(".")
+                params["layers"][int(idx)][field] = t
+            else:
+                params[name] = t
+    return params
+
+
+def spec_json(spec):
+    return [[name, list(shape), dt] for name, shape, dt in spec]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=600, help="training steps")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variants", default="", help="comma list to restrict (debug)")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(f"{out}/variants", exist_ok=True)
+    cfg = ModelCfg()
+    t_start = time.time()
+
+    # 1. Corpus ------------------------------------------------------------
+    corpus_path = f"{out}/corpus.bin"
+    if args.force or not os.path.exists(corpus_path):
+        corpus = generate_corpus(CORPUS_BYTES)
+        with open(corpus_path, "wb") as f:
+            f.write(corpus)
+        print(f"[aot] corpus {len(corpus)} bytes")
+    else:
+        corpus = open(corpus_path, "rb").read()
+    n_train = int(len(corpus) * TRAIN_FRAC)
+
+    # 2. Train (cached) ----------------------------------------------------
+    fp_path = f"{out}/model_fp.bin"
+    train_log_path = f"{out}/train_log.json"
+    if args.force or not os.path.exists(fp_path):
+        params, log = train(cfg, corpus[:n_train], steps=args.steps)
+        write_fp_blob(params, cfg, fp_path)
+        with open(train_log_path, "w") as f:
+            json.dump({"steps": args.steps, "log": log}, f, indent=1)
+    else:
+        params = read_fp_blob(fp_path, cfg)
+        print("[aot] loaded cached fp checkpoint")
+
+    # 3. HLO graphs ----------------------------------------------------------
+    graphs: dict[str, dict] = {}
+    fp_fn, fp_spec = make_fp_forward(cfg)
+    fp_hlo = "llama_mini_fp.hlo.txt"
+    if args.force or not os.path.exists(f"{out}/{fp_hlo}"):
+        export_graph(fp_fn, fp_spec, f"{out}/{fp_hlo}")
+    graphs["fp"] = {"hlo": fp_hlo, "params": spec_json(fp_spec)}
+    for bits, a_bits in A_BITS.items():
+        for r4k in ("GH", "LH"):
+            gname = f"{bits}_r4{r4k.lower()}"
+            hlo = f"llama_mini_{gname}.hlo.txt"
+            qfn, qspec = make_quant_forward(cfg, a_bits, r4k)
+            if args.force or not os.path.exists(f"{out}/{hlo}"):
+                export_graph(qfn, qspec, f"{out}/{hlo}")
+            graphs[gname] = {"hlo": hlo, "params": spec_json(qspec)}
+
+    # 4. Variant sweep -------------------------------------------------------
+    shared = shared_rotations(cfg)
+    calib = calib_tokens(corpus, n_train)
+    fp_sites = capture_fp_sites(params, cfg, jnp.asarray(calib))
+    only = set(filter(None, args.variants.split(",")))
+    variants_meta = []
+    for vs in all_variants():
+        name = variant_name(vs["method"], vs["bits"], vs["r1"], vs["r4"])
+        if only and name not in only:
+            continue
+        vdir = f"{out}/variants/{name}"
+        os.makedirs(vdir, exist_ok=True)
+        meta_path = f"{vdir}/meta.json"
+        if not args.force and os.path.exists(meta_path):
+            variants_meta.append(json.load(open(meta_path)))
+            print(f"[aot] cached {name}")
+            continue
+        t0 = time.time()
+        qparams, meta = quantize_variant(params, cfg, vs, shared, calib, fp_sites)
+        write_blob(qparams, cfg, vs["r4"], f"{vdir}/weights.bin")
+        meta["name"] = name
+        meta["graph"] = f"{vs['bits']}_r4{vs['r4'].lower()}"
+        meta["weights"] = f"variants/{name}/weights.bin"
+        meta["sanity_ppl"] = sanity_ppl(
+            qparams, cfg, corpus, A_BITS[vs["bits"]], vs["r4"], n_train
+        )
+        meta["quantize_s"] = round(time.time() - t0, 1)
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=1)
+        variants_meta.append(meta)
+        print(
+            f"[aot] {name}: sanity PPL {meta['sanity_ppl']:.2f} "
+            f"({meta['quantize_s']}s)"
+        )
+
+    # 5. Manifest ------------------------------------------------------------
+    manifest = {
+        "cfg": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ffn": cfg.d_ffn,
+            "group": cfg.group,
+            "rope_base": cfg.rope_base,
+            "norm_eps": cfg.norm_eps,
+        },
+        "batch": BATCH,
+        "seq": SEQ,
+        "corpus": {
+            "path": "corpus.bin",
+            "bytes": len(corpus),
+            "seed": SEED_CORPUS,
+            "train_end": n_train,
+            "test_start": n_train,
+        },
+        "fp_weights": "model_fp.bin",
+        "graphs": graphs,
+        "variants": variants_meta,
+    }
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest with {len(variants_meta)} variants "
+          f"({time.time()-t_start:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Synthetic Zipf–Markov byte corpus (WikiText-2 stand-in).
+
+The paper evaluates PPL on WikiText-2; this environment has no external
+data, so we generate a deterministic corpus with enough structure that a
+small trained LM has meaningful perplexity and quantization damage is
+measurable (see DESIGN.md §2).
+
+The generator is specified exactly — SplitMix64 PRNG, fixed lexicon and
+bigram-preference construction — and is mirrored bit-for-bit by
+``rust/src/data/corpus.rs`` so the Rust evaluator and the zero-shot task
+suite sample from the same language. Cross-language equality is asserted
+by ``rust/tests/integration.rs`` against ``artifacts/corpus.bin``.
+
+Language model structure:
+* 256-word lexicon, lengths 2–7, letters a–z. Unigram frequencies are
+  Zipfian with exponent 0.7 (``w_i ∝ 1/(i+1)^0.7`` — flatter than
+  classic Zipf, keeping per-token entropy high so that quantization
+  damage lands on real prediction margins rather than being absorbed by
+  a saturated model).
+* Bigram grammar: each word has 12 preferred successors; with
+  probability 1/2 the next word is one of them (uniform), else a fresh
+  Zipf draw.
+* Sentences of 4–12 words joined by ``' '`` and terminated by ``'. '``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+LEXICON_SIZE = 256
+N_SUCC = 12
+ZIPF_EXP = 0.7
+SEED_CORPUS = 0x5EED_C0DE_2025
+
+
+class SplitMix64:
+    """SplitMix64 — tiny, seedable, trivially portable PRNG.
+
+    Mirrored in ``rust/src/rng.rs``; both sides must produce identical
+    streams for corpus/task determinism across languages.
+    """
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_below(self, n: int) -> int:
+        """Unbiased-enough modular draw (n << 2^64 here)."""
+        return self.next_u64() % n
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53-bit mantissa."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def build_lexicon(rng: SplitMix64) -> list[bytes]:
+    """The fixed 256-word lexicon (drawn first from the corpus stream)."""
+    words = []
+    for _ in range(LEXICON_SIZE):
+        length = 2 + rng.next_below(6)
+        words.append(bytes(ord("a") + rng.next_below(26) for _ in range(length)))
+    return words
+
+
+def build_bigram(rng: SplitMix64) -> list[list[int]]:
+    """Preferred-successor table: ``N_SUCC`` successors per word."""
+    return [
+        [rng.next_below(LEXICON_SIZE) for _ in range(N_SUCC)]
+        for _ in range(LEXICON_SIZE)
+    ]
+
+
+def zipf_cumulative() -> np.ndarray:
+    w = 1.0 / np.arange(1, LEXICON_SIZE + 1, dtype=np.float64) ** ZIPF_EXP
+    c = np.cumsum(w)
+    return c / c[-1]
+
+
+def zipf_draw(rng: SplitMix64, cum: np.ndarray) -> int:
+    return int(np.searchsorted(cum, rng.next_f64(), side="right"))
+
+
+class CorpusGenerator:
+    """Streaming generator of corpus bytes (see module docstring)."""
+
+    def __init__(self, seed: int = SEED_CORPUS) -> None:
+        rng = SplitMix64(seed)
+        self.lexicon = build_lexicon(rng)
+        self.bigram = build_bigram(rng)
+        self.cum = zipf_cumulative()
+        self.rng = rng
+        self.prev = 0
+
+    def next_word_idx(self) -> int:
+        if self.rng.next_below(2) < 1:  # p = 1/2: grammar-preferred successor
+            idx = self.bigram[self.prev][self.rng.next_below(N_SUCC)]
+        else:  # p = 1/2: fresh Zipf draw
+            idx = zipf_draw(self.rng, self.cum)
+        self.prev = idx
+        return idx
+
+    def sentence(self) -> bytes:
+        n = 4 + self.rng.next_below(9)
+        words = [self.lexicon[self.next_word_idx()] for _ in range(n)]
+        return b" ".join(words) + b". "
+
+    def generate(self, n_bytes: int) -> bytes:
+        parts: list[bytes] = []
+        total = 0
+        while total < n_bytes:
+            s = self.sentence()
+            parts.append(s)
+            total += len(s)
+        return b"".join(parts)[:n_bytes]
+
+
+def generate_corpus(n_bytes: int, seed: int = SEED_CORPUS) -> bytes:
+    return CorpusGenerator(seed).generate(n_bytes)
+
+
+if __name__ == "__main__":
+    import sys
+
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 1 << 20
+    out = sys.argv[2] if len(sys.argv) > 2 else "artifacts/corpus.bin"
+    data = generate_corpus(n)
+    with open(out, "wb") as f:
+        f.write(data)
+    print(f"wrote {len(data)} bytes to {out}; sample: {data[:80]!r}")

@@ -1,0 +1,170 @@
+"""GPTQ (Frantar et al., 2022) with group quantization and MSE clipping.
+
+The weight quantizer used by all three pipelines in the paper's Table 1
+(QuaRot applies it directly; our SpinQuant/OSTQuant reimplementations
+apply it after their learned transforms — see DESIGN.md §2).
+
+Conventions (matching model.py): a linear is ``out = x @ W`` with
+``W ∈ R^{C×H}`` (C input channels, H output channels). Quantization
+groups span ``G`` consecutive *input* channels per output channel —
+the grouping Observation #1 in the paper reasons about. GPTQ therefore
+walks input channels in order, propagating the quantization error of
+channel ``c`` into the not-yet-quantized channels ``c+1..`` through the
+inverse Hessian (``Hess = Xᵀ X`` over calibration activations).
+
+Mirrored (RTN + pack + dequant parts) by ``rust/src/quant/``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DAMP_FRAC = 0.01
+CLIP_GRID = np.linspace(0.4, 1.0, 13)
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """GPTQ output for one linear: codes + per-group affine params."""
+
+    codes: np.ndarray  # int32 [C, H], values in [0, 2^bits)
+    scale: np.ndarray  # f32  [C/G, H]
+    zero: np.ndarray  # f32  [C/G, H]
+    group: int
+    bits: int
+
+    def dequant(self) -> np.ndarray:
+        c, h = self.codes.shape
+        g = self.group
+        cg = self.codes.reshape(c // g, g, h).astype(np.float64)
+        w = (cg - self.zero[:, None, :]) * self.scale[:, None, :]
+        return w.reshape(c, h)
+
+
+def _group_params(
+    wg: np.ndarray, bits: int, mse_clip: bool
+) -> tuple[np.ndarray, np.ndarray]:
+    """Scale/zero for one ``[G, H]`` group (asymmetric, optional MSE clip).
+
+    The MSE clip searches a shrink factor per output channel over
+    ``CLIP_GRID`` minimizing reconstruction MSE (paper A.1: "asymmetric
+    weight quantization, MSE-based clipping").
+    """
+    qmax = (1 << bits) - 1
+    lo = wg.min(axis=0)  # [H]
+    hi = wg.max(axis=0)
+    best_scale = np.maximum((hi - lo) / qmax, 1e-12)
+    best_zero = np.round(-lo / best_scale)
+    if not mse_clip:
+        return best_scale, best_zero
+    best_err = np.full(wg.shape[1], np.inf)
+    out_scale = best_scale.copy()
+    out_zero = best_zero.copy()
+    for k in CLIP_GRID:
+        scale = np.maximum((hi * k - lo * k) / qmax, 1e-12)
+        zero = np.round(-lo * k / scale)
+        q = np.clip(np.round(wg / scale) + zero, 0, qmax)
+        deq = (q - zero) * scale
+        err = ((deq - wg) ** 2).sum(axis=0)
+        better = err < best_err
+        best_err = np.where(better, err, best_err)
+        out_scale = np.where(better, scale, out_scale)
+        out_zero = np.where(better, zero, out_zero)
+    return out_scale, out_zero
+
+
+def rtn_quantize(
+    w: np.ndarray, bits: int, group: int, mse_clip: bool = True
+) -> QuantizedLinear:
+    """Plain round-to-nearest group quantization (the GPTQ-less baseline)."""
+    c, h = w.shape
+    assert c % group == 0
+    qmax = (1 << bits) - 1
+    n = c // group
+    codes = np.empty((c, h), np.int32)
+    scale = np.empty((n, h), np.float64)
+    zero = np.empty((n, h), np.float64)
+    for g in range(n):
+        wg = w[g * group : (g + 1) * group]
+        s, z = _group_params(wg, bits, mse_clip)
+        scale[g] = s
+        zero[g] = z
+        codes[g * group : (g + 1) * group] = np.clip(
+            np.round(wg / s) + z, 0, qmax
+        ).astype(np.int32)
+    return QuantizedLinear(codes, scale, zero, group, bits)
+
+
+def gptq_quantize(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    bits: int,
+    group: int,
+    mse_clip: bool = True,
+    damp_frac: float = DAMP_FRAC,
+) -> QuantizedLinear:
+    """GPTQ: quantize input channels in order with error feedback.
+
+    ``hessian`` is ``Xᵀ X`` (``[C, C]``) over calibration inputs. Per
+    channel ``c``: quantize row ``W[c]`` against its group's scale/zero,
+    then push the weighted residual into rows ``c+1..C`` via the Cholesky
+    inverse — the standard OBQ/GPTQ update.
+    """
+    w = np.asarray(w, np.float64).copy()
+    c, h = w.shape
+    assert c % group == 0
+    qmax = (1 << bits) - 1
+
+    hess = np.asarray(hessian, np.float64).copy()
+    dead = np.diag(hess) == 0
+    hess[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    damp = damp_frac * float(np.mean(np.diag(hess)))
+    hess[np.diag_indices(c)] += damp
+    # GPTQ uses U = cholesky(Hinv, upper=True), i.e. Hinv = Uᵀ U with U
+    # upper-triangular — equivalently the transpose of the lower factor.
+    hinv = np.linalg.inv(hess)
+    hinv_u = np.linalg.cholesky(hinv).T
+    assert np.allclose(np.tril(hinv_u, -1), 0.0), "upper factor expected"
+
+    n = c // group
+    codes = np.empty((c, h), np.int32)
+    scale = np.empty((n, h), np.float64)
+    zero = np.empty((n, h), np.float64)
+
+    for g in range(n):
+        lo_c, hi_c = g * group, (g + 1) * group
+        # Group params from the *current* (error-compensated) weights.
+        s, z = _group_params(w[lo_c:hi_c], bits, mse_clip)
+        scale[g] = s
+        zero[g] = z
+        for cc in range(lo_c, hi_c):
+            wrow = w[cc]
+            q = np.clip(np.round(wrow / s) + z, 0, qmax)
+            codes[cc] = q.astype(np.int32)
+            deq = (q - z) * s
+            d = hinv_u[cc, cc]
+            err = (wrow - deq) / d
+            # Propagate into all remaining channels.
+            if cc + 1 < c:
+                w[cc + 1 :] -= np.outer(hinv_u[cc, cc + 1 :], err)
+            w[cc] = deq
+    return QuantizedLinear(codes, scale, zero, group, bits)
+
+
+def pack2(codes: np.ndarray) -> np.ndarray:
+    """2-bit pack, LSB-first along input channels (= kernels/ref.pack2)."""
+    c, h = codes.shape
+    assert c % 4 == 0
+    u = codes.astype(np.uint8).reshape(c // 4, 4, h)
+    return u[:, 0] | (u[:, 1] << 2) | (u[:, 2] << 4) | (u[:, 3] << 6)
+
+
+def quant_error(w: np.ndarray, q: QuantizedLinear, hessian: np.ndarray | None = None) -> float:
+    """Proxy loss: plain MSE, or Hessian-weighted ``tr(ΔWᵀ H ΔW)`` if given."""
+    dw = q.dequant() - w
+    if hessian is None:
+        return float((dw**2).mean())
+    return float(np.einsum("ch,cd,dh->", dw, hessian, dw) / dw.size)

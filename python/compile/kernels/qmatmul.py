@@ -1,0 +1,94 @@
+"""Pallas kernel: fused 2-bit dequantize → matmul (the W2 linear layer).
+
+The quantized model's hot path: every transformer linear is
+``x[M,K] @ dequant(packed[K/4,N], scale[K/G,N], zero[K/G,N])``.
+
+TPU mapping (DESIGN.md §5): the grid tiles (M, N); each step owns the
+full K reduction in VMEM (K ≤ 512 here → a 512×128 f32 tile is 256 KiB,
+comfortably inside the ~16 MiB VMEM budget). Codes are unpacked from
+uint8 with shift/mask VPU ops, dequantized to the activation dtype, and
+fed to the MXU-shaped ``dot``. Per-group scales broadcast along K in
+G-aligned spans so a quantization group never straddles a tile boundary.
+
+interpret=True throughout — see walsh.py header.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 32
+DEFAULT_BLOCK_N = 128
+
+
+def _dequant_matmul_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, group: int):
+    x = x_ref[...]  # (bm, K)
+    p = p_ref[...].astype(jnp.int32)  # (K/4, bn) packed codes
+    kq, bn = p.shape
+    k = kq * 4
+    # Unpack 4 codes per byte along K (VPU shift/mask).
+    codes = jnp.stack(
+        [(p >> 0) & 3, (p >> 2) & 3, (p >> 4) & 3, (p >> 6) & 3], axis=1
+    ).reshape(k, bn)
+    # Dequantize with per-(group, out-channel) scale/zero.
+    s = s_ref[...]  # (K/G, bn)
+    z = z_ref[...]  # (K/G, bn)
+    cg = codes.reshape(k // group, group, bn).astype(x.dtype)
+    w = (cg - z[:, None, :]) * s[:, None, :]
+    w = w.reshape(k, bn)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n"))
+def dequant_matmul_pallas(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    group: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jnp.ndarray:
+    """``x @ dequant(packed)`` with 2-bit packed weights (Pallas).
+
+    * ``x``      f32 ``[..., K]``
+    * ``packed`` uint8 ``[K/4, N]`` (4 codes/byte, LSB-first — ref.pack2)
+    * ``scale``  f32 ``[K/G, N]``, ``zero`` f32 ``[K/G, N]``
+
+    Matches ``ref.dequant_matmul`` exactly.
+    """
+    orig = x.shape
+    k = orig[-1]
+    kq, n = packed.shape
+    assert kq * 4 == k, f"packed K mismatch: {kq}*4 != {k}"
+    assert k % group == 0
+    rows = 1
+    for d in orig[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, k)
+    bm = min(block_m, rows)
+    bn = min(block_n, n)
+    pad_m = (-rows) % bm
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    assert n % bn == 0, "block_n must divide N"
+    m = x2.shape[0]
+    kernel = functools.partial(_dequant_matmul_kernel, group=group)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((kq, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // group, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // group, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2, packed, scale, zero)
+    return out[:rows].reshape(*orig[:-1], n)

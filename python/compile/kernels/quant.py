@@ -1,0 +1,68 @@
+"""Pallas kernel for group RTN activation fake-quantization.
+
+QuaRot-style A4: symmetric round-to-nearest per feature group with a clip
+ratio (paper A.1: symmetric RTN, clip 0.9, grouped). Runs *inside* the
+forward graph for the W2A4 configs, so it is part of the request path the
+Rust runtime executes.
+
+Tiling: the grid walks (row tiles × feature groups); a tile is one
+``(block_rows, group)`` VMEM block — the per-group absmax reduction never
+crosses a tile, so no cross-step communication is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _rtn_sym_kernel(x_ref, o_ref, *, qmax: float, clip_ratio: float):
+    x = x_ref[...]
+    scale = clip_ratio * jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, jnp.ones_like(scale), scale)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    o_ref[...] = q * scale
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group", "clip_ratio", "block_rows")
+)
+def rtn_fake_quant_sym_pallas(
+    x: jnp.ndarray,
+    bits: int,
+    group: int,
+    clip_ratio: float = 1.0,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """Symmetric per-group fake quant along the last axis (Pallas).
+
+    Matches ``ref.rtn_fake_quant_sym`` exactly. A *group* here is a
+    contiguous span of features, aligned with the weight-quant groups so
+    a group never straddles a matmul K-tile (DESIGN.md §5).
+    """
+    orig = x.shape
+    n = orig[-1]
+    assert n % group == 0, "group must divide the feature width"
+    qmax = float((1 << (bits - 1)) - 1)
+    rows = int(np.prod(orig[:-1])) if len(orig) > 1 else 1
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    kernel = functools.partial(_rtn_sym_kernel, qmax=qmax, clip_ratio=clip_ratio)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=(x2.shape[0] // br, n // group),
+        in_specs=[pl.BlockSpec((br, group), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, group), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2)
+    return out[:rows].reshape(orig)

@@ -1,0 +1,162 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematically-obvious implementation of the
+corresponding kernel in ``walsh.py`` / ``quant.py`` / ``qmatmul.py``.
+``python/tests/`` asserts kernel ≡ oracle over hypothesis-driven sweeps of
+shapes, dtypes and group sizes; the oracles themselves are validated
+against numpy/rotation.py in ``test_rotation_invariance.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..rotation import walsh_permutation
+
+
+# ---------------------------------------------------------------------------
+# Walsh–Hadamard transforms
+# ---------------------------------------------------------------------------
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Fast Walsh–Hadamard transform along the last axis (natural order).
+
+    Equivalent to ``x @ hadamard(n)`` (the Sylvester matrix is symmetric),
+    computed with the O(n log n) butterfly. Orthonormal scaling.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "FWHT size must be a power of two"
+    orig = x.shape
+    h = 1
+    while h < n:
+        x = x.reshape(*orig[:-1], n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    return x.reshape(orig) / jnp.sqrt(jnp.asarray(n, x.dtype))
+
+
+def walsh_transform(x: jnp.ndarray) -> jnp.ndarray:
+    """``x @ walsh(n).T`` — FWHT followed by the sequency permutation.
+
+    ``walsh(n) = hadamard(n)[p]`` (rows permuted), so
+    ``x @ walsh.T = (x @ hadamard)[..., p]``.
+    """
+    p = np.asarray(walsh_permutation(x.shape[-1]))
+    return fwht(x)[..., p]
+
+
+def grouped_fwht(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Block-diagonal FWHT: ``x @ (I ⊗ H_G)`` — the local-rotation fast path.
+
+    The paper's Appendix A.2 notes local online rotation defeats the CUDA
+    fast-hadamard-transform; on TPU (and here) each block is simply an
+    independent small butterfly, so the grouped transform is *cheaper*
+    than the global one.
+    """
+    n = x.shape[-1]
+    assert n % group == 0, "group must divide the transform size"
+    xg = x.reshape(*x.shape[:-1], n // group, group)
+    return fwht(xg).reshape(x.shape)
+
+
+def rotate_online(x: jnp.ndarray, rot: jnp.ndarray) -> jnp.ndarray:
+    """Dense-matmul reference for an arbitrary online rotation ``x @ R``."""
+    return x @ rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Group quantizers
+# ---------------------------------------------------------------------------
+
+
+def rtn_fake_quant_sym(
+    x: jnp.ndarray, bits: int, group: int, clip_ratio: float = 1.0
+) -> jnp.ndarray:
+    """Symmetric round-to-nearest fake quantization along the last axis.
+
+    QuaRot's activation quantizer: per-group absmax scaling with a clip
+    ratio (paper A.1 uses clip 0.9); values round to
+    ``{-qmax, …, qmax}`` and dequantize back to float.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    orig = x.shape
+    xg = x.reshape(*orig[:-1], orig[-1] // group, group)
+    scale = clip_ratio * jnp.max(jnp.abs(xg), axis=-1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, jnp.ones_like(scale), scale)
+    q = jnp.clip(jnp.round(xg / scale), -qmax, qmax)
+    return (q * scale).reshape(orig)
+
+
+def rtn_quant_asym(
+    w: jnp.ndarray, bits: int, group: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Asymmetric per-group weight quantization along axis 0 (input dim).
+
+    Returns ``(codes, scale, zero)`` with
+    ``w ≈ (codes - zero) * scale`` broadcast over groups:
+    ``codes`` int32 ``[C, H]``, ``scale``/``zero`` f32 ``[C/G, H]``.
+    """
+    c, h = w.shape
+    qmax = (1 << bits) - 1
+    wg = w.reshape(c // group, group, h)
+    lo = jnp.min(wg, axis=1)
+    hi = jnp.max(wg, axis=1)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale == 0, jnp.ones_like(scale), scale)
+    zero = jnp.round(-lo / scale)
+    codes = jnp.clip(jnp.round(wg / scale[:, None, :]) + zero[:, None, :], 0, qmax)
+    return codes.reshape(c, h).astype(jnp.int32), scale, zero
+
+
+def dequant(
+    codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, group: int
+) -> jnp.ndarray:
+    """Inverse of :func:`rtn_quant_asym` — expand codes back to float."""
+    c, h = codes.shape
+    cg = codes.reshape(c // group, group, h).astype(scale.dtype)
+    w = (cg - zero[:, None, :]) * scale[:, None, :]
+    return w.reshape(c, h)
+
+
+# ---------------------------------------------------------------------------
+# Packed 2-bit storage + dequant-matmul
+# ---------------------------------------------------------------------------
+
+
+def pack2(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack 2-bit codes ``[C, H]`` (values 0..3) into uint8 ``[C/4, H]``.
+
+    Codes for input channels ``4b .. 4b+3`` live in bits
+    ``[0:2] [2:4] [4:6] [6:8]`` of byte ``b`` — matching
+    ``rust/src/quant/pack.rs``.
+    """
+    c, h = codes.shape
+    assert c % 4 == 0
+    u = codes.astype(jnp.uint8).reshape(c // 4, 4, h)
+    return u[:, 0] | (u[:, 1] << 2) | (u[:, 2] << 4) | (u[:, 3] << 6)
+
+
+def unpack2(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack2` — uint8 ``[C/4, H]`` → int32 codes ``[C, H]``."""
+    cb, h = packed.shape
+    p = packed.astype(jnp.int32)
+    parts = jnp.stack(
+        [(p >> 0) & 3, (p >> 2) & 3, (p >> 4) & 3, (p >> 6) & 3], axis=1
+    )
+    return parts.reshape(cb * 4, h)
+
+
+def dequant_matmul(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    group: int,
+) -> jnp.ndarray:
+    """``x @ dequant(unpack2(packed))`` — the W2 linear-layer oracle."""
+    w = dequant(unpack2(packed), scale, zero, group)
+    return x @ w.astype(x.dtype)

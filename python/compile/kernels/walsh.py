@@ -1,0 +1,184 @@
+"""Pallas kernels for the (grouped) Walsh–Hadamard transform.
+
+These are the online-rotation hot paths of the paper's system: R4 rotates
+the down-projection input on every forward pass (QuaRot's CUDA
+``fast-hadamard-transform``); GSR's block-diagonal structure maps to a
+*grouped* transform.
+
+TPU adaptation (DESIGN.md §5): instead of warp-level shared-memory
+butterflies, each grid step owns a ``(block_rows, width)`` VMEM tile and
+runs the O(n log n) add/sub butterfly entirely in registers/VMEM — pure
+VPU work, leaving the MXU free for the matmuls. The grouped variant tiles
+the *block* dimension too, so a local rotation is strictly more parallel
+than a global one (the inverse of the paper's Appendix A.2 GPU
+limitation).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO that the Rust runtime runs directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..rotation import walsh_permutation
+
+# Rows per grid step. 8×width f32 tiles keep VMEM usage trivial
+# (8·512·4B = 16 KiB) while amortizing grid overhead.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _butterfly(x: jnp.ndarray) -> jnp.ndarray:
+    """In-tile orthonormal FWHT butterfly over the last axis."""
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    h = 1
+    while h < n:
+        x = x.reshape(*lead, n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    return x.reshape(*lead, n) * (1.0 / np.sqrt(n)).astype(x.dtype)
+
+
+def _fwht_kernel(x_ref, o_ref):
+    o_ref[...] = _butterfly(x_ref[...])
+
+
+def _grouped_fwht_kernel(x_ref, o_ref):
+    # The tile *is* one (rows × group) block of the block-diagonal
+    # transform; blocks never interact, so the kernel body is identical —
+    # the grid supplies the locality.
+    o_ref[...] = _butterfly(x_ref[...])
+
+
+def _signed_fwht_kernel(s_ref, x_ref, o_ref):
+    # RHT: x @ (H · diag(s)) = fwht(x) ⊙ s  — the sign row rides along in
+    # VMEM as a (1, width) tile.
+    o_ref[...] = _butterfly(x_ref[...]) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fwht_pallas(x: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS) -> jnp.ndarray:
+    """Global FWHT along the last axis (natural ordering), Pallas-tiled.
+
+    ``x`` is flattened to ``(rows, n)``; the grid walks row tiles.
+    Matches ``ref.fwht`` exactly.
+    """
+    orig = x.shape
+    n = orig[-1]
+    rows = int(np.prod(orig[:-1])) if len(orig) > 1 else 1
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _fwht_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=(x2.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    return out[:rows].reshape(orig)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_rows"))
+def grouped_fwht_pallas(
+    x: jnp.ndarray, group: int, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jnp.ndarray:
+    """Block-diagonal FWHT ``x @ (I ⊗ H_G)`` — the GSR/local fast path.
+
+    Grid = (row tiles × blocks); each step transforms one
+    ``(block_rows, group)`` VMEM tile independently.
+    """
+    orig = x.shape
+    n = orig[-1]
+    assert n % group == 0, "group must divide the transform width"
+    rows = int(np.prod(orig[:-1])) if len(orig) > 1 else 1
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _grouped_fwht_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=(x2.shape[0] // br, n // group),
+        in_specs=[pl.BlockSpec((br, group), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, group), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2)
+    return out[:rows].reshape(orig)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def rht_pallas(
+    x: jnp.ndarray, signs: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jnp.ndarray:
+    """Randomized Hadamard transform ``x @ (H · diag(signs))``."""
+    orig = x.shape
+    n = orig[-1]
+    rows = int(np.prod(orig[:-1])) if len(orig) > 1 else 1
+    x2 = x.reshape(rows, n)
+    s2 = signs.reshape(1, n).astype(x.dtype)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _signed_fwht_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=(x2.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        interpret=True,
+    )(s2, x2)
+    return out[:rows].reshape(orig)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def walsh_transform_pallas(
+    x: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jnp.ndarray:
+    """Sequency-ordered transform ``x @ walsh(n).T``.
+
+    FWHT butterfly + in-tile sequency gather (the permutation is a
+    compile-time constant — zero runtime cost beyond the gather).
+    """
+    n = x.shape[-1]
+    perm = jnp.asarray(np.asarray(walsh_permutation(n)), dtype=jnp.int32).reshape(1, n)
+
+    def kernel(p_ref, x_ref, o_ref):
+        o_ref[...] = _butterfly(x_ref[...])[..., p_ref[0, :]]
+
+    orig = x.shape
+    rows = int(np.prod(orig[:-1])) if len(orig) > 1 else 1
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=(x2.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        interpret=True,
+    )(perm, x2)
+    return out[:rows].reshape(orig)

@@ -1,0 +1,474 @@
+"""L2 — llama_mini: the JAX model whose quantized forward is AOT-exported.
+
+A Llama-style pre-norm decoder (RMSNorm, RoPE, MHA, SwiGLU) at laptop
+scale (DESIGN.md §2: d=128, 4 layers, 2 heads × 64, ffn=256, byte vocab).
+Three forward paths share one block structure:
+
+* :func:`forward_fp`      — fp32 training/reference model (with RMSNorm γ).
+* :func:`forward_rotated` — the QuaRot-style rotated model. All hidden
+  states live in the R1-rotated basis; γ and R1/R2 are *fused into the
+  weights offline* (:func:`fuse_rotations`), R3 is applied online after
+  RoPE, R4 online before the down projection via the fast (grouped)
+  Hadamard Pallas kernel. Weights are either dense fp32 (for the exact
+  fp-invariance check, Fig. 1) or 2-bit packed (the deployed W2 path via
+  the fused dequant-matmul kernel).
+
+The W2 forward is what ``aot.py`` lowers to HLO text; every weight tensor
+is a *parameter* of the lowered computation so one HLO serves all 24
+quantized variants (the Rust runtime feeds each variant's blobs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.qmatmul import dequant_matmul_pallas
+from .kernels.quant import rtn_fake_quant_sym_pallas
+from .kernels.walsh import grouped_fwht_pallas, rht_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """llama_mini architecture + quantization geometry."""
+
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ffn: int = 512
+    group: int = 64  # quantization group size G (weights & activations)
+    rope_base: float = 10_000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    LINEARS = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+    def linear_shape(self, name: str) -> tuple[int, int]:
+        d, f = self.d_model, self.d_ffn
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "wgate": (d, f),
+            "wup": (d, f),
+            "wdown": (f, d),
+        }[name]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def outlier_gamma(dim: int, rng: np.random.Generator, sigma: float = 0.6) -> jnp.ndarray:
+    """Heavy-tailed RMSNorm scale vector (massive-channel substitution).
+
+    Real LLMs develop strongly anisotropic per-channel scales (massive
+    activations / outlier γ) — the regime all rotation-based PTQ methods
+    target. A from-scratch 3M-param model trained for minutes stays
+    near-isotropic, and rotations of isotropic weights are
+    distribution-invariant (no rotation can help or hurt). We therefore
+    bake a *fixed, non-learnable* log-normal γ with ~dim/32 boosted
+    channels into the architecture; training adapts around it, producing
+    fused weights `diag(γ)W` with realistic outlier rows. Documented in
+    DESIGN.md §2; identical for every quantized variant, so all Table-1
+    comparisons stay apples-to-apples.
+    """
+    g = np.exp(rng.standard_normal(dim) * sigma)
+    n_out = max(dim // 32, 1)
+    idx = rng.choice(dim, n_out, replace=False)
+    g[idx] *= rng.uniform(4.0, 12.0, n_out)
+    return jnp.asarray(g, jnp.float32)
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> dict[str, Any]:
+    """fp32 training parameters (scaled-normal init, fixed outlier γ)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(shape, scale):
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    d = cfg.d_model
+    layers = []
+    for _ in range(cfg.n_layers):
+        layer = {"ln1": outlier_gamma(d, rng), "ln2": outlier_gamma(d, rng)}
+        for name in cfg.LINEARS:
+            shp = cfg.linear_shape(name)
+            layer[name] = dense(shp, 1.0 / np.sqrt(shp[0]))
+        layers.append(layer)
+    return {
+        "embed": dense((cfg.vocab, d), 1.0),
+        "layers": layers,
+        "ln_f": outlier_gamma(d, rng),
+        "lm_head": dense((d, cfg.vocab), 1.0 / np.sqrt(d)),
+    }
+
+
+def num_params(params: dict[str, Any]) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope_tables(seq: int, head_dim: int, base: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    half = head_dim // 2
+    inv = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(t), jnp.sin(t)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, H, dh] — rotate feature pairs (x0..half | half..dh)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def attention(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q,k,v: [B, T, H, dh] → [B, T, H, dh]; fp32 softmax, causal mask."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, t, h, dh = x.shape
+    return x.reshape(b, t, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# fp32 reference / training forward
+# ---------------------------------------------------------------------------
+
+
+def forward_fp(params: dict[str, Any], tokens: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """Standard fp32 forward. tokens: int32 [B, T] → logits [B, T, V]."""
+    x = params["embed"][tokens]
+    cos, sin = rope_tables(tokens.shape[1], cfg.head_dim, cfg.rope_base)
+    for layer in params["layers"]:
+        h = rmsnorm(x, cfg.norm_eps) * layer["ln1"]
+        q = _split_heads(h @ layer["wq"], cfg.n_heads)
+        k = _split_heads(h @ layer["wk"], cfg.n_heads)
+        v = _split_heads(h @ layer["wv"], cfg.n_heads)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        o = _merge_heads(attention(q, k, v)) @ layer["wo"]
+        x = x + o
+        h = rmsnorm(x, cfg.norm_eps) * layer["ln2"]
+        z = jax.nn.silu(h @ layer["wgate"]) * (h @ layer["wup"])
+        x = x + z @ layer["wdown"]
+    x = rmsnorm(x, cfg.norm_eps) * params["ln_f"]
+    return x @ params["lm_head"]
+
+
+def loss_fn(params: dict[str, Any], tokens: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """Next-byte cross-entropy (mean over positions)."""
+    logits = forward_fp(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Rotation fusion (offline, QuaRot/SpinQuant R1–R4 wiring — Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+def fuse_rotations(
+    params: dict[str, Any],
+    cfg: ModelCfg,
+    r1: np.ndarray,
+    r2: np.ndarray | None = None,
+) -> dict[str, Any]:
+    """Fuse RMSNorm γ and the offline rotations R1/R2 into the weights.
+
+    Returns a *rotated-basis* parameter dict (numpy fp64 for exactness):
+    ``embed' = E R1``, ``W_in' = R1ᵀ diag(γ) W_in``, ``W_o' = B₂ᵀ W_o R1``,
+    ``W_v' = R1ᵀ diag(γ) W_v B₂``, ``W_down' = W_down R1`` (R4 fusion is
+    applied separately per R4 kind), ``lm_head' = R1ᵀ diag(γ_f) W_lm``,
+    where ``B₂ = I_heads ⊗ R2``.
+
+    The fused model is *exactly* equivalent in fp arithmetic (orthogonal
+    invariance) — asserted by tests/test_rotation_invariance.py and the
+    Fig.-1 cargo test.
+    """
+    d = cfg.d_model
+    r1 = np.asarray(r1, np.float64)
+    assert r1.shape == (d, d)
+    if r2 is None:
+        b2 = np.eye(d)
+    else:
+        r2 = np.asarray(r2, np.float64)
+        assert r2.shape == (cfg.head_dim, cfg.head_dim)
+        b2 = np.kron(np.eye(cfg.n_heads), r2)
+
+    def npf(x):
+        return np.asarray(x, np.float64)
+
+    out: dict[str, Any] = {
+        "embed": npf(params["embed"]) @ r1,
+        "lm_head": r1.T @ (npf(params["ln_f"])[:, None] * npf(params["lm_head"])),
+        "layers": [],
+    }
+    for layer in params["layers"]:
+        g1 = npf(layer["ln1"])[:, None]
+        g2 = npf(layer["ln2"])[:, None]
+        out["layers"].append(
+            {
+                "wq": r1.T @ (g1 * npf(layer["wq"])),
+                "wk": r1.T @ (g1 * npf(layer["wk"])),
+                "wv": r1.T @ (g1 * npf(layer["wv"])) @ b2,
+                "wo": b2.T @ npf(layer["wo"]) @ r1,
+                "wgate": r1.T @ (g2 * npf(layer["wgate"])),
+                "wup": r1.T @ (g2 * npf(layer["wup"])),
+                # R4ᵀ is folded in later (depends on the R4 ablation kind).
+                "wdown": npf(layer["wdown"]) @ r1,
+            }
+        )
+    return out
+
+
+def fuse_r4(rot_params: dict[str, Any], r4: np.ndarray) -> dict[str, Any]:
+    """Fold the online-rotation transpose into W_down: ``W_down' = R4ᵀ W_down``."""
+    out = dict(rot_params)
+    out["layers"] = [
+        {**layer, "wdown": np.asarray(r4, np.float64).T @ layer["wdown"]}
+        for layer in rot_params["layers"]
+    ]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotated / quantized forward (the deployed graph)
+# ---------------------------------------------------------------------------
+
+
+def _act_quant(x: jnp.ndarray, cfg: ModelCfg, a_bits: int | None, use_pallas: bool):
+    """QuaRot A-quant: symmetric RTN, clip 0.9, grouped (paper A.1)."""
+    if a_bits is None:
+        return x
+    if use_pallas:
+        return rtn_fake_quant_sym_pallas(x, a_bits, cfg.group, 0.9)
+    return ref.rtn_fake_quant_sym(x, a_bits, cfg.group, 0.9)
+
+
+def _linear(x, qlayer, name, cfg: ModelCfg, use_pallas: bool):
+    """Dense (fp check) or packed-W2 (deployed) linear dispatch."""
+    if name in qlayer:  # dense fp path
+        return x @ qlayer[name].astype(x.dtype)
+    packed = qlayer[f"{name}_packed"]
+    scale = qlayer[f"{name}_scale"]
+    zero = qlayer[f"{name}_zero"]
+    if use_pallas:
+        return dequant_matmul_pallas(x, packed, scale, zero, cfg.group)
+    return ref.dequant_matmul(x, packed, scale, zero, cfg.group)
+
+
+def _apply_r4_online(z, r4_signs, cfg: ModelCfg, r4_kind: str, use_pallas: bool):
+    """Online R4 via the fast (grouped) Hadamard kernel.
+
+    GH: ``z @ (H diag(s))`` — global butterfly then signs.
+    LH: ``z @ (I ⊗ H_G diag(s_G))`` — grouped butterfly then tiled signs.
+    ``r4_signs`` is a runtime parameter, so one HLO serves any sign draw.
+    """
+    if r4_kind == "GH":
+        if use_pallas:
+            return rht_pallas(z, r4_signs)
+        return ref.fwht(z) * r4_signs.astype(z.dtype)
+    if r4_kind == "LH":
+        n = z.shape[-1]
+        reps = n // cfg.group
+        s_full = jnp.tile(r4_signs.astype(z.dtype), reps)
+        if use_pallas:
+            return grouped_fwht_pallas(z, cfg.group) * s_full
+        return ref.grouped_fwht(z, cfg.group) * s_full
+    raise ValueError(f"unknown r4_kind {r4_kind!r}")
+
+
+def _ascale(h: jnp.ndarray, qlayer, key: str) -> jnp.ndarray:
+    """OSTQuant per-channel smoothing scale (ones for other pipelines)."""
+    s = qlayer.get(key)
+    return h if s is None else h * s.astype(h.dtype)
+
+
+def forward_rotated(
+    qparams: dict[str, Any],
+    tokens: jnp.ndarray,
+    cfg: ModelCfg,
+    *,
+    a_bits: int | None = None,
+    r4_kind: str = "GH",
+    use_pallas: bool = True,
+    tap=None,
+) -> jnp.ndarray:
+    """Rotated (and optionally quantized) forward — the deployed graph.
+
+    ``qparams``: ``embed``/``lm_head`` fp32, ``r3`` [dh,dh], ``r4_signs``
+    ([d_ffn] for GH, [G] for LH), per-layer ``ascale_*`` smoothing
+    vectors (OSTQuant; ones otherwise), and layer weights either dense or
+    ``*_packed/_scale/_zero``. RMSNorm carries no γ (fused).
+
+    ``tap(name, tensor)`` — optional instrumentation hook receiving every
+    linear-layer input (used by quantize.py for GPTQ calibration).
+    """
+    x = qparams["embed"][tokens]
+    cos, sin = rope_tables(tokens.shape[1], cfg.head_dim, cfg.rope_base)
+    r3 = qparams["r3"]
+    for li, qlayer in enumerate(qparams["layers"]):
+        h = rmsnorm(x, cfg.norm_eps)
+        hq = _act_quant(_ascale(h, qlayer, "ascale_attn"), cfg, a_bits, use_pallas)
+        if tap is not None:
+            tap(f"layers.{li}.wq", hq)
+        q = _split_heads(_linear(hq, qlayer, "wq", cfg, use_pallas), cfg.n_heads)
+        k = _split_heads(_linear(hq, qlayer, "wk", cfg, use_pallas), cfg.n_heads)
+        v = _split_heads(_linear(hq, qlayer, "wv", cfg, use_pallas), cfg.n_heads)
+        # R3 after RoPE (scores invariant; enables KV-cache quantization).
+        q = apply_rope(q, cos, sin) @ r3.astype(x.dtype)
+        k = apply_rope(k, cos, sin) @ r3.astype(x.dtype)
+        o = _merge_heads(attention(q, k, v))
+        oq = _act_quant(_ascale(o, qlayer, "ascale_o"), cfg, a_bits, use_pallas)
+        if tap is not None:
+            tap(f"layers.{li}.wo", oq)
+        x = x + _linear(oq, qlayer, "wo", cfg, use_pallas)
+        h = rmsnorm(x, cfg.norm_eps)
+        hq = _act_quant(_ascale(h, qlayer, "ascale_ffn"), cfg, a_bits, use_pallas)
+        if tap is not None:
+            tap(f"layers.{li}.wgate", hq)
+        z = jax.nn.silu(_linear(hq, qlayer, "wgate", cfg, use_pallas)) * _linear(
+            hq, qlayer, "wup", cfg, use_pallas
+        )
+        z = _apply_r4_online(z, qparams["r4_signs"], cfg, r4_kind, use_pallas)
+        zq = _act_quant(_ascale(z, qlayer, "ascale_down"), cfg, a_bits, use_pallas)
+        if tap is not None:
+            tap(f"layers.{li}.wdown", zq)
+        x = x + _linear(zq, qlayer, "wdown", cfg, use_pallas)
+    x = rmsnorm(x, cfg.norm_eps)
+    return x @ qparams["lm_head"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Lowering entry points (used by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def make_quant_forward(cfg: ModelCfg, a_bits: int | None, r4_kind: str):
+    """Return ``f(flat_params..., tokens) -> (logits,)`` for jax.jit.lower.
+
+    The flat parameter order is defined by :func:`quant_param_spec` and
+    recorded in the artifact manifest for the Rust runtime.
+    """
+    spec = quant_param_spec(cfg, r4_kind)
+
+    def fn(tokens, *flat):
+        qparams = unflatten_quant_params(cfg, spec, flat)
+        return (
+            forward_rotated(
+                qparams, tokens, cfg, a_bits=a_bits, r4_kind=r4_kind, use_pallas=True
+            ),
+        )
+
+    return fn, spec
+
+
+def quant_param_spec(cfg: ModelCfg, r4_kind: str) -> list[tuple[str, tuple[int, ...], str]]:
+    """Deterministic flat parameter order: (name, shape, dtype) triples.
+
+    Mirrored by the Rust manifest loader — do not reorder.
+    """
+    d, v, g = cfg.d_model, cfg.vocab, cfg.group
+    spec: list[tuple[str, tuple[int, ...], str]] = [
+        ("embed", (v, d), "f32"),
+        ("lm_head", (d, v), "f32"),
+        ("r3", (cfg.head_dim, cfg.head_dim), "f32"),
+        ("r4_signs", (cfg.d_ffn if r4_kind == "GH" else g,), "f32"),
+    ]
+    for l in range(cfg.n_layers):
+        spec.append((f"layers.{l}.ascale_attn", (d,), "f32"))
+        spec.append((f"layers.{l}.ascale_o", (d,), "f32"))
+        spec.append((f"layers.{l}.ascale_ffn", (d,), "f32"))
+        spec.append((f"layers.{l}.ascale_down", (cfg.d_ffn,), "f32"))
+        for name in cfg.LINEARS:
+            c, h = cfg.linear_shape(name)
+            spec.append((f"layers.{l}.{name}_packed", (c // 4, h), "u8"))
+            spec.append((f"layers.{l}.{name}_scale", (c // g, h), "f32"))
+            spec.append((f"layers.{l}.{name}_zero", (c // g, h), "f32"))
+    return spec
+
+
+def unflatten_quant_params(cfg: ModelCfg, spec, flat) -> dict[str, Any]:
+    assert len(flat) == len(spec), f"{len(flat)} != {len(spec)}"
+    qparams: dict[str, Any] = {"layers": [{} for _ in range(cfg.n_layers)]}
+    for (name, _shape, _dt), tensor in zip(spec, flat):
+        if name.startswith("layers."):
+            _, idx, field = name.split(".")
+            qparams["layers"][int(idx)][field] = tensor
+        else:
+            qparams[name] = tensor
+    return qparams
+
+
+def make_fp_forward(cfg: ModelCfg):
+    """``f(flat_params..., tokens)`` for the W16A16 reference HLO."""
+    spec = fp_param_spec(cfg)
+
+    def fn(tokens, *flat):
+        params = unflatten_fp_params(cfg, spec, flat)
+        return (forward_fp(params, tokens, cfg),)
+
+    return fn, spec
+
+
+def fp_param_spec(cfg: ModelCfg) -> list[tuple[str, tuple[int, ...], str]]:
+    d, v = cfg.d_model, cfg.vocab
+    spec = [("embed", (v, d), "f32")]
+    for l in range(cfg.n_layers):
+        spec.append((f"layers.{l}.ln1", (d,), "f32"))
+        spec.append((f"layers.{l}.ln2", (d,), "f32"))
+        for name in cfg.LINEARS:
+            spec.append((f"layers.{l}.{name}", cfg.linear_shape(name), "f32"))
+    spec.append(("ln_f", (d,), "f32"))
+    spec.append(("lm_head", (d, v), "f32"))
+    return spec
+
+
+def unflatten_fp_params(cfg: ModelCfg, spec, flat) -> dict[str, Any]:
+    assert len(flat) == len(spec)
+    params: dict[str, Any] = {"layers": [{} for _ in range(cfg.n_layers)]}
+    for (name, _s, _d), tensor in zip(spec, flat):
+        if name.startswith("layers."):
+            _, idx, field = name.split(".")
+            params["layers"][int(idx)][field] = tensor
+        else:
+            params[name] = tensor
+    return params

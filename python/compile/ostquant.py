@@ -1,0 +1,150 @@
+"""OSTQuant-style learned orthogonal + scaling transformation (simplified).
+
+OSTQuant (Hu et al., ICLR 2025) refines rotation-based PTQ by jointly
+learning an **o**rthogonal transform and per-channel **s**caling
+**t**ransformations that reshape weight/activation distributions before
+quantization. Our miniature (DESIGN.md §2) keeps both learned objects:
+
+* R1 via the Cayley parametrization (init = the Table-1 R1 variant), and
+* per-layer, per-site positive scale vectors ``s`` applied between the
+  activation and the weight: ``x̃ = x ⊙ s``, ``W̃ = diag(s)⁻¹ W`` —
+  function-preserving, folded into the deployed graph as the
+  ``ascale_*`` parameters of model.forward_rotated.
+
+Objective = STE weight-quant MSE (on scaled rotated weights) + STE
+activation-quant MSE (on scaled rotated calibration activations) — the
+"distribution fitting" loss, minimized with Adam.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelCfg
+from .spinquant import cayley, prefold_gamma, ste_fake_quant_asym, ste_fake_quant_sym
+from .train import adam_init, adam_update
+
+DEFAULT_STEPS = 80
+LR = 2e-3
+
+
+def learn_ost(
+    params: dict[str, Any],
+    cfg: ModelCfg,
+    r1_init: np.ndarray,
+    r2: np.ndarray,
+    r4: np.ndarray,
+    calib: dict[str, list[np.ndarray]],
+    *,
+    w_bits: int = 2,
+    a_bits: int | None = None,
+    steps: int = DEFAULT_STEPS,
+    lr: float = LR,
+) -> tuple[np.ndarray, list[dict[str, np.ndarray]], list[float]]:
+    """Learn (R1, per-layer scales) jointly.
+
+    ``calib``: fp-model activation samples per site family —
+    ``{"h_attn": [per-layer [N,d]], "h_ffn": [...], "o": [...], "z": [per-layer [N,ffn]]}``
+    (exact-equivalence makes fp activations valid calibration for the
+    rotated model; see quantize.py).
+
+    Returns ``(R1 fp64-orthogonal, scales per layer
+    {ascale_attn, ascale_o, ascale_ffn, ascale_down}, loss log)``.
+    """
+    d, f = cfg.d_model, cfg.d_ffn
+    nl = cfg.n_layers
+    b2 = jnp.asarray(np.kron(np.eye(cfg.n_heads), r2), jnp.float32)
+    r1_0 = jnp.asarray(r1_init, jnp.float32)
+    r4_j = jnp.asarray(r4, jnp.float32)
+    folded = prefold_gamma(params, cfg, np.asarray(r4, np.float64).T)
+
+    cal = {
+        "h_attn": [jnp.asarray(a, jnp.float32) for a in calib["h_attn"]],
+        "h_ffn": [jnp.asarray(a, jnp.float32) for a in calib["h_ffn"]],
+        "o": [jnp.asarray(a, jnp.float32) for a in calib["o"]],
+        "z": [jnp.asarray(a, jnp.float32) for a in calib["z"]],
+    }
+
+    def split_theta(theta):
+        a = theta["a"]
+        # log-parametrized scales → strictly positive
+        scales = [
+            {
+                "ascale_attn": jnp.exp(theta["s_attn"][l]),
+                "ascale_o": jnp.exp(theta["s_o"][l]),
+                "ascale_ffn": jnp.exp(theta["s_ffn"][l]),
+                "ascale_down": jnp.exp(theta["s_down"][l]),
+            }
+            for l in range(nl)
+        ]
+        return a, scales
+
+    def objective(theta):
+        a, scales = split_theta(theta)
+        r1 = cayley(a) @ r1_0
+        loss = 0.0
+        for l, layer in enumerate(folded["layers"]):
+            sa = scales[l]["ascale_attn"][:, None]
+            so = scales[l]["ascale_o"][:, None]
+            sf = scales[l]["ascale_ffn"][:, None]
+            sd = scales[l]["ascale_down"][:, None]
+            ws = [
+                (r1.T @ layer["wq_g"]) / sa,
+                (r1.T @ layer["wk_g"]) / sa,
+                (r1.T @ layer["wv_g"] @ b2) / sa,
+                (b2.T @ layer["wo"] @ r1) / so,
+                (r1.T @ layer["wgate_g"]) / sf,
+                (r1.T @ layer["wup_g"]) / sf,
+                (layer["wdown_r4"] @ r1) / sd,
+            ]
+            for w in ws:
+                loss = loss + jnp.mean((w - ste_fake_quant_asym(w, w_bits, cfg.group)) ** 2)
+            if a_bits is not None:
+                acts = [
+                    (cal["h_attn"][l] @ r1) * sa[:, 0],
+                    (cal["o"][l] @ b2) * so[:, 0],
+                    (cal["h_ffn"][l] @ r1) * sf[:, 0],
+                    (cal["z"][l] @ r4_j) * sd[:, 0],
+                ]
+                for x in acts:
+                    loss = loss + 0.25 * jnp.mean(
+                        (x - ste_fake_quant_sym(x, a_bits, cfg.group)) ** 2
+                    )
+        return loss
+
+    theta = {
+        "a": jnp.zeros((d, d), jnp.float32),
+        "s_attn": jnp.zeros((nl, d), jnp.float32),
+        "s_o": jnp.zeros((nl, d), jnp.float32),
+        "s_ffn": jnp.zeros((nl, d), jnp.float32),
+        "s_down": jnp.zeros((nl, f), jnp.float32),
+    }
+    state = adam_init(theta)
+
+    @jax.jit
+    def step(theta, state):
+        loss, grad = jax.value_and_grad(objective)(theta)
+        theta, state = adam_update(theta, grad, state, lr)
+        return theta, state, loss
+
+    log = []
+    for s in range(steps):
+        theta, state, loss = step(theta, state)
+        if s % 10 == 0 or s == steps - 1:
+            log.append(float(loss))
+
+    a64 = np.asarray(theta["a"], np.float64)
+    s64 = a64 - a64.T
+    eye = np.eye(d)
+    r1_learned = np.linalg.solve((eye + s64).T, (eye - s64).T).T @ np.asarray(
+        r1_init, np.float64
+    )
+    _, scales_j = split_theta(theta)
+    scales = [
+        {k: np.asarray(v, np.float64) for k, v in sl.items()} for sl in scales_j
+    ]
+    return r1_learned, scales, log

@@ -1,0 +1,374 @@
+"""PTQ variant sweep: rotate → (learn) → GPTQ → pack → write blobs.
+
+Drives the paper's entire experimental grid at build time:
+
+* **Table 1**: {QuaRot, SpinQuant, OSTQuant} × {W2A16, W2A4} ×
+  R1 ∈ {GH, GW, LH, GSR}  (R4 = GH)              → 24 variants
+* **Table 2**: QuaRot × {W2A16, W2A4} × R1 ∈ {LH, GSR} × R4 ∈ {GH, LH}
+  (the R1×R4-GH cells are shared with Table 1)   → +4 variants
+
+Each variant directory under ``artifacts/variants/<name>/`` holds
+``weights.bin`` (flat blobs in ``model.quant_param_spec`` order) and
+``meta.json``. The Rust runtime consumes these; nothing here runs at
+request time.
+
+GPTQ calibration is **sequential**: layer *l*'s Hessians are computed
+from a forward pass in which layers ``< l`` already carry their
+quantized (dequantized-dense) weights, so cross-layer error propagation
+is accounted for — the same discipline as the QuaRot reference code.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import rotation as rot
+from .gptq import gptq_quantize, pack2
+from .model import (
+    ModelCfg,
+    forward_fp,
+    forward_rotated,
+    fuse_r4,
+    fuse_rotations,
+    quant_param_spec,
+    rmsnorm,
+)
+
+SEED_ROT = 2025
+W_BITS = 2
+A_BITS = {"w2a16": None, "w2a4": 4}
+CALIB_SEQS = 16
+CALIB_SEQ_LEN = 128
+EVAL_WINDOWS_SANITY = 8
+
+TABLE1_METHODS = ("quarot", "spinquant", "ostquant")
+TABLE1_R1 = rot.R1_KINDS  # GH, GW, LH, GSR
+TABLE2_GRID = (("LH", "GH"), ("LH", "LH"), ("GSR", "GH"), ("GSR", "LH"))
+
+
+def variant_name(method: str, bits: str, r1: str, r4: str) -> str:
+    return f"{method}_{bits}_{r1.lower()}_r4{r4.lower()}"
+
+
+def all_variants() -> list[dict[str, str]]:
+    out = []
+    for method in TABLE1_METHODS:
+        for bits in A_BITS:
+            for r1 in TABLE1_R1:
+                out.append({"method": method, "bits": bits, "r1": r1, "r4": "GH"})
+    for bits in A_BITS:
+        for r1, r4 in TABLE2_GRID:
+            if r4 == "GH":
+                continue  # shared with Table 1 (quarot, r4=GH)
+            out.append({"method": "quarot", "bits": bits, "r1": r1, "r4": r4})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared rotation ingredients (fixed across variants for fair comparison)
+# ---------------------------------------------------------------------------
+
+
+def shared_rotations(cfg: ModelCfg):
+    rng = np.random.default_rng(SEED_ROT)
+    r2 = rot.build_r2(cfg.head_dim, rng)
+    r3 = rot.rht(cfg.head_dim, rng)
+    s4_gh = rng.integers(0, 2, cfg.d_ffn) * 2.0 - 1.0
+    s4_lh = rng.integers(0, 2, cfg.group) * 2.0 - 1.0
+    r4_gh = rot.hadamard(cfg.d_ffn) * s4_gh[None, :]
+    r4_lh = rot.block_diag(rot.hadamard(cfg.group) * s4_lh[None, :], cfg.d_ffn)
+    return {
+        "r2": r2,
+        "r3": r3,
+        "r4": {"GH": r4_gh, "LH": r4_lh},
+        "r4_signs": {"GH": s4_gh, "LH": s4_lh},
+    }
+
+
+def r1_for(kind: str, cfg: ModelCfg) -> np.ndarray:
+    # Per-kind deterministic seed so GH/LH sign draws are stable run-to-run.
+    rng = np.random.default_rng(SEED_ROT + hash(kind) % 1000)
+    return rot.build_r1(kind, cfg.d_model, cfg.group, rng)
+
+
+# ---------------------------------------------------------------------------
+# Calibration capture (jitted; structure constant across variants)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _capture_fn(cfg: ModelCfg, r4_kind: str):
+    def fn(qparams, tokens):
+        taps: dict[str, jnp.ndarray] = {}
+
+        def tap(name, x):
+            taps[name] = x.reshape(-1, x.shape[-1])
+
+        forward_rotated(
+            qparams, tokens, cfg, a_bits=None, r4_kind=r4_kind, use_pallas=False, tap=tap
+        )
+        return taps
+
+    return jax.jit(fn)
+
+
+def capture_linear_inputs(qparams_dense, tokens, cfg: ModelCfg, r4_kind: str):
+    taps = _capture_fn(cfg, r4_kind)(qparams_dense, tokens)
+    return {k: np.asarray(v, np.float64) for k, v in taps.items()}
+
+
+def calib_tokens(corpus: bytes, n_train: int) -> np.ndarray:
+    data = np.frombuffer(corpus, np.uint8)[:n_train]
+    step = (n_train - CALIB_SEQ_LEN - 1) // CALIB_SEQS
+    return np.stack(
+        [data[i * step : i * step + CALIB_SEQ_LEN] for i in range(CALIB_SEQS)]
+    ).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fp-model activation capture for the learned pipelines (OSTQuant)
+# ---------------------------------------------------------------------------
+
+
+def capture_fp_sites(params, cfg: ModelCfg, tokens: jnp.ndarray):
+    """Per-layer fp activations at the four quantized-input site families.
+
+    Exact rotation equivalence makes these valid calibration tensors for
+    any rotated variant (the rotated model's internal values are the fp
+    values times the fused orthogonal maps — applied inside the learned
+    objectives). Returns numpy [N, dim] arrays, subsampled rows.
+    """
+    h_attn, h_ffn, o_sites, z_sites = [], [], [], []
+    x = params["embed"][tokens]
+    from .model import _merge_heads, _split_heads, apply_rope, attention, rope_tables
+
+    cos, sin = rope_tables(tokens.shape[1], cfg.head_dim, cfg.rope_base)
+    for layer in params["layers"]:
+        hn = rmsnorm(x, cfg.norm_eps)
+        h_attn.append(np.asarray(hn.reshape(-1, cfg.d_model)))
+        h = hn * layer["ln1"]
+        q = _split_heads(h @ layer["wq"], cfg.n_heads)
+        k = _split_heads(h @ layer["wk"], cfg.n_heads)
+        v = _split_heads(h @ layer["wv"], cfg.n_heads)
+        o = _merge_heads(attention(apply_rope(q, cos, sin), apply_rope(k, cos, sin), v))
+        o_sites.append(np.asarray(o.reshape(-1, cfg.d_model)))
+        x = x + o @ layer["wo"]
+        hn = rmsnorm(x, cfg.norm_eps)
+        h_ffn.append(np.asarray(hn.reshape(-1, cfg.d_model)))
+        h = hn * layer["ln2"]
+        z = jax.nn.silu(h @ layer["wgate"]) * (h @ layer["wup"])
+        z_sites.append(np.asarray(z.reshape(-1, cfg.d_ffn)))
+        x = x + z @ layer["wdown"]
+    sub = slice(0, None, 4)  # subsample rows to keep the learned loops light
+    return {
+        "h_attn": [a[sub] for a in h_attn],
+        "h_ffn": [a[sub] for a in h_ffn],
+        "o": [a[sub] for a in o_sites],
+        "z": [a[sub] for a in z_sites],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Variant quantization
+# ---------------------------------------------------------------------------
+
+_SITE_OF = {
+    "wq": "wq", "wk": "wq", "wv": "wq",
+    "wo": "wo",
+    "wgate": "wgate", "wup": "wgate",
+    "wdown": "wdown",
+}
+
+
+def to_dense_qparams(fused, cfg: ModelCfg, r3, r4_signs, scales=None):
+    """Numpy fused params → jnp dense qparams for forward_rotated."""
+    qp = {
+        "embed": jnp.asarray(fused["embed"], jnp.float32),
+        "lm_head": jnp.asarray(fused["lm_head"], jnp.float32),
+        "r3": jnp.asarray(r3, jnp.float32),
+        "r4_signs": jnp.asarray(r4_signs, jnp.float32),
+        "layers": [],
+    }
+    for li, layer in enumerate(fused["layers"]):
+        ql = {k: jnp.asarray(v, jnp.float32) for k, v in layer.items()}
+        if scales is not None:
+            for key, val in scales[li].items():
+                ql[key] = jnp.asarray(val, jnp.float32)
+        qp["layers"].append(ql)
+    return qp
+
+
+def apply_ost_weight_scales(fused, scales):
+    """W̃ = diag(s)⁻¹ W at each scaled input site (function-preserving
+    with the in-graph ``x ⊙ s``)."""
+    out = {"embed": fused["embed"], "lm_head": fused["lm_head"], "layers": []}
+    for layer, sl in zip(fused["layers"], scales):
+        sa = sl["ascale_attn"][:, None]
+        so = sl["ascale_o"][:, None]
+        sf = sl["ascale_ffn"][:, None]
+        sd = sl["ascale_down"][:, None]
+        out["layers"].append(
+            {
+                "wq": layer["wq"] / sa,
+                "wk": layer["wk"] / sa,
+                "wv": layer["wv"] / sa,
+                "wo": layer["wo"] / so,
+                "wgate": layer["wgate"] / sf,
+                "wup": layer["wup"] / sf,
+                "wdown": layer["wdown"] / sd,
+            }
+        )
+    return out
+
+
+def quantize_variant(
+    params: dict[str, Any],
+    cfg: ModelCfg,
+    spec_v: dict[str, str],
+    shared: dict[str, Any],
+    calib: np.ndarray,
+    fp_sites=None,
+) -> tuple[dict[str, Any], dict[str, Any]]:
+    """Full pipeline for one variant → (quantized qparams dict, meta)."""
+    method, bits, r1k, r4k = spec_v["method"], spec_v["bits"], spec_v["r1"], spec_v["r4"]
+    a_bits = A_BITS[bits]
+    r4 = shared["r4"][r4k]
+    meta: dict[str, Any] = dict(spec_v)
+
+    r1_init = r1_for(r1k, cfg)
+    scales = None
+    if method == "quarot":
+        r1 = r1_init
+    elif method == "spinquant":
+        from .spinquant import learn_rotation
+
+        pooled = None
+        if fp_sites is not None:
+            pooled = np.concatenate(fp_sites["h_attn"] + fp_sites["h_ffn"], axis=0)[::4]
+        r1, log = learn_rotation(
+            params, cfg, r1_init, shared["r2"], r4, w_bits=W_BITS, a_bits=a_bits, calib_h=pooled
+        )
+        meta["learn_log"] = log
+    elif method == "ostquant":
+        from .ostquant import learn_ost
+
+        r1, scales, log = learn_ost(
+            params, cfg, r1_init, shared["r2"], r4, fp_sites, w_bits=W_BITS, a_bits=a_bits
+        )
+        meta["learn_log"] = log
+    else:
+        raise ValueError(method)
+
+    fused = fuse_r4(fuse_rotations(params, cfg, r1, shared["r2"]), r4)
+    if scales is not None:
+        fused = apply_ost_weight_scales(fused, scales)
+
+    # Sequential GPTQ over layers.
+    dense_qp = to_dense_qparams(fused, cfg, shared["r3"], shared["r4_signs"][r4k], scales)
+    tokens = jnp.asarray(calib)
+    qlayers: list[dict[str, Any]] = []
+    total_err = 0.0
+    for li in range(cfg.n_layers):
+        taps = capture_linear_inputs(dense_qp, tokens, cfg, r4k)
+        qlayer: dict[str, Any] = {}
+        new_dense: dict[str, Any] = {}
+        for name in cfg.LINEARS:
+            x = taps[f"layers.{li}.{_SITE_OF[name]}"]
+            hess = x.T @ x / x.shape[0]
+            w = np.asarray(fused["layers"][li][name], np.float64)
+            ql = gptq_quantize(w, hess, W_BITS, cfg.group, mse_clip=True)
+            deq = ql.dequant()
+            total_err += float(((deq - w) ** 2).sum())
+            qlayer[f"{name}_packed"] = pack2(ql.codes)
+            qlayer[f"{name}_scale"] = ql.scale.astype(np.float32)
+            qlayer[f"{name}_zero"] = ql.zero.astype(np.float32)
+            new_dense[name] = jnp.asarray(deq, jnp.float32)
+        if scales is not None:
+            for key, val in scales[li].items():
+                qlayer[key] = np.asarray(val, np.float32)
+        else:
+            for key, dim in (
+                ("ascale_attn", cfg.d_model),
+                ("ascale_o", cfg.d_model),
+                ("ascale_ffn", cfg.d_model),
+                ("ascale_down", cfg.d_ffn),
+            ):
+                qlayer[key] = np.ones(dim, np.float32)
+        qlayers.append(qlayer)
+        # Propagate: replace layer li with its dequantized weights.
+        merged = dict(dense_qp["layers"][li])
+        merged.update(new_dense)
+        dense_qp["layers"][li] = merged
+    meta["gptq_weight_sse"] = total_err
+
+    qparams = {
+        "embed": np.asarray(fused["embed"], np.float32),
+        "lm_head": np.asarray(fused["lm_head"], np.float32),
+        "r3": np.asarray(shared["r3"], np.float32),
+        "r4_signs": np.asarray(shared["r4_signs"][r4k], np.float32),
+        "layers": qlayers,
+    }
+    return qparams, meta
+
+
+# ---------------------------------------------------------------------------
+# Blob I/O (mirrors rust/src/runtime/artifact.rs)
+# ---------------------------------------------------------------------------
+
+_DT = {"f32": np.float32, "u8": np.uint8}
+
+
+def write_blob(qparams: dict[str, Any], cfg: ModelCfg, r4_kind: str, path: str) -> int:
+    """Flat little-endian blob in quant_param_spec order."""
+    spec = quant_param_spec(cfg, r4_kind)
+    with open(path, "wb") as f:
+        for name, shape, dt in spec:
+            if name.startswith("layers."):
+                _, idx, field = name.split(".")
+                t = qparams["layers"][int(idx)][field]
+            else:
+                t = qparams[name]
+            arr = np.ascontiguousarray(np.asarray(t, _DT[dt]).reshape(shape))
+            f.write(arr.tobytes())
+        return f.tell()
+
+
+def sanity_ppl(
+    qparams, cfg: ModelCfg, corpus: bytes, a_bits, r4_kind: str, test_start: int
+) -> float:
+    """Quick python-side PPL on a few test-split windows (ref path)."""
+    data = np.frombuffer(corpus, np.uint8)
+    qp = {
+        "embed": jnp.asarray(qparams["embed"]),
+        "lm_head": jnp.asarray(qparams["lm_head"]),
+        "r3": jnp.asarray(qparams["r3"]),
+        "r4_signs": jnp.asarray(qparams["r4_signs"]),
+        "layers": [
+            {k: jnp.asarray(v) for k, v in ql.items()} for ql in qparams["layers"]
+        ],
+    }
+
+    @jax.jit
+    def nll(tokens):
+        logits = forward_rotated(
+            qp, tokens[:, :-1], cfg, a_bits=a_bits, r4_kind=r4_kind, use_pallas=False
+        )
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        t = tokens[:, 1:]
+        return -jnp.take_along_axis(logp, t[..., None], axis=-1)[..., 0].sum()
+
+    total, count = 0.0, 0
+    seq = CALIB_SEQ_LEN + 1
+    for i in range(EVAL_WINDOWS_SANITY):
+        s = test_start + i * seq
+        tok = jnp.asarray(data[s : s + seq][None].astype(np.int32))
+        total += float(nll(tok))
+        count += seq - 1
+    return float(np.exp(total / count))

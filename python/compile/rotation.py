@@ -1,0 +1,184 @@
+"""Rotation-matrix construction for GSR (paper §2.1, §3.1).
+
+Implements every rotation family compared in the paper:
+
+* ``hadamard(n)``       — Sylvester-construction Hadamard, natural ordering.
+* ``walsh(n)``          — the same rows re-ordered to ascending *sequency*
+                          (number of sign flips per row), i.e. the Walsh or
+                          "sequency-ordered" Hadamard matrix.
+* ``rht(n, key)``       — Randomized Hadamard Transform: ``H @ diag(s)``
+                          with iid Rademacher signs (QuIP# / QuaRot).
+* ``block_diag(B, n)``  — local rotation ``I_{n/G} ⊗ B`` (paper Eq. 3).
+* ``build_r1(kind, n, G, key)`` — the paper's four R1 variants:
+                          GH, GW, LH, GSR.
+
+All matrices are orthonormal (scaled by ``1/sqrt(block)``), fp64 numpy —
+these are *build-time* objects that get fused into weights or exported as
+HLO parameters; nothing here runs at request time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "hadamard",
+    "walsh",
+    "sequency",
+    "sequency_of_natural_row",
+    "walsh_permutation",
+    "rht",
+    "block_diag",
+    "build_r1",
+    "build_r2",
+    "build_r4",
+    "R1_KINDS",
+]
+
+R1_KINDS = ("GH", "GW", "LH", "GSR")
+
+
+def _check_pow2(n: int) -> None:
+    if n <= 0 or (n & (n - 1)) != 0:
+        raise ValueError(f"size must be a positive power of two, got {n}")
+
+
+def hadamard(n: int, *, normalized: bool = True) -> np.ndarray:
+    """Sylvester Hadamard matrix of size ``n`` (power of two).
+
+    Natural (Hadamard) ordering: ``H_{2^k} = H_2 ⊗ H_{2^{k-1}}`` (paper
+    Eq. 1). With ``normalized=True`` the matrix is orthonormal.
+    """
+    _check_pow2(n)
+    h = np.ones((1, 1), dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    if normalized:
+        h = h / np.sqrt(n)
+    return h
+
+
+def sequency(row: np.ndarray) -> int:
+    """Number of sign flips along a ±1 row — the row's *sequency*."""
+    signs = np.sign(row)
+    return int(np.count_nonzero(signs[1:] != signs[:-1]))
+
+
+def sequency_of_natural_row(i: int, n: int) -> int:
+    """Sequency (sign-flip count) of row ``i`` of the size-``n``
+    natural-ordered Sylvester Hadamard matrix.
+
+    Closed form: bit-reverse ``i`` over log₂(n) bits, then Gray-to-binary
+    decode (prefix XOR) — the classical bit-reversal + Gray-code
+    relation (Tam & Goulet 1972). For n=8 this yields the paper §2.1
+    example: rows have sequencies 0, 7, 3, 4, 1, 6, 2, 5.
+
+    (The paper's Eq. 2 ``bit_count(i ⊕ (i >> 1))`` is the *binary-to-Gray
+    popcount*, which does not reproduce the example; we implement the
+    construction that does, and verify it against directly-counted sign
+    flips in tests.)
+    """
+    _check_pow2(n)
+    bits = n.bit_length() - 1
+    rev = int(bin(i)[2:].zfill(bits)[::-1], 2) if bits else 0
+    # Gray → binary: prefix XOR of all more-significant bits.
+    b = rev
+    shift = 1
+    while (rev >> shift) != 0:
+        b ^= rev >> shift
+        shift += 1
+    return b
+
+
+def walsh_permutation(n: int) -> np.ndarray:
+    """Permutation ``p`` with ``walsh(n) == hadamard(n)[p]``.
+
+    Sorts natural rows by closed-form sequency; the key is a bijection
+    on 0..n-1, so the permutation is exactly the textbook bit-reversal +
+    Gray-code ordering.
+    """
+    _check_pow2(n)
+    seq = np.array([sequency_of_natural_row(i, n) for i in range(n)])
+    return np.argsort(seq, kind="stable")
+
+
+def walsh(n: int, *, normalized: bool = True) -> np.ndarray:
+    """Walsh (sequency-ordered Hadamard) matrix of size ``n``.
+
+    Row ``i`` has exactly ``i`` sign flips — ascending sequency. This is
+    the paper's drop-in replacement for the Hadamard matrix: same row set,
+    different arrangement, which under group quantization reduces the
+    intra-group sequency variance of the front rotation (paper §3.2).
+    """
+    h = hadamard(n, normalized=normalized)
+    return h[walsh_permutation(n)]
+
+
+def rht(n: int, rng: np.random.Generator, *, normalized: bool = True) -> np.ndarray:
+    """Randomized Hadamard Transform ``H @ diag(s)``, ``s ∈ {±1}^n``.
+
+    QuaRot/QuIP# incoherence processing. Sign flips on *columns* keep the
+    row-sequency arrangement intact (paper §3.2 "Comparing RHT and
+    Walsh"), which is why the Walsh re-ordering is orthogonal to (and
+    stacks with) randomization.
+    """
+    h = hadamard(n, normalized=normalized)
+    s = rng.integers(0, 2, size=n) * 2 - 1
+    return h * s[None, :].astype(np.float64)
+
+
+def block_diag(block: np.ndarray, n: int) -> np.ndarray:
+    """Local rotation ``I_{n/G} ⊗ block`` (paper Eq. 3).
+
+    ``block`` is a ``G×G`` orthonormal matrix; ``G`` must divide ``n``.
+    """
+    g = block.shape[0]
+    if block.shape != (g, g):
+        raise ValueError("block must be square")
+    if n % g != 0:
+        raise ValueError(f"group size {g} must divide dimension {n}")
+    out = np.zeros((n, n), dtype=block.dtype)
+    for b in range(n // g):
+        out[b * g : (b + 1) * g, b * g : (b + 1) * g] = block
+    return out
+
+
+def build_r1(kind: str, n: int, group: int, rng: np.random.Generator) -> np.ndarray:
+    """Build the paper's four R1 variants (Table 1 ``R_1`` column).
+
+    * ``GH``  — global randomized Hadamard (QuaRot default).
+    * ``GW``  — global Walsh (sequency-ordered, *not* randomized; paper
+      §4 "when constructing Walsh matrices, the original Hadamard matrix
+      is used").
+    * ``LH``  — local (block-diagonal) randomized Hadamard, block = group
+      size.
+    * ``GSR`` — Grouped Sequency-arranged Rotation: block-diagonal Walsh,
+      block = group size (the paper's contribution).
+    """
+    if kind == "GH":
+        return rht(n, rng)
+    if kind == "GW":
+        return walsh(n)
+    if kind == "LH":
+        return block_diag(rht(group, rng), n)
+    if kind == "GSR":
+        return block_diag(walsh(group), n)
+    raise ValueError(f"unknown R1 kind {kind!r}; expected one of {R1_KINDS}")
+
+
+def build_r2(head_dim: int, rng: np.random.Generator) -> np.ndarray:
+    """Per-head value rotation (fused offline into W_v / W_o)."""
+    return rht(head_dim, rng)
+
+
+def build_r4(kind: str, n: int, group: int, rng: np.random.Generator) -> np.ndarray:
+    """Online down-projection input rotation (paper Table 2 ablation).
+
+    ``GH`` (global Hadamard, QuaRot default) or ``LH`` (local Hadamard,
+    the ablation that helps under W2A4).
+    """
+    if kind == "GH":
+        return rht(n, rng)
+    if kind == "LH":
+        return block_diag(rht(group, rng), n)
+    raise ValueError(f"unknown R4 kind {kind!r}; expected GH or LH")

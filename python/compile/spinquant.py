@@ -1,0 +1,170 @@
+"""SpinQuant-style learned rotation (simplified; DESIGN.md §2).
+
+The real SpinQuant optimizes R1/R2 on the Stiefel manifold against the
+network loss with quantization in the loop. Our miniature keeps the two
+defining ingredients — (a) a *learned orthogonal* R1 via the Cayley
+parametrization, (b) quantization-aware objective with a straight-through
+estimator — but optimizes the layerwise proxy
+
+    L(R1) = Σ_linears ‖W'(R1) − fq(W'(R1))‖²  (+ activation term under A4)
+
+over the rotated-fused weights W'(R1) from model.fuse_rotations. This
+preserves the paper's comparison structure: the learned method beats its
+own initialization, and a GSR initialization beats a GH one (Table 1's
+SpinQuant block).
+
+The orthogonality invariant R1 R1ᵀ = I holds *exactly* throughout (Cayley
+maps skew-symmetric A to orthogonal Q), asserted by tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelCfg
+from .train import adam_init, adam_update
+
+DEFAULT_STEPS = 60
+LR = 1e-3
+
+
+def cayley(a: jnp.ndarray) -> jnp.ndarray:
+    """Skew(A) → orthogonal: ``(I − S)(I + S)⁻¹`` with ``S = A − Aᵀ``."""
+    s = a - a.T
+    n = a.shape[0]
+    eye = jnp.eye(n, dtype=a.dtype)
+    return jnp.linalg.solve((eye + s).T, (eye - s).T).T
+
+
+def ste_fake_quant_asym(w: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """Asymmetric group fake-quant along axis 0, output detached.
+
+    For the reconstruction objective ``‖w − fq(w)‖²`` the quantized value
+    must be a *constant* w.r.t. the learned transform: the gradient
+    ``2(w − fq(w))`` then pulls the rotated weights toward their current
+    grid points. (A value-STE ``w + sg(fq(w) − w)`` makes the residual a
+    pure stop_gradient and kills the gradient entirely — the classic
+    trap; caught by tests/test_learned.py.)
+    """
+    c, h = w.shape
+    qmax = (1 << bits) - 1
+    wg = w.reshape(c // group, group, h)
+    lo = jnp.min(wg, axis=1, keepdims=True)
+    hi = jnp.max(wg, axis=1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-12)
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(wg / scale) + zero, 0, qmax)
+    deq = ((q - zero) * scale).reshape(c, h)
+    return jax.lax.stop_gradient(deq)
+
+
+def ste_fake_quant_sym(x: jnp.ndarray, bits: int, group: int, clip: float = 0.9) -> jnp.ndarray:
+    """Symmetric group fake-quant along the last axis, output detached
+    (see :func:`ste_fake_quant_asym` for why)."""
+    qmax = (1 << (bits - 1)) - 1
+    orig = x.shape
+    xg = x.reshape(*orig[:-1], orig[-1] // group, group)
+    scale = jnp.maximum(clip * jnp.max(jnp.abs(xg), axis=-1, keepdims=True) / qmax, 1e-12)
+    q = jnp.clip(jnp.round(xg / scale), -qmax, qmax)
+    deq = (q * scale).reshape(orig)
+    return jax.lax.stop_gradient(deq)
+
+
+def _rotated_weights(params_f64: dict[str, Any], cfg: ModelCfg, r1: jnp.ndarray, b2: jnp.ndarray):
+    """Differentiable re-statement of model.fuse_rotations for the R1 slots.
+
+    Yields (name, W', quant_axis0_group_relevant) for every quantized
+    linear. γ is pre-folded into the float weights by the caller.
+    """
+    ws = []
+    for layer in params_f64["layers"]:
+        ws.append(r1.T @ layer["wq_g"])
+        ws.append(r1.T @ layer["wk_g"])
+        ws.append(r1.T @ layer["wv_g"] @ b2)
+        ws.append(b2.T @ layer["wo"] @ r1)
+        ws.append(r1.T @ layer["wgate_g"])
+        ws.append(r1.T @ layer["wup_g"])
+        ws.append(layer["wdown_r4"] @ r1)
+    return ws
+
+
+def prefold_gamma(params: dict[str, Any], cfg: ModelCfg, r4t: np.ndarray) -> dict[str, Any]:
+    """Fold RMSNorm γ (and R4ᵀ into wdown) once, outside the learned loop."""
+    out = {"layers": []}
+    for layer in params["layers"]:
+        g1 = np.asarray(layer["ln1"], np.float64)[:, None]
+        g2 = np.asarray(layer["ln2"], np.float64)[:, None]
+        out["layers"].append(
+            {
+                "wq_g": jnp.asarray(g1 * np.asarray(layer["wq"], np.float64), jnp.float32),
+                "wk_g": jnp.asarray(g1 * np.asarray(layer["wk"], np.float64), jnp.float32),
+                "wv_g": jnp.asarray(g1 * np.asarray(layer["wv"], np.float64), jnp.float32),
+                "wo": jnp.asarray(layer["wo"], jnp.float32),
+                "wgate_g": jnp.asarray(g2 * np.asarray(layer["wgate"], np.float64), jnp.float32),
+                "wup_g": jnp.asarray(g2 * np.asarray(layer["wup"], np.float64), jnp.float32),
+                "wdown_r4": jnp.asarray(r4t @ np.asarray(layer["wdown"], np.float64), jnp.float32),
+            }
+        )
+    return out
+
+
+def learn_rotation(
+    params: dict[str, Any],
+    cfg: ModelCfg,
+    r1_init: np.ndarray,
+    r2: np.ndarray,
+    r4: np.ndarray,
+    *,
+    w_bits: int = 2,
+    a_bits: int | None = None,
+    calib_h: np.ndarray | None = None,
+    steps: int = DEFAULT_STEPS,
+    lr: float = LR,
+) -> tuple[np.ndarray, list[float]]:
+    """Learn R1 = cayley(A) @ R1_init minimizing the STE quant proxy.
+
+    ``calib_h``: optional [N, d_model] pre-norm hidden samples for the
+    activation-quantization term under A4 (the rotated activation
+    ``h @ R1`` is what gets RTN-quantized at the linear inputs).
+    Returns the learned R1 (fp64, exactly orthogonal) and the loss log.
+    """
+    d = cfg.d_model
+    b2 = jnp.asarray(np.kron(np.eye(cfg.n_heads), r2), jnp.float32)
+    r1_0 = jnp.asarray(r1_init, jnp.float32)
+    folded = prefold_gamma(params, cfg, np.asarray(r4, np.float64).T)
+    hcal = None if calib_h is None else jnp.asarray(calib_h, jnp.float32)
+
+    def objective(a):
+        r1 = cayley(a) @ r1_0
+        loss = 0.0
+        for w in _rotated_weights(folded, cfg, r1, b2):
+            loss = loss + jnp.mean((w - ste_fake_quant_asym(w, w_bits, cfg.group)) ** 2)
+        if a_bits is not None and hcal is not None:
+            hr = hcal @ r1
+            loss = loss + jnp.mean((hr - ste_fake_quant_sym(hr, a_bits, cfg.group)) ** 2)
+        return loss
+
+    a = jnp.zeros((d, d), jnp.float32)
+    state = adam_init(a)
+
+    @jax.jit
+    def step(a, state):
+        loss, grad = jax.value_and_grad(objective)(a)
+        a, state = adam_update(a, grad, state, lr)
+        return a, state, loss
+
+    log = []
+    for s in range(steps):
+        a, state, loss = step(a, state)
+        if s % 10 == 0 or s == steps - 1:
+            log.append(float(loss))
+    # Exact orthogonalization in fp64 (Cayley in fp64 of the learned skew).
+    a64 = np.asarray(a, np.float64)
+    s64 = a64 - a64.T
+    eye = np.eye(d)
+    r1_learned = np.linalg.solve((eye + s64).T, (eye - s64).T).T @ np.asarray(r1_init, np.float64)
+    return r1_learned, log

@@ -1,0 +1,151 @@
+"""Build-time pretraining of llama_mini on the synthetic corpus.
+
+Produces the fp32 checkpoint that every quantized variant is derived
+from. Hand-rolled Adam (no optax in this offline image), cosine LR with
+warmup, next-byte cross-entropy. Runs once under ``make artifacts``;
+~300 jitted steps on CPU.
+
+The training loss curve is written to ``artifacts/train_log.json`` and
+summarized in EXPERIMENTS.md (the end-to-end validation requirement).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .corpus import generate_corpus
+from .model import ModelCfg, init_params, loss_fn, num_params
+
+TRAIN_SEED = 11
+DEFAULT_STEPS = 300
+BATCH = 16
+SEQ = 129  # 128 predictions per row
+LR_PEAK = 3e-3
+WARMUP = 30
+
+
+def adam_init(params: Any) -> dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1**tf)
+    vhat_scale = 1.0 / (1 - b2**tf)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step: jnp.ndarray, total: int) -> jnp.ndarray:
+    warm = jnp.minimum(step / WARMUP, 1.0)
+    prog = jnp.clip((step - WARMUP) / max(total - WARMUP, 1), 0.0, 1.0)
+    return LR_PEAK * warm * (0.5 * (1 + jnp.cos(np.pi * prog)))
+
+
+def batch_iterator(corpus: bytes, batch: int, seq: int, seed: int):
+    """Random contiguous windows from the train split."""
+    data = np.frombuffer(corpus, np.uint8)
+    rng = np.random.default_rng(seed)
+    n = len(data) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([data[s : s + seq] for s in starts]).astype(np.int32)
+
+
+def train(
+    cfg: ModelCfg,
+    corpus: bytes,
+    steps: int = DEFAULT_STEPS,
+    seed: int = TRAIN_SEED,
+    log_every: int = 20,
+) -> tuple[dict[str, Any], list[dict[str, float]]]:
+    """Train llama_mini; returns (params, loss log)."""
+    params = init_params(cfg, seed=seed)
+    print(f"[train] llama_mini params={num_params(params):,}")
+    state = adam_init(params)
+
+    # The outlier-γ vectors are architectural constants (see
+    # model.outlier_gamma): freeze them by zeroing their gradients.
+    def freeze_norms(grads):
+        for layer in grads["layers"]:
+            layer["ln1"] = jnp.zeros_like(layer["ln1"])
+            layer["ln2"] = jnp.zeros_like(layer["ln2"])
+        grads["ln_f"] = jnp.zeros_like(grads["ln_f"])
+        return grads
+
+    @jax.jit
+    def step_fn(params, state, tokens, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+        grads = freeze_norms(grads)
+        lr = lr_schedule(step.astype(jnp.float32), steps)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    it = batch_iterator(corpus, BATCH, SEQ, seed + 1)
+    log: list[dict[str, float]] = []
+    t0 = time.time()
+    for s in range(steps):
+        tokens = jnp.asarray(next(it))
+        params, state, loss = step_fn(params, state, tokens, jnp.asarray(s))
+        if s % log_every == 0 or s == steps - 1:
+            lv = float(loss)
+            log.append({"step": s, "loss": lv, "elapsed_s": time.time() - t0})
+            print(f"[train] step {s:4d} loss {lv:.4f} ({time.time()-t0:.1f}s)")
+    return params, log
+
+
+def evaluate_ppl_fp(params, cfg: ModelCfg, corpus: bytes, n_windows: int = 32, seq: int = 129) -> float:
+    """Validation byte-level perplexity of the fp model (python-side sanity;
+    the authoritative eval is the Rust engine over the PJRT artifacts)."""
+    from .model import forward_fp
+
+    data = np.frombuffer(corpus, np.uint8)
+    total_nll, total_tok = 0.0, 0
+
+    @jax.jit
+    def nll_fn(tokens):
+        logits = forward_fp(params, tokens[:, :-1], cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        t = tokens[:, 1:]
+        return -jnp.take_along_axis(logp, t[..., None], axis=-1)[..., 0].sum()
+
+    for i in range(n_windows):
+        s = i * seq
+        if s + seq > len(data):
+            break
+        tokens = jnp.asarray(data[s : s + seq][None].astype(np.int32))
+        total_nll += float(nll_fn(tokens))
+        total_tok += seq - 1
+    return float(np.exp(total_nll / max(total_tok, 1)))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=DEFAULT_STEPS)
+    ap.add_argument("--corpus-bytes", type=int, default=1 << 20)
+    ap.add_argument("--out", default="../artifacts/train_log.json")
+    args = ap.parse_args()
+    cfg = ModelCfg()
+    corpus = generate_corpus(args.corpus_bytes)
+    params, log = train(cfg, corpus, steps=args.steps)
+    ppl = evaluate_ppl_fp(params, cfg, corpus)
+    print(f"[train] byte PPL (train-dist sample): {ppl:.3f}")
+    with open(args.out, "w") as f:
+        json.dump({"log": log, "ppl": ppl}, f, indent=1)

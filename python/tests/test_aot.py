@@ -1,0 +1,82 @@
+"""AOT artifact consistency (runs only when `make artifacts` has built)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.model import ModelCfg, fp_param_spec, quant_param_spec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_cfg_matches_code():
+    m = manifest()
+    cfg = ModelCfg()
+    for key in ["vocab", "d_model", "n_layers", "n_heads", "d_ffn", "group"]:
+        assert m["cfg"][key] == getattr(cfg, key), key
+
+
+def test_manifest_specs_match_code():
+    m = manifest()
+    cfg = ModelCfg()
+    assert m["graphs"]["fp"]["params"] == [
+        [n, list(s), d] for n, s, d in fp_param_spec(cfg)
+    ]
+    for r4 in ["gh", "lh"]:
+        for bits in ["w2a16", "w2a4"]:
+            g = m["graphs"][f"{bits}_r4{r4}"]["params"]
+            assert g == [
+                [n, list(s), d] for n, s, d in quant_param_spec(cfg, r4.upper())
+            ]
+
+
+def test_variant_blobs_have_declared_size():
+    m = manifest()
+    cfg = ModelCfg()
+    sizes = {}
+    for r4 in ["GH", "LH"]:
+        total = 0
+        for _, shape, dt in quant_param_spec(cfg, r4):
+            total += int(np.prod(shape)) * (4 if dt == "f32" else 1)
+        sizes[r4] = total
+    for v in m["variants"]:
+        path = os.path.join(ART, v["weights"])
+        r4 = v["r4"]
+        assert os.path.getsize(path) == sizes[r4], v["name"]
+
+
+def test_all_28_variants_present():
+    m = manifest()
+    assert len(m["variants"]) == 28
+    names = {v["name"] for v in m["variants"]}
+    assert "quarot_w2a16_gsr_r4gh" in names
+    assert "ostquant_w2a4_gsr_r4gh" in names
+    assert "quarot_w2a4_gsr_r4lh" in names
+
+
+def test_hlo_files_exist_and_are_text():
+    m = manifest()
+    for g in m["graphs"].values():
+        path = os.path.join(ART, g["hlo"])
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, path
+
+
+def test_sanity_ppls_recorded_and_finite():
+    m = manifest()
+    for v in m["variants"]:
+        assert np.isfinite(v["sanity_ppl"]), v["name"]
+        assert 1.0 < v["sanity_ppl"] < 1000.0

@@ -1,0 +1,45 @@
+"""Corpus generator contract (mirrored by rust/src/data/corpus.rs)."""
+
+import numpy as np
+
+from compile.corpus import (
+    SEED_CORPUS,
+    CorpusGenerator,
+    SplitMix64,
+    generate_corpus,
+)
+
+
+def test_splitmix64_reference_vectors():
+    # Published SplitMix64 outputs for seed 0 — the cross-language anchor.
+    r = SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+
+
+def test_deterministic():
+    assert generate_corpus(4096) == generate_corpus(4096)
+
+
+def test_alphabet():
+    data = generate_corpus(1 << 14)
+    assert set(data) <= set(b"abcdefghijklmnopqrstuvwxyz. ")
+
+
+def test_zipf_head_dominates():
+    gen = CorpusGenerator(SEED_CORPUS)
+    counts = np.zeros(256, np.int64)
+    for _ in range(20_000):
+        counts[gen.next_word_idx()] += 1
+    assert counts[:8].sum() > 3 * counts[128:136].sum()
+
+
+def test_sentences_terminate():
+    data = generate_corpus(1 << 14)
+    assert data.count(b". ") > 100
+
+
+def test_word_lengths():
+    gen = CorpusGenerator(SEED_CORPUS)
+    assert all(2 <= len(w) <= 7 for w in gen.lexicon)
+    assert len(gen.lexicon) == 256

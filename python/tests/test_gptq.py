@@ -1,0 +1,90 @@
+"""GPTQ / RTN quantizer properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.gptq import QuantizedLinear, gptq_quantize, pack2, rtn_quantize
+
+
+def correlated_activations(n, c, seed, outlier_frac=0.1):
+    rng = np.random.default_rng(seed)
+    amp = np.where(rng.random(c) < outlier_frac, 6.0, 1.0)
+    base = rng.standard_normal((n, 1))
+    return (0.6 * base + 0.4 * rng.standard_normal((n, c))) * amp[None, :]
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_rtn_roundtrip_error_bounded(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((64, 16))
+    q = rtn_quantize(w, 4, 16, mse_clip=False)
+    err = np.abs(q.dequant() - w)
+    steps = np.repeat(q.scale, 16, axis=0)
+    assert np.all(err <= 0.5 * steps + 1e-9)
+
+
+def test_mse_clip_never_hurts_reconstruction():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((128, 32)) * (1 + 4 * (rng.random((128, 1)) < 0.05))
+    plain = rtn_quantize(w, 2, 32, mse_clip=False)
+    clipped = rtn_quantize(w, 2, 32, mse_clip=True)
+    mse = lambda q: float(((q.dequant() - w) ** 2).mean())
+    assert mse(clipped) <= mse(plain) + 1e-12
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_gptq_beats_rtn_on_hessian_loss(bits):
+    rng = np.random.default_rng(5)
+    c, h = 64, 32
+    w = rng.standard_normal((c, h))
+    x = correlated_activations(512, c, 6)
+    hess = x.T @ x / len(x)
+    qg = gptq_quantize(w, hess, bits, 16)
+    qr = rtn_quantize(w, bits, 16)
+    loss = lambda q: float(
+        np.einsum("ch,cd,dh->", q.dequant() - w, hess, q.dequant() - w)
+    )
+    assert loss(qg) < loss(qr), f"{loss(qg)} !< {loss(qr)}"
+
+
+def test_gptq_codes_in_range():
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((32, 8))
+    x = correlated_activations(128, 32, 8)
+    q = gptq_quantize(w, x.T @ x, 2, 8)
+    assert q.codes.min() >= 0 and q.codes.max() <= 3
+
+
+def test_gptq_handles_dead_channels():
+    rng = np.random.default_rng(9)
+    w = rng.standard_normal((16, 4))
+    x = correlated_activations(64, 16, 10)
+    x[:, 3] = 0.0  # dead input channel
+    q = gptq_quantize(w, x.T @ x, 2, 8)
+    assert np.isfinite(q.dequant()).all()
+
+
+def test_pack2_matches_kernel_ref():
+    import jax.numpy as jnp
+
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(11)
+    codes = rng.integers(0, 4, (64, 12)).astype(np.int32)
+    a = pack2(codes)
+    b = np.asarray(ref.pack2(jnp.asarray(codes)))
+    assert np.array_equal(a, b)
+
+
+def test_quantized_linear_dequant_shape():
+    q = QuantizedLinear(
+        codes=np.zeros((8, 2), np.int32),
+        scale=np.ones((2, 2)),
+        zero=np.zeros((2, 2)),
+        group=4,
+        bits=2,
+    )
+    assert q.dequant().shape == (8, 2)

@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes / group sizes / dtypes; every kernel must match
+its `ref.py` oracle to float tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qmatmul import dequant_matmul_pallas
+from compile.kernels.quant import rtn_fake_quant_sym_pallas
+from compile.kernels.walsh import (
+    fwht_pallas,
+    grouped_fwht_pallas,
+    rht_pallas,
+    walsh_transform_pallas,
+)
+from compile.rotation import hadamard, walsh
+
+WIDTHS = st.sampled_from([16, 32, 64, 128, 256, 512])
+ROWS = st.integers(min_value=1, max_value=33)
+
+
+def randx(rows, n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, n)), dtype)
+
+
+@given(ROWS, WIDTHS, st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_fwht_pallas_matches_ref(rows, n, seed):
+    x = randx(rows, n, seed)
+    np.testing.assert_allclose(
+        np.asarray(fwht_pallas(x)), np.asarray(ref.fwht(x)), atol=1e-5
+    )
+
+
+@given(ROWS, st.sampled_from([(64, 16), (128, 32), (256, 64), (512, 64)]), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_grouped_fwht_pallas_matches_ref(rows, ng, seed):
+    n, g = ng
+    x = randx(rows, n, seed)
+    np.testing.assert_allclose(
+        np.asarray(grouped_fwht_pallas(x, g)),
+        np.asarray(ref.grouped_fwht(x, g)),
+        atol=1e-5,
+    )
+
+
+def test_fwht_equals_dense_hadamard():
+    x = randx(7, 128, 3)
+    np.testing.assert_allclose(
+        np.asarray(ref.fwht(x)), np.asarray(x) @ hadamard(128), atol=1e-5
+    )
+
+
+def test_walsh_transform_equals_dense():
+    x = randx(5, 64, 4)
+    np.testing.assert_allclose(
+        np.asarray(walsh_transform_pallas(x)),
+        np.asarray(x) @ walsh(64).T,
+        atol=1e-5,
+    )
+
+
+@given(ROWS, WIDTHS, st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_rht_pallas_matches_ref(rows, n, seed):
+    rng = np.random.default_rng(seed + 1)
+    s = jnp.asarray(rng.integers(0, 2, n) * 2 - 1, jnp.float32)
+    x = randx(rows, n, seed)
+    expect = np.asarray(ref.fwht(x)) * np.asarray(s)
+    np.testing.assert_allclose(np.asarray(rht_pallas(x, s)), expect, atol=1e-5)
+
+
+@given(
+    ROWS,
+    st.sampled_from([(64, 16), (128, 32), (256, 64)]),
+    st.sampled_from([4, 8]),
+    st.floats(0.5, 1.0),
+    st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_rtn_sym_pallas_matches_ref(rows, ng, bits, clip, seed):
+    n, g = ng
+    x = randx(rows, n, seed)
+    np.testing.assert_allclose(
+        np.asarray(rtn_fake_quant_sym_pallas(x, bits, g, clip)),
+        np.asarray(ref.rtn_fake_quant_sym(x, bits, g, clip)),
+        atol=1e-5,
+    )
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pack_unpack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 4, (64, 24)), jnp.int32)
+    assert np.array_equal(np.asarray(ref.unpack2(ref.pack2(codes))), np.asarray(codes))
+
+
+@given(
+    ROWS,
+    st.sampled_from([(64, 16, 32), (128, 32, 64), (256, 64, 128), (512, 64, 256)]),
+    st.integers(0, 10_000),
+)
+@settings(max_examples=20, deadline=None)
+def test_dequant_matmul_pallas_matches_ref(rows, kgh, seed):
+    k, g, h = kgh
+    rng = np.random.default_rng(seed)
+    x = randx(rows, k, seed)
+    w = jnp.asarray(rng.standard_normal((k, h)), jnp.float32)
+    codes, scale, zero = ref.rtn_quant_asym(w, 2, g)
+    packed = ref.pack2(codes)
+    np.testing.assert_allclose(
+        np.asarray(dequant_matmul_pallas(x, packed, scale, zero, g)),
+        np.asarray(ref.dequant_matmul(x, packed, scale, zero, g)),
+        atol=2e-3,
+    )
+
+
+def test_dequant_matmul_vs_dense():
+    # Dequantized matmul equals x @ dequant(W) computed densely.
+    rng = np.random.default_rng(11)
+    x = randx(9, 128, 12)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    codes, scale, zero = ref.rtn_quant_asym(w, 2, 32)
+    wd = ref.dequant(codes, scale, zero, 32)
+    packed = ref.pack2(codes)
+    np.testing.assert_allclose(
+        np.asarray(dequant_matmul_pallas(x, packed, scale, zero, 32)),
+        np.asarray(x @ wd),
+        atol=2e-3,
+    )
+
+
+def test_quant_error_bounded():
+    rng = np.random.default_rng(13)
+    w = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    codes, scale, zero = ref.rtn_quant_asym(w, 2, 32)
+    wd = np.asarray(ref.dequant(codes, scale, zero, 32))
+    err = np.abs(wd - np.asarray(w))
+    # Per-element error ≤ half a quantization step of its group.
+    steps = np.repeat(np.asarray(scale), 32, axis=0)
+    assert np.all(err <= steps * 0.5 + 1e-6)

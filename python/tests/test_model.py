@@ -1,0 +1,104 @@
+"""Model shapes, specs, and quantized-forward smoke (L2)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import rotation as rot
+from compile.gptq import gptq_quantize, pack2
+from compile.model import (
+    ModelCfg,
+    forward_fp,
+    fp_param_spec,
+    fuse_r4,
+    fuse_rotations,
+    init_params,
+    loss_fn,
+    make_quant_forward,
+    num_params,
+    quant_param_spec,
+    unflatten_quant_params,
+)
+
+CFG = ModelCfg(d_model=64, n_layers=2, n_heads=2, d_ffn=128, group=16)
+
+
+def test_forward_shapes():
+    params = init_params(CFG, seed=0)
+    tokens = jnp.zeros((2, 10), jnp.int32)
+    logits = forward_fp(params, tokens, CFG)
+    assert logits.shape == (2, 10, CFG.vocab)
+
+
+def test_loss_finite_and_near_uniform_at_init():
+    params = init_params(CFG, seed=0)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, 256, (4, 33)), jnp.int32)
+    loss = float(loss_fn(params, tokens, CFG))
+    assert np.isfinite(loss)
+    assert abs(loss - np.log(256)) < 2.0  # random init ≈ uniform predictor
+
+
+def test_param_spec_matches_init():
+    params = init_params(CFG, seed=0)
+    spec = fp_param_spec(CFG)
+    total_spec = sum(int(np.prod(s)) for _, s, _ in spec)
+    assert total_spec == num_params(params)
+
+
+def test_quant_spec_deterministic_order():
+    a = quant_param_spec(CFG, "GH")
+    b = quant_param_spec(CFG, "GH")
+    assert a == b
+    names = [n for n, _, _ in a]
+    assert names[0] == "embed" and names[2] == "r3"
+    assert any("ascale_down" in n for n in names)
+
+
+def test_quant_forward_lowering_roundtrip():
+    """End-to-end L2 smoke: quantize a tiny model, run the exported-fn
+    path (flat params → logits) that aot.py lowers to HLO."""
+    params = init_params(CFG, seed=1)
+    rng = np.random.default_rng(2)
+    r1 = rot.build_r1("GSR", CFG.d_model, CFG.group, rng)
+    r2 = rot.build_r2(CFG.head_dim, rng)
+    r3 = rot.rht(CFG.head_dim, rng)
+    signs = rng.integers(0, 2, CFG.d_ffn) * 2.0 - 1.0
+    r4 = rot.hadamard(CFG.d_ffn) * signs[None, :]
+    fused = fuse_r4(fuse_rotations(params, CFG, r1, r2), r4)
+
+    fn, spec = make_quant_forward(CFG, a_bits=None, r4_kind="GH")
+    flat = []
+    qstate = {}
+    for layer in fused["layers"]:
+        for name in CFG.LINEARS:
+            w = np.asarray(layer[name])
+            q = gptq_quantize(w, np.eye(w.shape[0]), 2, CFG.group, mse_clip=False)
+            qstate[id(layer), name] = q
+    for name, shape, dt in spec:
+        if name == "embed":
+            flat.append(jnp.asarray(fused["embed"], jnp.float32))
+        elif name == "lm_head":
+            flat.append(jnp.asarray(fused["lm_head"], jnp.float32))
+        elif name == "r3":
+            flat.append(jnp.asarray(r3, jnp.float32))
+        elif name == "r4_signs":
+            flat.append(jnp.asarray(signs, jnp.float32))
+        elif "ascale" in name:
+            flat.append(jnp.ones(shape, jnp.float32))
+        else:
+            _, idx, field = name.split(".")
+            base = field.rsplit("_", 1)[0]
+            q = qstate[id(fused["layers"][int(idx)]), base]
+            if field.endswith("_packed"):
+                flat.append(jnp.asarray(pack2(q.codes), jnp.uint8))
+            elif field.endswith("_scale"):
+                flat.append(jnp.asarray(q.scale, jnp.float32))
+            else:
+                flat.append(jnp.asarray(q.zero, jnp.float32))
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    (logits,) = fn(tokens, *flat)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # Sanity: unflatten round-trips the spec structure.
+    qp = unflatten_quant_params(CFG, spec, flat)
+    assert len(qp["layers"]) == CFG.n_layers

@@ -1,0 +1,115 @@
+"""Rotation-matrix construction properties (paper §2.1/§3.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.rotation import (
+    R1_KINDS,
+    block_diag,
+    build_r1,
+    build_r4,
+    hadamard,
+    rht,
+    sequency,
+    sequency_of_natural_row,
+    walsh,
+    walsh_permutation,
+)
+
+SIZES = st.sampled_from([2, 4, 8, 16, 32, 64, 128, 256])
+
+
+@given(SIZES)
+@settings(max_examples=20, deadline=None)
+def test_hadamard_orthonormal(n):
+    h = hadamard(n)
+    assert np.allclose(h @ h.T, np.eye(n), atol=1e-10)
+
+
+@given(SIZES)
+@settings(max_examples=20, deadline=None)
+def test_walsh_row_i_has_sequency_i(n):
+    w = walsh(n)
+    for i in range(n):
+        assert sequency(w[i]) == i
+
+
+def test_paper_sequency_example_n8():
+    # §2.1: natural rows of H8 have sequencies 0, 7, 3, 4, 1, 6, 2, 5.
+    assert [sequency_of_natural_row(i, 8) for i in range(8)] == [0, 7, 3, 4, 1, 6, 2, 5]
+
+
+@given(SIZES)
+@settings(max_examples=20, deadline=None)
+def test_closed_form_matches_counted(n):
+    h = hadamard(n)
+    for i in range(n):
+        assert sequency_of_natural_row(i, n) == sequency(h[i])
+
+
+@given(SIZES)
+@settings(max_examples=10, deadline=None)
+def test_walsh_permutation_is_bijection(n):
+    p = walsh_permutation(n)
+    assert sorted(p.tolist()) == list(range(n))
+
+
+def test_rht_randomizes_but_stays_orthonormal():
+    rng = np.random.default_rng(5)
+    m = rht(64, rng)
+    assert np.allclose(m @ m.T, np.eye(64), atol=1e-10)
+    assert np.allclose(np.abs(m), 1 / 8.0)
+
+
+def test_rht_column_flips_preserve_row_sequency_set():
+    # §3.2 "Comparing RHT and Walsh": sign flips on columns change each
+    # row's measured sequency, but the matrix stays a signed Hadamard —
+    # the Walsh re-ordering is an independent axis. Check RHT = H diag(s).
+    rng = np.random.default_rng(6)
+    m = rht(16, rng)
+    h = hadamard(16)
+    s = m[0] / h[0]
+    assert np.allclose(np.abs(s), 1.0)
+    assert np.allclose(h * s[None, :], m)
+
+
+@pytest.mark.parametrize("kind", R1_KINDS)
+def test_build_r1_orthonormal(kind):
+    rng = np.random.default_rng(7)
+    r = build_r1(kind, 256, 64, rng)
+    assert np.allclose(r @ r.T, np.eye(256), atol=1e-9)
+
+
+@pytest.mark.parametrize("kind", ["LH", "GSR"])
+def test_local_kinds_block_diagonal(kind):
+    rng = np.random.default_rng(8)
+    r = build_r1(kind, 128, 32, rng)
+    for bi in range(4):
+        for bj in range(4):
+            blk = r[bi * 32 : (bi + 1) * 32, bj * 32 : (bj + 1) * 32]
+            if bi != bj:
+                assert np.all(blk == 0.0)
+
+
+def test_gsr_blocks_are_walsh():
+    rng = np.random.default_rng(9)
+    r = build_r1("GSR", 128, 32, rng)
+    w = walsh(32)
+    for b in range(4):
+        assert np.allclose(r[b * 32 : (b + 1) * 32, b * 32 : (b + 1) * 32], w)
+
+
+def test_block_diag_validates():
+    with pytest.raises(ValueError):
+        block_diag(walsh(32), 100)  # 32 does not divide 100
+
+
+def test_build_r4_kinds():
+    rng = np.random.default_rng(10)
+    for kind in ["GH", "LH"]:
+        r = build_r4(kind, 512, 64, rng)
+        assert np.allclose(r @ r.T, np.eye(512), atol=1e-9)
+    with pytest.raises(ValueError):
+        build_r4("GSR", 512, 64, rng)

@@ -1,0 +1,103 @@
+"""Fig.-1 wiring check: the fused/rotated model is exactly the fp model.
+
+Orthogonal invariance of the full R1–R4 fusion (model.fuse_rotations /
+fuse_r4) must hold in fp arithmetic for every R1 kind and both R4 kinds —
+this validates the entire rotation scheme before any quantization.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import rotation as rot
+from compile.model import (
+    ModelCfg,
+    forward_fp,
+    forward_rotated,
+    fuse_r4,
+    fuse_rotations,
+    init_params,
+)
+
+CFG = ModelCfg(d_model=64, n_layers=2, n_heads=2, d_ffn=128, group=16)
+
+
+def build_qparams(fused, r3, r4_signs):
+    return {
+        "embed": jnp.asarray(fused["embed"], jnp.float32),
+        "lm_head": jnp.asarray(fused["lm_head"], jnp.float32),
+        "r3": jnp.asarray(r3, jnp.float32),
+        "r4_signs": jnp.asarray(r4_signs, jnp.float32),
+        "layers": [
+            {k: jnp.asarray(v, jnp.float32) for k, v in l.items()}
+            for l in fused["layers"]
+        ],
+    }
+
+
+@pytest.mark.parametrize("r1_kind", rot.R1_KINDS)
+@pytest.mark.parametrize("r4_kind", ["GH", "LH"])
+def test_rotated_model_equals_fp(r1_kind, r4_kind):
+    rng = np.random.default_rng(42)
+    params = init_params(CFG, seed=1)
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, (2, 24)), jnp.int32)
+    expect = forward_fp(params, tokens, CFG)
+
+    r1 = rot.build_r1(r1_kind, CFG.d_model, CFG.group, rng)
+    r2 = rot.build_r2(CFG.head_dim, rng)
+    r3 = rot.rht(CFG.head_dim, rng)
+    if r4_kind == "GH":
+        signs = rng.integers(0, 2, CFG.d_ffn) * 2.0 - 1.0
+        r4 = rot.hadamard(CFG.d_ffn) * signs[None, :]
+    else:
+        signs = rng.integers(0, 2, CFG.group) * 2.0 - 1.0
+        r4 = rot.block_diag(rot.hadamard(CFG.group) * signs[None, :], CFG.d_ffn)
+
+    fused = fuse_r4(fuse_rotations(params, CFG, r1, r2), r4)
+    qp = build_qparams(fused, r3, signs)
+    got = forward_rotated(qp, tokens, CFG, a_bits=None, r4_kind=r4_kind, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=2e-3)
+
+
+def test_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(7)
+    params = init_params(CFG, seed=2)
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+    r1 = rot.build_r1("GSR", CFG.d_model, CFG.group, rng)
+    r2 = rot.build_r2(CFG.head_dim, rng)
+    r3 = rot.rht(CFG.head_dim, rng)
+    signs = rng.integers(0, 2, CFG.d_ffn) * 2.0 - 1.0
+    r4 = rot.hadamard(CFG.d_ffn) * signs[None, :]
+    fused = fuse_r4(fuse_rotations(params, CFG, r1, r2), r4)
+    qp = build_qparams(fused, r3, signs)
+    a = forward_rotated(qp, tokens, CFG, a_bits=4, r4_kind="GH", use_pallas=False)
+    b = forward_rotated(qp, tokens, CFG, a_bits=4, r4_kind="GH", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_r3_does_not_change_function():
+    # R3 rotates Q and K identically after RoPE — scores are invariant.
+    rng = np.random.default_rng(8)
+    params = init_params(CFG, seed=3)
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, (1, 12)), jnp.int32)
+    r1 = rot.build_r1("GH", CFG.d_model, CFG.group, rng)
+    r2 = rot.build_r2(CFG.head_dim, rng)
+    signs = rng.integers(0, 2, CFG.d_ffn) * 2.0 - 1.0
+    r4 = rot.hadamard(CFG.d_ffn) * signs[None, :]
+    fused = fuse_r4(fuse_rotations(params, CFG, r1, r2), r4)
+    rng2 = np.random.default_rng(9)
+    out_a = forward_rotated(
+        build_qparams(fused, rot.rht(CFG.head_dim, rng2), signs),
+        tokens, CFG, use_pallas=False,
+    )
+    out_b = forward_rotated(
+        build_qparams(fused, np.eye(CFG.head_dim), signs),
+        tokens, CFG, use_pallas=False,
+    )
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b), atol=2e-3)
+
+
+def test_outlier_gamma_is_heavy_tailed():
+    params = init_params(ModelCfg(), seed=0)
+    g = np.asarray(params["layers"][0]["ln1"])
+    assert g.max() / np.median(g) > 3.0, "outlier γ substitution missing"

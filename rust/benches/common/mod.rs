@@ -1,0 +1,52 @@
+#![allow(dead_code)]
+//! Shared mini-bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with median/min reporting, and the
+//! artifact-presence guard every PJRT bench needs.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Time `f` over `iters` runs after `warmup` runs; returns per-run stats.
+pub fn time_it<T>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Duration {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    println!(
+        "bench {label:40} median {median:>12?}  min {min:>12?}  ({iters} iters)"
+    );
+    median
+}
+
+/// Artifact guard: returns false (and prints a notice) when artifacts
+/// are missing so `cargo bench` stays green on fresh clones.
+pub fn require_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        println!("SKIPPED: artifacts/ not built — run `make artifacts` first");
+        false
+    }
+}
+
+/// Env-tunable eval options (keep CI fast, allow full runs).
+pub fn eval_opts() -> gsr::eval::EvalOpts {
+    let windows = std::env::var("GSR_BENCH_WINDOWS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let tasks = std::env::var("GSR_BENCH_TASKS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    gsr::eval::EvalOpts { windows, tasks_per_kind: tasks }
+}

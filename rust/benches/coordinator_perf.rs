@@ -1,0 +1,89 @@
+//! L3 coordinator performance: batcher/router micro-costs and, when
+//! artifacts exist, end-to-end serving throughput under different batch
+//! policies (the batching-policy knob tuned in EXPERIMENTS §Perf).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use gsr::coordinator::{BatchPolicy, DynamicBatcher, RoutePolicy, Router, Server};
+
+fn micro() {
+    common::time_it("batcher push+take x1024", 2, 20, || {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        let mut n = 0usize;
+        for i in 0..1024u64 {
+            b.push(i);
+            if b.len() >= 4 {
+                n += b.take_batch().len();
+            }
+        }
+        n
+    });
+    common::time_it("router route+complete x1024", 2, 20, || {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        for i in 0..8 {
+            r.register(&format!("v{i}"));
+        }
+        for _ in 0..1024 {
+            let v = r.route(None).unwrap();
+            r.complete(&v);
+        }
+        r.total_in_flight()
+    });
+}
+
+fn serving() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let arts = gsr::runtime::Artifacts::load(Path::new("artifacts")).unwrap();
+    let seq = arts.seq;
+    let text = arts.test_split().to_vec();
+    for (label, policy) in [
+        ("batch=1 (no batching)", BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) }),
+        ("batch=4 wait=2ms", BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }),
+        ("batch=4 wait=10ms", BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(10) }),
+    ] {
+        let server = match Server::start(Path::new("artifacts"), &["fp".to_string()], policy) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("server start failed: {e}");
+                return;
+            }
+        };
+        let n = 24;
+        let t0 = Instant::now();
+        // Submit asynchronously to give the batcher something to pack.
+        let mut replies = Vec::new();
+        for i in 0..n {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let start = (i * 31) % (text.len() - seq - 1);
+            let tokens: Vec<i32> = text[start..start + seq].iter().map(|&b| b as i32).collect();
+            server
+                .submit(gsr::coordinator::Request {
+                    variant: "fp".to_string(),
+                    tokens,
+                    reply: tx,
+                })
+                .unwrap();
+            replies.push(rx);
+        }
+        for rx in replies {
+            rx.recv().unwrap().logits.unwrap();
+        }
+        let wall = t0.elapsed();
+        let metrics = server.shutdown();
+        println!("policy {label:22}: wall {wall:?} | {}", metrics.report(wall));
+    }
+}
+
+fn main() {
+    micro();
+    serving();
+}

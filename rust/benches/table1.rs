@@ -1,0 +1,35 @@
+//! Regenerates the paper's **Table 1**: PPL + averaged zero-shot accuracy
+//! for {QuaRot, SpinQuant, OSTQuant} × {W2A16, W2A4} × R1 ∈ {GH, GW, LH,
+//! GSR}, over the AOT artifacts through the PJRT runtime.
+//!
+//! Success criterion is the *shape*, not absolute numbers (the host is a
+//! 3M-param byte model on a synthetic corpus — DESIGN.md §2): within
+//! each method/bits block, PPL should order GH ≥ GW ≥ LH ≥ GSR and
+//! accuracy the reverse; GSR-on-QuaRot should approach the learned
+//! pipelines. Paper reference values are printed alongside.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::path::Path;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let opts = common::eval_opts();
+    let t0 = std::time::Instant::now();
+    match gsr::eval::tables::table1(Path::new("artifacts"), opts, true) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("(eval opts: {opts:?}, wall {:?})", t0.elapsed());
+            println!();
+            println!("Paper reference (Llama-2-7B, WikiText-2) for shape comparison:");
+            println!("  QuaRot    W2A16: GH 20.29 / GW 15.38 / LH 12.11 / GSR 11.59");
+            println!("  QuaRot    W2A4 : GH 31.33 / GW 20.34 / LH 17.74 / GSR 15.23");
+            println!("  SpinQuant W2A16: GH 16.45 / GW 16.44 / LH 13.17 / GSR 12.04");
+            println!("  OSTQuant  W2A16: GH 10.97 / GW  9.51 / LH  9.16 / GSR  9.03");
+        }
+        Err(e) => println!("table1 failed: {e}"),
+    }
+}

@@ -1,0 +1,26 @@
+//! Regenerates the paper's **Table 2**: the R4 local-rotation ablation
+//! (QuaRot; R1 ∈ {LH, GSR} × R4 ∈ {GH, LH}; PPL under W2 and W2A4).
+//!
+//! Expected shape (paper A.2): switching R4 GH→LH helps under activation
+//! quantization (W2A4 column) and is ~neutral for weight-only (W2).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::path::Path;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let mut opts = common::eval_opts();
+    opts.tasks_per_kind = 0; // Table 2 is PPL-only
+    match gsr::eval::tables::table2(Path::new("artifacts"), opts) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("Paper reference (Llama-2-7B): LH/GH 12.11|17.74, LH/LH 12.65|14.64,");
+            println!("                              GSR/GH 11.59|15.23, GSR/LH 11.22|13.83");
+        }
+        Err(e) => println!("table2 failed: {e}"),
+    }
+}

@@ -1,0 +1,30 @@
+//! Regenerates the paper's **Tables 3 & 4**: per-task zero-shot accuracy
+//! breakdown (QuaRot & SpinQuant in Table 3; OSTQuant in Table 4), over
+//! the synthetic task suite that stands in for lm-eval (DESIGN.md §2).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::path::Path;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let opts = common::eval_opts();
+    let methods: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let methods = if methods.is_empty() {
+        vec!["quarot".to_string(), "spinquant".to_string(), "ostquant".to_string()]
+    } else {
+        methods
+    };
+    for method in methods {
+        match gsr::eval::tables::table3(Path::new("artifacts"), &method, opts) {
+            Ok(table) => println!("{}", table.render()),
+            Err(e) => println!("table3 ({method}) failed: {e}"),
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! The "for free" claim at the systems level: fast-Hadamard butterflies
+//! are O(n log n) vs O(n²) dense rotation matmuls, and the *grouped*
+//! (GSR/local) transform is cheaper still — the inverse of the paper's
+//! Appendix-A.2 GPU limitation (DESIGN.md §5).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gsr::rng::SplitMix64;
+use gsr::transform::{build_r1, fwht_batch, grouped_fwht_batch, R1Kind};
+
+fn main() {
+    let rows = 256;
+    for n in [256usize, 512, 1024, 2048] {
+        let group = 64;
+        let mut rng = SplitMix64::new(1);
+        let base: Vec<f64> = (0..rows * n).map(|_| rng.next_normal()).collect();
+
+        // Dense rotation matmul (what a non-Hadamard learned R1 costs).
+        let r = build_r1(R1Kind::GH, n, group, &mut rng);
+        let dense = common::time_it(&format!("dense x@R      n={n}"), 1, 5, || {
+            let mut out = vec![0.0f64; rows * n];
+            for row in 0..rows {
+                let x = &base[row * n..(row + 1) * n];
+                let o = &mut out[row * n..(row + 1) * n];
+                for (k, &xv) in x.iter().enumerate() {
+                    let rrow = r.row(k);
+                    for (ov, &rv) in o.iter_mut().zip(rrow) {
+                        *ov += xv * rv;
+                    }
+                }
+            }
+            out
+        });
+
+        let fast = common::time_it(&format!("global FWHT    n={n}"), 1, 10, || {
+            let mut x = base.clone();
+            fwht_batch(&mut x, n);
+            x
+        });
+
+        let grouped = common::time_it(&format!("grouped FWHT   n={n} G={group}"), 1, 10, || {
+            let mut x = base.clone();
+            grouped_fwht_batch(&mut x, n, group);
+            x
+        });
+
+        println!(
+            "  speedup: FWHT {:.1}× over dense, grouped {:.1}× over dense, grouped {:.2}× over global\n",
+            dense.as_secs_f64() / fast.as_secs_f64(),
+            dense.as_secs_f64() / grouped.as_secs_f64(),
+            fast.as_secs_f64() / grouped.as_secs_f64(),
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Analyses backing the paper's arguments: sequency variance (§3.2) and
+//! outlier-energy spread under global vs local rotation (Fig. 2).
+
+pub mod outliers;
+pub mod sequency;
+
+pub use outliers::{outlier_spread, OutlierSpread};
+pub use sequency::{group_quant_error_by_rotation, sequency_variance_report, SequencyReport};

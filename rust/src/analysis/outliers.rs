@@ -1,0 +1,82 @@
+//! Fig. 2 quantification: outlier-energy spread, global vs local rotation.
+//!
+//! The paper's Fig. 2 is schematic: a global rotation "spreads outlier
+//! effects widely", a local (block-diagonal) rotation "confines outlier
+//! effects within each block". We make that measurable: inject a unit
+//! outlier at channel `c`, rotate, and report (a) the *participation
+//! ratio* of the resulting energy distribution (≈ number of channels the
+//! energy spread across) and (b) the fraction of energy that stayed
+//! inside the source channel's quantization group.
+
+use crate::rng::SplitMix64;
+use crate::transform::{build_r1, Mat, R1Kind};
+
+/// Spread metrics for one rotation kind.
+#[derive(Debug, Clone)]
+pub struct OutlierSpread {
+    pub kind: R1Kind,
+    /// Participation ratio (Σe)²/Σe² of per-channel energy, averaged
+    /// over source channels. 1 = untouched; n = spread over everything.
+    pub participation_ratio: f64,
+    /// Mean fraction of outlier energy remaining inside the source
+    /// channel's own group after rotation (1.0 for block-diagonal).
+    pub in_group_energy: f64,
+}
+
+/// Measure spread for one rotation matrix.
+pub fn spread_of(r: &Mat, group: usize) -> (f64, f64) {
+    let n = r.rows;
+    let mut pr_sum = 0.0;
+    let mut ig_sum = 0.0;
+    for src in 0..n {
+        // Outlier e_src rotated: energy lands on row `src` of R (x→xR).
+        let energies: Vec<f64> = (0..n).map(|j| r[(src, j)] * r[(src, j)]).collect();
+        let sum: f64 = energies.iter().sum();
+        let sum_sq: f64 = energies.iter().map(|e| e * e).sum();
+        pr_sum += sum * sum / sum_sq.max(1e-300);
+        let g = src / group;
+        let in_group: f64 = energies[g * group..(g + 1) * group].iter().sum();
+        ig_sum += in_group / sum.max(1e-300);
+    }
+    (pr_sum / n as f64, ig_sum / n as f64)
+}
+
+/// Fig.-2 sweep over all four R1 kinds.
+pub fn outlier_spread(n: usize, group: usize, seed: u64) -> Vec<OutlierSpread> {
+    R1Kind::ALL
+        .iter()
+        .map(|&kind| {
+            let mut rng = SplitMix64::new(seed);
+            let r = build_r1(kind, n, group, &mut rng);
+            let (pr, ig) = spread_of(&r, group);
+            OutlierSpread { kind, participation_ratio: pr, in_group_energy: ig }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_spreads_everywhere_local_confines() {
+        let spreads = outlier_spread(256, 64, 11);
+        let get = |k: R1Kind| spreads.iter().find(|s| s.kind == k).unwrap();
+        // Hadamard-family rows are flat ±1/√n → PR = block size exactly.
+        assert!((get(R1Kind::GH).participation_ratio - 256.0).abs() < 1e-6);
+        assert!((get(R1Kind::GSR).participation_ratio - 64.0).abs() < 1e-6);
+        // Local rotations keep all energy in-group; global spread leaks
+        // all but 1/N of it.
+        assert!((get(R1Kind::GSR).in_group_energy - 1.0).abs() < 1e-9);
+        assert!((get(R1Kind::LH).in_group_energy - 1.0).abs() < 1e-9);
+        assert!(get(R1Kind::GH).in_group_energy < 0.3);
+        assert!(get(R1Kind::GW).in_group_energy < 0.3);
+    }
+
+    #[test]
+    fn identity_has_pr_one() {
+        let (pr, ig) = spread_of(&Mat::identity(64), 16);
+        assert!((pr - 1.0).abs() < 1e-12);
+        assert!((ig - 1.0).abs() < 1e-12);
+    }
+}

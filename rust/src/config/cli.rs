@@ -1,0 +1,104 @@
+//! Tiny CLI argument parser for the `gsr` binary (no clap offline).
+//!
+//! Grammar: `gsr <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Boolean flags of the `gsr` binary — everything else with a `--`
+/// prefix takes a value. Keeping this explicit removes the classic
+/// `--flag positional` ambiguity.
+pub const KNOWN_FLAGS: [&str; 7] =
+    ["verbose", "markdown", "all", "quick", "native", "force", "help"];
+
+/// Parsed command line: subcommand, `--key value` options, bare flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut it = args.into_iter().peekable();
+        let mut out = Args { subcommand: it.next().unwrap_or_default(), ..Default::default() };
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value`, known `--flag`, or `--key value`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("eval --artifacts ../artifacts --windows 64 --verbose table1");
+        assert_eq!(a.subcommand, "eval");
+        assert_eq!(a.opt("artifacts"), Some("../artifacts"));
+        assert_eq!(a.opt_usize("windows", 0), 64);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("serve --port=9090");
+        assert_eq!(a.opt("port"), Some("9090"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --quick");
+        assert!(a.has_flag("quick"));
+        assert!(a.opt("quick").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("eval");
+        assert_eq!(a.opt_or("artifacts", "artifacts"), "artifacts");
+        assert_eq!(a.opt_usize("windows", 32), 32);
+    }
+}

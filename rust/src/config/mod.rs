@@ -1,0 +1,11 @@
+//! Configuration: minimal JSON, CLI argument parsing, experiment settings.
+//!
+//! This image has no serde/clap offline, so the crate carries its own
+//! small, well-tested JSON value model (`json`) and a declarative-enough
+//! CLI layer (`cli`). Both are deliberately minimal — exactly what the
+//! manifest format and the `gsr` binary need.
+
+pub mod cli;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,136 @@
+//! Dynamic batching: group requests up to the graph batch size, flushing
+//! on size or deadline — the standard continuous-batching trade-off
+//! (throughput vs tail latency) at the scale of this testbed.
+
+use std::time::{Duration, Instant};
+
+/// Flush policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max items per batch (the compiled graph's batch dimension).
+    pub max_batch: usize,
+    /// Max time the oldest item may wait before a partial flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Accumulates items and decides when a batch is ready.
+pub struct DynamicBatcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, pending: Vec::new(), oldest: None }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Is a batch ready under the policy?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() => now.duration_since(t0) >= self.policy.max_wait,
+            _ => false,
+        }
+    }
+
+    /// Time until the deadline flush (None if empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.policy.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Take up to `max_batch` items (FIFO). Resets the deadline for the
+    /// remainder.
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.pending.len().min(self.policy.max_batch);
+        let batch: Vec<T> = self.pending.drain(..n).collect();
+        self.oldest = if self.pending.is_empty() { None } else { Some(Instant::now()) };
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready(Instant::now()));
+        b.push(3);
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        b.push("x");
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec!["x"]);
+    }
+
+    #[test]
+    fn fifo_order_and_remainder() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1]);
+        assert_eq!(b.take_batch(), vec![2, 3]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn never_drops_or_duplicates() {
+        // Property-style: random pushes/takes preserve the multiset.
+        let mut rng = crate::rng::SplitMix64::new(42);
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) });
+        let mut pushed = 0u64;
+        let mut taken: Vec<u64> = Vec::new();
+        for _ in 0..200 {
+            if rng.next_below(2) == 0 {
+                b.push(pushed);
+                pushed += 1;
+            } else if !b.is_empty() {
+                taken.extend(b.take_batch());
+            }
+        }
+        while !b.is_empty() {
+            taken.extend(b.take_batch());
+        }
+        let expect: Vec<u64> = (0..pushed).collect();
+        assert_eq!(taken, expect, "FIFO without loss/dup");
+    }
+}

@@ -1,0 +1,137 @@
+//! Serving metrics: latency histogram + throughput counters.
+
+use std::time::Duration;
+
+/// Log₂-bucketed latency histogram (µs granularity, 1µs … ~17min).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 30],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: [0; 30], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(29);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub request_latency: LatencyHistogram,
+    pub batch_sizes: Vec<usize>,
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, batch_size: usize, tokens: u64, latency: Duration) {
+        self.batches += 1;
+        self.requests += batch_size as u64;
+        self.tokens += tokens;
+        self.batch_sizes.push(batch_size);
+        self.request_latency.record(latency);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn report(&self, wall: Duration) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} tokens={} \
+             throughput={:.0} tok/s p50={:?} p99={:?} max={:?}",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.tokens,
+            self.tokens as f64 / wall.as_secs_f64().max(1e-9),
+            self.request_latency.quantile(0.5),
+            self.request_latency.quantile(0.99),
+            self.request_latency.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(0.999));
+    }
+
+    #[test]
+    fn mean_batch() {
+        let mut m = Metrics::default();
+        m.record_batch(4, 512, Duration::from_millis(3));
+        m.record_batch(2, 256, Duration::from_millis(2));
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.tokens, 768);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: request router, dynamic batcher, executor, metrics.
+//!
+//! Serving shape (vLLM-router-like, scaled to a single CPU PJRT device):
+//!
+//! ```text
+//!  clients ──▶ Router ──▶ per-variant queue ──▶ DynamicBatcher ──▶
+//!              Executor thread (owns Engine + resident variants) ──▶
+//!              response channels
+//! ```
+//!
+//! PJRT handles are not `Send`/`Sync`-safe to share, so a single executor
+//! thread owns the `Engine` and all `VariantRunner`s; the router and
+//! batcher run on the calling/side threads and communicate over std
+//! mpsc channels. Python is never involved: the executor only replays
+//! AOT artifacts.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use metrics::{LatencyHistogram, Metrics};
+pub use router::{Router, RoutePolicy};
+pub use server::{Server, Request, Response};

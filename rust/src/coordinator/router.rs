@@ -1,0 +1,143 @@
+//! Request routing across model variants.
+//!
+//! Routes by explicit variant name or by policy over a variant pool
+//! (round-robin / least-loaded). Pure state machine — no PJRT types —
+//! so it is fully unit/property-testable.
+
+use std::collections::BTreeMap;
+
+/// Routing policy for requests that do not pin a variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Tracks registered variants and in-flight counts.
+pub struct Router {
+    policy: RoutePolicy,
+    variants: Vec<String>,
+    in_flight: BTreeMap<String, usize>,
+    next_rr: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy, variants: Vec::new(), in_flight: BTreeMap::new(), next_rr: 0 }
+    }
+
+    pub fn register(&mut self, name: &str) {
+        if !self.variants.iter().any(|v| v == name) {
+            self.variants.push(name.to_string());
+            self.in_flight.insert(name.to_string(), 0);
+        }
+    }
+
+    pub fn variants(&self) -> &[String] {
+        &self.variants
+    }
+
+    /// Pick a target for a request. `pinned` wins if registered.
+    pub fn route(&mut self, pinned: Option<&str>) -> Option<String> {
+        if let Some(p) = pinned {
+            if self.variants.iter().any(|v| v == p) {
+                self.dispatch(p.to_string());
+                return Some(p.to_string());
+            }
+            return None;
+        }
+        if self.variants.is_empty() {
+            return None;
+        }
+        let chosen = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let v = self.variants[self.next_rr % self.variants.len()].clone();
+                self.next_rr += 1;
+                v
+            }
+            RoutePolicy::LeastLoaded => self
+                .variants
+                .iter()
+                .min_by_key(|v| self.in_flight[*v])
+                .cloned()
+                .unwrap(),
+        };
+        self.dispatch(chosen.clone());
+        Some(chosen)
+    }
+
+    fn dispatch(&mut self, name: String) {
+        *self.in_flight.entry(name).or_insert(0) += 1;
+    }
+
+    /// Mark a request complete.
+    pub fn complete(&mut self, name: &str) {
+        if let Some(c) = self.in_flight.get_mut(name) {
+            *c = c.saturating_sub(1);
+        }
+    }
+
+    pub fn in_flight(&self, name: &str) -> usize {
+        self.in_flight.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn total_in_flight(&self) -> usize {
+        self.in_flight.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        r.register("a");
+        r.register("b");
+        let picks: Vec<String> = (0..4).map(|_| r.route(None).unwrap()).collect();
+        assert_eq!(picks, vec!["a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        r.register("a");
+        r.register("b");
+        let first = r.route(None).unwrap();
+        let second = r.route(None).unwrap();
+        assert_ne!(first, second, "second pick must go to the idle variant");
+        r.complete(&first);
+        assert_eq!(r.route(None).unwrap(), first);
+    }
+
+    #[test]
+    fn pinned_routing_and_unknown() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        r.register("gsr");
+        assert_eq!(r.route(Some("gsr")).as_deref(), Some("gsr"));
+        assert_eq!(r.route(Some("nope")), None);
+        assert_eq!(r.in_flight("gsr"), 1);
+    }
+
+    #[test]
+    fn in_flight_accounting_never_negative() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        r.register("a");
+        r.complete("a"); // complete before dispatch
+        assert_eq!(r.in_flight("a"), 0);
+        r.route(Some("a"));
+        r.complete("a");
+        r.complete("a");
+        assert_eq!(r.in_flight("a"), 0);
+        assert_eq!(r.total_in_flight(), 0);
+    }
+
+    #[test]
+    fn register_idempotent() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        r.register("a");
+        r.register("a");
+        assert_eq!(r.variants().len(), 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! The serving loop: executor thread owning PJRT, fed by a batched queue.
+//!
+//! `Server::start` spawns one executor thread that owns the `Engine` and
+//! all requested `VariantRunner`s (PJRT handles never cross threads).
+//! Clients submit `Request`s over an mpsc sender and receive `Response`s
+//! on their own per-request channel. A `DynamicBatcher` per variant
+//! packs score requests into the graph's fixed `[batch, seq]` shape;
+//! under-full batches are padded (pad rows discarded).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::metrics::Metrics;
+use crate::runtime::{Artifacts, Engine, VariantRunner};
+
+/// A scoring request: tokens (≤ seq) for one sequence; the server returns
+/// per-position logits of the final `n_last` positions to keep responses
+/// small (PPL/zero-shot clients only need targeted positions).
+pub struct Request {
+    /// Variant name ("fp" for the reference model).
+    pub variant: String,
+    /// Token sequence, length ≤ graph seq (right-padded internally).
+    pub tokens: Vec<i32>,
+    /// Reply channel.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Response: logits `[len(tokens), vocab]` for the request's sequence.
+pub struct Response {
+    pub logits: Result<Vec<f32>, String>,
+}
+
+enum Job {
+    Score(Request, Instant),
+    Shutdown(mpsc::Sender<Metrics>),
+}
+
+/// Handle to the running server.
+pub struct Server {
+    tx: mpsc::Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the executor with the given variants resident.
+    pub fn start(
+        artifacts_dir: &Path,
+        variant_names: &[String],
+        policy: BatchPolicy,
+    ) -> Result<Self, String> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let dir = artifacts_dir.to_path_buf();
+        let names: Vec<String> = variant_names.to_vec();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::spawn(move || {
+            let setup = (|| -> Result<(Engine, Artifacts, BTreeMap<String, VariantRunner>), String> {
+                let arts = Artifacts::load(&dir)?;
+                let mut engine = Engine::new()?;
+                let mut runners = BTreeMap::new();
+                for name in &names {
+                    let runner = if name == "fp" {
+                        VariantRunner::load_fp(&mut engine, &arts)?
+                    } else {
+                        let meta = arts
+                            .variant(name)
+                            .ok_or_else(|| format!("unknown variant {name}"))?
+                            .clone();
+                        VariantRunner::load(&mut engine, &arts, &meta)?
+                    };
+                    runners.insert(name.clone(), runner);
+                }
+                Ok((engine, arts, runners))
+            })();
+            match setup {
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+                Ok((engine, _arts, runners)) => {
+                    let _ = ready_tx.send(Ok(()));
+                    executor_loop(engine, runners, rx, policy);
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|e| format!("executor died during setup: {e}"))??;
+        Ok(Self { tx, handle: Some(handle) })
+    }
+
+    /// Submit a scoring request (non-blocking).
+    pub fn submit(&self, req: Request) -> Result<(), String> {
+        self.tx
+            .send(Job::Score(req, Instant::now()))
+            .map_err(|_| "server stopped".to_string())
+    }
+
+    /// Convenience: synchronous score of one sequence.
+    pub fn score(&self, variant: &str, tokens: Vec<i32>) -> Result<Vec<f32>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Request { variant: variant.to_string(), tokens, reply })?;
+        rx.recv().map_err(|_| "no response".to_string())?.logits
+    }
+
+    /// Stop and collect metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let (mtx, mrx) = mpsc::channel();
+        let _ = self.tx.send(Job::Shutdown(mtx));
+        let metrics = mrx.recv().unwrap_or_default();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        metrics
+    }
+}
+
+fn executor_loop(
+    engine: Engine,
+    runners: BTreeMap<String, VariantRunner>,
+    rx: mpsc::Receiver<Job>,
+    policy: BatchPolicy,
+) {
+    let mut queues: BTreeMap<String, DynamicBatcher<(Request, Instant)>> = runners
+        .keys()
+        .map(|k| (k.clone(), DynamicBatcher::new(policy)))
+        .collect();
+    let mut metrics = Metrics::default();
+    loop {
+        // Wait bounded by the nearest batch deadline.
+        let timeout = queues
+            .values()
+            .filter_map(|q| q.time_to_deadline(Instant::now()))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Job::Score(req, t0)) => {
+                if let Some(q) = queues.get_mut(&req.variant) {
+                    q.push((req, t0));
+                } else {
+                    let _ = req.reply.send(Response {
+                        logits: Err(format!("variant {} not resident", req.variant)),
+                    });
+                }
+            }
+            Ok(Job::Shutdown(mtx)) => {
+                // Drain everything before stopping.
+                for (name, q) in queues.iter_mut() {
+                    while !q.is_empty() {
+                        run_batch(&engine, &runners[name], q.take_batch(), &mut metrics);
+                    }
+                }
+                let _ = mtx.send(metrics);
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+        let now = Instant::now();
+        for (name, q) in queues.iter_mut() {
+            while q.ready(now) {
+                run_batch(&engine, &runners[name], q.take_batch(), &mut metrics);
+            }
+        }
+    }
+}
+
+fn run_batch(
+    engine: &Engine,
+    runner: &VariantRunner,
+    batch: Vec<(Request, Instant)>,
+    metrics: &mut Metrics,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let (b, s, v) = (runner.batch, runner.seq, runner.vocab);
+    let mut tokens = vec![0i32; b * s];
+    let mut lens = Vec::with_capacity(batch.len());
+    for (i, (req, _)) in batch.iter().enumerate() {
+        let take = req.tokens.len().min(s);
+        tokens[i * s..i * s + take].copy_from_slice(&req.tokens[..take]);
+        lens.push(take);
+    }
+    let t_exec = Instant::now();
+    let result = runner.forward(engine, &tokens);
+    let n_tokens: u64 = lens.iter().sum::<usize>() as u64;
+    let n_requests = batch.len();
+    for (i, (req, t0)) in batch.into_iter().enumerate() {
+        let logits = match &result {
+            Ok(all) => Ok(all[i * s * v..(i * s + lens[i]) * v].to_vec()),
+            Err(e) => Err(e.clone()),
+        };
+        let _ = req.reply.send(Response { logits });
+        metrics.request_latency.record(t0.elapsed());
+        metrics.requests += 1;
+    }
+    metrics.batches += 1;
+    metrics.tokens += n_tokens;
+    metrics.batch_sizes.push(n_requests);
+    let _ = t_exec;
+}

@@ -1,0 +1,138 @@
+//! Synthetic Zipf–Markov byte corpus (WikiText-2 stand-in).
+//!
+//! Exact mirror of `python/compile/corpus.py` — see that module for the
+//! language specification. Equality with `artifacts/corpus.bin` is
+//! asserted by the integration tests.
+
+use crate::rng::SplitMix64;
+
+pub const SEED_CORPUS: u64 = 0x5EED_C0DE_2025;
+pub const LEXICON_SIZE: usize = 256;
+pub const N_SUCC: usize = 12;
+/// Flattened-Zipf exponent (see the Python module docstring).
+pub const ZIPF_EXP: f64 = 0.7;
+
+/// Streaming generator of corpus bytes.
+pub struct CorpusGenerator {
+    pub lexicon: Vec<Vec<u8>>,
+    pub bigram: Vec<[usize; N_SUCC]>,
+    cum: Vec<f64>,
+    rng: SplitMix64,
+    prev: usize,
+}
+
+impl CorpusGenerator {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        // Lexicon first, then bigram — same draw order as Python.
+        let lexicon: Vec<Vec<u8>> = (0..LEXICON_SIZE)
+            .map(|_| {
+                let len = 2 + rng.next_below(6) as usize;
+                (0..len).map(|_| b'a' + rng.next_below(26) as u8).collect()
+            })
+            .collect();
+        let bigram: Vec<[usize; N_SUCC]> = (0..LEXICON_SIZE)
+            .map(|_| {
+                let mut succ = [0usize; N_SUCC];
+                for s in succ.iter_mut() {
+                    *s = rng.next_below(LEXICON_SIZE as u64) as usize;
+                }
+                succ
+            })
+            .collect();
+        let mut cum = Vec::with_capacity(LEXICON_SIZE);
+        let mut acc = 0.0;
+        for i in 0..LEXICON_SIZE {
+            acc += 1.0 / (i as f64 + 1.0).powf(ZIPF_EXP);
+            cum.push(acc);
+        }
+        let total = acc;
+        for c in cum.iter_mut() {
+            *c /= total;
+        }
+        Self { lexicon, bigram, cum, rng, prev: 0 }
+    }
+
+    /// Zipf draw via binary search on the cumulative weights
+    /// (numpy `searchsorted(side="right")` semantics).
+    fn zipf_draw(&mut self) -> usize {
+        let u = self.rng.next_f64();
+        self.cum.partition_point(|&c| c <= u)
+    }
+
+    pub fn next_word_idx(&mut self) -> usize {
+        let idx = if self.rng.next_below(2) < 1 {
+            self.bigram[self.prev][self.rng.next_below(N_SUCC as u64) as usize]
+        } else {
+            self.zipf_draw()
+        };
+        self.prev = idx;
+        idx
+    }
+
+    /// Next sentence: 4–12 words joined by spaces, terminated `". "`.
+    pub fn sentence(&mut self) -> Vec<u8> {
+        let n = 4 + self.rng.next_below(9) as usize;
+        let mut out = Vec::new();
+        for i in 0..n {
+            if i > 0 {
+                out.push(b' ');
+            }
+            let idx = self.next_word_idx();
+            out.extend_from_slice(&self.lexicon[idx]);
+        }
+        out.extend_from_slice(b". ");
+        out
+    }
+
+    pub fn generate(&mut self, n_bytes: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n_bytes + 64);
+        while out.len() < n_bytes {
+            let s = self.sentence();
+            out.extend_from_slice(&s);
+        }
+        out.truncate(n_bytes);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = CorpusGenerator::new(SEED_CORPUS).generate(4096);
+        let b = CorpusGenerator::new(SEED_CORPUS).generate(4096);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn structure_words_and_sentences() {
+        let text = CorpusGenerator::new(SEED_CORPUS).generate(1 << 14);
+        // Only lowercase letters, spaces and periods.
+        assert!(text.iter().all(|&b| b.is_ascii_lowercase() || b == b' ' || b == b'.'));
+        // Periods exist (sentences terminate).
+        assert!(text.iter().filter(|&&b| b == b'.').count() > 10);
+    }
+
+    #[test]
+    fn zipf_head_is_frequent() {
+        // Word 0 must appear far more often than a mid-rank word, via
+        // both the Zipf draws and bigram pointers.
+        let mut g = CorpusGenerator::new(SEED_CORPUS);
+        let mut counts = vec![0usize; LEXICON_SIZE];
+        for _ in 0..20_000 {
+            counts[g.next_word_idx()] += 1;
+        }
+        let head: usize = counts[..8].iter().sum();
+        let tail: usize = counts[128..136].iter().sum();
+        assert!(head > tail * 3, "head {head} vs tail {tail}");
+    }
+
+    #[test]
+    fn lexicon_word_lengths_in_range() {
+        let g = CorpusGenerator::new(SEED_CORPUS);
+        assert!(g.lexicon.iter().all(|w| (2..=7).contains(&w.len())));
+    }
+}

@@ -1,0 +1,17 @@
+//! Data substrate: synthetic corpus, byte tokenizer, zero-shot task suite.
+//!
+//! The corpus generator is a bit-for-bit mirror of
+//! `python/compile/corpus.py` (same SplitMix64 stream) so the Rust
+//! evaluator, the task suite, and the Python trainer all see one
+//! language. The task suite replaces the paper's lm-eval benchmarks
+//! (DESIGN.md §2) with deterministic multiple-choice tasks over the same
+//! grammar, scored by length-normalized log-likelihood exactly like
+//! lm-eval.
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{CorpusGenerator, SEED_CORPUS};
+pub use tasks::{Task, TaskKind, TaskSuite};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,382 @@
+//! Synthetic zero-shot task suite (lm-eval stand-in, DESIGN.md §2).
+//!
+//! Eight deterministic multiple-choice task families over the corpus
+//! grammar, named for the benchmark each replaces in the paper's tables.
+//! Every instance carries a byte context, 2–4 byte-string choices and a
+//! gold index; `eval::zeroshot` scores choices by length-normalized
+//! log-likelihood given the context — exactly lm-eval's method.
+//!
+//! The suite measures the same thing the paper's Table 3/4 does: how
+//! much quantization degrades the model's grasp of its training
+//! distribution, relative to the fp16 ceiling and the 1/k chance floor.
+
+use super::corpus::{CorpusGenerator, LEXICON_SIZE, N_SUCC};
+use crate::rng::SplitMix64;
+
+/// Task families, ordered as reported in the Table 3/4 benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// ARC-easy analogue: next-word from grammar successors, easy distractors.
+    NextWord,
+    /// ARC-challenge analogue: distractors are other words' successors.
+    NextWordHard,
+    /// HellaSwag analogue: choose the grammatical 3-word continuation.
+    Continuation,
+    /// LAMBADA analogue: predict the final word of a long context.
+    LastWord,
+    /// PIQA analogue: complete a repeated template pattern.
+    Template,
+    /// WinoGrande analogue: binary — correct vs swapped word order.
+    WordOrder,
+    /// OpenBookQA analogue: next-word after a *rare* (tail-rank) word.
+    RareRecall,
+    /// BoolQ analogue: binary — grammatical vs impossible continuation.
+    Grammatical,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 8] = [
+        TaskKind::NextWord,
+        TaskKind::NextWordHard,
+        TaskKind::Continuation,
+        TaskKind::LastWord,
+        TaskKind::Template,
+        TaskKind::WordOrder,
+        TaskKind::RareRecall,
+        TaskKind::Grammatical,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::NextWord => "next-word(arc-e)",
+            TaskKind::NextWordHard => "next-word-hard(arc-c)",
+            TaskKind::Continuation => "continuation(hella)",
+            TaskKind::LastWord => "last-word(lambada)",
+            TaskKind::Template => "template(piqa)",
+            TaskKind::WordOrder => "word-order(wino)",
+            TaskKind::RareRecall => "rare-recall(obqa)",
+            TaskKind::Grammatical => "grammatical(boolq)",
+        }
+    }
+}
+
+/// One multiple-choice instance.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    /// Context bytes (ends with a space; choices append directly).
+    pub context: Vec<u8>,
+    pub choices: Vec<Vec<u8>>,
+    pub answer: usize,
+}
+
+/// Deterministic generator for the whole suite.
+pub struct TaskSuite {
+    lexicon: Vec<Vec<u8>>,
+    bigram: Vec<[usize; N_SUCC]>,
+    rng: SplitMix64,
+}
+
+const TASK_SEED: u64 = 0x7A5C_2026;
+
+impl TaskSuite {
+    /// Build from the corpus seed (grammar must match the training data).
+    pub fn new(corpus_seed: u64) -> Self {
+        let gen = CorpusGenerator::new(corpus_seed);
+        Self { lexicon: gen.lexicon, bigram: gen.bigram, rng: SplitMix64::new(TASK_SEED) }
+    }
+
+    fn word(&self, idx: usize) -> &[u8] {
+        &self.lexicon[idx]
+    }
+
+    fn random_word(&mut self) -> usize {
+        self.rng.next_below(LEXICON_SIZE as u64) as usize
+    }
+
+    /// A word that is NOT a grammar successor of `prev`.
+    fn non_successor(&mut self, prev: usize) -> usize {
+        loop {
+            let cand = self.random_word();
+            if !self.bigram[prev].contains(&cand) {
+                return cand;
+            }
+        }
+    }
+
+    /// A non-successor of `prev` with the same surface length and a
+    /// similar Zipf rank as `gold`. Matching removes the per-byte
+    /// lexical-frequency signal, so the scorer can only win through the
+    /// *grammar* (the quantity quantization damages). Falls back to a
+    /// same-length word, then to any non-successor.
+    fn matched_distractor(&mut self, prev: usize, gold: usize) -> usize {
+        let gold_len = self.lexicon[gold].len();
+        for window in [32usize, 96, LEXICON_SIZE] {
+            for _ in 0..64 {
+                let lo = gold.saturating_sub(window / 2);
+                let cand = (lo + self.rng.next_below(window as u64) as usize) % LEXICON_SIZE;
+                if cand != gold
+                    && self.lexicon[cand].len() == gold_len
+                    && !self.bigram[prev].contains(&cand)
+                {
+                    return cand;
+                }
+            }
+        }
+        self.non_successor(prev)
+    }
+
+    /// Grammar walk of `n` words starting after `start`.
+    fn walk(&mut self, start: usize, n: usize) -> Vec<usize> {
+        let mut prev = start;
+        (0..n)
+            .map(|_| {
+                let next =
+                    self.bigram[prev][self.rng.next_below(N_SUCC as u64) as usize];
+                prev = next;
+                next
+            })
+            .collect()
+    }
+
+    fn join(&self, idxs: &[usize]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for (i, &w) in idxs.iter().enumerate() {
+            if i > 0 {
+                out.push(b' ');
+            }
+            out.extend_from_slice(self.word(w));
+        }
+        out
+    }
+
+    /// Generate `n` instances of one task family.
+    pub fn generate(&mut self, kind: TaskKind, n: usize) -> Vec<Task> {
+        (0..n).map(|_| self.instance(kind)).collect()
+    }
+
+    /// Generate the full suite: `n` instances per family.
+    pub fn suite(&mut self, n: usize) -> Vec<(TaskKind, Vec<Task>)> {
+        TaskKind::ALL.iter().map(|&k| (k, self.generate(k, n))).collect()
+    }
+
+    fn instance(&mut self, kind: TaskKind) -> Task {
+        match kind {
+            TaskKind::NextWord => {
+                let start = self.random_word();
+                let ctx_words = self.walk(start, 5);
+                let prev = *ctx_words.last().unwrap();
+                let gold = self.bigram[prev][self.rng.next_below(N_SUCC as u64) as usize];
+                self.choice_task(kind, &ctx_words, gold, 4, |s| s.matched_distractor(prev, gold))
+            }
+            TaskKind::NextWordHard => {
+                let start = self.random_word();
+                let ctx_words = self.walk(start, 5);
+                let prev = *ctx_words.last().unwrap();
+                let gold = self.bigram[prev][self.rng.next_below(N_SUCC as u64) as usize];
+                // Distractors: successors of *other* random words — high
+                // surface plausibility, wrong bigram.
+                self.choice_task(kind, &ctx_words, gold, 4, |s| {
+                    for _ in 0..64 {
+                        let other = s.random_word();
+                        let cand = s.bigram[other][s.rng.next_below(N_SUCC as u64) as usize];
+                        if !s.bigram[prev].contains(&cand)
+                            && s.lexicon[cand].len() == s.lexicon[gold].len()
+                        {
+                            return cand;
+                        }
+                    }
+                    s.matched_distractor(prev, gold)
+                })
+            }
+            TaskKind::Continuation => {
+                let start = self.random_word();
+                let ctx_words = self.walk(start, 6);
+                let prev = *ctx_words.last().unwrap();
+                let gold_cont = self.walk(prev, 3);
+                let context = {
+                    let mut c = self.join(&ctx_words);
+                    c.push(b' ');
+                    c
+                };
+                let mut choices = vec![self.join(&gold_cont)];
+                for _ in 0..3 {
+                    // Locally-plausible but contextually wrong: a grammar
+                    // walk from an unrelated start word.
+                    let other = self.random_word();
+                    let bad = self.walk(other, 3);
+                    choices.push(self.join(&bad));
+                }
+                self.shuffle_task(kind, context, choices)
+            }
+            TaskKind::LastWord => {
+                let start = self.random_word();
+                let ctx_words = self.walk(start, 10);
+                let prev = *ctx_words.last().unwrap();
+                let gold = self.bigram[prev][self.rng.next_below(N_SUCC as u64) as usize];
+                self.choice_task(kind, &ctx_words, gold, 4, |s| s.matched_distractor(prev, gold))
+            }
+            TaskKind::Template => {
+                // Pattern "a b a b a" → next is "b".
+                let a = self.random_word();
+                let b = self.bigram[a][self.rng.next_below(N_SUCC as u64) as usize];
+                let ctx_words = vec![a, b, a, b, a];
+                self.choice_task(kind, &ctx_words, b, 4, |s| s.matched_distractor(a, b))
+            }
+            TaskKind::WordOrder => {
+                let a = self.random_word();
+                let b = self.bigram[a][self.rng.next_below(N_SUCC as u64) as usize];
+                let fwd = self.join(&[a, b]);
+                let rev = self.join(&[b, a]);
+                let lead = self.random_word();
+                let mut context = self.join(&[lead]);
+                context.push(b' ');
+                let answer = self.rng.next_below(2) as usize;
+                let choices =
+                    if answer == 0 { vec![fwd, rev] } else { vec![rev, fwd] };
+                Task { kind, context, choices, answer: if answer == 0 { 0 } else { 1 } }
+            }
+            TaskKind::RareRecall => {
+                // Context ends on a tail-rank (rarely sampled) word.
+                let rare = 128 + self.rng.next_below((LEXICON_SIZE - 128) as u64) as usize;
+                let start = self.random_word();
+                let lead = self.walk(start, 3);
+                let mut ctx_words = lead;
+                ctx_words.push(rare);
+                let gold = self.bigram[rare][self.rng.next_below(N_SUCC as u64) as usize];
+                self.choice_task(kind, &ctx_words, gold, 4, |s| s.matched_distractor(rare, gold))
+            }
+            TaskKind::Grammatical => {
+                let start = self.random_word();
+                let ctx_words = self.walk(start, 4);
+                let prev = *ctx_words.last().unwrap();
+                let gold = self.bigram[prev][self.rng.next_below(N_SUCC as u64) as usize];
+                let bad = self.matched_distractor(prev, gold);
+                let mut context = self.join(&ctx_words);
+                context.push(b' ');
+                let answer = self.rng.next_below(2) as usize;
+                let (c0, c1) = if answer == 0 { (gold, bad) } else { (bad, gold) };
+                Task {
+                    kind,
+                    context,
+                    choices: vec![self.word(c0).to_vec(), self.word(c1).to_vec()],
+                    answer,
+                }
+            }
+        }
+    }
+
+
+    fn choice_task(
+        &mut self,
+        kind: TaskKind,
+        ctx_words: &[usize],
+        gold: usize,
+        n_choices: usize,
+        mut distractor: impl FnMut(&mut Self) -> usize,
+    ) -> Task {
+        let mut context = self.join(ctx_words);
+        context.push(b' ');
+        let mut choices = vec![self.word(gold).to_vec()];
+        while choices.len() < n_choices {
+            let d = distractor(self);
+            let w = self.word(d).to_vec();
+            if w != choices[0] && !choices.contains(&w) {
+                choices.push(w);
+            }
+        }
+        self.shuffle_task(kind, context, choices)
+    }
+
+    /// Shuffle choices (gold currently at 0) and record the new gold idx.
+    fn shuffle_task(&mut self, kind: TaskKind, context: Vec<u8>, mut choices: Vec<Vec<u8>>) -> Task {
+        let n = choices.len();
+        let mut answer = 0usize;
+        for i in (1..n).rev() {
+            let j = self.rng.next_below((i + 1) as u64) as usize;
+            choices.swap(i, j);
+            if answer == i {
+                answer = j;
+            } else if answer == j {
+                answer = i;
+            }
+        }
+        Task { kind, context, choices, answer }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SEED_CORPUS;
+
+    #[test]
+    fn deterministic_suite() {
+        let a = TaskSuite::new(SEED_CORPUS).suite(10);
+        let b = TaskSuite::new(SEED_CORPUS).suite(10);
+        for ((ka, ta), (kb, tb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            for (x, y) in ta.iter().zip(tb) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.choices, y.choices);
+                assert_eq!(x.answer, y.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_in_range_and_choices_distinct() {
+        let suite = TaskSuite::new(SEED_CORPUS).suite(25);
+        for (_, tasks) in &suite {
+            for t in tasks {
+                assert!(t.answer < t.choices.len());
+                for i in 0..t.choices.len() {
+                    for j in i + 1..t.choices.len() {
+                        assert_ne!(t.choices[i], t.choices[j], "{:?}", t.kind);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gold_is_grammar_consistent_for_next_word() {
+        let gen = CorpusGenerator::new(SEED_CORPUS);
+        let mut suite = TaskSuite::new(SEED_CORPUS);
+        for t in suite.generate(TaskKind::NextWord, 30) {
+            // Last context word's successor set must contain the gold.
+            let ctx = String::from_utf8(t.context.clone()).unwrap();
+            let last_word = ctx.trim_end().rsplit(' ').next().unwrap().as_bytes().to_vec();
+            let prev_idx = gen.lexicon.iter().position(|w| *w == last_word);
+            // Lexicon may contain duplicate surface forms; when the index
+            // is unambiguous, check grammar consistency.
+            if let Some(p) = prev_idx {
+                let gold_word = &t.choices[t.answer];
+                let ok = gen.bigram[p]
+                    .iter()
+                    .any(|&s| gen.lexicon[s] == *gold_word);
+                if gen.lexicon.iter().filter(|w| **w == last_word).count() == 1 {
+                    assert!(ok, "gold not a successor of unambiguous prev");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_tasks_have_two_choices() {
+        let mut suite = TaskSuite::new(SEED_CORPUS);
+        for t in suite.generate(TaskKind::WordOrder, 10) {
+            assert_eq!(t.choices.len(), 2);
+        }
+        for t in suite.generate(TaskKind::Grammatical, 10) {
+            assert_eq!(t.choices.len(), 2);
+        }
+    }
+
+    #[test]
+    fn eight_families() {
+        assert_eq!(TaskKind::ALL.len(), 8);
+        let suite = TaskSuite::new(SEED_CORPUS).suite(2);
+        assert_eq!(suite.len(), 8);
+    }
+}

@@ -1,0 +1,65 @@
+//! Byte-level tokenizer (vocab 256) — the model's input interface.
+//!
+//! Deliberately trivial (one token per byte) but carried as a real
+//! component so the coordinator's request path has the same
+//! encode → execute → decode shape as a production server.
+
+/// Byte-level tokenizer: token id = byte value.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        tokens.iter().map(|&t| t as u8).collect()
+    }
+
+    /// Split a token stream into fixed windows of `seq + 1` tokens
+    /// (inputs + next-token targets), stride `seq` — the PPL windowing.
+    pub fn windows<'a>(&self, tokens: &'a [i32], seq: usize) -> Vec<&'a [i32]> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start + seq + 1 <= tokens.len() {
+            out.push(&tokens[start..start + seq + 1]);
+            start += seq;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer;
+        let text = b"hello world. abc";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn windows_cover_with_overlap_one() {
+        let t = ByteTokenizer;
+        let tokens: Vec<i32> = (0..26).collect();
+        let w = t.windows(&tokens, 8);
+        assert_eq!(w.len(), 3); // 0..9, 8..17, 16..25
+        assert_eq!(w[0], &tokens[0..9]);
+        assert_eq!(w[1][0], tokens[8]);
+        assert_eq!(w[2][0], tokens[16]);
+        for win in w {
+            assert_eq!(win.len(), 9);
+        }
+    }
+
+    #[test]
+    fn short_stream_yields_nothing() {
+        let t = ByteTokenizer;
+        assert!(t.windows(&[1, 2, 3], 8).is_empty());
+    }
+}

@@ -1,0 +1,137 @@
+//! Perplexity engine — the paper's WikiText-2 PPL measurement, on the
+//! held-out split of the synthetic corpus (context length = the graph's
+//! fixed `seq`, matching the paper's fixed-context protocol).
+
+use super::LogitModel;
+
+/// Sum of next-token NLLs for one sequence's logits.
+///
+/// `logits`: `[seq, vocab]` for tokens `w[0..seq]`; `targets`:
+/// `w[1..seq+1]`. Positions beyond `n_predict` are ignored (padding).
+pub fn log_softmax_nll(logits: &[f32], vocab: usize, targets: &[i32], n_predict: usize) -> f64 {
+    let mut total = 0.0f64;
+    for (pos, &target) in targets.iter().enumerate().take(n_predict) {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+        let logsum: f64 = row.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln() + max;
+        total += logsum - row[target as usize] as f64;
+    }
+    total
+}
+
+/// Windowed perplexity evaluation.
+pub struct PplEngine {
+    /// Max number of windows to evaluate (caps eval cost); 0 = all.
+    pub max_windows: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub nll_sum: f64,
+    pub tokens: usize,
+    pub windows: usize,
+}
+
+impl PplEngine {
+    pub fn new(max_windows: usize) -> Self {
+        Self { max_windows }
+    }
+
+    /// Evaluate byte perplexity of `model` on `text`.
+    ///
+    /// Windows of `seq+1` tokens, stride `seq` (every byte predicted
+    /// exactly once); windows are packed into `[batch, seq]` calls, the
+    /// final partial batch padded with repeats whose NLL is discarded.
+    pub fn evaluate(&self, model: &dyn LogitModel, text: &[u8]) -> Result<PplResult, String> {
+        let (b, s, v) = (model.batch(), model.seq(), model.vocab());
+        let tokens: Vec<i32> = text.iter().map(|&x| x as i32).collect();
+        let mut windows: Vec<&[i32]> = Vec::new();
+        let mut start = 0;
+        while start + s + 1 <= tokens.len() {
+            windows.push(&tokens[start..start + s + 1]);
+            start += s;
+        }
+        if self.max_windows > 0 {
+            windows.truncate(self.max_windows);
+        }
+        if windows.is_empty() {
+            return Err("text shorter than one window".into());
+        }
+        let mut nll_sum = 0.0f64;
+        let mut n_tokens = 0usize;
+        for chunk in windows.chunks(b) {
+            let mut batch_tokens = Vec::with_capacity(b * s);
+            for i in 0..b {
+                let w = chunk.get(i).unwrap_or(&chunk[0]); // pad with repeat
+                batch_tokens.extend_from_slice(&w[..s]);
+            }
+            let logits = model.forward_batch(&batch_tokens)?;
+            for (i, w) in chunk.iter().enumerate() {
+                let row_logits = &logits[i * s * v..(i + 1) * s * v];
+                nll_sum += log_softmax_nll(row_logits, v, &w[1..], s);
+                n_tokens += s;
+            }
+        }
+        Ok(PplResult {
+            ppl: (nll_sum / n_tokens as f64).exp(),
+            nll_sum,
+            tokens: n_tokens,
+            windows: windows.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Uniform {
+        vocab: usize,
+    }
+
+    impl LogitModel for Uniform {
+        fn batch(&self) -> usize {
+            2
+        }
+        fn seq(&self) -> usize {
+            8
+        }
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+        fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
+            Ok(vec![0.0; tokens.len() * self.vocab])
+        }
+    }
+
+    #[test]
+    fn uniform_model_ppl_equals_vocab() {
+        let m = Uniform { vocab: 16 };
+        let text: Vec<u8> = (0..64).map(|i| (i % 16) as u8).collect();
+        let r = PplEngine::new(0).evaluate(&m, &text).unwrap();
+        assert!((r.ppl - 16.0).abs() < 1e-6, "ppl {}", r.ppl);
+    }
+
+    #[test]
+    fn nll_prefers_correct_token() {
+        // Logits strongly favoring target 3 at every position.
+        let vocab = 4;
+        let mut logits = vec![0f32; 2 * vocab];
+        logits[3] = 10.0;
+        logits[vocab + 3] = 10.0;
+        let good = log_softmax_nll(&logits, vocab, &[3, 3], 2);
+        let bad = log_softmax_nll(&logits, vocab, &[0, 0], 2);
+        assert!(good < bad);
+        assert!(good < 0.1);
+    }
+
+    #[test]
+    fn max_windows_caps_work() {
+        let m = Uniform { vocab: 16 };
+        let text: Vec<u8> = vec![0; 1000];
+        let r = PplEngine::new(3).evaluate(&m, &text).unwrap();
+        assert_eq!(r.windows, 3);
+        assert_eq!(r.tokens, 3 * 8);
+    }
+}

@@ -1,0 +1,200 @@
+//! Paper-table generation: the code behind Tables 1–4 and the analysis
+//! benches. Shared by the `gsr` CLI, the examples and `cargo bench`.
+
+use std::path::Path;
+
+use super::report::{fmt, Table};
+use super::{LogitModel, PjrtModel, PplEngine, ZeroShotEngine};
+use crate::data::tasks::TaskSuite;
+use crate::runtime::{Artifacts, Engine, VariantRunner};
+
+/// Evaluation knobs (trade precision for wall-clock).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOpts {
+    /// PPL windows (0 = all of the test split).
+    pub windows: usize,
+    /// Zero-shot instances per task family (0 = skip zero-shot).
+    pub tasks_per_kind: usize,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        Self { windows: 24, tasks_per_kind: 12 }
+    }
+}
+
+/// PPL + zero-shot of one resident model.
+pub struct VariantEval {
+    pub ppl: f64,
+    pub zero_shot_avg: f64,
+    pub per_task: Vec<(String, f64)>,
+}
+
+pub fn eval_model(
+    model: &dyn LogitModel,
+    arts: &Artifacts,
+    opts: EvalOpts,
+) -> Result<VariantEval, String> {
+    let ppl = PplEngine::new(opts.windows).evaluate(model, arts.test_split())?.ppl;
+    let (mut zero_shot_avg, mut per_task) = (f64::NAN, Vec::new());
+    if opts.tasks_per_kind > 0 {
+        let suite = TaskSuite::new(arts.corpus_seed()).suite(opts.tasks_per_kind);
+        let (scores, avg) = ZeroShotEngine::score_suite(model, &suite)?;
+        zero_shot_avg = avg;
+        per_task = scores
+            .iter()
+            .map(|s| (s.kind.name().to_string(), s.accuracy()))
+            .collect();
+    }
+    Ok(VariantEval { ppl, zero_shot_avg, per_task })
+}
+
+/// Evaluate a named variant (PJRT path). `"fp"` = the W16A16 reference.
+pub fn eval_variant(
+    engine: &mut Engine,
+    arts: &Artifacts,
+    name: &str,
+    opts: EvalOpts,
+) -> Result<VariantEval, String> {
+    let runner = if name == "fp" {
+        VariantRunner::load_fp(engine, arts)?
+    } else {
+        let meta = arts.variant(name).ok_or_else(|| format!("unknown variant {name}"))?.clone();
+        VariantRunner::load(engine, arts, &meta)?
+    };
+    let model = PjrtModel { engine, runner: &runner };
+    eval_model(&model, arts, opts)
+}
+
+/// Table 1: PPL + averaged zero-shot for every method × bits × R1.
+pub fn table1(artifacts: &Path, opts: EvalOpts, verbose: bool) -> Result<Table, String> {
+    let arts = Artifacts::load(artifacts)?;
+    let mut engine = Engine::new()?;
+    let mut table = Table::new(
+        "Table 1 — PPL (synthetic WikiText-2 stand-in) and 0-shot avg",
+        &["Method", "Bits", "R1", "PPL↓", "0-shot↑"],
+    );
+    let fp = eval_variant(&mut engine, &arts, "fp", opts)?;
+    table.row(vec!["-".into(), "W16A16".into(), "-".into(), fmt(fp.ppl, 2), fmt(fp.zero_shot_avg, 2)]);
+    for method in ["quarot", "spinquant", "ostquant"] {
+        for bits in ["w2a16", "w2a4"] {
+            for r1 in ["gh", "gw", "lh", "gsr"] {
+                let name = format!("{method}_{bits}_{r1}_r4gh");
+                if arts.variant(&name).is_none() {
+                    continue;
+                }
+                let ev = eval_variant(&mut engine, &arts, &name, opts)?;
+                if verbose {
+                    eprintln!("[table1] {name}: ppl={:.2} 0shot={:.2}", ev.ppl, ev.zero_shot_avg);
+                }
+                table.row(vec![
+                    method.to_string(),
+                    bits.to_uppercase(),
+                    r1.to_uppercase(),
+                    fmt(ev.ppl, 2),
+                    fmt(ev.zero_shot_avg, 2),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Table 2: R1 × R4 local-rotation ablation (QuaRot, W2 and W2A4).
+pub fn table2(artifacts: &Path, opts: EvalOpts) -> Result<Table, String> {
+    let arts = Artifacts::load(artifacts)?;
+    let mut engine = Engine::new()?;
+    let mut table = Table::new(
+        "Table 2 — local rotation on R4 (QuaRot)",
+        &["R1", "R4", "PPL (W2)", "PPL† (W2A4)"],
+    );
+    for (r1, r4) in [("lh", "gh"), ("lh", "lh"), ("gsr", "gh"), ("gsr", "lh")] {
+        let w2 = eval_variant(
+            &mut engine,
+            &arts,
+            &format!("quarot_w2a16_{r1}_r4{r4}"),
+            EvalOpts { tasks_per_kind: 0, ..opts },
+        )?;
+        let w2a4 = eval_variant(
+            &mut engine,
+            &arts,
+            &format!("quarot_w2a4_{r1}_r4{r4}"),
+            EvalOpts { tasks_per_kind: 0, ..opts },
+        )?;
+        table.row(vec![
+            r1.to_uppercase(),
+            r4.to_uppercase(),
+            fmt(w2.ppl, 2),
+            fmt(w2a4.ppl, 2),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Tables 3/4: per-task zero-shot breakdown for one method.
+pub fn table3(artifacts: &Path, method: &str, opts: EvalOpts) -> Result<Table, String> {
+    let arts = Artifacts::load(artifacts)?;
+    let mut engine = Engine::new()?;
+    let suite = TaskSuite::new(arts.corpus_seed()).suite(opts.tasks_per_kind.max(1));
+    let task_names: Vec<String> =
+        suite.iter().map(|(k, _)| k.name().to_string()).collect();
+    let mut headers: Vec<&str> = vec!["Bits", "R1"];
+    let name_refs: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+    headers.extend(name_refs);
+    headers.push("Avg.");
+    let mut table = Table::new(
+        &format!("Table 3/4 — per-task zero-shot accuracy ({method})"),
+        &headers,
+    );
+    let mut add_row = |bits: &str, r1: &str, ev: &VariantEval| {
+        let mut row = vec![bits.to_string(), r1.to_string()];
+        row.extend(ev.per_task.iter().map(|(_, acc)| fmt(*acc, 1)));
+        row.push(fmt(ev.zero_shot_avg, 2));
+        table.row(row);
+    };
+    let fp = eval_variant(&mut engine, &arts, "fp", opts)?;
+    add_row("16-16", "-", &fp);
+    for bits in ["w2a16", "w2a4"] {
+        for r1 in ["gh", "gw", "lh", "gsr"] {
+            let name = format!("{method}_{bits}_{r1}_r4gh");
+            if arts.variant(&name).is_none() {
+                continue;
+            }
+            let ev = eval_variant(&mut engine, &arts, &name, opts)?;
+            add_row(if bits == "w2a16" { "2-16" } else { "2-4" }, &r1.to_uppercase(), &ev);
+        }
+    }
+    Ok(table)
+}
+
+/// §3.2 sequency-variance analysis table (native, no PJRT).
+pub fn sequency_table(n: usize, group: usize) -> Table {
+    let mut table = Table::new(
+        "§3.2 — column-group sequency variance and rotated-weight quant error",
+        &["R1", "mean seq. variance", "group-RTN MSE (structured W)"],
+    );
+    for r in crate::analysis::sequency_variance_report(n, group, 64, 2, 7) {
+        table.row(vec![
+            r.kind.to_string(),
+            fmt(r.mean_group_variance, 2),
+            format!("{:.3e}", r.rotated_quant_mse),
+        ]);
+    }
+    table
+}
+
+/// Fig. 2 outlier-spread table (native, no PJRT).
+pub fn fig2_table(n: usize, group: usize) -> Table {
+    let mut table = Table::new(
+        "Fig. 2 — outlier energy spread: global vs local rotation",
+        &["R1", "participation ratio", "in-group energy"],
+    );
+    for s in crate::analysis::outlier_spread(n, group, 3) {
+        table.row(vec![
+            s.kind.to_string(),
+            fmt(s.participation_ratio, 1),
+            fmt(s.in_group_energy, 3),
+        ]);
+    }
+    table
+}

@@ -1,0 +1,46 @@
+//! # GSR — Grouped Sequency-arranged Rotation
+//!
+//! Reproduction of *"Grouped Sequency-arranged Rotation: Optimizing Rotation
+//! Transformation for Quantization for Free"* (ACL 2025 SRW) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (grouped Walsh–Hadamard transform, group
+//!   quantization, dequant-matmul) authored in `python/compile/kernels/`
+//!   and AOT-lowered to HLO text.
+//! * **L2** — a Llama-style mini transformer in JAX whose quantized
+//!   forward pass is exported per bit-config (`w2a16`, `w2a4`).
+//! * **L3** — this crate: the native rotation/quantization library, the
+//!   PJRT runtime that loads the AOT artifacts, and the serving/eval
+//!   coordinator. Python never runs on the request path.
+//!
+//! The public API is organised bottom-up:
+//!
+//! * [`transform`] — Hadamard/Walsh construction, sequency math, RHT,
+//!   block-diagonal (local) rotations, fast WHT.
+//! * [`quant`] — RTN / GPTQ group quantizers, MSE clipping, bit packing.
+//! * [`model`] — model configuration and a pure-Rust fp32 reference
+//!   forward used to validate the PJRT path.
+//! * [`data`] — synthetic corpus generation, byte tokenizer, zero-shot
+//!   task suite.
+//! * [`runtime`] — PJRT client wrapper: load HLO text, upload weights,
+//!   execute.
+//! * [`coordinator`] — request router, dynamic batcher, variant registry,
+//!   metrics.
+//! * [`eval`] — perplexity and zero-shot evaluation engines + report
+//!   tables matching the paper's layout.
+//! * [`analysis`] — sequency-variance and outlier-spread analyses backing
+//!   the paper's §3.2 argument and Fig. 2.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod transform;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,221 @@
+//! `gsr` — CLI for the GSR reproduction.
+//!
+//! Subcommands:
+//! * `inspect`            — artifact/manifest summary.
+//! * `eval`               — PPL (+ zero-shot) of one variant or all.
+//! * `table1|table2|table3` — regenerate the paper's tables.
+//! * `analyze`            — §3.2 sequency variance + Fig. 2 outlier spread.
+//! * `serve`              — start the batching server and run a demo load.
+//! * `gen-corpus`         — write the synthetic corpus (native generator).
+
+use std::path::Path;
+
+use gsr::config::cli::Args;
+use gsr::coordinator::{BatchPolicy, Server};
+use gsr::data::CorpusGenerator;
+use gsr::eval::tables;
+use gsr::eval::EvalOpts;
+use gsr::runtime::{Artifacts, Engine};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_str() {
+        "inspect" => cmd_inspect(&args),
+        "eval" => cmd_eval(&args),
+        "table1" => cmd_table(&args, 1),
+        "table2" => cmd_table(&args, 2),
+        "table3" => cmd_table(&args, 3),
+        "analyze" => cmd_analyze(&args),
+        "serve" => cmd_serve(&args),
+        "gen-corpus" => cmd_gen_corpus(&args),
+        "quantize-native" => cmd_quantize_native(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?} (try `gsr help`)")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "gsr — Grouped Sequency-arranged Rotation (ACL 2025 SRW reproduction)\n\
+         \n\
+         USAGE: gsr <subcommand> [--artifacts DIR] [options]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           inspect                     artifact summary\n\
+           eval [--variant NAME|--all] PPL / zero-shot evaluation\n\
+           table1 | table2 | table3    regenerate the paper's tables\n\
+           analyze                     sequency variance + Fig.2 spread\n\
+           serve [--requests N]        batching server + demo load\n\
+           gen-corpus [--bytes N]      write the synthetic corpus\n\
+           quantize-native [--r1 K]    pure-Rust W2 quantization (no Python)\n\
+         \n\
+         COMMON OPTIONS:\n\
+           --artifacts DIR   artifact directory (default: artifacts)\n\
+           --windows N       PPL windows per variant (default 24)\n\
+           --tasks N         zero-shot instances per family (default 12)\n\
+           --markdown        render tables as markdown"
+    );
+}
+
+fn opts_from(args: &Args) -> EvalOpts {
+    EvalOpts {
+        windows: args.opt_usize("windows", 24),
+        tasks_per_kind: args.opt_usize("tasks", 12),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.opt_or("artifacts", "artifacts").to_string()
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
+    println!("model: d={} layers={} heads={} ffn={} group={} vocab={}",
+        arts.cfg.d_model, arts.cfg.n_layers, arts.cfg.n_heads,
+        arts.cfg.d_ffn, arts.cfg.group, arts.cfg.vocab);
+    println!("graphs: {}", arts.graph_names().join(", "));
+    println!("corpus: {} bytes (test split {} bytes)",
+        arts.corpus().len(), arts.test_split().len());
+    println!("variants ({}):", arts.variants.len());
+    for v in &arts.variants {
+        println!(
+            "  {:34} graph={:12} sanity_ppl={:.2}",
+            v.name, v.graph, v.sanity_ppl
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<(), String> {
+    let dir = artifacts_dir(args);
+    let arts = Artifacts::load(Path::new(&dir))?;
+    let opts = opts_from(args);
+    let mut engine = Engine::new()?;
+    println!("platform: {}", engine.platform());
+    let names: Vec<String> = if args.has_flag("all") {
+        let mut n = vec!["fp".to_string()];
+        n.extend(arts.variants.iter().map(|v| v.name.clone()));
+        n
+    } else {
+        vec![args.opt_or("variant", "fp").to_string()]
+    };
+    for name in names {
+        let ev = tables::eval_variant(&mut engine, &arts, &name, opts)?;
+        println!(
+            "{name}: ppl={:.3} zero-shot={:.2}",
+            ev.ppl, ev.zero_shot_avg
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args, which: usize) -> Result<(), String> {
+    let dir = artifacts_dir(args);
+    let opts = opts_from(args);
+    let table = match which {
+        1 => tables::table1(Path::new(&dir), opts, args.has_flag("verbose"))?,
+        2 => tables::table2(Path::new(&dir), opts)?,
+        _ => tables::table3(Path::new(&dir), args.opt_or("method", "quarot"), opts)?,
+    };
+    if args.has_flag("markdown") {
+        println!("{}", table.render_markdown());
+    } else {
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    let n = args.opt_usize("dim", 256);
+    let group = args.opt_usize("group", 64);
+    let seq_table = tables::sequency_table(n, group);
+    let fig2 = tables::fig2_table(n, group);
+    if args.has_flag("markdown") {
+        println!("{}", seq_table.render_markdown());
+        println!("{}", fig2.render_markdown());
+    } else {
+        println!("{}", seq_table.render());
+        println!("{}", fig2.render());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let dir = artifacts_dir(args);
+    let arts = Artifacts::load(Path::new(&dir))?;
+    let variants: Vec<String> = match args.opt("variants") {
+        Some(list) => list.split(',').map(String::from).collect(),
+        None => {
+            let mut v = vec!["fp".to_string()];
+            if let Some(m) = arts.variant("quarot_w2a16_gsr_r4gh") {
+                v.push(m.name.clone());
+            }
+            v
+        }
+    };
+    println!("starting server with variants: {variants:?}");
+    let server = Server::start(Path::new(&dir), &variants, BatchPolicy::default())?;
+    // Demo load: score random corpus windows round-robin over variants.
+    let n_requests = args.opt_usize("requests", 32);
+    let seq = arts.seq;
+    let test = arts.test_split().to_vec();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let variant = &variants[i % variants.len()];
+        let start = (i * 37) % (test.len() - seq - 1);
+        let tokens: Vec<i32> = test[start..start + seq].iter().map(|&b| b as i32).collect();
+        let logits = server.score(variant, tokens)?;
+        if i == 0 {
+            println!("first response: {} logits", logits.len());
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    println!("{}", metrics.report(wall));
+    Ok(())
+}
+
+fn cmd_quantize_native(args: &Args) -> Result<(), String> {
+    use gsr::eval::{EvalOpts, NativeModel};
+    use gsr::model::{DenseModel, FpParams, R4Kind};
+    use gsr::quant::{build_rotations, quantize_native};
+    use gsr::transform::R1Kind;
+
+    let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
+    let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
+    let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR)")?;
+    let r4 = R4Kind::parse(args.opt_or("r4", "GH")).ok_or("bad --r4 (GH|LH)")?;
+    let seed = args.opt_usize("seed", 2025) as u64;
+    println!("native W2 quantization: R1={r1} R4={} seed={seed}", r4.as_str());
+    let rots = build_rotations(&arts.cfg, r1, r4, seed);
+    let t0 = std::time::Instant::now();
+    let (qp, sse, _) = quantize_native(&fp, &arts.cfg, &rots, 2);
+    println!("quantized {} linears in {:?}; weight SSE {sse:.2}",
+        arts.cfg.n_layers * 7, t0.elapsed());
+    let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };
+    let native = NativeModel { model: &model, batch: 1, seq: arts.seq };
+    let opts = EvalOpts { windows: args.opt_usize("windows", 4), tasks_per_kind: 0 };
+    let ev = gsr::eval::tables::eval_model(&native, &arts, opts)?;
+    println!("native-quantized PPL (identity-Hessian GPTQ): {:.3}", ev.ppl);
+    Ok(())
+}
+
+fn cmd_gen_corpus(args: &Args) -> Result<(), String> {
+    let n = args.opt_usize("bytes", 1 << 20);
+    let out = args.opt_or("out", "corpus_native.bin").to_string();
+    let data = CorpusGenerator::new(gsr::data::SEED_CORPUS).generate(n);
+    std::fs::write(&out, &data).map_err(|e| e.to_string())?;
+    println!("wrote {} bytes to {out}", data.len());
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! Model configuration and flat parameter specs.
+//!
+//! Mirrors `python/compile/model.py::ModelCfg` and its
+//! `fp_param_spec` / `quant_param_spec` orderings exactly — the AOT
+//! weight blobs are flat concatenations in this order.
+
+use crate::config::Json;
+
+/// Tensor dtype in the artifact blobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+}
+
+impl Dtype {
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "u8" => Some(Dtype::U8),
+            _ => None,
+        }
+    }
+}
+
+/// One entry of a flat parameter spec.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+}
+
+/// The online R4 rotation kind baked into a graph (Table 2 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum R4Kind {
+    GH,
+    LH,
+}
+
+impl R4Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            R4Kind::GH => "GH",
+            R4Kind::LH => "LH",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<R4Kind> {
+        match s.to_ascii_uppercase().as_str() {
+            "GH" => Some(R4Kind::GH),
+            "LH" => Some(R4Kind::LH),
+            _ => None,
+        }
+    }
+}
+
+/// llama_mini architecture + quantization geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub group: usize,
+    pub rope_base: f64,
+    pub norm_eps: f64,
+}
+
+impl Default for ModelCfg {
+    fn default() -> Self {
+        Self {
+            vocab: 256,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ffn: 512,
+            group: 64,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+}
+
+pub const LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            vocab: j.at("vocab")?.as_usize().ok_or("vocab")?,
+            d_model: j.at("d_model")?.as_usize().ok_or("d_model")?,
+            n_layers: j.at("n_layers")?.as_usize().ok_or("n_layers")?,
+            n_heads: j.at("n_heads")?.as_usize().ok_or("n_heads")?,
+            d_ffn: j.at("d_ffn")?.as_usize().ok_or("d_ffn")?,
+            group: j.at("group")?.as_usize().ok_or("group")?,
+            rope_base: j.at("rope_base")?.as_f64().ok_or("rope_base")?,
+            norm_eps: j.at("norm_eps")?.as_f64().ok_or("norm_eps")?,
+        })
+    }
+
+    /// `(input channels, output channels)` of a named linear.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ffn);
+        match name {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "wgate" | "wup" => (d, f),
+            "wdown" => (f, d),
+            other => panic!("unknown linear {other}"),
+        }
+    }
+
+    /// Mirror of python `fp_param_spec`.
+    pub fn fp_param_spec(&self) -> Vec<ParamSpec> {
+        let (d, v) = (self.d_model, self.vocab);
+        let mut spec = vec![ParamSpec { name: "embed".into(), shape: vec![v, d], dtype: Dtype::F32 }];
+        for l in 0..self.n_layers {
+            for norm in ["ln1", "ln2"] {
+                spec.push(ParamSpec {
+                    name: format!("layers.{l}.{norm}"),
+                    shape: vec![d],
+                    dtype: Dtype::F32,
+                });
+            }
+            for name in LINEARS {
+                let (c, h) = self.linear_shape(name);
+                spec.push(ParamSpec {
+                    name: format!("layers.{l}.{name}"),
+                    shape: vec![c, h],
+                    dtype: Dtype::F32,
+                });
+            }
+        }
+        spec.push(ParamSpec { name: "ln_f".into(), shape: vec![d], dtype: Dtype::F32 });
+        spec.push(ParamSpec { name: "lm_head".into(), shape: vec![d, v], dtype: Dtype::F32 });
+        spec
+    }
+
+    /// Mirror of python `quant_param_spec`.
+    pub fn quant_param_spec(&self, r4: R4Kind) -> Vec<ParamSpec> {
+        let (d, v, g) = (self.d_model, self.vocab, self.group);
+        let mut spec = vec![
+            ParamSpec { name: "embed".into(), shape: vec![v, d], dtype: Dtype::F32 },
+            ParamSpec { name: "lm_head".into(), shape: vec![d, v], dtype: Dtype::F32 },
+            ParamSpec {
+                name: "r3".into(),
+                shape: vec![self.head_dim(), self.head_dim()],
+                dtype: Dtype::F32,
+            },
+            ParamSpec {
+                name: "r4_signs".into(),
+                shape: vec![if r4 == R4Kind::GH { self.d_ffn } else { g }],
+                dtype: Dtype::F32,
+            },
+        ];
+        for l in 0..self.n_layers {
+            for (key, dim) in [
+                ("ascale_attn", d),
+                ("ascale_o", d),
+                ("ascale_ffn", d),
+                ("ascale_down", self.d_ffn),
+            ] {
+                spec.push(ParamSpec {
+                    name: format!("layers.{l}.{key}"),
+                    shape: vec![dim],
+                    dtype: Dtype::F32,
+                });
+            }
+            for name in LINEARS {
+                let (c, h) = self.linear_shape(name);
+                spec.push(ParamSpec {
+                    name: format!("layers.{l}.{name}_packed"),
+                    shape: vec![c / 4, h],
+                    dtype: Dtype::U8,
+                });
+                spec.push(ParamSpec {
+                    name: format!("layers.{l}.{name}_scale"),
+                    shape: vec![c / g, h],
+                    dtype: Dtype::F32,
+                });
+                spec.push(ParamSpec {
+                    name: format!("layers.{l}.{name}_zero"),
+                    shape: vec![c / g, h],
+                    dtype: Dtype::F32,
+                });
+            }
+        }
+        spec
+    }
+
+    /// Parse a spec list out of the manifest's `graphs.<g>.params` array
+    /// (authoritative over the locally-computed mirror; both are checked
+    /// for equality by tests).
+    pub fn spec_from_json(arr: &[Json]) -> Result<Vec<ParamSpec>, String> {
+        arr.iter()
+            .map(|item| {
+                let triple = item.as_arr().ok_or("spec entry not an array")?;
+                let name = triple[0].as_str().ok_or("spec name")?.to_string();
+                let shape = triple[1]
+                    .as_arr()
+                    .ok_or("spec shape")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("dim"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let dtype = Dtype::parse(triple[2].as_str().ok_or("dtype")?)
+                    .ok_or("unknown dtype")?;
+                Ok(ParamSpec { name, shape, dtype })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_sizes_consistent() {
+        let cfg = ModelCfg::default();
+        let fp = cfg.fp_param_spec();
+        // embed + 4*(2 norms + 7 linears) + ln_f + lm_head
+        assert_eq!(fp.len(), 1 + cfg.n_layers * 9 + 2);
+        let q = cfg.quant_param_spec(R4Kind::GH);
+        // 4 globals + per-layer (4 scales + 7*3 weights)
+        assert_eq!(q.len(), 4 + cfg.n_layers * (4 + 21));
+    }
+
+    #[test]
+    fn quant_blob_is_much_smaller_than_fp() {
+        let cfg = ModelCfg::default();
+        let fp_bytes: usize = cfg.fp_param_spec().iter().map(|s| s.nbytes()).sum();
+        let q_bytes: usize = cfg
+            .quant_param_spec(R4Kind::GH)
+            .iter()
+            .filter(|s| s.name.contains("_packed") || s.name.contains("_scale") || s.name.contains("_zero"))
+            .map(|s| s.nbytes())
+            .sum();
+        // 2-bit + per-64 group affine ≈ 12.25× smaller than f32 linears.
+        let fp_linears: usize = cfg
+            .fp_param_spec()
+            .iter()
+            .filter(|s| s.name.contains(".w"))
+            .map(|s| s.nbytes())
+            .sum();
+        assert!(q_bytes * 8 < fp_linears, "q {q_bytes} vs fp {fp_linears}");
+        assert!(fp_bytes > q_bytes);
+    }
+
+    #[test]
+    fn r4_kind_changes_sign_length() {
+        let cfg = ModelCfg::default();
+        let gh = cfg.quant_param_spec(R4Kind::GH);
+        let lh = cfg.quant_param_spec(R4Kind::LH);
+        let f = |spec: &[ParamSpec]| {
+            spec.iter().find(|s| s.name == "r4_signs").unwrap().shape[0]
+        };
+        assert_eq!(f(&gh), cfg.d_ffn);
+        assert_eq!(f(&lh), cfg.group);
+    }
+}

@@ -1,0 +1,402 @@
+//! Native reference forward pass (pure Rust, no PJRT).
+//!
+//! Mirrors `python/compile/model.py::forward_fp` / `forward_rotated` on
+//! single sequences. Used to (a) cross-validate the PJRT path against an
+//! independent implementation, (b) run the Fig.-1 rotation-invariance
+//! cargo test, and (c) provide a PJRT-free eval fallback.
+
+use super::config::{ModelCfg, R4Kind};
+use super::weights::{FpParams, QuantParams};
+
+/// A runnable dense model: fp checkpoint or dequantized variant.
+pub enum DenseModel {
+    Fp { cfg: ModelCfg, params: FpParams },
+    Quant { cfg: ModelCfg, params: QuantParams, a_bits: Option<u32> },
+}
+
+const ACT_CLIP: f32 = 0.9;
+
+impl DenseModel {
+    pub fn cfg(&self) -> &ModelCfg {
+        match self {
+            DenseModel::Fp { cfg, .. } => cfg,
+            DenseModel::Quant { cfg, .. } => cfg,
+        }
+    }
+
+    /// Forward a single token sequence → logits `[T, vocab]` (row-major).
+    pub fn forward(&self, tokens: &[i32]) -> Vec<f32> {
+        match self {
+            DenseModel::Fp { cfg, params } => forward_fp(cfg, params, tokens),
+            DenseModel::Quant { cfg, params, a_bits } => {
+                forward_quant(cfg, params, *a_bits, tokens)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+/// `out[T,H] = x[T,C] @ w[C,H]` with f64 accumulation.
+pub fn matmul(x: &[f32], w: &[f32], t: usize, c: usize, h: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), t * c);
+    debug_assert_eq!(w.len(), c * h);
+    let mut out = vec![0f32; t * h];
+    for row in 0..t {
+        let xr = &x[row * c..(row + 1) * c];
+        let or = &mut out[row * h..(row + 1) * h];
+        let mut acc = vec![0f64; h];
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[k * h..(k + 1) * h];
+            let xv = xv as f64;
+            for (a, &wv) in acc.iter_mut().zip(wr) {
+                *a += xv * wv as f64;
+            }
+        }
+        for (o, a) in or.iter_mut().zip(&acc) {
+            *o = *a as f32;
+        }
+    }
+    out
+}
+
+fn rmsnorm_rows(x: &mut [f32], d: usize, eps: f64) {
+    for row in x.chunks_mut(d) {
+        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let r = 1.0 / (ms + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v as f64 * r) as f32;
+        }
+    }
+}
+
+fn scale_rows(x: &mut [f32], scale: &[f32]) {
+    let d = scale.len();
+    for row in x.chunks_mut(d) {
+        for (v, &s) in row.iter_mut().zip(scale) {
+            *v *= s;
+        }
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Symmetric per-group activation fake-quant (matches kernels/quant.py).
+fn act_fake_quant(x: &mut [f32], group: usize, bits: u32) {
+    let qmax = ((1u32 << (bits - 1)) - 1) as f32;
+    for chunk in x.chunks_mut(group) {
+        let absmax = chunk.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let mut scale = ACT_CLIP * absmax / qmax;
+        if scale == 0.0 {
+            scale = 1.0;
+        }
+        for v in chunk.iter_mut() {
+            let q = (*v / scale).round().clamp(-qmax, qmax);
+            *v = q * scale;
+        }
+    }
+}
+
+/// Orthonormal in-place FWHT over an f32 slice.
+fn fwht_f32(x: &mut [f32]) {
+    let n = x.len();
+    let mut h = 1;
+    while h < n {
+        for start in (0..n).step_by(2 * h) {
+            for i in start..start + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let s = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// RoPE tables: `(cos, sin)` each `[T, head_dim/2]`.
+fn rope_tables(t: usize, head_dim: usize, base: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0f32; t * half];
+    let mut sin = vec![0f32; t * half];
+    for pos in 0..t {
+        for i in 0..half {
+            let inv = 1.0 / base.powf(i as f64 / half as f64);
+            let angle = pos as f64 * inv;
+            cos[pos * half + i] = angle.cos() as f32;
+            sin[pos * half + i] = angle.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in-place to `[T, n_heads, head_dim]` (paired halves layout,
+/// matching model.py::apply_rope).
+fn apply_rope(x: &mut [f32], t: usize, n_heads: usize, dh: usize, cos: &[f32], sin: &[f32]) {
+    let half = dh / 2;
+    for pos in 0..t {
+        for head in 0..n_heads {
+            let off = (pos * n_heads + head) * dh;
+            for i in 0..half {
+                let c = cos[pos * half + i];
+                let s = sin[pos * half + i];
+                let x1 = x[off + i];
+                let x2 = x[off + half + i];
+                x[off + i] = x1 * c - x2 * s;
+                x[off + half + i] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+/// Per-head right-multiplication by `r [dh, dh]` over `[T, heads, dh]`.
+fn rotate_heads(x: &mut [f32], t: usize, n_heads: usize, dh: usize, r: &[f32]) {
+    let mut tmp = vec![0f32; dh];
+    for pos in 0..t {
+        for head in 0..n_heads {
+            let off = (pos * n_heads + head) * dh;
+            for (j, tv) in tmp.iter_mut().enumerate() {
+                let mut acc = 0f64;
+                for k in 0..dh {
+                    acc += x[off + k] as f64 * r[k * dh + j] as f64;
+                }
+                *tv = acc as f32;
+            }
+            x[off..off + dh].copy_from_slice(&tmp);
+        }
+    }
+}
+
+/// Causal attention over `[T, heads, dh]` tensors → same layout.
+fn attention(q: &[f32], k: &[f32], v: &[f32], t: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0f32; t * n_heads * dh];
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut scores = vec![0f64; t];
+    for head in 0..n_heads {
+        for qi in 0..t {
+            let qoff = (qi * n_heads + head) * dh;
+            let mut maxs = f64::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                let koff = (ki * n_heads + head) * dh;
+                let mut dot = 0f64;
+                for d in 0..dh {
+                    dot += q[qoff + d] as f64 * k[koff + d] as f64;
+                }
+                *sc = dot * scale;
+                maxs = maxs.max(*sc);
+            }
+            let mut denom = 0f64;
+            for sc in scores.iter_mut().take(qi + 1) {
+                *sc = (*sc - maxs).exp();
+                denom += *sc;
+            }
+            let ooff = (qi * n_heads + head) * dh;
+            for d in 0..dh {
+                let mut acc = 0f64;
+                for ki in 0..=qi {
+                    let voff = (ki * n_heads + head) * dh;
+                    acc += scores[ki] * v[voff + d] as f64;
+                }
+                out[ooff + d] = (acc / denom) as f32;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// fp forward (training layout)
+// ---------------------------------------------------------------------------
+
+fn forward_fp(cfg: &ModelCfg, p: &FpParams, tokens: &[i32]) -> Vec<f32> {
+    let (t, d) = (tokens.len(), cfg.d_model);
+    let (nh, dh) = (cfg.n_heads, cfg.head_dim());
+    let mut x = vec![0f32; t * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        x[i * d..(i + 1) * d].copy_from_slice(&p.embed[tok as usize * d..(tok as usize + 1) * d]);
+    }
+    let (cos, sin) = rope_tables(t, dh, cfg.rope_base);
+    for layer in &p.layers {
+        let mut h = x.clone();
+        rmsnorm_rows(&mut h, d, cfg.norm_eps);
+        scale_rows(&mut h, &layer.ln1);
+        let mut q = matmul(&h, &layer.wq, t, d, d);
+        let mut k = matmul(&h, &layer.wk, t, d, d);
+        let v = matmul(&h, &layer.wv, t, d, d);
+        apply_rope(&mut q, t, nh, dh, &cos, &sin);
+        apply_rope(&mut k, t, nh, dh, &cos, &sin);
+        let o = attention(&q, &k, &v, t, nh, dh);
+        let o = matmul(&o, &layer.wo, t, d, d);
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        let mut h = x.clone();
+        rmsnorm_rows(&mut h, d, cfg.norm_eps);
+        scale_rows(&mut h, &layer.ln2);
+        let g = matmul(&h, &layer.wgate, t, d, cfg.d_ffn);
+        let u = matmul(&h, &layer.wup, t, d, cfg.d_ffn);
+        let z: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+        let zd = matmul(&z, &layer.wdown, t, cfg.d_ffn, d);
+        for (xv, zv) in x.iter_mut().zip(&zd) {
+            *xv += zv;
+        }
+    }
+    rmsnorm_rows(&mut x, d, cfg.norm_eps);
+    scale_rows(&mut x, &p.ln_f);
+    matmul(&x, &p.lm_head, t, d, cfg.vocab)
+}
+
+// ---------------------------------------------------------------------------
+// rotated/quantized forward (deployed layout)
+// ---------------------------------------------------------------------------
+
+fn forward_quant(
+    cfg: &ModelCfg,
+    p: &QuantParams,
+    a_bits: Option<u32>,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let (t, d) = (tokens.len(), cfg.d_model);
+    let (nh, dh) = (cfg.n_heads, cfg.head_dim());
+    let g = cfg.group;
+    let maybe_quant = |x: &mut Vec<f32>| {
+        if let Some(bits) = a_bits {
+            act_fake_quant(x, g, bits);
+        }
+    };
+    let mut x = vec![0f32; t * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        x[i * d..(i + 1) * d].copy_from_slice(&p.embed[tok as usize * d..(tok as usize + 1) * d]);
+    }
+    let (cos, sin) = rope_tables(t, dh, cfg.rope_base);
+    for layer in &p.layers {
+        let w = |name: &str| layer.dense[name].as_slice();
+        let mut h = x.clone();
+        rmsnorm_rows(&mut h, d, cfg.norm_eps);
+        scale_rows(&mut h, &layer.ascale_attn);
+        maybe_quant(&mut h);
+        let mut q = matmul(&h, w("wq"), t, d, d);
+        let mut k = matmul(&h, w("wk"), t, d, d);
+        let v = matmul(&h, w("wv"), t, d, d);
+        apply_rope(&mut q, t, nh, dh, &cos, &sin);
+        apply_rope(&mut k, t, nh, dh, &cos, &sin);
+        rotate_heads(&mut q, t, nh, dh, &p.r3);
+        rotate_heads(&mut k, t, nh, dh, &p.r3);
+        let mut o = attention(&q, &k, &v, t, nh, dh);
+        scale_rows(&mut o, &layer.ascale_o);
+        maybe_quant(&mut o);
+        let o = matmul(&o, w("wo"), t, d, d);
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        let mut h = x.clone();
+        rmsnorm_rows(&mut h, d, cfg.norm_eps);
+        scale_rows(&mut h, &layer.ascale_ffn);
+        maybe_quant(&mut h);
+        let gx = matmul(&h, w("wgate"), t, d, cfg.d_ffn);
+        let ux = matmul(&h, w("wup"), t, d, cfg.d_ffn);
+        let mut z: Vec<f32> = gx.iter().zip(&ux).map(|(&gv, &uv)| silu(gv) * uv).collect();
+        // Online R4: fast (grouped) Hadamard + signs — the L1 kernel's math.
+        match p.r4_kind {
+            R4Kind::GH => {
+                for row in z.chunks_mut(cfg.d_ffn) {
+                    fwht_f32(row);
+                    for (zv, &s) in row.iter_mut().zip(&p.r4_signs) {
+                        *zv *= s;
+                    }
+                }
+            }
+            R4Kind::LH => {
+                for row in z.chunks_mut(cfg.d_ffn) {
+                    for chunk in row.chunks_mut(g) {
+                        fwht_f32(chunk);
+                        for (zv, &s) in chunk.iter_mut().zip(&p.r4_signs) {
+                            *zv *= s;
+                        }
+                    }
+                }
+            }
+        }
+        scale_rows(&mut z, &layer.ascale_down);
+        maybe_quant(&mut z);
+        let zd = matmul(&z, w("wdown"), t, cfg.d_ffn, d);
+        for (xv, zv) in x.iter_mut().zip(&zd) {
+            *xv += zv;
+        }
+    }
+    rmsnorm_rows(&mut x, d, cfg.norm_eps);
+    matmul(&x, &p.lm_head, t, d, cfg.vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_f32_matches_f64() {
+        let mut a = vec![1.0f32, -2.0, 3.0, 0.5, -1.5, 2.5, 0.0, 4.0];
+        let mut b: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        fwht_f32(&mut a);
+        crate::transform::fwht(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((*x as f64 - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // Changing a future value must not affect earlier outputs.
+        let (t, nh, dh) = (4, 1, 4);
+        let mut q = vec![0.1f32; t * nh * dh];
+        let k = vec![0.2f32; t * nh * dh];
+        let mut v: Vec<f32> = (0..t * nh * dh).map(|i| i as f32 * 0.01).collect();
+        for (i, qv) in q.iter_mut().enumerate() {
+            *qv += (i % 3) as f32 * 0.05;
+        }
+        let out1 = attention(&q, &k, &v, t, nh, dh);
+        for d in 0..dh {
+            v[(t - 1) * dh + d] = 99.0; // mutate last position's value
+        }
+        let out2 = attention(&q, &k, &v, t, nh, dh);
+        assert_eq!(&out1[..(t - 1) * dh], &out2[..(t - 1) * dh]);
+        assert_ne!(&out1[(t - 1) * dh..], &out2[(t - 1) * dh..]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let mut x = vec![3.0f32, -4.0]; // rms = sqrt(12.5)
+        rmsnorm_rows(&mut x, 2, 0.0);
+        let rms: f32 = (x.iter().map(|v| v * v).sum::<f32>() / 2.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn act_fake_quant_reduces_resolution() {
+        let mut x: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.1).collect();
+        let orig = x.clone();
+        act_fake_quant(&mut x, 32, 4);
+        // Values change but stay within the clip envelope.
+        assert!(x.iter().zip(&orig).any(|(a, b)| a != b));
+        let m0 = orig.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        assert!(x.iter().all(|&v| v.abs() <= m0 + 1e-6));
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [1,2;3,4] @ [1,0;0,1] = same
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&x, &w, 2, 2, 2), x);
+    }
+}

@@ -1,0 +1,14 @@
+//! Model layer: configuration, weight-blob decoding, native forward.
+//!
+//! The native (pure-Rust) forward pass is the *reference implementation*
+//! used to validate the PJRT execution path end-to-end: both consume the
+//! same artifact blobs and must agree to float tolerance. It also powers
+//! the Fig.-1 rotation-invariance test and a PJRT-free fallback eval.
+
+pub mod config;
+pub mod forward;
+pub mod weights;
+
+pub use config::{ModelCfg, ParamSpec, R4Kind};
+pub use forward::DenseModel;
+pub use weights::{FpParams, QuantParams};

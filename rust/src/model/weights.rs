@@ -1,0 +1,198 @@
+//! Weight-blob decoding (flat little-endian tensors in spec order).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use super::config::{Dtype, ModelCfg, ParamSpec, R4Kind};
+use crate::quant::unpack2;
+
+/// A raw tensor decoded from a blob.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+}
+
+impl Tensor {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32(v) => v,
+            Tensor::U8(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_u8(&self) -> &[u8] {
+        match self {
+            Tensor::U8(v) => v,
+            Tensor::F32(_) => panic!("expected u8 tensor"),
+        }
+    }
+}
+
+/// Decode a flat blob into named tensors per `spec`.
+pub fn decode_blob(bytes: &[u8], spec: &[ParamSpec]) -> Result<BTreeMap<String, Tensor>, String> {
+    let expect: usize = spec.iter().map(|s| s.nbytes()).sum();
+    if bytes.len() != expect {
+        return Err(format!("blob size {} != spec size {expect}", bytes.len()));
+    }
+    let mut out = BTreeMap::new();
+    let mut off = 0;
+    for s in spec {
+        let nb = s.nbytes();
+        let chunk = &bytes[off..off + nb];
+        let t = match s.dtype {
+            Dtype::F32 => Tensor::F32(
+                chunk
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            ),
+            Dtype::U8 => Tensor::U8(chunk.to_vec()),
+        };
+        out.insert(s.name.clone(), t);
+        off += nb;
+    }
+    Ok(out)
+}
+
+/// fp32 checkpoint parameters (training-model layout, with norms).
+#[derive(Debug, Clone)]
+pub struct FpParams {
+    pub embed: Vec<f32>,
+    pub lm_head: Vec<f32>,
+    pub ln_f: Vec<f32>,
+    pub layers: Vec<FpLayer>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FpLayer {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub wgate: Vec<f32>,
+    pub wup: Vec<f32>,
+    pub wdown: Vec<f32>,
+}
+
+impl FpParams {
+    pub fn load(path: &Path, cfg: &ModelCfg) -> Result<Self, String> {
+        let bytes = fs::read(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let map = decode_blob(&bytes, &cfg.fp_param_spec())?;
+        let get = |name: &str| -> Vec<f32> { map[name].as_f32().to_vec() };
+        let layers = (0..cfg.n_layers)
+            .map(|l| FpLayer {
+                ln1: get(&format!("layers.{l}.ln1")),
+                ln2: get(&format!("layers.{l}.ln2")),
+                wq: get(&format!("layers.{l}.wq")),
+                wk: get(&format!("layers.{l}.wk")),
+                wv: get(&format!("layers.{l}.wv")),
+                wo: get(&format!("layers.{l}.wo")),
+                wgate: get(&format!("layers.{l}.wgate")),
+                wup: get(&format!("layers.{l}.wup")),
+                wdown: get(&format!("layers.{l}.wdown")),
+            })
+            .collect();
+        Ok(Self { embed: get("embed"), lm_head: get("lm_head"), ln_f: get("ln_f"), layers })
+    }
+}
+
+/// Quantized-variant parameters: dequantized dense linears plus the
+/// rotation/scale runtime tensors. Dense form feeds both the native
+/// reference forward and (as raw blobs) the PJRT path.
+#[derive(Debug, Clone)]
+pub struct QuantParams {
+    pub embed: Vec<f32>,
+    pub lm_head: Vec<f32>,
+    pub r3: Vec<f32>,
+    pub r4_signs: Vec<f32>,
+    pub r4_kind: R4Kind,
+    pub layers: Vec<QuantLayer>,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantLayer {
+    pub ascale_attn: Vec<f32>,
+    pub ascale_o: Vec<f32>,
+    pub ascale_ffn: Vec<f32>,
+    pub ascale_down: Vec<f32>,
+    /// Dequantized dense weights, keyed by linear name.
+    pub dense: BTreeMap<String, Vec<f32>>,
+}
+
+impl QuantParams {
+    pub fn load(path: &Path, cfg: &ModelCfg, r4_kind: R4Kind) -> Result<Self, String> {
+        let bytes = fs::read(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let spec = cfg.quant_param_spec(r4_kind);
+        let map = decode_blob(&bytes, &spec)?;
+        let getf = |name: &str| -> Vec<f32> { map[name].as_f32().to_vec() };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut dense = BTreeMap::new();
+            for name in super::config::LINEARS {
+                let (c, h) = cfg.linear_shape(name);
+                let packed = map[&format!("layers.{l}.{name}_packed")].as_u8();
+                let scale = map[&format!("layers.{l}.{name}_scale")].as_f32();
+                let zero = map[&format!("layers.{l}.{name}_zero")].as_f32();
+                let codes = unpack2(packed, c, h);
+                let g = cfg.group;
+                let mut w = vec![0f32; c * h];
+                for row in 0..c {
+                    let grp = row / g;
+                    for col in 0..h {
+                        let s = scale[grp * h + col];
+                        let z = zero[grp * h + col];
+                        w[row * h + col] = (codes[row * h + col] as f32 - z) * s;
+                    }
+                }
+                dense.insert(name.to_string(), w);
+            }
+            layers.push(QuantLayer {
+                ascale_attn: getf(&format!("layers.{l}.ascale_attn")),
+                ascale_o: getf(&format!("layers.{l}.ascale_o")),
+                ascale_ffn: getf(&format!("layers.{l}.ascale_ffn")),
+                ascale_down: getf(&format!("layers.{l}.ascale_down")),
+                dense,
+            });
+        }
+        Ok(Self {
+            embed: getf("embed"),
+            lm_head: getf("lm_head"),
+            r3: getf("r3"),
+            r4_signs: getf("r4_signs"),
+            r4_kind,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_blob_roundtrip() {
+        let spec = vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 2], dtype: Dtype::F32 },
+            ParamSpec { name: "b".into(), shape: vec![3], dtype: Dtype::U8 },
+        ];
+        let mut bytes = Vec::new();
+        for v in [1.0f32, -2.0, 0.5, 4.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[7, 8, 9]);
+        let map = decode_blob(&bytes, &spec).unwrap();
+        assert_eq!(map["a"].as_f32(), &[1.0, -2.0, 0.5, 4.0]);
+        assert_eq!(map["b"].as_u8(), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn decode_blob_size_mismatch_is_error() {
+        let spec =
+            vec![ParamSpec { name: "a".into(), shape: vec![4], dtype: Dtype::F32 }];
+        assert!(decode_blob(&[0u8; 15], &spec).is_err());
+    }
+}

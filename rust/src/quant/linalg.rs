@@ -1,0 +1,131 @@
+//! Minimal dense linear algebra for GPTQ (Cholesky, inversion).
+//!
+//! Sizes here are at most `d_ffn × d_ffn` (512²) and this runs at
+//! build/analysis time only, so clarity beats asymptotics.
+
+use crate::transform::Mat;
+
+/// Cholesky factor `L` (lower-triangular) with `A = L Lᵀ`.
+/// Returns `None` if `A` is not positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of a symmetric positive-definite matrix via Cholesky.
+pub fn spd_inverse(a: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Invert L (lower-triangular) by forward substitution.
+    let mut linv = Mat::zeros(n, n);
+    for i in 0..n {
+        linv[(i, i)] = 1.0 / l[(i, i)];
+        for j in 0..i {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum += l[(i, k)] * linv[(k, j)];
+            }
+            linv[(i, j)] = -sum / l[(i, i)];
+        }
+    }
+    // A⁻¹ = L⁻ᵀ L⁻¹.
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut sum = 0.0;
+            for k in i.max(j)..n {
+                sum += linv[(k, i)] * linv[(k, j)];
+            }
+            inv[(i, j)] = sum;
+        }
+    }
+    Some(inv)
+}
+
+/// Upper-triangular `U` with `A = Uᵀ U` — `cholesky(A, upper=True)` as
+/// GPTQ applies it to the inverse Hessian. Simply the transpose of the
+/// lower factor: `A = L Lᵀ = (Lᵀ)ᵀ (Lᵀ)`.
+pub fn cholesky_upper(a: &Mat) -> Option<Mat> {
+    Some(cholesky(a)?.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = SplitMix64::new(seed);
+        let b = Mat::from_fn(n, n, |_, _| rng.next_normal());
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(16, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let a = random_spd(12, 2);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..12 {
+            for j in 0..12 {
+                let t = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - t).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_upper_reconstructs() {
+        let a = random_spd(10, 3);
+        let u = cholesky_upper(&a).unwrap();
+        // U must be upper-triangular…
+        for i in 0..10 {
+            for j in 0..i {
+                assert!(u[(i, j)].abs() < 1e-12, "not upper at ({i},{j})");
+            }
+        }
+        // …and satisfy A = Uᵀ U.
+        let rec = u.transpose().matmul(&u);
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::identity(4);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+}

@@ -1,0 +1,94 @@
+//! Native group quantizers — RTN, GPTQ, MSE clipping, bit packing.
+//!
+//! Mirrors `python/compile/gptq.py` so the Rust side can (a) verify
+//! artifacts produced by the Python build path, (b) run the analysis
+//! benches (sequency variance → quantization error, Fig. 2 outlier
+//! spread) natively, and (c) serve as a standalone quantization library
+//! for downstream users.
+//!
+//! Conventions: a linear is `out = x @ W`, `W ∈ R^{C×H}` (C input
+//! channels, H output channels); quantization groups span `G`
+//! consecutive **input** channels per output channel (the grouping the
+//! paper's Observation #1 reasons about).
+
+pub mod gptq;
+pub mod linalg;
+pub mod pack;
+pub mod pipeline;
+pub mod rtn;
+
+pub use gptq::gptq_quantize;
+pub use pipeline::{build_rotations, fuse_to_dense, quantize_native, RotationSet};
+pub use pack::{pack2, unpack2};
+pub use rtn::{fake_quant_sym, group_params, rtn_quantize};
+
+use crate::transform::Mat;
+
+/// A group-quantized linear layer: integer codes + per-group affine.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    /// Codes in `[0, 2^bits)`, row-major `[C, H]`.
+    pub codes: Vec<i32>,
+    /// Per-group scales, row-major `[C/G, H]`.
+    pub scale: Vec<f64>,
+    /// Per-group zero points, row-major `[C/G, H]`.
+    pub zero: Vec<f64>,
+    pub c: usize,
+    pub h: usize,
+    pub group: usize,
+    pub bits: u32,
+}
+
+impl QuantizedLinear {
+    /// Expand codes back to a dense `[C, H]` matrix.
+    pub fn dequant(&self) -> Mat {
+        let mut w = Mat::zeros(self.c, self.h);
+        let n_groups = self.c / self.group;
+        for g in 0..n_groups {
+            for r in 0..self.group {
+                let row = g * self.group + r;
+                for col in 0..self.h {
+                    let code = self.codes[row * self.h + col] as f64;
+                    let s = self.scale[g * self.h + col];
+                    let z = self.zero[g * self.h + col];
+                    w[(row, col)] = (code - z) * s;
+                }
+            }
+        }
+        w
+    }
+
+    /// Mean-squared reconstruction error against the original weight.
+    pub fn mse(&self, w: &Mat) -> f64 {
+        assert_eq!((w.rows, w.cols), (self.c, self.h));
+        let deq = self.dequant();
+        let mut sum = 0.0;
+        for (a, b) in deq.data.iter().zip(&w.data) {
+            sum += (a - b) * (a - b);
+        }
+        sum / (self.c * self.h) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dequant_shape_and_affine() {
+        let q = QuantizedLinear {
+            codes: vec![0, 3, 1, 2],
+            scale: vec![0.5, 2.0],
+            zero: vec![1.0, 0.0],
+            c: 2,
+            h: 2,
+            group: 2,
+            bits: 2,
+        };
+        let w = q.dequant();
+        assert_eq!(w[(0, 0)], (0.0 - 1.0) * 0.5);
+        assert_eq!(w[(0, 1)], (3.0 - 0.0) * 2.0);
+        assert_eq!(w[(1, 0)], (1.0 - 1.0) * 0.5);
+        assert_eq!(w[(1, 1)], (2.0 - 0.0) * 2.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! 2-bit code packing — 4 codes per byte, LSB-first along input channels.
+//!
+//! Must match `python/compile/kernels/ref.py::pack2` bit-for-bit (the
+//! AOT weight blobs are produced by the Python side and consumed here).
+
+/// Pack codes `[C, H]` (values 0..3, row-major) into `[C/4, H]` bytes.
+/// Byte `b` of a column holds channels `4b..4b+4` in bits
+/// `[0:2] [2:4] [4:6] [6:8]`.
+pub fn pack2(codes: &[i32], c: usize, h: usize) -> Vec<u8> {
+    assert_eq!(codes.len(), c * h);
+    assert_eq!(c % 4, 0, "input channels must be a multiple of 4");
+    let mut out = vec![0u8; c / 4 * h];
+    for cb in 0..c / 4 {
+        for col in 0..h {
+            let mut byte = 0u8;
+            for k in 0..4 {
+                let code = codes[(cb * 4 + k) * h + col];
+                debug_assert!((0..4).contains(&code), "code {code} out of 2-bit range");
+                byte |= ((code as u8) & 3) << (2 * k);
+            }
+            out[cb * h + col] = byte;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack2`].
+pub fn unpack2(packed: &[u8], c: usize, h: usize) -> Vec<i32> {
+    assert_eq!(packed.len(), c / 4 * h);
+    let mut out = vec![0i32; c * h];
+    for cb in 0..c / 4 {
+        for col in 0..h {
+            let byte = packed[cb * h + col];
+            for k in 0..4 {
+                out[(cb * 4 + k) * h + col] = ((byte >> (2 * k)) & 3) as i32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = SplitMix64::new(1);
+        let (c, h) = (64, 24);
+        let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(4) as i32).collect();
+        assert_eq!(unpack2(&pack2(&codes, c, h), c, h), codes);
+    }
+
+    #[test]
+    fn bit_layout_lsb_first() {
+        // Channels (3, 2, 1, 0) for one column → byte 0b00_01_10_11.
+        let codes = vec![3, 2, 1, 0];
+        let packed = pack2(&codes, 4, 1);
+        assert_eq!(packed, vec![0b00_01_10_11]);
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let codes = vec![0i32; 128 * 16];
+        assert_eq!(pack2(&codes, 128, 16).len() * 4, codes.len());
+    }
+}

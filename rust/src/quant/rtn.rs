@@ -1,0 +1,164 @@
+//! Round-to-nearest group quantization with MSE-based clipping.
+
+use super::QuantizedLinear;
+use crate::transform::Mat;
+
+/// Clip-factor search grid (paper A.1: MSE-based clipping).
+pub const CLIP_GRID: [f64; 13] = [
+    0.4, 0.45, 0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95, 1.0,
+];
+
+/// Scale/zero for one `[G, H]` group slice (rows `rows`, row-major with
+/// stride `h`). Asymmetric; per-output-channel MSE clip search when
+/// `mse_clip`. Returns `(scale, zero)` each of length `h`.
+pub fn group_params(rows: &[&[f64]], h: usize, bits: u32, mse_clip: bool) -> (Vec<f64>, Vec<f64>) {
+    let qmax = ((1u32 << bits) - 1) as f64;
+    let mut lo = vec![f64::INFINITY; h];
+    let mut hi = vec![f64::NEG_INFINITY; h];
+    for row in rows {
+        for (c, &v) in row.iter().enumerate() {
+            lo[c] = lo[c].min(v);
+            hi[c] = hi[c].max(v);
+        }
+    }
+    let base: Vec<(f64, f64)> = (0..h)
+        .map(|c| {
+            let s = ((hi[c] - lo[c]) / qmax).max(1e-12);
+            (s, (-lo[c] / s).round())
+        })
+        .collect();
+    if !mse_clip {
+        return (base.iter().map(|p| p.0).collect(), base.iter().map(|p| p.1).collect());
+    }
+    let mut best_err = vec![f64::INFINITY; h];
+    let mut out_s: Vec<f64> = base.iter().map(|p| p.0).collect();
+    let mut out_z: Vec<f64> = base.iter().map(|p| p.1).collect();
+    for &k in CLIP_GRID.iter() {
+        for c in 0..h {
+            let s = ((hi[c] * k - lo[c] * k) / qmax).max(1e-12);
+            let z = (-lo[c] * k / s).round();
+            let mut err = 0.0;
+            for row in rows {
+                let q = (row[c] / s + z).round().clamp(0.0, qmax);
+                let deq = (q - z) * s;
+                err += (deq - row[c]) * (deq - row[c]);
+            }
+            if err < best_err[c] {
+                best_err[c] = err;
+                out_s[c] = s;
+                out_z[c] = z;
+            }
+        }
+    }
+    (out_s, out_z)
+}
+
+/// Plain RTN group quantization of `w` (`[C, H]`, groups along C).
+pub fn rtn_quantize(w: &Mat, bits: u32, group: usize, mse_clip: bool) -> QuantizedLinear {
+    let (c, h) = (w.rows, w.cols);
+    assert_eq!(c % group, 0, "group must divide input channels");
+    let qmax = ((1u32 << bits) - 1) as f64;
+    let n_groups = c / group;
+    let mut codes = vec![0i32; c * h];
+    let mut scale = vec![0.0; n_groups * h];
+    let mut zero = vec![0.0; n_groups * h];
+    for g in 0..n_groups {
+        let rows: Vec<&[f64]> = (0..group).map(|r| w.row(g * group + r)).collect();
+        let (s, z) = group_params(&rows, h, bits, mse_clip);
+        scale[g * h..(g + 1) * h].copy_from_slice(&s);
+        zero[g * h..(g + 1) * h].copy_from_slice(&z);
+        for r in 0..group {
+            let row = g * group + r;
+            for col in 0..h {
+                let q = (w[(row, col)] / s[col] + z[col]).round().clamp(0.0, qmax);
+                codes[row * h + col] = q as i32;
+            }
+        }
+    }
+    QuantizedLinear { codes, scale, zero, c, h, group, bits }
+}
+
+/// Symmetric per-group activation fake-quant along a vector (last axis),
+/// QuaRot-style with a clip ratio. In-place.
+pub fn fake_quant_sym(x: &mut [f64], bits: u32, group: usize, clip_ratio: f64) {
+    assert_eq!(x.len() % group, 0);
+    let qmax = ((1u32 << (bits - 1)) - 1) as f64;
+    for chunk in x.chunks_mut(group) {
+        let absmax = chunk.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let scale = (clip_ratio * absmax / qmax).max(1e-30);
+        for v in chunk.iter_mut() {
+            let q = (*v / scale).round().clamp(-qmax, qmax);
+            *v = q * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn random_mat(c: usize, h: usize, seed: u64) -> Mat {
+        let mut rng = SplitMix64::new(seed);
+        Mat::from_fn(c, h, |_, _| rng.next_normal())
+    }
+
+    #[test]
+    fn rtn_error_bounded_by_half_step_unclipped() {
+        let w = random_mat(32, 8, 1);
+        let q = rtn_quantize(&w, 4, 8, false);
+        let deq = q.dequant();
+        for g in 0..4 {
+            for r in 0..8 {
+                for c in 0..8 {
+                    let row = g * 8 + r;
+                    let s = q.scale[g * 8 + c];
+                    assert!(
+                        (deq[(row, c)] - w[(row, c)]).abs() <= s * 0.5 + 1e-9,
+                        "error exceeds half step"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mse_clip_never_hurts() {
+        let w = random_mat(64, 16, 2);
+        let plain = rtn_quantize(&w, 2, 16, false).mse(&w);
+        let clipped = rtn_quantize(&w, 2, 16, true).mse(&w);
+        assert!(clipped <= plain + 1e-12, "clip {clipped} > plain {plain}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let w = random_mat(16, 4, 3);
+        for bits in [2u32, 3, 4] {
+            let q = rtn_quantize(&w, bits, 4, true);
+            let qmax = (1i32 << bits) - 1;
+            assert!(q.codes.iter().all(|&c| (0..=qmax).contains(&c)));
+        }
+    }
+
+    #[test]
+    fn fake_quant_sym_idempotent_at_full_range() {
+        // With clip 1.0 the grid absmax is attained, so re-quantizing is
+        // a fixed point. (With clip < 1 the envelope keeps shrinking —
+        // that is why the clip is applied once, in-graph, not iterated.)
+        let mut rng = SplitMix64::new(4);
+        let mut x: Vec<f64> = (0..64).map(|_| rng.next_normal()).collect();
+        fake_quant_sym(&mut x, 4, 16, 1.0);
+        let once = x.clone();
+        fake_quant_sym(&mut x, 4, 16, 1.0);
+        for (a, b) in once.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_vector_is_fixed_point() {
+        let mut x = vec![0.0; 32];
+        fake_quant_sym(&mut x, 4, 8, 0.9);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+}

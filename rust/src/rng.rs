@@ -1,0 +1,100 @@
+//! SplitMix64 — deterministic, trivially portable PRNG.
+//!
+//! Bit-for-bit mirror of `python/compile/corpus.py::SplitMix64`; the
+//! corpus generator and the zero-shot task suite depend on both sides
+//! producing identical streams (asserted against `artifacts/corpus.bin`
+//! by the integration tests).
+
+/// SplitMix64 PRNG state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Seed the generator. The same seed yields the same stream as the
+    /// Python implementation.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform draw in `[0, n)` (modular; bias negligible for n ≪ 2⁶⁴).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform f64 in `[0, 1)` with a 53-bit mantissa.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Rademacher ±1 draw.
+    pub fn next_sign(&mut self) -> f64 {
+        if self.next_below(2) == 0 {
+            -1.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Standard normal via Box–Muller (used by analysis/bench workload
+    /// generators; not part of the cross-language contract).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn known_values_match_reference() {
+        // First outputs for seed 0 (the published SplitMix64 vectors;
+        // cross-checked against the Python implementation).
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn signs_are_pm_one() {
+        let mut r = SplitMix64::new(3);
+        let mut seen = [false; 2];
+        for _ in 0..64 {
+            let s = r.next_sign();
+            assert!(s == 1.0 || s == -1.0);
+            seen[(s > 0.0) as usize] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Artifact-directory model: manifest, corpus splits, variant registry.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::config::Json;
+use crate::model::config::{ModelCfg, ParamSpec, R4Kind};
+
+/// One quantized variant's provenance (from `variants/*/meta.json`,
+/// summarized into the manifest).
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub name: String,
+    pub method: String,
+    pub bits: String,
+    pub r1: String,
+    pub r4: String,
+    /// Graph key in the manifest (`w2a16_r4gh`, …).
+    pub graph: String,
+    /// Weights blob path relative to the artifact dir.
+    pub weights: String,
+    /// Python-side sanity PPL recorded at build time.
+    pub sanity_ppl: f64,
+}
+
+impl VariantMeta {
+    pub fn r4_kind(&self) -> R4Kind {
+        R4Kind::parse(&self.r4).expect("bad r4 in manifest")
+    }
+
+    pub fn a_bits(&self) -> Option<u32> {
+        match self.bits.as_str() {
+            "w2a16" => None,
+            "w2a4" => Some(4),
+            other => panic!("unknown bits config {other}"),
+        }
+    }
+}
+
+/// Loaded artifact directory.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub cfg: ModelCfg,
+    pub batch: usize,
+    pub seq: usize,
+    pub variants: Vec<VariantMeta>,
+    manifest: Json,
+    corpus: Vec<u8>,
+    pub train_end: usize,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let manifest_path = dir.join("manifest.json");
+        let text = fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("{manifest_path:?}: {e} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&text)?;
+        let cfg = ModelCfg::from_json(manifest.at("cfg")?)?;
+        let batch = manifest.at("batch")?.as_usize().ok_or("batch")?;
+        let seq = manifest.at("seq")?.as_usize().ok_or("seq")?;
+        let corpus_rel = manifest.at("corpus")?.at("path")?.as_str().ok_or("corpus.path")?;
+        let corpus = fs::read(dir.join(corpus_rel)).map_err(|e| format!("corpus: {e}"))?;
+        let train_end = manifest.at("corpus")?.at("train_end")?.as_usize().ok_or("train_end")?;
+        let variants = manifest
+            .at("variants")?
+            .as_arr()
+            .ok_or("variants")?
+            .iter()
+            .map(|v| {
+                Ok(VariantMeta {
+                    name: v.at("name")?.as_str().ok_or("name")?.to_string(),
+                    method: v.at("method")?.as_str().ok_or("method")?.to_string(),
+                    bits: v.at("bits")?.as_str().ok_or("bits")?.to_string(),
+                    r1: v.at("r1")?.as_str().ok_or("r1")?.to_string(),
+                    r4: v.at("r4")?.as_str().ok_or("r4")?.to_string(),
+                    graph: v.at("graph")?.as_str().ok_or("graph")?.to_string(),
+                    weights: v.at("weights")?.as_str().ok_or("weights")?.to_string(),
+                    sanity_ppl: v.at("sanity_ppl")?.as_f64().unwrap_or(f64::NAN),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self { dir: dir.to_path_buf(), cfg, batch, seq, variants, manifest, corpus, train_end })
+    }
+
+    /// Full corpus bytes.
+    pub fn corpus(&self) -> &[u8] {
+        &self.corpus
+    }
+
+    /// Held-out test split (never seen in training or calibration).
+    pub fn test_split(&self) -> &[u8] {
+        &self.corpus[self.train_end..]
+    }
+
+    pub fn corpus_seed(&self) -> u64 {
+        self.manifest
+            .at("corpus")
+            .and_then(|c| c.at("seed"))
+            .ok()
+            .and_then(|s| s.as_f64())
+            .map(|f| f as u64)
+            .unwrap_or(crate::data::SEED_CORPUS)
+    }
+
+    /// HLO text path for a graph key (`fp`, `w2a16_r4gh`, …).
+    pub fn hlo_path(&self, graph: &str) -> Result<PathBuf, String> {
+        let rel = self
+            .manifest
+            .at("graphs")?
+            .at(graph)?
+            .at("hlo")?
+            .as_str()
+            .ok_or("hlo path")?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Parameter spec for a graph, as recorded in the manifest.
+    pub fn graph_spec(&self, graph: &str) -> Result<Vec<ParamSpec>, String> {
+        let arr = self
+            .manifest
+            .at("graphs")?
+            .at(graph)?
+            .at("params")?
+            .as_arr()
+            .ok_or("params")?;
+        ModelCfg::spec_from_json(arr)
+    }
+
+    pub fn graph_names(&self) -> Vec<String> {
+        self.manifest
+            .at("graphs")
+            .ok()
+            .and_then(|g| g.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    pub fn weights_path(&self, v: &VariantMeta) -> PathBuf {
+        self.dir.join(&v.weights)
+    }
+
+    pub fn fp_weights_path(&self) -> PathBuf {
+        let rel = self
+            .manifest
+            .at("fp_weights")
+            .ok()
+            .and_then(|v| v.as_str())
+            .unwrap_or("model_fp.bin");
+        self.dir.join(rel)
+    }
+}

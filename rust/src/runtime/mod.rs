@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts, compile HLO text, execute.
+//!
+//! The only layer that touches the `xla` crate. Python produced the
+//! artifacts once (`make artifacts`); from here on the binary is
+//! self-contained: `Artifacts` (manifest + blobs) → `Engine` (PJRT CPU
+//! client + compiled executables) → `VariantRunner` (weights resident as
+//! device buffers, uploaded once, reused across every execute call).
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{Artifacts, VariantMeta};
+pub use pjrt::{Engine, VariantRunner};

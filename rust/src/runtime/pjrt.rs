@@ -1,0 +1,153 @@
+//! PJRT execution engine (xla crate, CPU client).
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Weight tensors are uploaded to device
+//! buffers **once per variant** (`VariantRunner`) and reused across all
+//! execute calls via `execute_b` — only the token batch is re-uploaded
+//! per call (the L3 hot-path optimization measured in EXPERIMENTS §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::artifact::{Artifacts, VariantMeta};
+use crate::model::config::{Dtype, ParamSpec};
+
+/// PJRT CPU engine with a compile cache keyed by graph name.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Self, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        Ok(Self { client, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) a graph from its HLO text file.
+    pub fn load_graph(&mut self, name: &str, path: &Path) -> Result<(), String> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or("bad path")?)
+            .map_err(|e| format!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn executable(&self, name: &str) -> Option<&xla::PjRtLoadedExecutable> {
+        self.executables.get(name)
+    }
+
+    /// Upload a weights blob as per-parameter device buffers (spec order).
+    pub fn upload_blob(
+        &self,
+        blob: &[u8],
+        spec: &[ParamSpec],
+    ) -> Result<Vec<xla::PjRtBuffer>, String> {
+        let expect: usize = spec.iter().map(|s| s.nbytes()).sum();
+        if blob.len() != expect {
+            return Err(format!("blob {} bytes, spec wants {expect}", blob.len()));
+        }
+        let mut buffers = Vec::with_capacity(spec.len());
+        let mut off = 0;
+        for s in spec {
+            let nb = s.nbytes();
+            let chunk = &blob[off..off + nb];
+            let buf = match s.dtype {
+                Dtype::F32 => {
+                    let data: Vec<f32> = chunk
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    self.client
+                        .buffer_from_host_buffer(&data, &s.shape, None)
+                        .map_err(|e| format!("upload {}: {e}", s.name))?
+                }
+                Dtype::U8 => self
+                    .client
+                    .buffer_from_host_buffer(chunk, &s.shape, None)
+                    .map_err(|e| format!("upload {}: {e}", s.name))?,
+            };
+            buffers.push(buf);
+            off += nb;
+        }
+        Ok(buffers)
+    }
+
+    /// Upload an `[B, T]` i32 token batch.
+    pub fn upload_tokens(&self, tokens: &[i32], b: usize, t: usize) -> Result<xla::PjRtBuffer, String> {
+        assert_eq!(tokens.len(), b * t);
+        self.client
+            .buffer_from_host_buffer(tokens, &[b, t], None)
+            .map_err(|e| format!("upload tokens: {e}"))
+    }
+}
+
+/// A model variant resident on device: compiled graph + weight buffers.
+pub struct VariantRunner {
+    pub graph: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+impl VariantRunner {
+    /// Load a quantized variant: ensure its graph is compiled, read the
+    /// weights blob, upload every parameter once.
+    pub fn load(engine: &mut Engine, arts: &Artifacts, meta: &VariantMeta) -> Result<Self, String> {
+        engine.load_graph(&meta.graph, &arts.hlo_path(&meta.graph)?)?;
+        let spec = arts.graph_spec(&meta.graph)?;
+        let blob = std::fs::read(arts.weights_path(meta)).map_err(|e| format!("weights: {e}"))?;
+        let weights = engine.upload_blob(&blob, &spec)?;
+        Ok(Self {
+            graph: meta.graph.clone(),
+            batch: arts.batch,
+            seq: arts.seq,
+            vocab: arts.cfg.vocab,
+            weights,
+        })
+    }
+
+    /// Load the fp (W16A16) reference model.
+    pub fn load_fp(engine: &mut Engine, arts: &Artifacts) -> Result<Self, String> {
+        engine.load_graph("fp", &arts.hlo_path("fp")?)?;
+        let spec = arts.graph_spec("fp")?;
+        let blob = std::fs::read(arts.fp_weights_path()).map_err(|e| format!("fp weights: {e}"))?;
+        let weights = engine.upload_blob(&blob, &spec)?;
+        Ok(Self {
+            graph: "fp".to_string(),
+            batch: arts.batch,
+            seq: arts.seq,
+            vocab: arts.cfg.vocab,
+            weights,
+        })
+    }
+
+    /// Execute on a `[batch, seq]` token batch → logits
+    /// `[batch * seq * vocab]` (row-major).
+    pub fn forward(&self, engine: &Engine, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        let exe = engine.executable(&self.graph).ok_or("graph not compiled")?;
+        let tok_buf = engine.upload_tokens(tokens, self.batch, self.seq)?;
+        // Parameter order: tokens first, then the flat weight list —
+        // matching make_quant_forward/make_fp_forward in model.py.
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&tok_buf);
+        args.extend(self.weights.iter());
+        let result = exe.execute_b(&args).map_err(|e| format!("execute: {e}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e}"))?;
+        // Graphs are lowered with return_tuple=True → 1-tuple.
+        let out = literal.to_tuple1().map_err(|e| format!("tuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))
+    }
+}

@@ -1,0 +1,128 @@
+//! Local (block-diagonal) rotations and the paper's R1 variant builder.
+
+use super::{rht, walsh, Mat};
+use crate::rng::SplitMix64;
+
+/// The four R1 configurations compared in Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum R1Kind {
+    /// Global randomized Hadamard (QuaRot default).
+    GH,
+    /// Global Walsh — sequency-ordered, not randomized (paper §4).
+    GW,
+    /// Local randomized Hadamard, block = group size.
+    LH,
+    /// Grouped Sequency-arranged Rotation — block-diagonal Walsh
+    /// (the paper's contribution, Eq. 3).
+    GSR,
+}
+
+impl R1Kind {
+    pub const ALL: [R1Kind; 4] = [R1Kind::GH, R1Kind::GW, R1Kind::LH, R1Kind::GSR];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            R1Kind::GH => "GH",
+            R1Kind::GW => "GW",
+            R1Kind::LH => "LH",
+            R1Kind::GSR => "GSR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<R1Kind> {
+        match s.to_ascii_uppercase().as_str() {
+            "GH" => Some(R1Kind::GH),
+            "GW" => Some(R1Kind::GW),
+            "LH" => Some(R1Kind::LH),
+            "GSR" => Some(R1Kind::GSR),
+            _ => None,
+        }
+    }
+
+    /// Is this a local (block-diagonal) rotation?
+    pub fn is_local(&self) -> bool {
+        matches!(self, R1Kind::LH | R1Kind::GSR)
+    }
+}
+
+impl std::fmt::Display for R1Kind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// `I_{n/G} ⊗ block` — the paper's Eq. 3 structure.
+pub fn block_diag(block: &Mat, n: usize) -> Mat {
+    let g = block.rows;
+    assert_eq!(block.rows, block.cols, "block must be square");
+    assert_eq!(n % g, 0, "group size {g} must divide dimension {n}");
+    let mut out = Mat::zeros(n, n);
+    for b in 0..n / g {
+        for r in 0..g {
+            for c in 0..g {
+                out[(b * g + r, b * g + c)] = block[(r, c)];
+            }
+        }
+    }
+    out
+}
+
+/// Build an R1 rotation of size `n` with quantization group `group`.
+pub fn build_r1(kind: R1Kind, n: usize, group: usize, rng: &mut SplitMix64) -> Mat {
+    match kind {
+        R1Kind::GH => rht(n, rng),
+        R1Kind::GW => walsh(n),
+        R1Kind::LH => block_diag(&rht(group, rng), n),
+        R1Kind::GSR => block_diag(&walsh(group), n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_diag_structure() {
+        let b = walsh(4);
+        let m = block_diag(&b, 12);
+        // Off-block entries are exactly zero.
+        for r in 0..12 {
+            for c in 0..12 {
+                if r / 4 != c / 4 {
+                    assert_eq!(m[(r, c)], 0.0);
+                } else {
+                    assert_eq!(m[(r, c)], b[(r % 4, c % 4)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_r1_kinds_orthonormal() {
+        for kind in R1Kind::ALL {
+            let mut rng = SplitMix64::new(5);
+            let m = build_r1(kind, 256, 64, &mut rng);
+            assert!(
+                m.orthogonality_defect() < 1e-9,
+                "{kind} defect {}",
+                m.orthogonality_defect()
+            );
+        }
+    }
+
+    #[test]
+    fn locality_flag() {
+        assert!(!R1Kind::GH.is_local());
+        assert!(!R1Kind::GW.is_local());
+        assert!(R1Kind::LH.is_local());
+        assert!(R1Kind::GSR.is_local());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in R1Kind::ALL {
+            assert_eq!(R1Kind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(R1Kind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,116 @@
+//! Fast Walsh–Hadamard transform — O(n log n) in-place butterflies.
+//!
+//! The native analogue of the L1 Pallas kernels (`kernels/walsh.py`);
+//! used by the analysis layer, the native quantization pipeline, and
+//! the `transform_perf` bench that quantifies the paper's "for free"
+//! claim (butterfly vs dense-matmul rotation cost).
+
+use super::is_pow2;
+
+/// In-place orthonormal FWHT over `x` (natural/Hadamard ordering).
+/// Equivalent to `x @ hadamard(n)` for the symmetric Sylvester matrix.
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(is_pow2(n), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        for start in (0..n).step_by(2 * h) {
+            for i in start..start + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f64).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Block-diagonal FWHT: transform each contiguous `group`-span
+/// independently — `x @ (I ⊗ H_G)`, the GSR/local fast path.
+pub fn grouped_fwht(x: &mut [f64], group: usize) {
+    assert_eq!(x.len() % group, 0, "group must divide length");
+    for chunk in x.chunks_mut(group) {
+        fwht(chunk);
+    }
+}
+
+/// FWHT over each row of a row-major `[rows, n]` batch.
+pub fn fwht_batch(data: &mut [f64], n: usize) {
+    assert_eq!(data.len() % n, 0);
+    for row in data.chunks_mut(n) {
+        fwht(row);
+    }
+}
+
+/// Grouped FWHT over each row of a row-major `[rows, n]` batch.
+pub fn grouped_fwht_batch(data: &mut [f64], n: usize, group: usize) {
+    assert_eq!(data.len() % n, 0);
+    for row in data.chunks_mut(n) {
+        grouped_fwht(row, group);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::transform::{block_diag, hadamard};
+
+    #[test]
+    fn matches_dense_hadamard() {
+        let n = 64;
+        let h = hadamard(n);
+        let mut rng = SplitMix64::new(3);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let dense = h.apply_right(&x);
+        let mut fast = x.clone();
+        fwht(&mut fast);
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn grouped_matches_blockdiag_dense() {
+        let n = 64;
+        let g = 16;
+        let bd = block_diag(&hadamard(g), n);
+        let mut rng = SplitMix64::new(4);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let dense = bd.apply_right(&x);
+        let mut fast = x.clone();
+        grouped_fwht(&mut fast, g);
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn involution() {
+        // Orthonormal FWHT is its own inverse (H symmetric, H² = I).
+        let mut rng = SplitMix64::new(5);
+        let x: Vec<f64> = (0..128).map(|_| rng.next_normal()).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        fwht(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn preserves_l2_norm() {
+        let mut rng = SplitMix64::new(6);
+        let x: Vec<f64> = (0..256).map(|_| rng.next_normal()).collect();
+        let n0: f64 = x.iter().map(|v| v * v).sum();
+        let mut y = x;
+        fwht(&mut y);
+        let n1: f64 = y.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-8 * n0);
+    }
+}

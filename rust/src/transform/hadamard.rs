@@ -1,0 +1,56 @@
+//! Sylvester-construction Hadamard matrices (paper Eq. 1).
+
+use super::{is_pow2, Mat};
+
+/// Orthonormal Sylvester Hadamard matrix of size `n` (power of two).
+///
+/// Natural (Hadamard) ordering: `H_{2^k} = H_2 ⊗ H_{2^{k-1}}`. Entry
+/// `(i, j)` is `(-1)^{popcount(i & j)} / sqrt(n)` — the closed form of
+/// the recursive doubling, used directly here.
+pub fn hadamard(n: usize) -> Mat {
+    assert!(is_pow2(n), "Hadamard size must be a power of two, got {n}");
+    let scale = 1.0 / (n as f64).sqrt();
+    Mat::from_fn(n, n, |i, j| {
+        let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+        sign * scale
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h2_matches_definition() {
+        let h = hadamard(2);
+        let s = 1.0 / 2f64.sqrt();
+        assert_eq!(h.data, vec![s, s, s, -s]);
+    }
+
+    #[test]
+    fn orthonormal_up_to_512() {
+        for k in 0..=9 {
+            let n = 1 << k;
+            assert!(
+                hadamard(n).orthogonality_defect() < 1e-10,
+                "defect at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn symmetric() {
+        let h = hadamard(64);
+        for i in 0..64 {
+            for j in 0..64 {
+                assert_eq!(h[(i, j)], h[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        hadamard(12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Rotation-matrix construction and fast transforms (paper §2.1, §3.1).
+//!
+//! Native mirror of `python/compile/rotation.py`: Sylvester Hadamard,
+//! sequency-ordered Walsh, randomized Hadamard (RHT), block-diagonal
+//! (local) rotations including the paper's GSR, plus the O(n log n)
+//! in-place fast Walsh–Hadamard transform used by the analysis and bench
+//! layers.
+
+pub mod blockdiag;
+pub mod fwht;
+pub mod hadamard;
+pub mod rht;
+pub mod sequency;
+pub mod walsh;
+
+pub use blockdiag::{block_diag, build_r1, R1Kind};
+pub use fwht::{fwht, fwht_batch, grouped_fwht, grouped_fwht_batch};
+pub use hadamard::hadamard;
+pub use rht::rht;
+pub use sequency::{sequency_of_natural_row, sequency_of_row, walsh_permutation};
+pub use walsh::walsh;
+
+/// Dense row-major f64 matrix — small build/analysis-time object
+/// (rotation matrices are at most `d_ffn × d_ffn` here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    /// Row-major data, `rows * cols` long.
+    pub data: Vec<f64>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
+    }
+
+    /// Dense matmul (naive; build-time sizes only).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Max |AAᵀ − I| — orthonormality defect.
+    pub fn orthogonality_defect(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let aat = self.matmul(&self.transpose());
+        let mut worst = 0.0f64;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((aat[(i, j)] - target).abs());
+            }
+        }
+        worst
+    }
+
+    /// `x @ self` for a single row vector `x` (length `rows`).
+    pub fn apply_right(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            for (o, &m) in out.iter_mut().zip(self.row(k)) {
+                *o += xv * m;
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// `true` iff `n` is a positive power of two (transform size contract).
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && n & (n - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_orthogonal() {
+        assert_eq!(Mat::identity(8).orthogonality_defect(), 0.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = Mat::from_fn(4, 4, |r, c| (r * 4 + c) as f64);
+        let i = Mat::identity(4);
+        assert_eq!(m.matmul(&i), m);
+        assert_eq!(i.matmul(&m), m);
+    }
+
+    #[test]
+    fn apply_right_matches_matmul() {
+        let m = Mat::from_fn(3, 3, |r, c| (r + 2 * c) as f64);
+        let x = [1.0, -2.0, 0.5];
+        let y = m.apply_right(&x);
+        for c in 0..3 {
+            let expect: f64 = (0..3).map(|r| x[r] * m[(r, c)]).sum();
+            assert!((y[c] - expect).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Randomized Hadamard Transform (QuIP# / QuaRot incoherence processing).
+
+use super::{hadamard, Mat};
+use crate::rng::SplitMix64;
+
+/// `H · diag(s)` with iid Rademacher signs drawn from `rng`.
+///
+/// Column sign flips keep the *row* sequency arrangement intact (paper
+/// §3.2 "Comparing RHT and Walsh") — randomization and sequency
+/// re-ordering are independent axes.
+pub fn rht(n: usize, rng: &mut SplitMix64) -> Mat {
+    let mut h = hadamard(n);
+    let signs: Vec<f64> = (0..n).map(|_| rng.next_sign()).collect();
+    for r in 0..n {
+        for (c, &s) in signs.iter().enumerate() {
+            h[(r, c)] *= s;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::sequency::sequency_of_row;
+
+    #[test]
+    fn orthonormal() {
+        let mut rng = SplitMix64::new(1);
+        assert!(rht(64, &mut rng).orthogonality_defect() < 1e-10);
+    }
+
+    #[test]
+    fn row_sequency_distribution_varies_but_entries_are_pm() {
+        let mut rng = SplitMix64::new(2);
+        let m = rht(32, &mut rng);
+        let v = 1.0 / (32f64).sqrt();
+        for x in &m.data {
+            assert!((x.abs() - v).abs() < 1e-12);
+        }
+        // Sign flips perturb individual row sequencies but the matrix
+        // remains a signed Hadamard (entries ±1/√n).
+        let _ = sequency_of_row(m.row(0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = rht(16, &mut SplitMix64::new(9));
+        let b = rht(16, &mut SplitMix64::new(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,122 @@
+//! Sequency math (paper §2.1, Eq. 2).
+//!
+//! *Sequency* is the number of sign flips along a row of a ±1 matrix —
+//! the Walsh-domain analogue of frequency. The Walsh matrix arranges
+//! rows in ascending sequency; the Sylvester Hadamard matrix is in
+//! "natural" order whose per-row sequency follows the bit-reversal +
+//! Gray-code relation (see `sequency_of_natural_row`).
+
+use super::Mat;
+
+/// Sequency (sign-flip count) of row `i` of the size-`n` natural-ordered
+/// Sylvester Hadamard matrix: bit-reverse over log₂(n) bits, then
+/// Gray-to-binary decode (Tam & Goulet 1972). For n=8 the rows have
+/// sequencies 0,7,3,4,1,6,2,5 — the paper's §2.1 example.
+///
+/// (The paper's Eq. 2 as printed — `bit_count(i ⊕ (i >> 1))` — is the
+/// binary-to-Gray popcount and does not reproduce that example; this is
+/// the construction that does, verified against directly-counted sign
+/// flips in tests.)
+pub fn sequency_of_natural_row(i: usize, n: usize) -> u32 {
+    debug_assert!(n.is_power_of_two());
+    let bits = n.trailing_zeros();
+    let rev = if bits == 0 { 0 } else { i.reverse_bits() >> (usize::BITS - bits) };
+    // Gray → binary: prefix XOR of all more-significant bits.
+    let mut b = rev;
+    let mut shift = 1;
+    while (rev >> shift) != 0 {
+        b ^= rev >> shift;
+        shift += 1;
+    }
+    b as u32
+}
+
+/// Sequency measured directly: count sign changes along a row.
+pub fn sequency_of_row(row: &[f64]) -> u32 {
+    row.windows(2)
+        .filter(|w| (w[0] >= 0.0) != (w[1] >= 0.0))
+        .count() as u32
+}
+
+/// Permutation `p` such that `walsh(n) = hadamard(n)[p]` — natural rows
+/// sorted by ascending sequency. Sequencies of a size-n Sylvester matrix
+/// are a permutation of `0..n`, so the sort key is unique and this
+/// equals the classical bit-reversal + Gray-code construction
+/// (Tam & Goulet 1972).
+pub fn walsh_permutation(n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by_key(|&i| sequency_of_natural_row(i, n));
+    idx
+}
+
+/// Per-column-group sequency variance of a rotation matrix — the
+/// quantity the paper's §3.2 argument says the Walsh ordering minimizes.
+/// Groups span `group` consecutive columns; returns one variance per
+/// group (of the sequencies of the rows... see `analysis::sequency` for
+/// the full treatment; this helper measures a row-range of the matrix).
+pub fn group_sequency_variance(m: &Mat, group: usize) -> Vec<f64> {
+    assert_eq!(m.rows % group, 0);
+    (0..m.rows / group)
+        .map(|g| {
+            let seqs: Vec<f64> = (g * group..(g + 1) * group)
+                .map(|r| sequency_of_row(m.row(r)) as f64)
+                .collect();
+            let mean = seqs.iter().sum::<f64>() / seqs.len() as f64;
+            seqs.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / seqs.len() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::hadamard;
+
+    #[test]
+    fn paper_example_n8() {
+        // Paper §2.1: "the rows of a Hadamard matrix of size 8 have
+        // 0, 7, 3, 4, 1, 6, 2, and 5 sequency values."
+        let expect = [0, 7, 3, 4, 1, 6, 2, 5];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(sequency_of_natural_row(i, 8), e);
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_measured() {
+        let h = hadamard(64);
+        for i in 0..64 {
+            assert_eq!(
+                sequency_of_natural_row(i, 64),
+                sequency_of_row(h.row(i)),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn permutation_is_bijection_and_sorts() {
+        for &n in &[2usize, 8, 64, 256] {
+            let p = walsh_permutation(n);
+            let mut seen = vec![false; n];
+            for &i in &p {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+            for w in p.windows(2) {
+                assert!(
+                    sequency_of_natural_row(w[0], n) < sequency_of_natural_row(w[1], n)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sequencies_are_complete_range() {
+        let n = 128;
+        let mut seqs: Vec<u32> = (0..n).map(|i| sequency_of_natural_row(i, n)).collect();
+        seqs.sort_unstable();
+        let expect: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(seqs, expect);
+    }
+}

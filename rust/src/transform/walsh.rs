@@ -1,0 +1,66 @@
+//! Walsh (sequency-ordered Hadamard) matrices — the paper's key object.
+
+use super::{hadamard, sequency::walsh_permutation, Mat};
+
+/// Orthonormal Walsh matrix: the Sylvester Hadamard rows re-ordered to
+/// ascending sequency. Row `i` has exactly `i` sign flips.
+///
+/// This is the training-free drop-in the paper proposes for R1: same row
+/// set as the Hadamard matrix, but the arrangement clusters similar
+/// "frequencies" so each column group of the front rotation applies
+/// filters with low intra-group sequency variance (paper §3.2).
+pub fn walsh(n: usize) -> Mat {
+    let h = hadamard(n);
+    let perm = walsh_permutation(n);
+    let mut w = Mat::zeros(n, n);
+    for (dst, &src) in perm.iter().enumerate() {
+        w.row_mut(dst).copy_from_slice(h.row(src));
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::sequency::sequency_of_row;
+
+    #[test]
+    fn row_i_has_sequency_i() {
+        for &n in &[2usize, 16, 64, 256] {
+            let w = walsh(n);
+            for i in 0..n {
+                assert_eq!(sequency_of_row(w.row(i)), i as u32, "n={n} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal() {
+        assert!(walsh(128).orthogonality_defect() < 1e-10);
+    }
+
+    #[test]
+    fn same_row_set_as_hadamard() {
+        // Every Walsh row must be some Hadamard row (the re-ordering
+        // claim: "same set of sequency filters, different arrangement").
+        let n = 32;
+        let h = hadamard(n);
+        let w = walsh(n);
+        for i in 0..n {
+            let found = (0..n).any(|j| {
+                w.row(i)
+                    .iter()
+                    .zip(h.row(j))
+                    .all(|(a, b)| (a - b).abs() < 1e-12)
+            });
+            assert!(found, "walsh row {i} not found in hadamard rows");
+        }
+    }
+
+    #[test]
+    fn first_row_is_constant() {
+        let w = walsh(64);
+        let v = 1.0 / 8.0;
+        assert!(w.row(0).iter().all(|&x| (x - v).abs() < 1e-12));
+    }
+}

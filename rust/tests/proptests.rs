@@ -1,0 +1,257 @@
+//! Property-based tests over the native library invariants.
+//!
+//! proptest is not available in this offline image, so this file carries
+//! a minimal in-repo property harness: deterministic SplitMix64-driven
+//! case generation with failure reporting of the offending seed. Each
+//! property runs across a seed sweep; a failing seed reproduces exactly.
+
+use gsr::quant::{fake_quant_sym, gptq_quantize, pack2, rtn_quantize, unpack2};
+use gsr::rng::SplitMix64;
+use gsr::transform::{
+    build_r1, fwht, grouped_fwht, hadamard, rht, walsh, walsh_permutation, Mat, R1Kind,
+};
+
+/// Run `prop` for `cases` deterministic seeds; panic names the seed.
+fn for_seeds(cases: u64, prop: impl Fn(u64, &mut SplitMix64)) {
+    for seed in 0..cases {
+        let mut rng = SplitMix64::new(0xBEEF ^ (seed * 0x9E37_79B9));
+        prop(seed, &mut rng);
+    }
+}
+
+fn rand_pow2(rng: &mut SplitMix64, lo_log: u32, hi_log: u32) -> usize {
+    1usize << (lo_log + rng.next_below((hi_log - lo_log + 1) as u64) as u32)
+}
+
+#[test]
+fn prop_all_rotations_orthonormal() {
+    for_seeds(24, |seed, rng| {
+        let n = rand_pow2(rng, 3, 8);
+        let group = rand_pow2(rng, 2, 3).min(n);
+        for kind in R1Kind::ALL {
+            let m = build_r1(kind, n, group, rng);
+            let defect = m.orthogonality_defect();
+            assert!(defect < 1e-9, "seed {seed} kind {kind} n {n} defect {defect}");
+        }
+    });
+}
+
+#[test]
+fn prop_fwht_involution_and_norm() {
+    for_seeds(32, |seed, rng| {
+        let n = rand_pow2(rng, 1, 10);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal() * 3.0).collect();
+        let norm0: f64 = x.iter().map(|v| v * v).sum();
+        let mut y = x.clone();
+        fwht(&mut y);
+        let norm1: f64 = y.iter().map(|v| v * v).sum();
+        assert!(
+            (norm0 - norm1).abs() <= 1e-8 * norm0.max(1.0),
+            "seed {seed}: norm not preserved"
+        );
+        fwht(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-8, "seed {seed}: not an involution");
+        }
+    });
+}
+
+#[test]
+fn prop_grouped_fwht_equals_blockwise() {
+    for_seeds(16, |seed, rng| {
+        let g = rand_pow2(rng, 2, 5);
+        let blocks = 1 + rng.next_below(6) as usize;
+        let n = g * blocks;
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut fast = x.clone();
+        grouped_fwht(&mut fast, g);
+        for b in 0..blocks {
+            let mut chunk = x[b * g..(b + 1) * g].to_vec();
+            fwht(&mut chunk);
+            for (i, v) in chunk.iter().enumerate() {
+                assert!((fast[b * g + i] - v).abs() < 1e-10, "seed {seed}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_walsh_is_row_permutation_of_hadamard() {
+    for_seeds(6, |seed, rng| {
+        let n = rand_pow2(rng, 1, 8);
+        let h = hadamard(n);
+        let w = walsh(n);
+        let p = walsh_permutation(n);
+        for (dst, &src) in p.iter().enumerate() {
+            for c in 0..n {
+                assert!(
+                    (w[(dst, c)] - h[(src, c)]).abs() < 1e-12,
+                    "seed {seed} n {n}"
+                );
+            }
+        }
+        let _ = rng.next_u64();
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    for_seeds(32, |seed, rng| {
+        let c = 4 * (1 + rng.next_below(32) as usize);
+        let h = 1 + rng.next_below(48) as usize;
+        let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(4) as i32).collect();
+        assert_eq!(unpack2(&pack2(&codes, c, h), c, h), codes, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_rtn_error_bound() {
+    for_seeds(24, |seed, rng| {
+        let group = rand_pow2(rng, 2, 4);
+        let c = group * (1 + rng.next_below(4) as usize);
+        let h = 1 + rng.next_below(12) as usize;
+        let w = Mat::from_fn(c, h, |_, _| rng.next_normal() * 2.0);
+        let q = rtn_quantize(&w, 4, group, false);
+        let deq = q.dequant();
+        for row in 0..c {
+            let g = row / group;
+            for col in 0..h {
+                let step = q.scale[g * h + col];
+                let err = (deq[(row, col)] - w[(row, col)]).abs();
+                assert!(err <= 0.5 * step + 1e-9, "seed {seed} err {err} step {step}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fake_quant_on_grid_and_bounded() {
+    for_seeds(24, |seed, rng| {
+        let group = rand_pow2(rng, 2, 5);
+        let n = group * (1 + rng.next_below(6) as usize);
+        let bits = 2 + rng.next_below(4) as u32;
+        let mut x: Vec<f64> = (0..n).map(|_| rng.next_normal() * 4.0).collect();
+        let orig = x.clone();
+        fake_quant_sym(&mut x, bits, group, 0.9);
+        let levels = (1u32 << (bits - 1)) - 1;
+        for (chunk, ochunk) in x.chunks(group).zip(orig.chunks(group)) {
+            let absmax = ochunk.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            let scale = 0.9 * absmax / levels as f64;
+            for &v in chunk {
+                assert!(v.abs() <= absmax + 1e-9, "seed {seed}");
+                if scale > 0.0 {
+                    let q = v / scale;
+                    assert!((q - q.round()).abs() < 1e-6, "seed {seed}: off-grid");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gptq_no_worse_than_rtn_hessian_loss() {
+    // GPTQ minimizes tr(ΔWᵀ H ΔW); across random correlated Hessians it
+    // must not lose to plain RTN (allowing numerical jitter).
+    for_seeds(8, |seed, rng| {
+        let c = 32;
+        let h = 8;
+        let group = 8;
+        let w = Mat::from_fn(c, h, |_, _| rng.next_normal());
+        // Correlated activations with outlier channels.
+        let rows = 96;
+        let mut x = vec![0.0; rows * c];
+        for r in 0..rows {
+            let base = rng.next_normal();
+            for j in 0..c {
+                let amp = if j % 11 == 0 { 6.0 } else { 1.0 };
+                x[r * c + j] = amp * (0.5 * base + 0.5 * rng.next_normal());
+            }
+        }
+        let mut hess = Mat::zeros(c, c);
+        for r in 0..rows {
+            for i in 0..c {
+                for j in 0..c {
+                    hess[(i, j)] += x[r * c + i] * x[r * c + j] / rows as f64;
+                }
+            }
+        }
+        let loss = |q: &gsr::quant::QuantizedLinear| -> f64 {
+            let dw = {
+                let deq = q.dequant();
+                Mat::from_fn(c, h, |r, cc| deq[(r, cc)] - w[(r, cc)])
+            };
+            let hdw = hess.matmul(&dw);
+            dw.data.iter().zip(&hdw.data).map(|(a, b)| a * b).sum()
+        };
+        let lg = loss(&gptq_quantize(&w, &hess, 2, group, true));
+        let lr = loss(&rtn_quantize(&w, 2, group, true));
+        assert!(lg <= lr * 1.02 + 1e-9, "seed {seed}: gptq {lg} vs rtn {lr}");
+    });
+}
+
+#[test]
+fn prop_rht_deterministic_and_orthonormal() {
+    for_seeds(12, |seed, rng| {
+        let n = rand_pow2(rng, 2, 8);
+        let s = rng.next_u64();
+        let a = rht(n, &mut SplitMix64::new(s));
+        let b = rht(n, &mut SplitMix64::new(s));
+        assert_eq!(a, b, "seed {seed}");
+        assert!(a.orthogonality_defect() < 1e-9, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_batcher_preserves_request_multiset() {
+    use gsr::coordinator::{BatchPolicy, DynamicBatcher};
+    use std::time::Duration;
+    for_seeds(16, |seed, rng| {
+        let max_batch = 1 + rng.next_below(7) as usize;
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_secs(1),
+        });
+        let mut pushed = 0u64;
+        let mut taken = Vec::new();
+        for _ in 0..300 {
+            if rng.next_below(3) < 2 {
+                b.push(pushed);
+                pushed += 1;
+            } else if !b.is_empty() {
+                let batch = b.take_batch();
+                assert!(batch.len() <= max_batch, "seed {seed}: over-full batch");
+                taken.extend(batch);
+            }
+        }
+        while !b.is_empty() {
+            taken.extend(b.take_batch());
+        }
+        let expect: Vec<u64> = (0..pushed).collect();
+        assert_eq!(taken, expect, "seed {seed}: FIFO loss/dup/reorder");
+    });
+}
+
+#[test]
+fn prop_router_in_flight_balanced() {
+    use gsr::coordinator::{RoutePolicy, Router};
+    for_seeds(12, |seed, rng| {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        let n = 2 + rng.next_below(4) as usize;
+        for i in 0..n {
+            r.register(&format!("v{i}"));
+        }
+        let mut outstanding: Vec<String> = Vec::new();
+        for _ in 0..200 {
+            if rng.next_below(2) == 0 {
+                outstanding.push(r.route(None).unwrap());
+            } else if !outstanding.is_empty() {
+                let idx = rng.next_below(outstanding.len() as u64) as usize;
+                let v = outstanding.swap_remove(idx);
+                r.complete(&v);
+            }
+            // Invariant: accounting matches outstanding exactly.
+            assert_eq!(r.total_in_flight(), outstanding.len(), "seed {seed}");
+            // Least-loaded keeps the spread tight (≤ 1 after each route).
+        }
+    });
+}

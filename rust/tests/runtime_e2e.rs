@@ -1,0 +1,157 @@
+//! End-to-end tests over the PJRT runtime and the AOT artifacts.
+//!
+//! These require `make artifacts` to have run; each test skips (with a
+//! note) when the artifact directory is missing so `cargo test` stays
+//! green on a fresh clone.
+
+use std::path::Path;
+
+use gsr::coordinator::{BatchPolicy, Server};
+use gsr::eval::{EvalOpts, LogitModel, NativeModel, PjrtModel, PplEngine};
+use gsr::model::{DenseModel, FpParams, QuantParams};
+use gsr::runtime::{Artifacts, Engine, VariantRunner};
+
+fn artifacts() -> Option<Artifacts> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Artifacts::load(dir).ok()
+}
+
+/// PJRT fp graph ≡ native Rust forward on the same weights.
+#[test]
+fn pjrt_matches_native_reference_fp() {
+    let Some(arts) = artifacts() else { return };
+    let mut engine = Engine::new().expect("pjrt cpu client");
+    let runner = VariantRunner::load_fp(&mut engine, &arts).expect("load fp");
+    let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg).expect("fp blob");
+    let native = DenseModel::Fp { cfg: arts.cfg.clone(), params: fp };
+
+    // One [B, T] batch of corpus tokens.
+    let (b, s, v) = (arts.batch, arts.seq, arts.cfg.vocab);
+    let text = &arts.test_split()[..b * s];
+    let tokens: Vec<i32> = text.iter().map(|&x| x as i32).collect();
+    let pjrt_logits = runner.forward(&engine, &tokens).expect("execute");
+    assert_eq!(pjrt_logits.len(), b * s * v);
+
+    for row in 0..b {
+        let native_logits = native.forward(&tokens[row * s..(row + 1) * s]);
+        let pj = &pjrt_logits[row * s * v..(row + 1) * s * v];
+        let mut worst = 0f32;
+        for (a, g) in pj.iter().zip(&native_logits) {
+            worst = worst.max((a - g).abs());
+        }
+        assert!(
+            worst < 2e-2,
+            "row {row}: PJRT vs native fp divergence {worst}"
+        );
+    }
+}
+
+/// PJRT quantized graph ≡ native rotated/quantized forward.
+#[test]
+fn pjrt_matches_native_reference_quant() {
+    let Some(arts) = artifacts() else { return };
+    let Some(meta) = arts.variant("quarot_w2a16_gsr_r4gh").cloned() else {
+        eprintln!("skipping: variant not built");
+        return;
+    };
+    let mut engine = Engine::new().unwrap();
+    let runner = VariantRunner::load(&mut engine, &arts, &meta).expect("load variant");
+    let qp = QuantParams::load(&arts.weights_path(&meta), &arts.cfg, meta.r4_kind())
+        .expect("decode variant blob");
+    let native = DenseModel::Quant {
+        cfg: arts.cfg.clone(),
+        params: qp,
+        a_bits: meta.a_bits(),
+    };
+    let (b, s, v) = (arts.batch, arts.seq, arts.cfg.vocab);
+    let text = &arts.test_split()[1000..1000 + b * s];
+    let tokens: Vec<i32> = text.iter().map(|&x| x as i32).collect();
+    let pjrt_logits = runner.forward(&engine, &tokens).unwrap();
+    for row in 0..b.min(2) {
+        let native_logits = native.forward(&tokens[row * s..(row + 1) * s]);
+        let pj = &pjrt_logits[row * s * v..(row + 1) * s * v];
+        let mut worst = 0f32;
+        for (a, g) in pj.iter().zip(&native_logits) {
+            worst = worst.max((a - g).abs());
+        }
+        assert!(
+            worst < 5e-2,
+            "row {row}: PJRT vs native quant divergence {worst}"
+        );
+    }
+}
+
+/// PPL through PJRT and through the native model agree closely, and the
+/// quantized model is worse than fp (sanity of the whole eval stack).
+#[test]
+fn ppl_pjrt_vs_native_and_fp_ordering() {
+    let Some(arts) = artifacts() else { return };
+    let mut engine = Engine::new().unwrap();
+    let fp_runner = VariantRunner::load_fp(&mut engine, &arts).unwrap();
+    let engine_ref = &engine;
+    let fp_model = PjrtModel { engine: engine_ref, runner: &fp_runner };
+    let ppl_engine = PplEngine::new(6);
+    let fp_ppl = ppl_engine.evaluate(&fp_model, arts.test_split()).unwrap().ppl;
+
+    let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg).unwrap();
+    let native = DenseModel::Fp { cfg: arts.cfg.clone(), params: fp };
+    let native_model = NativeModel { model: &native, batch: arts.batch, seq: arts.seq };
+    let native_ppl = ppl_engine.evaluate(&native_model, arts.test_split()).unwrap().ppl;
+    assert!(
+        (fp_ppl - native_ppl).abs() / native_ppl < 0.02,
+        "fp PPL {fp_ppl} vs native {native_ppl}"
+    );
+
+    if let Some(meta) = arts.variant("quarot_w2a16_gh_r4gh").cloned() {
+        let qrunner = VariantRunner::load(&mut engine, &arts, &meta).unwrap();
+        let qmodel = PjrtModel { engine: &engine, runner: &qrunner };
+        let qppl = PplEngine::new(6).evaluate(&qmodel, arts.test_split()).unwrap().ppl;
+        assert!(
+            qppl > fp_ppl,
+            "W2 model ({qppl}) must be worse than fp ({fp_ppl})"
+        );
+    }
+}
+
+/// The batching server round-trips requests and accounts for them.
+#[test]
+fn server_roundtrip_and_metrics() {
+    let Some(arts) = artifacts() else { return };
+    let server = Server::start(
+        Path::new("artifacts"),
+        &["fp".to_string()],
+        BatchPolicy::default(),
+    )
+    .expect("server start");
+    let seq = arts.seq;
+    let text = arts.test_split();
+    let n = 6;
+    for i in 0..n {
+        let tokens: Vec<i32> = text[i * 13..i * 13 + seq].iter().map(|&b| b as i32).collect();
+        let logits = server.score("fp", tokens).expect("score");
+        assert_eq!(logits.len(), seq * arts.cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    // Unknown variant surfaces as a routed error, not a hang.
+    let err = server.score("not-a-variant", vec![1, 2, 3]);
+    assert!(err.is_err());
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, n as u64);
+    assert!(metrics.batches >= 1);
+}
+
+/// Full eval convenience path used by the tables.
+#[test]
+fn eval_variant_smoke() {
+    let Some(arts) = artifacts() else { return };
+    let mut engine = Engine::new().unwrap();
+    let opts = EvalOpts { windows: 3, tasks_per_kind: 2 };
+    let ev = gsr::eval::tables::eval_variant(&mut engine, &arts, "fp", opts).unwrap();
+    assert!(ev.ppl.is_finite() && ev.ppl > 1.0);
+    assert!(ev.zero_shot_avg >= 0.0 && ev.zero_shot_avg <= 100.0);
+    assert_eq!(ev.per_task.len(), 8);
+}
