@@ -1,0 +1,57 @@
+//! The headline win of the `gsr search` subsystem: a searched per-layer
+//! rotation plan vs the fixed global-GSR configuration, on measured
+//! group-RTN proxy error *and* on end-to-end identity-Hessian GPTQ
+//! weight SSE. Pure native (no PJRT, no artifacts) — the checkpoint is
+//! the structured synthetic one `gsr search --synthetic` uses, whose
+//! outlier channels move per layer so one fixed block size cannot be
+//! optimal everywhere.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gsr::eval::tables::{plan_summary, search_table};
+use gsr::model::{FpParams, ModelCfg};
+use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
+use gsr::search::{search_plan, SearchCfg};
+
+fn main() {
+    let cfg = ModelCfg::default();
+    println!(
+        "search-plan bench — d={} layers={} ffn={} group={}",
+        cfg.d_model, cfg.n_layers, cfg.d_ffn, cfg.group
+    );
+    let fp = FpParams::synthetic(&cfg, 2025);
+    let scfg = SearchCfg::default();
+
+    let t0 = std::time::Instant::now();
+    let outcome = search_plan(&fp, &cfg, &scfg).expect("search");
+    println!("{}", search_table(&outcome).render());
+    println!(
+        "search wall {:?}; {} layer(s) strictly improved; mean MSE {:.4e} vs baseline {:.4e}\n",
+        t0.elapsed(),
+        outcome.improved_layers(),
+        outcome.mean_mse(),
+        outcome.mean_baseline_mse()
+    );
+
+    // End-to-end check: does the proxy win survive GPTQ?
+    let baseline = RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, scfg.seed);
+    let mut sses = Vec::new();
+    for (name, plan) in [("fixed-GSR", &baseline), ("searched", &outcome.plan)] {
+        let rots = build_plan_rotations(&cfg, plan).expect("build rotations");
+        let (_qp, sse, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+        println!(
+            "{name:10} GPTQ weight SSE {sse:10.3}   {}",
+            plan_summary(plan)
+        );
+        sses.push(sse);
+    }
+    println!(
+        "searched/fixed SSE ratio: {:.4} (< 1 means the searched plan wins end-to-end)\n",
+        sses[1] / sses[0]
+    );
+
+    common::time_it("search_plan(default grid)", 0, 3, || {
+        search_plan(&fp, &cfg, &scfg).unwrap()
+    });
+}

@@ -19,10 +19,19 @@ use crate::transform::{build_r1, Mat, R1Kind};
 /// Hadamard matrix this equals the row sequency. For block-diagonal
 /// rotations the per-block column pattern repeats; zero-padding outside
 /// the block does not flip signs.
-pub fn column_group_sequency_variance(r: &Mat, group: usize) -> Vec<f64> {
-    assert_eq!(r.cols % group, 0);
+///
+/// Errors (instead of panicking) when `group` does not evenly tile the
+/// columns — the `gsr search` grid probes arbitrary block sizes and must
+/// be able to survive the invalid ones.
+pub fn column_group_sequency_variance(r: &Mat, group: usize) -> Result<Vec<f64>, String> {
+    if group == 0 || r.cols % group != 0 {
+        return Err(format!(
+            "sequency group {group} must be nonzero and divide the rotation's {} columns",
+            r.cols
+        ));
+    }
     let n = r.rows;
-    (0..r.cols / group)
+    Ok((0..r.cols / group)
         .map(|g| {
             let seqs: Vec<f64> = (g * group..(g + 1) * group)
                 .map(|c| {
@@ -38,7 +47,20 @@ pub fn column_group_sequency_variance(r: &Mat, group: usize) -> Vec<f64> {
             let mean = seqs.iter().sum::<f64>() / seqs.len() as f64;
             seqs.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / seqs.len() as f64
         })
-        .collect()
+        .collect())
+}
+
+/// Group-RTN MSE of an already-rotated weight (groups along rows) — the
+/// measured quantization-error proxy the `gsr search` objective and the
+/// §3.2 sweep share.
+pub fn group_rtn_mse(w: &Mat, group: usize, bits: u32) -> f64 {
+    rtn_quantize(w, bits, group, true).mse(w)
+}
+
+/// Group-RTN MSE of `R1ᵀ W` for a given rotation matrix.
+pub fn rotated_group_rtn_mse(w: &Mat, r1: &Mat, group: usize, bits: u32) -> f64 {
+    let rotated = r1.transpose().matmul(w);
+    group_rtn_mse(&rotated, group, bits)
 }
 
 /// Report row for one R1 kind.
@@ -95,14 +117,13 @@ pub fn sequency_variance_report(
         .map(|&kind| {
             let mut rng = SplitMix64::new(seed + 77);
             let r1 = build_r1(kind, n, group, &mut rng);
-            let vars = column_group_sequency_variance(&r1, group);
+            let vars = column_group_sequency_variance(&r1, group)
+                .expect("report geometry: group divides n");
             let mean_var = vars.iter().sum::<f64>() / vars.len() as f64;
-            let rotated = r1.transpose().matmul(&w);
-            let q = rtn_quantize(&rotated, bits, group, true);
             SequencyReport {
                 kind,
                 mean_group_variance: mean_var,
-                rotated_quant_mse: q.mse(&rotated),
+                rotated_quant_mse: rotated_group_rtn_mse(&w, &r1, group, bits),
             }
         })
         .collect()
@@ -115,9 +136,7 @@ pub fn group_quant_error_by_rotation(w: &Mat, group: usize, bits: u32, seed: u64
         .map(|&kind| {
             let mut rng = SplitMix64::new(seed);
             let r1 = build_r1(kind, w.rows, group, &mut rng);
-            let rotated = r1.transpose().matmul(w);
-            let q = rtn_quantize(&rotated, bits, group, true);
-            (kind, q.mse(&rotated))
+            (kind, rotated_group_rtn_mse(w, &r1, group, bits))
         })
         .collect()
 }
@@ -133,8 +152,8 @@ mod tests {
         let mut rng = SplitMix64::new(1);
         let gh = build_r1(R1Kind::GH, n, g, &mut rng);
         let gw = build_r1(R1Kind::GW, n, g, &mut rng);
-        let vh = column_group_sequency_variance(&gh, g);
-        let vw = column_group_sequency_variance(&gw, g);
+        let vh = column_group_sequency_variance(&gh, g).unwrap();
+        let vw = column_group_sequency_variance(&gw, g).unwrap();
         let mh = vh.iter().sum::<f64>() / vh.len() as f64;
         let mw = vw.iter().sum::<f64>() / vw.len() as f64;
         assert!(mw < mh, "walsh {mw} should be < hadamard {mh}");
@@ -161,5 +180,15 @@ mod tests {
     fn report_covers_all_kinds() {
         let reports = sequency_variance_report(128, 32, 16, 2, 9);
         assert_eq!(reports.len(), 4);
+    }
+
+    #[test]
+    fn non_divisible_group_is_an_error_not_a_panic() {
+        let mut rng = SplitMix64::new(2);
+        let r = build_r1(R1Kind::GW, 64, 16, &mut rng);
+        let err = column_group_sequency_variance(&r, 24).unwrap_err();
+        assert!(err.contains("24"), "{err}");
+        assert!(column_group_sequency_variance(&r, 0).is_err());
+        assert!(column_group_sequency_variance(&r, 16).is_ok());
     }
 }

@@ -5,10 +5,10 @@
 use std::collections::BTreeMap;
 
 /// Boolean flags of the `gsr` binary — everything else with a `--`
-/// prefix takes a value. Keeping this explicit removes the classic
-/// `--flag positional` ambiguity.
-pub const KNOWN_FLAGS: [&str; 7] =
-    ["verbose", "markdown", "all", "quick", "native", "force", "help"];
+/// prefix takes a value (e.g. `--threads N`, `--plan FILE`). Keeping
+/// this explicit removes the classic `--flag positional` ambiguity.
+pub const KNOWN_FLAGS: [&str; 8] =
+    ["verbose", "markdown", "all", "quick", "native", "force", "help", "synthetic"];
 
 /// Parsed command line: subcommand, `--key value` options, bare flags.
 #[derive(Debug, Default, Clone)]
@@ -62,6 +62,23 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// `--threads N` with a documented default of the host's available
+    /// parallelism: absent or `0` means one worker per available core.
+    pub fn opt_threads(&self) -> usize {
+        resolve_threads(self.opt_usize("threads", 0))
+    }
+}
+
+/// Resolve a thread-count request: 0 means one worker per available
+/// core (falling back to 1 if the host won't say). The single copy of
+/// this policy — `Args::opt_threads` and the search planner both use it.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
 }
 
 #[cfg(test)]
@@ -100,5 +117,31 @@ mod tests {
         let a = parse("eval");
         assert_eq!(a.opt_or("artifacts", "artifacts"), "artifacts");
         assert_eq!(a.opt_usize("windows", 32), 32);
+    }
+
+    #[test]
+    fn search_subcommand_grammar() {
+        let a = parse(
+            "search --blocks 32,64,128 --r1 GSR,LH --r4 GH --budget 12 \
+             --threads 3 --out plan.json --synthetic",
+        );
+        assert_eq!(a.subcommand, "search");
+        assert_eq!(a.opt("blocks"), Some("32,64,128"));
+        assert_eq!(a.opt("r1"), Some("GSR,LH"));
+        assert_eq!(a.opt("r4"), Some("GH"));
+        assert_eq!(a.opt_usize("budget", 0), 12);
+        assert_eq!(a.opt_threads(), 3);
+        assert_eq!(a.opt("out"), Some("plan.json"));
+        // `--synthetic` is a known flag: it must not swallow a value.
+        assert!(a.has_flag("synthetic"));
+        assert!(a.opt("synthetic").is_none());
+    }
+
+    #[test]
+    fn threads_default_is_available_parallelism() {
+        let a = parse("search");
+        assert!(a.opt_threads() >= 1);
+        let b = parse("search --threads 0");
+        assert!(b.opt_threads() >= 1);
     }
 }

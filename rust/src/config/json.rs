@@ -1,10 +1,12 @@
-//! Minimal JSON parser/serializer (manifest + meta files only).
+//! Minimal JSON parser/serializer (manifest, meta and rotation-plan
+//! files).
 //!
 //! Supports the full JSON grammar except `\u` surrogate pairs beyond the
 //! BMP; numbers parse as f64 (the manifest never exceeds 2⁵³).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::path::Path;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -79,6 +81,31 @@ impl Json {
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    pub fn arr_f64(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    /// Parse a JSON document from a file (error names the path).
+    pub fn from_file(path: &Path) -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("{path:?}: {e}"))
+    }
+
+    /// Write pretty-printed JSON (with trailing newline) to a file.
+    pub fn to_file(&self, path: &Path) -> Result<(), String> {
+        let mut text = self.to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| format!("{path:?}: {e}"))
     }
 
     pub fn to_string_pretty(&self) -> String {
@@ -393,5 +420,26 @@ mod tests {
     fn unicode_escape() {
         let v = Json::parse(r#""é""#).unwrap();
         assert_eq!(v.as_str(), Some("é"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("gsr_json_roundtrip_{}.json", std::process::id()));
+        let v = Json::obj(vec![
+            ("a", Json::num(1.5)),
+            ("b", Json::arr_f64(&[1.0, 2.0, -0.25])),
+            ("s", Json::str("plan")),
+        ]);
+        v.to_file(&path).unwrap();
+        let re = Json::from_file(&path);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(re.unwrap(), v);
+    }
+
+    #[test]
+    fn from_file_names_missing_path() {
+        let err = Json::from_file(Path::new("/nonexistent/gsr_plan.json")).unwrap_err();
+        assert!(err.contains("gsr_plan.json"), "{err}");
     }
 }

@@ -183,6 +183,52 @@ pub fn sequency_table(n: usize, group: usize) -> Table {
     table
 }
 
+/// Compressed label for a (possibly heterogeneous) rotation plan:
+/// uniform plans render like classic variants (`GSR/64+r4GH ×4`),
+/// heterogeneous ones list per-layer specs.
+pub fn plan_summary(plan: &crate::quant::RotationPlan) -> String {
+    if plan.layers.is_empty() {
+        return "empty plan".to_string();
+    }
+    if plan.is_uniform() {
+        format!("{} ×{}", plan.layers[0].label(), plan.layers.len())
+    } else {
+        let parts: Vec<String> = plan
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, s)| format!("L{l}:{}", s.label()))
+            .collect();
+        format!("hetero[{}]", parts.join(" "))
+    }
+}
+
+/// Per-layer `gsr search` report: searched spec vs the fixed-GSR
+/// baseline, on measured group-RTN MSE.
+pub fn search_table(outcome: &crate::search::SearchOutcome) -> Table {
+    let mut table = Table::new(
+        "gsr search — per-layer rotation plan vs fixed GSR baseline",
+        &["Layer", "Spec", "group-RTN MSE", "baseline (GSR)", "Δ%", "seq.var", "cands"],
+    );
+    for r in &outcome.layers {
+        let delta = if r.baseline.quant_mse > 0.0 {
+            100.0 * (r.best.quant_mse - r.baseline.quant_mse) / r.baseline.quant_mse
+        } else {
+            0.0
+        };
+        table.row(vec![
+            r.layer.to_string(),
+            r.best.spec.label(),
+            format!("{:.4e}", r.best.quant_mse),
+            format!("{:.4e}", r.baseline.quant_mse),
+            fmt(delta, 2),
+            fmt(r.best.seq_variance, 2),
+            r.evaluated.to_string(),
+        ]);
+    }
+    table
+}
+
 /// Fig. 2 outlier-spread table (native, no PJRT).
 pub fn fig2_table(n: usize, group: usize) -> Table {
     let mut table = Table::new(

@@ -30,6 +30,9 @@
 //!   tables matching the paper's layout.
 //! * [`analysis`] — sequency-variance and outlier-spread analyses backing
 //!   the paper's §3.2 argument and Fig. 2.
+//! * [`search`] — the `gsr search` subsystem: a training-free per-layer
+//!   rotation auto-configuration search (candidate grid × proxy
+//!   objectives × parallel planner) producing a [`quant`] `RotationPlan`.
 
 pub mod analysis;
 pub mod config;
@@ -40,7 +43,8 @@ pub mod model;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod search;
 pub mod transform;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (std-only; no external error crate offline).
+pub type Result<T> = std::result::Result<T, Box<dyn std::error::Error + Send + Sync>>;

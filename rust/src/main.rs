@@ -7,6 +7,8 @@
 //! * `analyze`            — §3.2 sequency variance + Fig. 2 outlier spread.
 //! * `serve`              — start the batching server and run a demo load.
 //! * `gen-corpus`         — write the synthetic corpus (native generator).
+//! * `search`             — training-free per-layer rotation auto-config:
+//!                          emit a rotation plan JSON for `quantize-native`.
 
 use std::path::Path;
 
@@ -29,6 +31,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "gen-corpus" => cmd_gen_corpus(&args),
         "quantize-native" => cmd_quantize_native(&args),
+        "search" => cmd_search(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -59,12 +62,25 @@ fn print_help() {
            serve [--requests N]        batching server + demo load\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
            quantize-native [--r1 K]    pure-Rust W2 quantization (no Python)\n\
+                           [--plan F]  ...from a searched rotation plan JSON\n\
+           search [--out F]            training-free per-layer rotation search\n\
          \n\
          COMMON OPTIONS:\n\
            --artifacts DIR   artifact directory (default: artifacts)\n\
            --windows N       PPL windows per variant (default 24)\n\
            --tasks N         zero-shot instances per family (default 12)\n\
-           --markdown        render tables as markdown"
+           --markdown        render tables as markdown\n\
+         \n\
+         SEARCH OPTIONS:\n\
+           --out FILE        plan output path (default rotation_plan.json)\n\
+           --bits N          proxy quantizer weight bits (default 2)\n\
+           --blocks LIST     R1 block sizes, e.g. 32,64,128,256\n\
+           --r1 LIST         R1 kinds, e.g. GH,GW,LH,GSR\n\
+           --r4 LIST         R4 kinds, e.g. GH,LH\n\
+           --budget N        max candidates per layer (0 = whole grid)\n\
+           --threads N       worker threads (default: available cores)\n\
+           --seed N          rotation-build seed (default 2025)\n\
+           --synthetic       search a synthetic checkpoint (no artifacts)"
     );
 }
 
@@ -189,18 +205,36 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 fn cmd_quantize_native(args: &Args) -> Result<(), String> {
     use gsr::eval::{EvalOpts, NativeModel};
     use gsr::model::{DenseModel, FpParams, R4Kind};
-    use gsr::quant::{build_rotations, quantize_native};
+    use gsr::quant::{
+        build_plan_rotations, build_rotations, quantize_native, quantize_native_plan,
+        RotationPlan,
+    };
     use gsr::transform::R1Kind;
 
     let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
     let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
-    let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR)")?;
-    let r4 = R4Kind::parse(args.opt_or("r4", "GH")).ok_or("bad --r4 (GH|LH)")?;
-    let seed = args.opt_usize("seed", 2025) as u64;
-    println!("native W2 quantization: R1={r1} R4={} seed={seed}", r4.as_str());
-    let rots = build_rotations(&arts.cfg, r1, r4, seed);
+    let bits = args.opt_usize("bits", 2) as u32;
     let t0 = std::time::Instant::now();
-    let (qp, sse, _) = quantize_native(&fp, &arts.cfg, &rots, 2);
+    let (qp, sse) = if let Some(plan_path) = args.opt("plan") {
+        // Heterogeneous path: consume a plan emitted by `gsr search`.
+        let plan = RotationPlan::load(Path::new(plan_path))?;
+        let rots = build_plan_rotations(&arts.cfg, &plan)?;
+        println!(
+            "native W{bits} quantization from plan {plan_path}: {} ({} distinct rotation builds)",
+            tables::plan_summary(&plan),
+            rots.distinct
+        );
+        let (qp, sse, _) = quantize_native_plan(&fp, &arts.cfg, &rots, bits);
+        (qp, sse)
+    } else {
+        let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR)")?;
+        let r4 = R4Kind::parse(args.opt_or("r4", "GH")).ok_or("bad --r4 (GH|LH)")?;
+        let seed = args.opt_usize("seed", 2025) as u64;
+        println!("native W{bits} quantization: R1={r1} R4={} seed={seed}", r4.as_str());
+        let rots = build_rotations(&arts.cfg, r1, r4, seed);
+        let (qp, sse, _) = quantize_native(&fp, &arts.cfg, &rots, bits);
+        (qp, sse)
+    };
     println!("quantized {} linears in {:?}; weight SSE {sse:.2}",
         arts.cfg.n_layers * 7, t0.elapsed());
     let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };
@@ -208,6 +242,75 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
     let opts = EvalOpts { windows: args.opt_usize("windows", 4), tasks_per_kind: 0 };
     let ev = gsr::eval::tables::eval_model(&native, &arts, opts)?;
     println!("native-quantized PPL (identity-Hessian GPTQ): {:.3}", ev.ppl);
+    Ok(())
+}
+
+fn parse_list_usize(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|p| p.trim().parse::<usize>().map_err(|_| format!("bad number {p:?}")))
+        .collect()
+}
+
+fn cmd_search(args: &Args) -> Result<(), String> {
+    use gsr::model::{FpParams, ModelCfg, R4Kind};
+    use gsr::search::{search_plan, GridCfg, SearchCfg};
+    use gsr::transform::R1Kind;
+
+    let seed = args.opt_usize("seed", 2025) as u64;
+    let (cfg, fp) = if args.has_flag("synthetic") {
+        // Demo/CI path: a structured synthetic checkpoint, no artifacts.
+        let cfg = ModelCfg::default();
+        (cfg.clone(), FpParams::synthetic(&cfg, seed))
+    } else {
+        let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
+        let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
+        (arts.cfg.clone(), fp)
+    };
+    let mut grid = GridCfg::default();
+    if let Some(s) = args.opt("blocks") {
+        grid.blocks = parse_list_usize(s)?;
+    }
+    if let Some(s) = args.opt("r1") {
+        grid.r1_kinds = s
+            .split(',')
+            .map(|k| R1Kind::parse(k.trim()).ok_or_else(|| format!("bad r1 kind {k:?}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(s) = args.opt("r4") {
+        grid.r4_kinds = s
+            .split(',')
+            .map(|k| R4Kind::parse(k.trim()).ok_or_else(|| format!("bad r4 kind {k:?}")))
+            .collect::<Result<_, _>>()?;
+    }
+    let scfg = SearchCfg {
+        grid,
+        bits: args.opt_usize("bits", 2) as u32,
+        budget: args.opt_usize("budget", 0),
+        threads: args.opt_threads(),
+        seed,
+    };
+    let t0 = std::time::Instant::now();
+    let outcome = search_plan(&fp, &cfg, &scfg)?;
+    let table = tables::search_table(&outcome);
+    if args.has_flag("markdown") {
+        println!("{}", table.render_markdown());
+    } else {
+        println!("{}", table.render());
+    }
+    println!(
+        "searched {} layers in {:?} on {} threads: mean group-RTN MSE {:.4e} \
+         vs fixed-GSR {:.4e} ({} layer(s) strictly improved)",
+        outcome.layers.len(),
+        t0.elapsed(),
+        scfg.threads,
+        outcome.mean_mse(),
+        outcome.mean_baseline_mse(),
+        outcome.improved_layers()
+    );
+    let out = args.opt_or("out", "rotation_plan.json");
+    outcome.plan.save(Path::new(out))?;
+    println!("wrote plan to {out}: {}", tables::plan_summary(&outcome.plan));
+    println!("next: gsr quantize-native --plan {out}");
     Ok(())
 }
 

@@ -49,7 +49,7 @@ impl ParamSpec {
 }
 
 /// The online R4 rotation kind baked into a graph (Table 2 ablation).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum R4Kind {
     GH,
     LH,

@@ -281,6 +281,11 @@ fn forward_quant(
     }
     let (cos, sin) = rope_tables(t, dh, cfg.rope_base);
     for layer in &p.layers {
+        // Heterogeneous plans: transition the residual stream from the
+        // previous layer's R1 basis into this layer's (`x ← x R_{l-1}ᵀ R_l`).
+        if let Some(tr) = &layer.basis_change {
+            x = matmul(&x, tr, t, d, d);
+        }
         let w = |name: &str| layer.dense[name].as_slice();
         let mut h = x.clone();
         rmsnorm_rows(&mut h, d, cfg.norm_eps);
@@ -307,21 +312,29 @@ fn forward_quant(
         let gx = matmul(&h, w("wgate"), t, d, cfg.d_ffn);
         let ux = matmul(&h, w("wup"), t, d, cfg.d_ffn);
         let mut z: Vec<f32> = gx.iter().zip(&ux).map(|(&gv, &uv)| silu(gv) * uv).collect();
-        // Online R4: fast (grouped) Hadamard + signs — the L1 kernel's math.
-        match p.r4_kind {
+        // Online R4: fast (grouped) Hadamard + signs — the L1 kernel's
+        // math. A heterogeneous plan overrides kind/signs per layer; the
+        // LH block size is carried by the sign-vector length (legacy
+        // variants store `group` signs, plans may pick any valid block).
+        let (r4_kind, r4_signs) = match &layer.r4 {
+            Some(o) => (o.kind, o.signs.as_slice()),
+            None => (p.r4_kind, p.r4_signs.as_slice()),
+        };
+        match r4_kind {
             R4Kind::GH => {
                 for row in z.chunks_mut(cfg.d_ffn) {
                     fwht_f32(row);
-                    for (zv, &s) in row.iter_mut().zip(&p.r4_signs) {
+                    for (zv, &s) in row.iter_mut().zip(r4_signs) {
                         *zv *= s;
                     }
                 }
             }
             R4Kind::LH => {
+                let blk = r4_signs.len();
                 for row in z.chunks_mut(cfg.d_ffn) {
-                    for chunk in row.chunks_mut(g) {
+                    for chunk in row.chunks_mut(blk) {
                         fwht_f32(chunk);
-                        for (zv, &s) in chunk.iter_mut().zip(&p.r4_signs) {
+                        for (zv, &s) in chunk.iter_mut().zip(r4_signs) {
                             *zv *= s;
                         }
                     }

@@ -11,4 +11,4 @@ pub mod weights;
 
 pub use config::{ModelCfg, ParamSpec, R4Kind};
 pub use forward::DenseModel;
-pub use weights::{FpParams, QuantParams};
+pub use weights::{FpParams, LayerR4, QuantParams};

@@ -6,6 +6,7 @@ use std::path::Path;
 
 use super::config::{Dtype, ModelCfg, ParamSpec, R4Kind};
 use crate::quant::unpack2;
+use crate::rng::SplitMix64;
 
 /// A raw tensor decoded from a blob.
 #[derive(Debug, Clone)]
@@ -79,6 +80,50 @@ pub struct FpLayer {
 }
 
 impl FpParams {
+    /// Deterministic synthetic checkpoint with structured, outlier-
+    /// bearing norm scales — the massive-channel analogue the rotation
+    /// literature targets. Outlier positions and magnitudes vary by
+    /// layer so the best rotation configuration genuinely differs per
+    /// layer; used by `gsr search --synthetic`, the search bench, and
+    /// tests when no trained artifact is available.
+    pub fn synthetic(cfg: &ModelCfg, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let d = cfg.d_model;
+        let mut dense = |c: usize, h: usize| -> Vec<f32> {
+            (0..c * h)
+                .map(|_| (rng.next_normal() / (c as f64).sqrt()) as f32)
+                .collect()
+        };
+        let layers: Vec<FpLayer> = (0..cfg.n_layers)
+            .map(|l| {
+                let mut ln1: Vec<f32> =
+                    (0..d).map(|i| 1.0 + 0.1 * ((i + l) % 5) as f32).collect();
+                let mut ln2: Vec<f32> =
+                    (0..d).map(|i| 1.0 + 0.05 * ((i + 2 * l) % 7) as f32).collect();
+                ln1[(7 * l + 3) % d] = 6.0 + 2.0 * l as f32;
+                ln1[(31 * l + 17) % d] = 9.0;
+                ln2[(13 * l + 8) % d] = 4.0 + 3.0 * l as f32;
+                FpLayer {
+                    ln1,
+                    ln2,
+                    wq: dense(d, d),
+                    wk: dense(d, d),
+                    wv: dense(d, d),
+                    wo: dense(d, d),
+                    wgate: dense(d, cfg.d_ffn),
+                    wup: dense(d, cfg.d_ffn),
+                    wdown: dense(cfg.d_ffn, d),
+                }
+            })
+            .collect();
+        Self {
+            embed: dense(cfg.vocab, d),
+            lm_head: dense(d, cfg.vocab),
+            ln_f: vec![1.0; d],
+            layers,
+        }
+    }
+
     pub fn load(path: &Path, cfg: &ModelCfg) -> Result<Self, String> {
         let bytes = fs::read(path).map_err(|e| format!("{path:?}: {e}"))?;
         let map = decode_blob(&bytes, &cfg.fp_param_spec())?;
@@ -113,6 +158,15 @@ pub struct QuantParams {
     pub layers: Vec<QuantLayer>,
 }
 
+/// Per-layer online-R4 override used by heterogeneous rotation plans.
+/// `None` on a layer means "use the variant-global `r4_kind`/`r4_signs`".
+#[derive(Debug, Clone)]
+pub struct LayerR4 {
+    pub kind: R4Kind,
+    /// Sign vector: length `d_ffn` for GH, the local block size for LH.
+    pub signs: Vec<f32>,
+}
+
 #[derive(Debug, Clone)]
 pub struct QuantLayer {
     pub ascale_attn: Vec<f32>,
@@ -121,6 +175,12 @@ pub struct QuantLayer {
     pub ascale_down: Vec<f32>,
     /// Dequantized dense weights, keyed by linear name.
     pub dense: BTreeMap<String, Vec<f32>>,
+    /// Residual-stream change of basis applied on layer entry
+    /// (`R_{l-1}ᵀ R_l`, row-major `[d, d]`) when a heterogeneous plan
+    /// switches R1 between consecutive layers; `None` = same basis.
+    pub basis_change: Option<Vec<f32>>,
+    /// Per-layer online-R4 override; `None` = use the global fields.
+    pub r4: Option<LayerR4>,
 }
 
 impl QuantParams {
@@ -156,6 +216,8 @@ impl QuantParams {
                 ascale_ffn: getf(&format!("layers.{l}.ascale_ffn")),
                 ascale_down: getf(&format!("layers.{l}.ascale_down")),
                 dense,
+                basis_change: None,
+                r4: None,
             });
         }
         Ok(Self {

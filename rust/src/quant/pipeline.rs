@@ -7,19 +7,222 @@
 //! Fig.-1 invariance test below checks `forward(fuse(params)) ≡
 //! forward(params)` natively, with no JAX in the loop.
 //!
+//! Two configuration surfaces coexist:
+//!
+//! * [`RotationSet`] / [`build_rotations`] — the legacy uniform
+//!   configuration (one R1/R4 for the whole model, block = quant group).
+//! * [`RotationPlan`] / [`build_plan_rotations`] — a **per-layer**
+//!   assignment of `(R1 kind, R1 block, R4 kind, R4 block)` produced by
+//!   the `gsr search` subsystem. Identical specs share one built matrix
+//!   (`Arc` dedup); consecutive layers with different R1 specs get an
+//!   explicit residual-stream change of basis `R_{l-1}ᵀ R_l`, which is
+//!   what keeps Fig.-1 invariance exact for heterogeneous plans.
+//!
 //! Calibration here is identity-Hessian GPTQ (per-channel error feedback
 //! without cross-channel reordering); the Python path remains the
 //! reference for Hessian-calibrated GPTQ.
 
 use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
 
 use super::{gptq_quantize, QuantizedLinear};
+use crate::config::Json;
 use crate::model::config::{ModelCfg, R4Kind, LINEARS};
-use crate::model::weights::{FpParams, QuantLayer, QuantParams};
+use crate::model::weights::{FpParams, LayerR4, QuantLayer, QuantParams};
 use crate::rng::SplitMix64;
-use crate::transform::{block_diag, build_r1, hadamard, rht, Mat, R1Kind};
+use crate::transform::{is_pow2, rht, try_block_diag, try_build_r1, try_hadamard, Mat, R1Kind};
 
-/// The shared rotation set for one variant.
+// ---------------------------------------------------------------------------
+// Rotation specs and plans
+// ---------------------------------------------------------------------------
+
+/// One layer's rotation configuration inside a [`RotationPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RotationSpec {
+    pub r1: R1Kind,
+    /// Walsh/Hadamard block size for local R1 kinds; ignored (and
+    /// canonicalized to `d_model`) for global kinds.
+    pub r1_block: usize,
+    pub r4: R4Kind,
+    /// Online-R4 block: `d_ffn` for GH, the local block size for LH.
+    pub r4_block: usize,
+}
+
+impl RotationSpec {
+    /// The paper's fixed configuration (GSR @ quant group, global R4)
+    /// — the baseline every searched plan is measured against.
+    pub fn baseline(cfg: &ModelCfg) -> Self {
+        Self { r1: R1Kind::GSR, r1_block: cfg.group, r4: R4Kind::GH, r4_block: cfg.d_ffn }
+    }
+
+    /// Canonical form used as the build/dedup key: global R1 kinds pin
+    /// `r1_block = d_model`, GH R4 pins `r4_block = d_ffn`.
+    pub fn canonical(mut self, cfg: &ModelCfg) -> Self {
+        if !self.r1.is_local() {
+            self.r1_block = cfg.d_model;
+        }
+        if self.r4 == R4Kind::GH {
+            self.r4_block = cfg.d_ffn;
+        }
+        self
+    }
+
+    /// Geometry check against a model config (early, clear errors — the
+    /// search grid probes arbitrary block sizes).
+    pub fn validate(&self, cfg: &ModelCfg) -> Result<(), String> {
+        if self.r1.is_local() {
+            if !is_pow2(self.r1_block) {
+                return Err(format!("R1 block must be a power of two, got {}", self.r1_block));
+            }
+            if self.r1_block > cfg.d_model || cfg.d_model % self.r1_block != 0 {
+                return Err(format!(
+                    "R1 block {} must divide d_model {}",
+                    self.r1_block, cfg.d_model
+                ));
+            }
+        } else if !is_pow2(cfg.d_model) {
+            return Err(format!("global R1 needs a power-of-two d_model, got {}", cfg.d_model));
+        }
+        match self.r4 {
+            R4Kind::GH => {
+                if !is_pow2(cfg.d_ffn) {
+                    return Err(format!("global R4 needs a power-of-two d_ffn, got {}", cfg.d_ffn));
+                }
+            }
+            R4Kind::LH => {
+                if !is_pow2(self.r4_block) || cfg.d_ffn % self.r4_block != 0 {
+                    return Err(format!(
+                        "R4 block {} must be a power of two dividing d_ffn {}",
+                        self.r4_block, cfg.d_ffn
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Short human label, e.g. `GSR/64+r4GH` (used by the eval tables).
+    pub fn label(&self) -> String {
+        let r1 = if self.r1.is_local() {
+            format!("{}/{}", self.r1, self.r1_block)
+        } else {
+            self.r1.to_string()
+        };
+        let r4 = if self.r4 == R4Kind::LH {
+            format!("{}@{}", self.r4.as_str(), self.r4_block)
+        } else {
+            self.r4.as_str().to_string()
+        };
+        format!("{r1}+r4{r4}")
+    }
+}
+
+/// A per-layer rotation assignment for a whole model — the unit the
+/// `gsr search` subsystem emits, `quantize-native --plan` consumes, and
+/// `config::Json` round-trips to disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RotationPlan {
+    /// Seed every spec-keyed matrix build derives from.
+    pub seed: u64,
+    pub layers: Vec<RotationSpec>,
+}
+
+impl RotationPlan {
+    /// The same spec for every layer (legacy variants as a plan).
+    pub fn uniform(spec: RotationSpec, n_layers: usize, seed: u64) -> Self {
+        Self { seed, layers: vec![spec; n_layers] }
+    }
+
+    /// Does every layer share one spec?
+    pub fn is_uniform(&self) -> bool {
+        self.layers.windows(2).all(|w| w[0] == w[1])
+    }
+
+    pub fn validate(&self, cfg: &ModelCfg) -> Result<(), String> {
+        if self.layers.len() != cfg.n_layers {
+            return Err(format!(
+                "plan has {} layer specs, model has {} layers",
+                self.layers.len(),
+                cfg.n_layers
+            ));
+        }
+        for (l, spec) in self.layers.iter().enumerate() {
+            spec.validate(cfg).map_err(|e| format!("layer {l}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    // -- JSON round-trip ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // The seed is a full u64; JSON numbers are f64 (exact only
+            // below 2^53), so it travels as a decimal string to keep the
+            // bit-identical rebuild guarantee for every seed.
+            ("seed", Json::str(&self.seed.to_string())),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("r1", Json::str(s.r1.as_str())),
+                                ("r1_block", Json::num(s.r1_block as f64)),
+                                ("r4", Json::str(s.r4.as_str())),
+                                ("r4_block", Json::num(s.r4_block as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let seed_val = j.at("seed")?;
+        let seed = match seed_val {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|_| format!("bad plan seed {s:?} (want a decimal u64)"))?,
+            // Back-compat: accept plain numbers (exact below 2^53).
+            _ => seed_val.as_usize().ok_or("plan seed must be a number or decimal string")?
+                as u64,
+        };
+        let layers = j
+            .at("layers")?
+            .as_arr()
+            .ok_or("plan layers must be an array")?
+            .iter()
+            .map(|l| -> Result<RotationSpec, String> {
+                Ok(RotationSpec {
+                    r1: R1Kind::parse(l.at("r1")?.as_str().ok_or("r1")?)
+                        .ok_or("bad r1 kind (GH|GW|LH|GSR)")?,
+                    r1_block: l.at("r1_block")?.as_usize().ok_or("r1_block")?,
+                    r4: R4Kind::parse(l.at("r4")?.as_str().ok_or("r4")?)
+                        .ok_or("bad r4 kind (GH|LH)")?,
+                    r4_block: l.at("r4_block")?.as_usize().ok_or("r4_block")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self { seed, layers })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        self.to_json().to_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        Self::from_json(&Json::from_file(path)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built rotations
+// ---------------------------------------------------------------------------
+
+/// The shared rotation set for one legacy (uniform) variant.
 pub struct RotationSet {
     pub r1: Mat,
     pub r2: Mat,
@@ -29,36 +232,134 @@ pub struct RotationSet {
     pub r4_kind: R4Kind,
 }
 
-/// Build rotations deterministically (seed-pinned like the Python path).
-pub fn build_rotations(cfg: &ModelCfg, r1_kind: R1Kind, r4_kind: R4Kind, seed: u64) -> RotationSet {
-    let mut rng = SplitMix64::new(seed);
-    let r1 = build_r1(r1_kind, cfg.d_model, cfg.group, &mut rng);
-    let r2 = rht(cfg.head_dim(), &mut rng);
-    let r3 = rht(cfg.head_dim(), &mut rng);
-    let (r4, r4_signs) = match r4_kind {
+/// Signed (randomized) R4 of the requested kind/block over `d_ffn`.
+/// Public so the search objective scores candidates with exactly the
+/// matrices the quantization pipeline will build.
+pub fn build_r4(
+    cfg: &ModelCfg,
+    kind: R4Kind,
+    block: usize,
+    rng: &mut SplitMix64,
+) -> Result<(Mat, Vec<f64>), String> {
+    match kind {
         R4Kind::GH => {
             let signs: Vec<f64> = (0..cfg.d_ffn).map(|_| rng.next_sign()).collect();
-            let mut h = hadamard(cfg.d_ffn);
+            let mut h = try_hadamard(cfg.d_ffn)?;
             for r in 0..cfg.d_ffn {
                 for (c, &s) in signs.iter().enumerate() {
                     h[(r, c)] *= s;
                 }
             }
-            (h, signs)
+            Ok((h, signs))
         }
         R4Kind::LH => {
-            let signs: Vec<f64> = (0..cfg.group).map(|_| rng.next_sign()).collect();
-            let mut b = hadamard(cfg.group);
-            for r in 0..cfg.group {
+            if !is_pow2(block) || cfg.d_ffn % block != 0 {
+                return Err(format!(
+                    "R4 block {block} must be a power of two dividing d_ffn {}",
+                    cfg.d_ffn
+                ));
+            }
+            let signs: Vec<f64> = (0..block).map(|_| rng.next_sign()).collect();
+            let mut b = try_hadamard(block)?;
+            for r in 0..block {
                 for (c, &s) in signs.iter().enumerate() {
                     b[(r, c)] *= s;
                 }
             }
-            (block_diag(&b, cfg.d_ffn), signs)
+            Ok((try_block_diag(&b, cfg.d_ffn)?, signs))
         }
-    };
+    }
+}
+
+/// Build rotations deterministically (seed-pinned like the Python path).
+pub fn build_rotations(cfg: &ModelCfg, r1_kind: R1Kind, r4_kind: R4Kind, seed: u64) -> RotationSet {
+    let mut rng = SplitMix64::new(seed);
+    let r1 = try_build_r1(r1_kind, cfg.d_model, cfg.group, &mut rng)
+        .unwrap_or_else(|e| panic!("{e}"));
+    let r2 = rht(cfg.head_dim(), &mut rng);
+    let r3 = rht(cfg.head_dim(), &mut rng);
+    let r4_block = if r4_kind == R4Kind::GH { cfg.d_ffn } else { cfg.group };
+    let (r4, r4_signs) =
+        build_r4(cfg, r4_kind, r4_block, &mut rng).unwrap_or_else(|e| panic!("{e}"));
     RotationSet { r1, r2, r3, r4, r4_signs, r4_kind }
 }
+
+/// One layer's built rotation matrices. Layers with identical canonical
+/// specs share the same `Arc`s — one build per distinct configuration.
+#[derive(Clone)]
+pub struct LayerRotations {
+    pub spec: RotationSpec,
+    pub r1: Arc<Mat>,
+    pub r4: Arc<Mat>,
+    pub r4_signs: Arc<Vec<f64>>,
+}
+
+/// Built rotations for a whole plan: per-layer R1/R4 plus the shared
+/// head rotations R2/R3.
+pub struct PlanRotations {
+    pub plan: RotationPlan,
+    pub r2: Mat,
+    pub r3: Mat,
+    pub layers: Vec<LayerRotations>,
+    /// Number of distinct (deduplicated) spec builds.
+    pub distinct: usize,
+}
+
+fn keyed_seed(fields: u64, seed: u64) -> u64 {
+    SplitMix64::new(seed ^ 0x6773_725F_706C_616E).next_u64()
+        ^ SplitMix64::new(fields).next_u64()
+}
+
+/// Deterministic, layer-independent sub-seed for a spec's **R1** build.
+/// Keyed only on `(r1, r1_block)`: specs differing just in R4 share the
+/// exact same R1 matrix, which lets the search score the R1-dependent
+/// work once per block size, and lets a plan reloaded from disk rebuild
+/// bit-identical rotations.
+pub fn r1_seed(spec: &RotationSpec, seed: u64) -> u64 {
+    keyed_seed((spec.r1 as u64) | ((spec.r1_block as u64) << 8), seed)
+}
+
+/// Deterministic sub-seed for a spec's **R4** build (keyed on
+/// `(r4, r4_block)` only; see [`r1_seed`]).
+pub fn r4_seed(spec: &RotationSpec, seed: u64) -> u64 {
+    // Low bits tag the R4 field layout apart from R1's.
+    keyed_seed(0x5234 | ((spec.r4 as u64) << 16) | ((spec.r4_block as u64) << 24), seed)
+}
+
+/// Build all rotation matrices for `plan`, deduplicating identical
+/// canonical specs so each distinct configuration is constructed once.
+pub fn build_plan_rotations(cfg: &ModelCfg, plan: &RotationPlan) -> Result<PlanRotations, String> {
+    plan.validate(cfg)?;
+    let mut rng = SplitMix64::new(plan.seed);
+    let r2 = rht(cfg.head_dim(), &mut rng);
+    let r3 = rht(cfg.head_dim(), &mut rng);
+    let mut cache: BTreeMap<RotationSpec, LayerRotations> = BTreeMap::new();
+    let mut layers = Vec::with_capacity(plan.layers.len());
+    for spec in &plan.layers {
+        let key = spec.canonical(cfg);
+        if let Some(hit) = cache.get(&key) {
+            layers.push(hit.clone());
+            continue;
+        }
+        let mut r1_rng = SplitMix64::new(r1_seed(&key, plan.seed));
+        let r1 = try_build_r1(key.r1, cfg.d_model, key.r1_block, &mut r1_rng)?;
+        let mut r4_rng = SplitMix64::new(r4_seed(&key, plan.seed));
+        let (r4, signs) = build_r4(cfg, key.r4, key.r4_block, &mut r4_rng)?;
+        let built = LayerRotations {
+            spec: key,
+            r1: Arc::new(r1),
+            r4: Arc::new(r4),
+            r4_signs: Arc::new(signs),
+        };
+        cache.insert(key, built.clone());
+        layers.push(built);
+    }
+    Ok(PlanRotations { plan: plan.clone(), r2, r3, distinct: cache.len(), layers })
+}
+
+// ---------------------------------------------------------------------------
+// Fusion
+// ---------------------------------------------------------------------------
 
 fn to_mat(w: &[f32], rows: usize, cols: usize) -> Mat {
     assert_eq!(w.len(), rows * cols);
@@ -79,7 +380,46 @@ fn scale_rows(mut m: Mat, gamma: &[f32]) -> Mat {
     m
 }
 
-/// Fused, rotated dense weights for one variant (mirror of
+/// `I_heads ⊗ R2`.
+fn expand_b2(cfg: &ModelCfg, r2: &Mat) -> Mat {
+    let d = cfg.d_model;
+    let dh = cfg.head_dim();
+    let mut m = Mat::zeros(d, d);
+    for h in 0..cfg.n_heads {
+        for r in 0..dh {
+            for c in 0..dh {
+                m[(h * dh + r, h * dh + c)] = r2[(r, c)];
+            }
+        }
+    }
+    m
+}
+
+/// Fuse one transformer layer's seven linears against its rotations.
+fn fuse_layer(
+    layer: &crate::model::weights::FpLayer,
+    cfg: &ModelCfg,
+    r1: &Mat,
+    r4: &Mat,
+    b2: &Mat,
+) -> BTreeMap<String, Mat> {
+    let d = cfg.d_model;
+    let r1t = r1.transpose();
+    let r4t = r4.transpose();
+    let g1 = &layer.ln1;
+    let g2 = &layer.ln2;
+    let mut map = BTreeMap::new();
+    map.insert("wq".into(), r1t.matmul(&scale_rows(to_mat(&layer.wq, d, d), g1)));
+    map.insert("wk".into(), r1t.matmul(&scale_rows(to_mat(&layer.wk, d, d), g1)));
+    map.insert("wv".into(), r1t.matmul(&scale_rows(to_mat(&layer.wv, d, d), g1)).matmul(b2));
+    map.insert("wo".into(), b2.transpose().matmul(&to_mat(&layer.wo, d, d)).matmul(r1));
+    map.insert("wgate".into(), r1t.matmul(&scale_rows(to_mat(&layer.wgate, d, cfg.d_ffn), g2)));
+    map.insert("wup".into(), r1t.matmul(&scale_rows(to_mat(&layer.wup, d, cfg.d_ffn), g2)));
+    map.insert("wdown".into(), r4t.matmul(&to_mat(&layer.wdown, cfg.d_ffn, d)).matmul(r1));
+    map
+}
+
+/// Fused, rotated dense weights for one legacy variant (mirror of
 /// `model.fuse_rotations` + `fuse_r4`). Returns
 /// `(embed', lm_head', per-layer {name → Mat})`.
 pub fn fuse_rotations(
@@ -89,53 +429,68 @@ pub fn fuse_rotations(
 ) -> (Mat, Mat, Vec<BTreeMap<String, Mat>>) {
     let d = cfg.d_model;
     let r1 = &rots.r1;
-    let r1t = r1.transpose();
-    // B2 = I_heads ⊗ R2.
-    let b2 = {
-        let mut m = Mat::zeros(d, d);
-        let dh = cfg.head_dim();
-        for h in 0..cfg.n_heads {
-            for r in 0..dh {
-                for c in 0..dh {
-                    m[(h * dh + r, h * dh + c)] = rots.r2[(r, c)];
-                }
-            }
-        }
-        m
-    };
+    let b2 = expand_b2(cfg, &rots.r2);
     let embed = to_mat(&fp.embed, cfg.vocab, d).matmul(r1);
-    let lm_head = r1t.matmul(&scale_rows(to_mat(&fp.lm_head, d, cfg.vocab), &fp.ln_f));
-    let r4t = rots.r4.transpose();
+    let lm_head =
+        r1.transpose().matmul(&scale_rows(to_mat(&fp.lm_head, d, cfg.vocab), &fp.ln_f));
     let layers = fp
         .layers
         .iter()
-        .map(|layer| {
-            let g1 = &layer.ln1;
-            let g2 = &layer.ln2;
-            let mut map = BTreeMap::new();
-            map.insert("wq".into(), r1t.matmul(&scale_rows(to_mat(&layer.wq, d, d), g1)));
-            map.insert("wk".into(), r1t.matmul(&scale_rows(to_mat(&layer.wk, d, d), g1)));
-            map.insert(
-                "wv".into(),
-                r1t.matmul(&scale_rows(to_mat(&layer.wv, d, d), g1)).matmul(&b2),
-            );
-            map.insert("wo".into(), b2.transpose().matmul(&to_mat(&layer.wo, d, d)).matmul(r1));
-            map.insert(
-                "wgate".into(),
-                r1t.matmul(&scale_rows(to_mat(&layer.wgate, d, cfg.d_ffn), g2)),
-            );
-            map.insert(
-                "wup".into(),
-                r1t.matmul(&scale_rows(to_mat(&layer.wup, d, cfg.d_ffn), g2)),
-            );
-            map.insert(
-                "wdown".into(),
-                r4t.matmul(&to_mat(&layer.wdown, cfg.d_ffn, d)).matmul(r1),
-            );
-            map
-        })
+        .map(|layer| fuse_layer(layer, cfg, r1, &rots.r4, &b2))
         .collect();
     (embed, lm_head, layers)
+}
+
+/// Fused rotated dense weights under a (possibly heterogeneous) plan.
+///
+/// The residual stream runs in layer 0's R1 basis after the embedding,
+/// transitions via `R_{l-1}ᵀ R_l` wherever consecutive layers pick a
+/// different R1, and ends in the last layer's basis, absorbed by the
+/// fused lm_head. Returns `(embed', lm_head', per-layer {name → Mat},
+/// per-layer basis transitions)`.
+pub fn fuse_rotations_plan(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    rots: &PlanRotations,
+) -> (Mat, Mat, Vec<BTreeMap<String, Mat>>, Vec<Option<Mat>>) {
+    assert_eq!(fp.layers.len(), rots.layers.len(), "plan/model layer mismatch");
+    let d = cfg.d_model;
+    let b2 = expand_b2(cfg, &rots.r2);
+    let first_r1: &Mat = &rots.layers[0].r1;
+    let last_r1: &Mat = &rots.layers[rots.layers.len() - 1].r1;
+    let embed = to_mat(&fp.embed, cfg.vocab, d).matmul(first_r1);
+    let lm_head =
+        last_r1.transpose().matmul(&scale_rows(to_mat(&fp.lm_head, d, cfg.vocab), &fp.ln_f));
+    let mut maps = Vec::with_capacity(fp.layers.len());
+    let mut transitions = Vec::with_capacity(fp.layers.len());
+    for (l, layer) in fp.layers.iter().enumerate() {
+        let lr = &rots.layers[l];
+        let trans = if l == 0 {
+            None
+        } else {
+            let prev = &rots.layers[l - 1];
+            if Arc::ptr_eq(&prev.r1, &lr.r1) || prev.r1.as_ref() == lr.r1.as_ref() {
+                None
+            } else {
+                Some(prev.r1.transpose().matmul(lr.r1.as_ref()))
+            }
+        };
+        transitions.push(trans);
+        maps.push(fuse_layer(layer, cfg, lr.r1.as_ref(), lr.r4.as_ref(), &b2));
+    }
+    (embed, lm_head, maps, transitions)
+}
+
+fn unit_layer_scales(cfg: &ModelCfg, dense: BTreeMap<String, Vec<f32>>) -> QuantLayer {
+    QuantLayer {
+        ascale_attn: vec![1.0; cfg.d_model],
+        ascale_o: vec![1.0; cfg.d_model],
+        ascale_ffn: vec![1.0; cfg.d_model],
+        ascale_down: vec![1.0; cfg.d_ffn],
+        dense,
+        basis_change: None,
+        r4: None,
+    }
 }
 
 /// Fused-but-unquantized variant params (exact fp equivalence — Fig. 1).
@@ -149,15 +504,82 @@ pub fn fuse_to_dense(fp: &FpParams, cfg: &ModelCfg, rots: &RotationSet) -> Quant
         r4_kind: rots.r4_kind,
         layers: layers
             .into_iter()
-            .map(|map| QuantLayer {
-                ascale_attn: vec![1.0; cfg.d_model],
-                ascale_o: vec![1.0; cfg.d_model],
-                ascale_ffn: vec![1.0; cfg.d_model],
-                ascale_down: vec![1.0; cfg.d_ffn],
-                dense: map.iter().map(|(k, m)| (k.clone(), to_f32(m))).collect(),
+            .map(|map| {
+                unit_layer_scales(cfg, map.iter().map(|(k, m)| (k.clone(), to_f32(m))).collect())
             })
             .collect(),
     }
+}
+
+/// Assemble heterogeneous-plan `QuantParams` from fused globals plus
+/// per-layer dense maps — shared by the exact-dense and GPTQ paths.
+fn plan_params(
+    cfg: &ModelCfg,
+    rots: &PlanRotations,
+    embed: &Mat,
+    lm_head: &Mat,
+    dense_layers: Vec<BTreeMap<String, Vec<f32>>>,
+    transitions: Vec<Option<Mat>>,
+) -> QuantParams {
+    QuantParams {
+        embed: to_f32(embed),
+        lm_head: to_f32(lm_head),
+        r3: to_f32(&rots.r3),
+        r4_signs: rots.layers[0].r4_signs.iter().map(|&v| v as f32).collect(),
+        r4_kind: rots.layers[0].spec.r4,
+        layers: dense_layers
+            .into_iter()
+            .zip(transitions)
+            .enumerate()
+            .map(|(l, (dense, trans))| {
+                let mut ql = unit_layer_scales(cfg, dense);
+                ql.basis_change = trans.map(|t| to_f32(&t));
+                ql.r4 = Some(LayerR4 {
+                    kind: rots.layers[l].spec.r4,
+                    signs: rots.layers[l].r4_signs.iter().map(|&v| v as f32).collect(),
+                });
+                ql
+            })
+            .collect(),
+    }
+}
+
+/// Plan analogue of [`fuse_to_dense`]: exact fp equivalence with
+/// heterogeneous per-layer rotations (Fig. 1 with a plan).
+pub fn fuse_to_dense_plan(fp: &FpParams, cfg: &ModelCfg, rots: &PlanRotations) -> QuantParams {
+    let (embed, lm_head, layers, transitions) = fuse_rotations_plan(fp, cfg, rots);
+    let dense: Vec<BTreeMap<String, Vec<f32>>> = layers
+        .into_iter()
+        .map(|map| map.iter().map(|(k, m)| (k.clone(), to_f32(m))).collect())
+        .collect();
+    plan_params(cfg, rots, &embed, &lm_head, dense, transitions)
+}
+
+// ---------------------------------------------------------------------------
+// Quantization
+// ---------------------------------------------------------------------------
+
+/// GPTQ every linear of one fused layer map; returns the dequantized
+/// dense map, accumulating SSE and the quantized linears.
+fn quantize_layer_map(
+    map: &BTreeMap<String, Mat>,
+    cfg: &ModelCfg,
+    bits: u32,
+    sse: &mut f64,
+    qlinears: &mut Vec<QuantizedLinear>,
+) -> BTreeMap<String, Vec<f32>> {
+    let mut dense = BTreeMap::new();
+    for name in LINEARS {
+        let w = &map[name];
+        let q = gptq_quantize(w, &Mat::identity(w.rows), bits, cfg.group, true);
+        let deq = q.dequant();
+        for (a, b) in deq.data.iter().zip(&w.data) {
+            *sse += (a - b) * (a - b);
+        }
+        dense.insert(name.to_string(), to_f32(&deq));
+        qlinears.push(q);
+    }
+    dense
 }
 
 /// Full native W2 quantization: fuse → identity-Hessian GPTQ per linear
@@ -176,24 +598,8 @@ pub fn quantize_native(
     let layers = fused_layers
         .into_iter()
         .map(|map| {
-            let mut dense = BTreeMap::new();
-            for name in LINEARS {
-                let w = &map[name];
-                let q = gptq_quantize(w, &Mat::identity(w.rows), bits, cfg.group, true);
-                let deq = q.dequant();
-                for (a, b) in deq.data.iter().zip(&w.data) {
-                    sse += (a - b) * (a - b);
-                }
-                dense.insert(name.to_string(), to_f32(&deq));
-                qlinears.push(q);
-            }
-            QuantLayer {
-                ascale_attn: vec![1.0; cfg.d_model],
-                ascale_o: vec![1.0; cfg.d_model],
-                ascale_ffn: vec![1.0; cfg.d_model],
-                ascale_down: vec![1.0; cfg.d_ffn],
-                dense,
-            }
+            let dense = quantize_layer_map(&map, cfg, bits, &mut sse, &mut qlinears);
+            unit_layer_scales(cfg, dense)
         })
         .collect();
     (
@@ -208,6 +614,24 @@ pub fn quantize_native(
         sse,
         qlinears,
     )
+}
+
+/// Plan analogue of [`quantize_native`]: heterogeneous per-layer
+/// rotations, same identity-Hessian GPTQ per linear.
+pub fn quantize_native_plan(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    rots: &PlanRotations,
+    bits: u32,
+) -> (QuantParams, f64, Vec<QuantizedLinear>) {
+    let (embed, lm_head, fused_layers, transitions) = fuse_rotations_plan(fp, cfg, rots);
+    let mut sse = 0.0;
+    let mut qlinears = Vec::new();
+    let dense: Vec<BTreeMap<String, Vec<f32>>> = fused_layers
+        .iter()
+        .map(|map| quantize_layer_map(map, cfg, bits, &mut sse, &mut qlinears))
+        .collect();
+    (plan_params(cfg, rots, &embed, &lm_head, dense, transitions), sse, qlinears)
 }
 
 #[cfg(test)]
@@ -254,6 +678,16 @@ mod tests {
         }
     }
 
+    fn hetero_plan(seed: u64) -> RotationPlan {
+        RotationPlan {
+            seed,
+            layers: vec![
+                RotationSpec { r1: R1Kind::GSR, r1_block: 8, r4: R4Kind::GH, r4_block: 64 },
+                RotationSpec { r1: R1Kind::GH, r1_block: 32, r4: R4Kind::LH, r4_block: 16 },
+            ],
+        }
+    }
+
     /// Fig. 1, natively: fused/rotated forward ≡ fp forward, all kinds.
     #[test]
     fn fig1_invariance_native() {
@@ -281,6 +715,73 @@ mod tests {
         }
     }
 
+    /// Fig. 1 with a *heterogeneous* plan: per-layer R1 specs with an
+    /// explicit residual-stream basis transition still reproduce the fp
+    /// forward exactly (to float tolerance).
+    #[test]
+    fn fig1_invariance_heterogeneous_plan() {
+        let cfg = tiny_cfg();
+        let fp = random_fp(&cfg, 3);
+        let tokens: Vec<i32> = (0..12).map(|i| (i * 7 % 64) as i32).collect();
+        let expect = DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() }.forward(&tokens);
+        let rots = build_plan_rotations(&cfg, &hetero_plan(7)).unwrap();
+        let qp = fuse_to_dense_plan(&fp, &cfg, &rots);
+        // Layer 1 switches R1 → it must carry a basis change; layer 0 not.
+        assert!(qp.layers[0].basis_change.is_none());
+        assert!(qp.layers[1].basis_change.is_some());
+        assert!(qp.layers.iter().all(|l| l.r4.is_some()));
+        let got = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None }
+            .forward(&tokens);
+        let worst =
+            expect.iter().zip(&got).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(worst < 2e-3, "heterogeneous plan diverges by {worst}");
+    }
+
+    /// A uniform plan needs no basis transitions and shares one build.
+    #[test]
+    fn uniform_plan_dedups_and_skips_transitions() {
+        let cfg = tiny_cfg();
+        let plan = RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, 5);
+        assert!(plan.is_uniform());
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        assert_eq!(rots.distinct, 1);
+        assert!(Arc::ptr_eq(&rots.layers[0].r1, &rots.layers[1].r1));
+        let fp = random_fp(&cfg, 9);
+        let qp = fuse_to_dense_plan(&fp, &cfg, &rots);
+        assert!(qp.layers.iter().all(|l| l.basis_change.is_none()));
+    }
+
+    /// Serialize → reload → rebuild: matrices are bit-identical.
+    #[test]
+    fn plan_roundtrip_rebuilds_bit_identical_matrices() {
+        let cfg = tiny_cfg();
+        let plan = hetero_plan(2025);
+        let text = plan.to_json().to_string_pretty();
+        let reloaded = RotationPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, reloaded);
+        let a = build_plan_rotations(&cfg, &plan).unwrap();
+        let b = build_plan_rotations(&cfg, &reloaded).unwrap();
+        assert_eq!(a.r2, b.r2);
+        assert_eq!(a.r3, b.r3);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.r1.data, lb.r1.data, "r1 must rebuild bit-identically");
+            assert_eq!(la.r4.data, lb.r4.data, "r4 must rebuild bit-identically");
+            assert_eq!(la.r4_signs.as_ref(), lb.r4_signs.as_ref());
+        }
+    }
+
+    /// Plan validation catches geometry errors early with layer context.
+    #[test]
+    fn plan_validation_reports_bad_layers() {
+        let cfg = tiny_cfg();
+        let mut plan = RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, 1);
+        plan.layers[1].r1_block = 24;
+        let err = build_plan_rotations(&cfg, &plan).unwrap_err();
+        assert!(err.contains("layer 1"), "{err}");
+        plan.layers.pop();
+        assert!(plan.validate(&cfg).is_err());
+    }
+
     /// Native W2 quantization runs end-to-end and degrades gracefully.
     #[test]
     fn quantize_native_end_to_end() {
@@ -288,6 +789,21 @@ mod tests {
         let fp = random_fp(&cfg, 5);
         let rots = build_rotations(&cfg, R1Kind::GSR, R4Kind::GH, 7);
         let (qp, sse, qlinears) = quantize_native(&fp, &cfg, &rots, 2);
+        assert!(sse > 0.0);
+        assert_eq!(qlinears.len(), cfg.n_layers * LINEARS.len());
+        let tokens: Vec<i32> = (0..10).map(|i| (i % 64) as i32).collect();
+        let model = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None };
+        let logits = model.forward(&tokens);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// Heterogeneous-plan quantization runs end-to-end too.
+    #[test]
+    fn quantize_native_plan_end_to_end() {
+        let cfg = tiny_cfg();
+        let fp = random_fp(&cfg, 5);
+        let rots = build_plan_rotations(&cfg, &hetero_plan(7)).unwrap();
+        let (qp, sse, qlinears) = quantize_native_plan(&fp, &cfg, &rots, 2);
         assert!(sse > 0.0);
         assert_eq!(qlinears.len(), cfg.n_layers * LINEARS.len());
         let tokens: Vec<i32> = (0..10).map(|i| (i % 64) as i32).collect();

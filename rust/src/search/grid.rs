@@ -1,0 +1,102 @@
+//! Candidate grid for the rotation search.
+
+use crate::model::config::{ModelCfg, R4Kind};
+use crate::quant::RotationSpec;
+use crate::transform::R1Kind;
+
+/// Grid axes (CLI-tunable via `gsr search --r1/--blocks/--r4`).
+#[derive(Debug, Clone)]
+pub struct GridCfg {
+    pub r1_kinds: Vec<R1Kind>,
+    /// Local-rotation block sizes to probe. Entries that do not fit the
+    /// model geometry are dropped (never a panic — see
+    /// `transform::try_build_r1`).
+    pub blocks: Vec<usize>,
+    pub r4_kinds: Vec<R4Kind>,
+}
+
+impl Default for GridCfg {
+    fn default() -> Self {
+        Self {
+            r1_kinds: R1Kind::ALL.to_vec(),
+            blocks: vec![32, 64, 128, 256],
+            r4_kinds: vec![R4Kind::GH, R4Kind::LH],
+        }
+    }
+}
+
+/// Enumerate candidate specs: `R1Kind × block × R4Kind`, canonicalized
+/// and deduplicated (global R1 kinds collapse the block axis),
+/// geometry-invalid candidates dropped, and the fixed-GSR baseline
+/// forced to slot 0 so a searched plan can never lose to it.
+pub fn candidate_grid(cfg: &ModelCfg, grid: &GridCfg) -> Vec<RotationSpec> {
+    let mut out = vec![RotationSpec::baseline(cfg).canonical(cfg)];
+    for &r1 in &grid.r1_kinds {
+        for &block in &grid.blocks {
+            for &r4 in &grid.r4_kinds {
+                let r4_block = match r4 {
+                    R4Kind::GH => cfg.d_ffn,
+                    R4Kind::LH => cfg.group,
+                };
+                let spec = RotationSpec { r1, r1_block: block, r4, r4_block }.canonical(cfg);
+                if spec.validate(cfg).is_err() || out.contains(&spec) {
+                    continue;
+                }
+                out.push(spec);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg::default() // d_model 256, d_ffn 512, group 64
+    }
+
+    #[test]
+    fn baseline_is_first_and_unique() {
+        let grid = candidate_grid(&cfg(), &GridCfg::default());
+        let baseline = RotationSpec::baseline(&cfg());
+        assert_eq!(grid[0], baseline);
+        assert_eq!(grid.iter().filter(|&&s| s == baseline).count(), 1);
+    }
+
+    #[test]
+    fn global_kinds_collapse_block_axis() {
+        let grid = candidate_grid(&cfg(), &GridCfg::default());
+        let gh: Vec<_> = grid.iter().filter(|s| s.r1 == R1Kind::GH).collect();
+        // 4 block values collapse to one GH spec per R4 kind.
+        assert_eq!(gh.len(), 2);
+        assert!(gh.iter().all(|s| s.r1_block == cfg().d_model));
+    }
+
+    #[test]
+    fn invalid_blocks_are_dropped_not_fatal() {
+        let g = GridCfg { blocks: vec![24, 7, 512], ..GridCfg::default() };
+        let grid = candidate_grid(&cfg(), &g);
+        // No local spec survives (24/7 non-pow2 or non-divisor, 512 >
+        // d_model), but globals and the baseline do.
+        assert!(grid
+            .iter()
+            .skip(1)
+            .all(|s| !s.r1.is_local() || s.r1_block <= cfg().d_model));
+        assert!(grid.iter().any(|s| s.r1 == R1Kind::GW));
+        let locals: Vec<_> =
+            grid.iter().skip(1).filter(|s| s.r1.is_local()).collect();
+        assert!(locals.is_empty(), "invalid blocks must be filtered: {locals:?}");
+    }
+
+    #[test]
+    fn no_duplicate_specs() {
+        let grid = candidate_grid(&cfg(), &GridCfg::default());
+        for (i, a) in grid.iter().enumerate() {
+            for b in &grid[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! `gsr search` — training-free per-layer rotation auto-configuration.
+//!
+//! The paper's core claim is that rotation quality is configurable "for
+//! free": GSR's block-diagonal Walsh blocks trade outlier isolation
+//! against mixing, and the best block size is not one-size-fits-all.
+//! Related work buys per-layer adaptivity with *training* (SpinQuant's
+//! learned rotations, DartQuant's rotational distribution calibration);
+//! this subsystem recovers most of that win training-free by searching
+//! over `R1Kind × block size × R4Kind` per layer, scoring candidates by
+//! the **measured** group-RTN quantization error on that layer's actual
+//! (γ-fused) weights — the same proxy `analysis::sequency` uses for the
+//! §3.2 argument.
+//!
+//! Pipeline:
+//!
+//! 1. [`grid`] enumerates the candidate [`RotationSpec`]s (invalid
+//!    geometry dropped early, fixed-GSR baseline always kept).
+//! 2. [`objective`] scores one candidate on one layer's weights.
+//! 3. [`planner`] fans the layer × candidate cells out over a scoped
+//!    thread pool and keeps the per-layer argmin, which can never lose
+//!    to the baseline because the baseline is in every layer's grid.
+//!
+//! The result is a [`RotationPlan`] that round-trips through JSON
+//! (`rotation_plan.json`) into `gsr quantize-native --plan` and the
+//! heterogeneous fusion path in `quant::pipeline`.
+
+pub mod grid;
+pub mod objective;
+pub mod planner;
+
+pub use grid::{candidate_grid, GridCfg};
+pub use objective::{score_candidate, score_r1_group, CandidateScore, LayerWeights, Objective};
+pub use planner::{search_plan, LayerSearchResult, SearchCfg, SearchOutcome};
+
+pub use crate::quant::{RotationPlan, RotationSpec};

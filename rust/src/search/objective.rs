@@ -1,0 +1,213 @@
+//! Proxy objectives: measured group-RTN error on a layer's actual fused
+//! weights, plus the §3.2 sequency-variance diagnostic.
+//!
+//! The quantity minimized is exactly what the quantizer will see. For
+//! each candidate `(R1, block, R4)` we build the real rotation matrices
+//! (same spec-keyed seed stream as `quant::pipeline`), fuse them into
+//! the layer's weights the way `fuse_rotations_plan` does —
+//! `R1ᵀ diag(γ) W` for the stream-consuming linears, `R4ᵀ W_down R1`
+//! for the down projection — and take the element-weighted mean
+//! group-RTN MSE (`analysis::sequency::group_rtn_mse`). `wo` is skipped:
+//! its input channels see B2 (shared across candidates), so it cannot
+//! discriminate between them.
+
+use crate::analysis::sequency::{column_group_sequency_variance, group_rtn_mse};
+use crate::model::config::ModelCfg;
+use crate::model::weights::FpLayer;
+use crate::quant::pipeline::{build_r4, r1_seed, r4_seed};
+use crate::quant::RotationSpec;
+use crate::rng::SplitMix64;
+use crate::transform::{try_build_r1, Mat};
+
+/// Quantization geometry the objective measures against.
+#[derive(Debug, Clone, Copy)]
+pub struct Objective {
+    pub bits: u32,
+    /// Quantization group size (independent of the rotation block —
+    /// decoupling the two is the point of the search).
+    pub group: usize,
+    /// Seed for spec-keyed rotation builds (must match the plan seed so
+    /// the scored matrices are the ones the pipeline will build).
+    pub seed: u64,
+}
+
+/// One layer's weights in objective form.
+pub struct LayerWeights {
+    /// `diag(γ) W` for wq/wk/wv (ln1) and wgate/wup (ln2), horizontally
+    /// concatenated into `[d_model, 3d + 2f]`; quantization groups run
+    /// along the shared input-channel axis, exactly as in the fused
+    /// pipeline.
+    pub stream: Mat,
+    /// `W_down` as `[d_ffn, d_model]`.
+    pub wdown: Mat,
+}
+
+impl LayerWeights {
+    pub fn from_layer(layer: &FpLayer, cfg: &ModelCfg) -> Self {
+        let d = cfg.d_model;
+        let f = cfg.d_ffn;
+        let mut stream = Mat::zeros(d, 3 * d + 2 * f);
+        let mut col0 = 0;
+        let parts: [(&Vec<f32>, usize, &Vec<f32>); 5] = [
+            (&layer.wq, d, &layer.ln1),
+            (&layer.wk, d, &layer.ln1),
+            (&layer.wv, d, &layer.ln1),
+            (&layer.wgate, f, &layer.ln2),
+            (&layer.wup, f, &layer.ln2),
+        ];
+        for (w, h, gamma) in parts {
+            for r in 0..d {
+                let g = gamma[r] as f64;
+                for c in 0..h {
+                    stream[(r, col0 + c)] = g * w[r * h + c] as f64;
+                }
+            }
+            col0 += h;
+        }
+        let wdown = Mat {
+            data: layer.wdown.iter().map(|&v| v as f64).collect(),
+            rows: f,
+            cols: d,
+        };
+        Self { stream, wdown }
+    }
+}
+
+/// Score of one candidate on one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateScore {
+    pub spec: RotationSpec,
+    /// Element-weighted mean group-RTN MSE over all scored fused weights.
+    pub quant_mse: f64,
+    /// Mean intra-group column-sequency variance of the candidate R1
+    /// (diagnostic; reported, not optimized).
+    pub seq_variance: f64,
+}
+
+/// Score a group of candidates sharing one canonical `(r1, r1_block)`:
+/// the R1-dependent work (rotation build, stream rotation + MSE,
+/// sequency variance — the dominant cost) is done **once**; each spec
+/// adds only its R4 term. R1 builds are seeded by `r1_seed`, which keys
+/// on `(r1, r1_block)` alone, so the shared matrix is exactly the one
+/// the pipeline will build for every spec in the group. Geometry errors
+/// come back as per-spec `Err` (the planner counts them as skipped).
+pub fn score_r1_group(
+    specs: &[RotationSpec],
+    lw: &LayerWeights,
+    cfg: &ModelCfg,
+    obj: &Objective,
+) -> Vec<Result<CandidateScore, String>> {
+    let key0 = match specs.first() {
+        Some(s) => s.canonical(cfg),
+        None => return Vec::new(),
+    };
+    let shared = (|| -> Result<(Mat, f64, f64), String> {
+        let mut rng = SplitMix64::new(r1_seed(&key0, obj.seed));
+        let r1 = try_build_r1(key0.r1, cfg.d_model, key0.r1_block, &mut rng)?;
+        let rotated_stream = r1.transpose().matmul(&lw.stream);
+        let mse_s = group_rtn_mse(&rotated_stream, obj.group, obj.bits);
+        let vars = column_group_sequency_variance(&r1, obj.group)?;
+        let seq_variance = vars.iter().sum::<f64>() / vars.len() as f64;
+        Ok((r1, mse_s, seq_variance))
+    })();
+    let (r1, mse_s, seq_variance) = match shared {
+        Ok(v) => v,
+        Err(e) => return specs.iter().map(|_| Err(e.clone())).collect(),
+    };
+    specs
+        .iter()
+        .map(|spec| {
+            spec.validate(cfg)?;
+            let key = spec.canonical(cfg);
+            debug_assert_eq!(
+                (key.r1, key.r1_block),
+                (key0.r1, key0.r1_block),
+                "score_r1_group specs must share one canonical R1"
+            );
+            let mut rng = SplitMix64::new(r4_seed(&key, obj.seed));
+            let (r4, _signs) = build_r4(cfg, key.r4, key.r4_block, &mut rng)?;
+            let rotated_down = r4.transpose().matmul(&lw.wdown).matmul(&r1);
+            let mse_d = group_rtn_mse(&rotated_down, obj.group, obj.bits);
+            let (ns, nd) = (lw.stream.data.len() as f64, lw.wdown.data.len() as f64);
+            let quant_mse = (mse_s * ns + mse_d * nd) / (ns + nd);
+            Ok(CandidateScore { spec: key, quant_mse, seq_variance })
+        })
+        .collect()
+}
+
+/// Measure one candidate on one layer's actual weights (singleton form
+/// of [`score_r1_group`]).
+pub fn score_candidate(
+    spec: &RotationSpec,
+    lw: &LayerWeights,
+    cfg: &ModelCfg,
+    obj: &Objective,
+) -> Result<CandidateScore, String> {
+    spec.validate(cfg)?;
+    score_r1_group(std::slice::from_ref(spec), lw, cfg, obj)
+        .pop()
+        .expect("singleton group yields one score")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::R4Kind;
+    use crate::model::weights::FpParams;
+    use crate::transform::R1Kind;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 64,
+            group: 16,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn stream_concat_carries_gamma() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 3);
+        let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let d = cfg.d_model;
+        assert_eq!((lw.stream.rows, lw.stream.cols), (d, 3 * d + 2 * cfg.d_ffn));
+        // First block is diag(ln1) · wq.
+        let g0 = fp.layers[0].ln1[0] as f64;
+        let expect = g0 * fp.layers[0].wq[0] as f64;
+        assert!((lw.stream[(0, 0)] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scoring_is_deterministic_and_finite() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 5);
+        let lw = LayerWeights::from_layer(&fp.layers[1], &cfg);
+        let obj = Objective { bits: 2, group: cfg.group, seed: 9 };
+        let spec = RotationSpec::baseline(&cfg);
+        let a = score_candidate(&spec, &lw, &cfg, &obj).unwrap();
+        let b = score_candidate(&spec, &lw, &cfg, &obj).unwrap();
+        assert_eq!(a.quant_mse.to_bits(), b.quant_mse.to_bits());
+        assert!(a.quant_mse.is_finite() && a.quant_mse > 0.0);
+        assert!(a.seq_variance.is_finite());
+    }
+
+    #[test]
+    fn bad_geometry_is_an_error_not_a_panic() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 5);
+        let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let obj = Objective { bits: 2, group: cfg.group, seed: 9 };
+        let bad = RotationSpec {
+            r1: R1Kind::GSR,
+            r1_block: 24,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+        };
+        assert!(score_candidate(&bad, &lw, &cfg, &obj).is_err());
+    }
+}

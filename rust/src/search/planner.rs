@@ -1,0 +1,281 @@
+//! Parallel greedy planner.
+//!
+//! Per layer, the candidate grid is embarrassingly parallel: each
+//! `(layer, candidate)` cell builds its rotations, fuses them into the
+//! layer's weights and measures group-RTN error independently. The
+//! planner flattens the cells into one work list, fans it out over
+//! `std::thread::scope` workers, then reduces each layer to its argmin.
+//! The fixed-GSR baseline occupies grid slot 0, so the searched plan is
+//! ≤ the baseline on **every** layer by construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use std::collections::BTreeMap;
+
+use super::grid::{candidate_grid, GridCfg};
+use super::objective::{score_r1_group, CandidateScore, LayerWeights, Objective};
+use crate::model::config::ModelCfg;
+use crate::model::weights::FpParams;
+use crate::quant::{RotationPlan, RotationSpec};
+use crate::transform::R1Kind;
+
+/// Search configuration (`gsr search` flags map 1:1 onto this).
+#[derive(Debug, Clone)]
+pub struct SearchCfg {
+    pub grid: GridCfg,
+    /// Weight bits of the proxy quantizer.
+    pub bits: u32,
+    /// Max candidates evaluated per layer (0 = whole grid). The
+    /// baseline always stays inside the budget.
+    pub budget: usize,
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+    /// Seed for the spec-keyed rotation builds, recorded in the plan.
+    pub seed: u64,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        Self { grid: GridCfg::default(), bits: 2, budget: 0, threads: 0, seed: 2025 }
+    }
+}
+
+/// Resolve a `--threads` request: 0 means one worker per available
+/// core. One policy, one place — shared with `Args::opt_threads`.
+pub use crate::config::cli::resolve_threads;
+
+/// Outcome for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSearchResult {
+    pub layer: usize,
+    pub best: CandidateScore,
+    /// The fixed-GSR reference, measured on the same weights.
+    pub baseline: CandidateScore,
+    /// Candidates successfully scored.
+    pub evaluated: usize,
+    /// Candidates that failed geometry checks (skipped, not fatal).
+    pub skipped: usize,
+}
+
+/// Full search outcome: the plan plus per-layer diagnostics.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub plan: RotationPlan,
+    pub layers: Vec<LayerSearchResult>,
+}
+
+impl SearchOutcome {
+    /// Layers where the searched spec is *strictly* better.
+    pub fn improved_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.best.quant_mse < l.baseline.quant_mse).count()
+    }
+
+    pub fn mean_mse(&self) -> f64 {
+        self.layers.iter().map(|l| l.best.quant_mse).sum::<f64>()
+            / self.layers.len().max(1) as f64
+    }
+
+    pub fn mean_baseline_mse(&self) -> f64 {
+        self.layers.iter().map(|l| l.baseline.quant_mse).sum::<f64>()
+            / self.layers.len().max(1) as f64
+    }
+}
+
+/// Search a per-layer rotation plan for `fp`, minimizing measured
+/// group-RTN quantization error layer by layer.
+pub fn search_plan(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    scfg: &SearchCfg,
+) -> Result<SearchOutcome, String> {
+    let mut candidates = candidate_grid(cfg, &scfg.grid);
+    if candidates.is_empty() {
+        return Err("empty candidate grid".to_string());
+    }
+    if scfg.budget > 0 && candidates.len() > scfg.budget {
+        candidates.truncate(scfg.budget); // baseline is slot 0, never cut
+    }
+    let obj = Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed };
+    let layer_weights: Vec<LayerWeights> =
+        fp.layers.iter().map(|l| LayerWeights::from_layer(l, cfg)).collect();
+    if layer_weights.is_empty() {
+        return Err("model has no layers to search".to_string());
+    }
+
+    // Group candidates by canonical (r1, r1_block), preserving grid
+    // order (the baseline sits in group 0, slot 0): R4 variants inside
+    // a group share the dominant R1-side scoring work.
+    let mut groups: Vec<Vec<RotationSpec>> = Vec::new();
+    {
+        let mut index: BTreeMap<(R1Kind, usize), usize> = BTreeMap::new();
+        for &spec in &candidates {
+            let key = spec.canonical(cfg);
+            match index.get(&(key.r1, key.r1_block)).copied() {
+                Some(i) => groups[i].push(spec),
+                None => {
+                    index.insert((key.r1, key.r1_block), groups.len());
+                    groups.push(vec![spec]);
+                }
+            }
+        }
+    }
+
+    // One (layer, r1-group) cell per work item.
+    let work: Vec<(usize, usize)> = (0..layer_weights.len())
+        .flat_map(|l| (0..groups.len()).map(move |g| (l, g)))
+        .collect();
+    let cursor = AtomicUsize::new(0);
+    let cells: Mutex<Vec<Option<Vec<Result<CandidateScore, String>>>>> =
+        Mutex::new(vec![None; work.len()]);
+    let n_threads = resolve_threads(scfg.threads).min(work.len());
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (l, g) = work[i];
+                let scores = score_r1_group(&groups[g], &layer_weights[l], cfg, &obj);
+                cells.lock().unwrap()[i] = Some(scores);
+            });
+        }
+    });
+    // A worker panic propagates out of thread::scope before this line,
+    // so poisoning cannot actually be observed here.
+    let cells = cells.into_inner().unwrap_or_else(|p| p.into_inner());
+
+    // Reduce: per-layer argmin; the baseline (grid slot 0) seeds `best`,
+    // so on exact ties the plan keeps the paper-default spec.
+    let baseline_key = candidates[0].canonical(cfg);
+    let n_groups = groups.len();
+    let mut layers = Vec::with_capacity(layer_weights.len());
+    let mut specs = Vec::with_capacity(layer_weights.len());
+    for l in 0..layer_weights.len() {
+        let mut flat: Vec<CandidateScore> = Vec::with_capacity(candidates.len());
+        let (mut evaluated, mut skipped) = (0usize, 0usize);
+        for g in 0..n_groups {
+            match &cells[l * n_groups + g] {
+                None => skipped += groups[g].len(),
+                Some(scores) => {
+                    for sc in scores {
+                        match sc {
+                            Ok(s) => {
+                                evaluated += 1;
+                                flat.push(*s);
+                            }
+                            Err(_) => skipped += 1,
+                        }
+                    }
+                }
+            }
+        }
+        let baseline = flat
+            .iter()
+            .find(|s| s.spec == baseline_key)
+            .copied()
+            .ok_or_else(|| format!("baseline not scored on layer {l}"))?;
+        let mut best = baseline;
+        for s in &flat {
+            if s.quant_mse < best.quant_mse {
+                best = *s;
+            }
+        }
+        specs.push(best.spec);
+        layers.push(LayerSearchResult { layer: l, best, baseline, evaluated, skipped });
+    }
+    Ok(SearchOutcome { plan: RotationPlan { seed: scfg.seed, layers: specs }, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::R4Kind;
+    use crate::quant::build_plan_rotations;
+    use crate::transform::R1Kind;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 3,
+            n_heads: 2,
+            d_ffn: 64,
+            group: 16,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn tiny_grid() -> GridCfg {
+        GridCfg {
+            r1_kinds: R1Kind::ALL.to_vec(),
+            blocks: vec![4, 8, 16, 32],
+            r4_kinds: vec![R4Kind::GH, R4Kind::LH],
+        }
+    }
+
+    /// The acceptance property: per-layer MSE ≤ the fixed-GSR baseline
+    /// everywhere, and the emitted plan is valid/buildable.
+    #[test]
+    fn searched_plan_never_loses_to_baseline() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 11);
+        let scfg = SearchCfg { grid: tiny_grid(), threads: 2, ..SearchCfg::default() };
+        let out = search_plan(&fp, &cfg, &scfg).unwrap();
+        assert_eq!(out.plan.layers.len(), cfg.n_layers);
+        for l in &out.layers {
+            assert!(
+                l.best.quant_mse <= l.baseline.quant_mse,
+                "layer {}: searched {} > baseline {}",
+                l.layer,
+                l.best.quant_mse,
+                l.baseline.quant_mse
+            );
+            assert!(l.evaluated > 1, "grid must actually be explored");
+        }
+        assert!(out.mean_mse() <= out.mean_baseline_mse());
+        build_plan_rotations(&cfg, &out.plan).expect("searched plan must build");
+    }
+
+    /// With outlier-structured weights the search finds a strict win on
+    /// at least one layer (the headline claim of the subsystem). Checked
+    /// across a few checkpoints so the property, not one lucky draw, is
+    /// what's asserted.
+    #[test]
+    fn search_strictly_improves_somewhere_on_structured_weights() {
+        let cfg = tiny_cfg();
+        let scfg = SearchCfg { grid: tiny_grid(), threads: 0, ..SearchCfg::default() };
+        let improved = [42u64, 43, 44].iter().any(|&s| {
+            let fp = FpParams::synthetic(&cfg, s);
+            search_plan(&fp, &cfg, &scfg).unwrap().improved_layers() >= 1
+        });
+        assert!(improved, "no strict improvement on any of three structured checkpoints");
+    }
+
+    /// Budget 1 degenerates to the baseline plan.
+    #[test]
+    fn budget_one_degenerates_to_baseline() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 7);
+        let scfg =
+            SearchCfg { grid: tiny_grid(), budget: 1, threads: 1, ..SearchCfg::default() };
+        let out = search_plan(&fp, &cfg, &scfg).unwrap();
+        let baseline = RotationSpec::baseline(&cfg).canonical(&cfg);
+        assert!(out.plan.layers.iter().all(|&s| s == baseline));
+        assert_eq!(out.improved_layers(), 0);
+    }
+
+    /// Thread count must not change the outcome (determinism).
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 13);
+        let mk = |threads| {
+            let scfg = SearchCfg { grid: tiny_grid(), threads, ..SearchCfg::default() };
+            search_plan(&fp, &cfg, &scfg).unwrap().plan
+        };
+        assert_eq!(mk(1), mk(4));
+    }
+}

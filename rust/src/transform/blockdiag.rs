@@ -1,10 +1,10 @@
 //! Local (block-diagonal) rotations and the paper's R1 variant builder.
 
-use super::{rht, walsh, Mat};
+use super::{is_pow2, rht, try_walsh, Mat};
 use crate::rng::SplitMix64;
 
 /// The four R1 configurations compared in Table 1.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum R1Kind {
     /// Global randomized Hadamard (QuaRot default).
     GH,
@@ -51,11 +51,15 @@ impl std::fmt::Display for R1Kind {
     }
 }
 
-/// `I_{n/G} ⊗ block` — the paper's Eq. 3 structure.
-pub fn block_diag(block: &Mat, n: usize) -> Mat {
+/// Fallible `I_{n/G} ⊗ block` constructor (see [`block_diag`]).
+pub fn try_block_diag(block: &Mat, n: usize) -> Result<Mat, String> {
     let g = block.rows;
-    assert_eq!(block.rows, block.cols, "block must be square");
-    assert_eq!(n % g, 0, "group size {g} must divide dimension {n}");
+    if block.rows != block.cols {
+        return Err(format!("block must be square, got {}×{}", block.rows, block.cols));
+    }
+    if g == 0 || n % g != 0 {
+        return Err(format!("block size {g} must divide dimension {n}"));
+    }
     let mut out = Mat::zeros(n, n);
     for b in 0..n / g {
         for r in 0..g {
@@ -64,22 +68,66 @@ pub fn block_diag(block: &Mat, n: usize) -> Mat {
             }
         }
     }
-    out
+    Ok(out)
 }
 
-/// Build an R1 rotation of size `n` with quantization group `group`.
-pub fn build_r1(kind: R1Kind, n: usize, group: usize, rng: &mut SplitMix64) -> Mat {
-    match kind {
-        R1Kind::GH => rht(n, rng),
-        R1Kind::GW => walsh(n),
-        R1Kind::LH => block_diag(&rht(group, rng), n),
-        R1Kind::GSR => block_diag(&walsh(group), n),
+/// `I_{n/G} ⊗ block` — the paper's Eq. 3 structure. Panics on invalid
+/// geometry; use [`try_block_diag`] where the sizes are untrusted.
+pub fn block_diag(block: &Mat, n: usize) -> Mat {
+    try_block_diag(block, n).unwrap_or_else(|e| panic!("{e}"))
+}
+
+fn validate_block(n: usize, block: usize) -> Result<(), String> {
+    if !is_pow2(block) {
+        return Err(format!("rotation block size must be a power of two, got {block}"));
     }
+    if block > n || n % block != 0 {
+        return Err(format!("rotation block size {block} must divide dimension {n}"));
+    }
+    Ok(())
+}
+
+/// Fallible R1 builder with an explicit local-rotation `block` size,
+/// decoupled from the quantization group. Global kinds (GH/GW) ignore
+/// `block` and validate `n` instead. This is the entry point the
+/// `gsr search` candidate grid uses: invalid (kind, n, block)
+/// combinations come back as `Err` early, never as a deep panic.
+pub fn try_build_r1(
+    kind: R1Kind,
+    n: usize,
+    block: usize,
+    rng: &mut SplitMix64,
+) -> Result<Mat, String> {
+    match kind {
+        R1Kind::GH => {
+            if !is_pow2(n) {
+                return Err(format!("global rotation needs power-of-two dimension, got {n}"));
+            }
+            Ok(rht(n, rng))
+        }
+        R1Kind::GW => try_walsh(n),
+        R1Kind::LH => {
+            validate_block(n, block)?;
+            try_block_diag(&rht(block, rng), n)
+        }
+        R1Kind::GSR => {
+            validate_block(n, block)?;
+            try_block_diag(&try_walsh(block)?, n)
+        }
+    }
+}
+
+/// Build an R1 rotation of size `n` with local block = quantization
+/// group `group` (the paper's fixed configuration). Panics on invalid
+/// geometry; use [`try_build_r1`] for searched/untrusted block sizes.
+pub fn build_r1(kind: R1Kind, n: usize, group: usize, rng: &mut SplitMix64) -> Mat {
+    try_build_r1(kind, n, group, rng).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transform::walsh;
 
     #[test]
     fn block_diag_structure() {
@@ -124,5 +172,36 @@ mod tests {
             assert_eq!(R1Kind::parse(kind.as_str()), Some(kind));
         }
         assert_eq!(R1Kind::parse("nope"), None);
+    }
+
+    #[test]
+    fn try_build_r1_block_independent_of_group() {
+        // The block size is a free knob for local kinds: same n, three
+        // different blocks, all orthonormal, all block-diagonal.
+        for block in [16usize, 32, 64] {
+            let mut rng = SplitMix64::new(3);
+            let m = try_build_r1(R1Kind::GSR, 128, block, &mut rng).unwrap();
+            assert!(m.orthogonality_defect() < 1e-9);
+            for r in 0..128 {
+                for c in 0..128 {
+                    if r / block != c / block {
+                        assert_eq!(m[(r, c)], 0.0, "block={block} ({r},{c})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn try_build_r1_rejects_bad_geometry_without_panicking() {
+        let mut rng = SplitMix64::new(1);
+        // Non-power-of-two block.
+        let err = try_build_r1(R1Kind::GSR, 128, 24, &mut rng).unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
+        // Power-of-two block that exceeds the dimension.
+        assert!(try_build_r1(R1Kind::LH, 64, 128, &mut rng).is_err());
+        // Global kind with a non-power-of-two dimension.
+        assert!(try_build_r1(R1Kind::GW, 96, 32, &mut rng).is_err());
+        assert!(try_build_r1(R1Kind::GH, 96, 32, &mut rng).is_err());
     }
 }

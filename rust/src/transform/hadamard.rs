@@ -2,18 +2,28 @@
 
 use super::{is_pow2, Mat};
 
+/// Fallible Hadamard constructor: explicit, early error for invalid
+/// sizes instead of a deep panic — the `gsr search` grid probes
+/// arbitrary block sizes and must survive the invalid ones.
+pub fn try_hadamard(n: usize) -> Result<Mat, String> {
+    if !is_pow2(n) {
+        return Err(format!("Hadamard size must be a power of two, got {n}"));
+    }
+    let scale = 1.0 / (n as f64).sqrt();
+    Ok(Mat::from_fn(n, n, |i, j| {
+        let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+        sign * scale
+    }))
+}
+
 /// Orthonormal Sylvester Hadamard matrix of size `n` (power of two).
 ///
 /// Natural (Hadamard) ordering: `H_{2^k} = H_2 ⊗ H_{2^{k-1}}`. Entry
 /// `(i, j)` is `(-1)^{popcount(i & j)} / sqrt(n)` — the closed form of
-/// the recursive doubling, used directly here.
+/// the recursive doubling, used directly here. Panics on invalid sizes;
+/// use [`try_hadamard`] where the size is untrusted.
 pub fn hadamard(n: usize) -> Mat {
-    assert!(is_pow2(n), "Hadamard size must be a power of two, got {n}");
-    let scale = 1.0 / (n as f64).sqrt();
-    Mat::from_fn(n, n, |i, j| {
-        let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
-        sign * scale
-    })
+    try_hadamard(n).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
@@ -52,5 +62,13 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn rejects_non_pow2() {
         hadamard(12);
+    }
+
+    #[test]
+    fn try_constructor_errors_early_on_bad_sizes() {
+        let err = try_hadamard(12).unwrap_err();
+        assert!(err.contains("power of two") && err.contains("12"), "{err}");
+        assert!(try_hadamard(0).is_err());
+        assert!(try_hadamard(64).is_ok());
     }
 }

@@ -13,12 +13,12 @@ pub mod rht;
 pub mod sequency;
 pub mod walsh;
 
-pub use blockdiag::{block_diag, build_r1, R1Kind};
+pub use blockdiag::{block_diag, build_r1, try_block_diag, try_build_r1, R1Kind};
 pub use fwht::{fwht, fwht_batch, grouped_fwht, grouped_fwht_batch};
-pub use hadamard::hadamard;
+pub use hadamard::{hadamard, try_hadamard};
 pub use rht::rht;
 pub use sequency::{sequency_of_natural_row, sequency_of_row, walsh_permutation};
-pub use walsh::walsh;
+pub use walsh::{try_walsh, walsh};
 
 /// Dense row-major f64 matrix — small build/analysis-time object
 /// (rotation matrices are at most `d_ffn × d_ffn` here).

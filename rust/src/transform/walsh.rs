@@ -1,6 +1,18 @@
 //! Walsh (sequency-ordered Hadamard) matrices — the paper's key object.
 
-use super::{hadamard, sequency::walsh_permutation, Mat};
+use super::{hadamard::try_hadamard, sequency::walsh_permutation, Mat};
+
+/// Fallible Walsh constructor — explicit early error for non-power-of-
+/// two sizes (see [`try_hadamard`]).
+pub fn try_walsh(n: usize) -> Result<Mat, String> {
+    let h = try_hadamard(n)?;
+    let perm = walsh_permutation(n);
+    let mut w = Mat::zeros(n, n);
+    for (dst, &src) in perm.iter().enumerate() {
+        w.row_mut(dst).copy_from_slice(h.row(src));
+    }
+    Ok(w)
+}
 
 /// Orthonormal Walsh matrix: the Sylvester Hadamard rows re-ordered to
 /// ascending sequency. Row `i` has exactly `i` sign flips.
@@ -9,19 +21,15 @@ use super::{hadamard, sequency::walsh_permutation, Mat};
 /// set as the Hadamard matrix, but the arrangement clusters similar
 /// "frequencies" so each column group of the front rotation applies
 /// filters with low intra-group sequency variance (paper §3.2).
+/// Panics on invalid sizes; use [`try_walsh`] where the size is untrusted.
 pub fn walsh(n: usize) -> Mat {
-    let h = hadamard(n);
-    let perm = walsh_permutation(n);
-    let mut w = Mat::zeros(n, n);
-    for (dst, &src) in perm.iter().enumerate() {
-        w.row_mut(dst).copy_from_slice(h.row(src));
-    }
-    w
+    try_walsh(n).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transform::hadamard::hadamard;
     use crate::transform::sequency::sequency_of_row;
 
     #[test]
@@ -55,6 +63,13 @@ mod tests {
             });
             assert!(found, "walsh row {i} not found in hadamard rows");
         }
+    }
+
+    #[test]
+    fn try_constructor_errors_on_non_pow2() {
+        let err = try_walsh(24).unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
+        assert!(try_walsh(32).is_ok());
     }
 
     #[test]

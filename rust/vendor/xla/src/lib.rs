@@ -1,0 +1,132 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real dependency (PJRT CPU client over the XLA C API) cannot be
+//! vendored into this offline image. This stub mirrors the exact API
+//! surface `gsr::runtime` consumes so the whole workspace — library,
+//! CLI, tests, benches — builds and runs without it. Every runtime
+//! entry point fails fast with a clear error instead of crashing, and
+//! callers that guard on artifact presence (tests, benches) skip
+//! cleanly. Point the `xla` path dependency in `rust/Cargo.toml` at the
+//! real crate to restore the hardware path; no `gsr` source changes are
+//! needed.
+
+use std::fmt;
+
+/// Displayable error matching how `gsr::runtime` formats failures.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this offline build (xla stub); \
+         swap rust/vendor/xla for the real `xla` crate to enable the runtime path"
+    ))
+}
+
+/// Element types uploadable to device buffers.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for u8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// PJRT client handle. The stub cannot construct one, which keeps every
+/// downstream method unreachable in practice (they still compile and
+/// fail fast if reached).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// Host-side literal (tensor) handle.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("to_tuple1"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("to_vec"))
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        let msg = err.to_string();
+        assert!(msg.contains("offline"), "unhelpful stub error: {msg}");
+    }
+}

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command: build, test, lint.
+#
+#   ./scripts/check.sh
+#
+# Runs from any working directory. Clippy is skipped (with a notice) on
+# toolchains that don't ship it.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy unavailable on this toolchain — skipped"
+fi
+
+echo "OK"
