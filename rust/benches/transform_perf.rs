@@ -7,9 +7,59 @@
 mod common;
 
 use gsr::rng::SplitMix64;
-use gsr::transform::{build_r1, fwht_batch, grouped_fwht_batch, R1Kind};
+use gsr::transform::{build_r1, fwht_batch, grouped_fwht_batch, Mat, R1Kind};
+
+/// The pre-PR 3 `Mat::matmul` (straight ikj walk, no tiling) — kept here
+/// as the reference the cache-blocked fast path is measured against.
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a[(i, k)];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            let orow = out.row_mut(i);
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Dense matmul: blocked fast path vs the naive reference. These sizes
+/// bracket the products that dominate `gsr search` (`R1ᵀ · stream` at
+/// `d × (3d + 2f)`) and `gsr calibrate` (`R H Rᵀ` at `d_ffn × d_ffn`).
+fn bench_matmul() {
+    let mut rng = SplitMix64::new(7);
+    // Correctness cross-check before timing anything.
+    let a = Mat::from_fn(96, 80, |_, _| rng.next_normal());
+    let b = Mat::from_fn(80, 112, |_, _| rng.next_normal());
+    let (fast, slow) = (a.matmul(&b), naive_matmul(&a, &b));
+    for (x, y) in fast.data.iter().zip(&slow.data) {
+        assert!((x - y).abs() < 1e-10, "blocked matmul diverges from naive");
+    }
+
+    for n in [256usize, 512, 1024] {
+        let a = Mat::from_fn(n, n, |_, _| rng.next_normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.next_normal());
+        let naive = common::time_it(&format!("naive matmul   n={n}"), 1, 3, || {
+            naive_matmul(&a, &b)
+        });
+        let blocked =
+            common::time_it(&format!("blocked matmul n={n}"), 1, 3, || a.matmul(&b));
+        println!(
+            "  speedup: blocked {:.2}x over naive\n",
+            naive.as_secs_f64() / blocked.as_secs_f64()
+        );
+    }
+}
 
 fn main() {
+    bench_matmul();
     let rows = 256;
     for n in [256usize, 512, 1024, 2048] {
         let group = 64;

@@ -7,5 +7,5 @@ pub mod sequency;
 pub use outliers::{outlier_spread, OutlierSpread};
 pub use sequency::{
     column_group_sequency_variance, group_quant_error_by_rotation, group_rtn_mse,
-    rotated_group_rtn_mse, sequency_variance_report, SequencyReport,
+    group_rtn_mse_weighted, rotated_group_rtn_mse, sequency_variance_report, SequencyReport,
 };

@@ -57,6 +57,38 @@ pub fn group_rtn_mse(w: &Mat, group: usize, bits: u32) -> f64 {
     rtn_quantize(w, bits, group, true).mse(w)
 }
 
+/// diag(H)-weighted group-RTN MSE: each row's squared error is weighted
+/// by that input channel's calibration energy `row_weights[r]`
+/// (diagonal of the activation Hessian in the same basis as `w`), so
+/// the proxy tracks `‖X ΔW‖²` instead of `‖ΔW‖²`. Weights are
+/// normalized internally — uniform weights reproduce [`group_rtn_mse`]
+/// exactly, and an all-zero weight vector falls back to it.
+pub fn group_rtn_mse_weighted(w: &Mat, group: usize, bits: u32, row_weights: &[f64]) -> f64 {
+    assert_eq!(row_weights.len(), w.rows, "one weight per input channel");
+    let q = rtn_quantize(w, bits, group, true);
+    let deq = q.dequant();
+    let mut num = 0.0;
+    let mut wsum = 0.0;
+    for r in 0..w.rows {
+        let wt = row_weights[r].max(0.0);
+        wsum += wt;
+        if wt == 0.0 {
+            continue;
+        }
+        let sse: f64 = deq
+            .row(r)
+            .iter()
+            .zip(w.row(r))
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        num += wt * sse;
+    }
+    if wsum <= 0.0 {
+        return group_rtn_mse(w, group, bits);
+    }
+    num / (wsum * w.cols as f64)
+}
+
 /// Group-RTN MSE of `R1ᵀ W` for a given rotation matrix.
 pub fn rotated_group_rtn_mse(w: &Mat, r1: &Mat, group: usize, bits: u32) -> f64 {
     let rotated = r1.transpose().matmul(w);
@@ -180,6 +212,52 @@ mod tests {
     fn report_covers_all_kinds() {
         let reports = sequency_variance_report(128, 32, 16, 2, 9);
         assert_eq!(reports.len(), 4);
+    }
+
+    #[test]
+    fn weighted_mse_reduces_to_unweighted_on_uniform_weights() {
+        let w = structured_weight(64, 16, 11);
+        let plain = group_rtn_mse(&w, 16, 2);
+        let uniform = group_rtn_mse_weighted(&w, 16, 2, &[3.5; 64]);
+        assert!((plain - uniform).abs() < 1e-12, "{plain} vs {uniform}");
+        // Degenerate all-zero weights fall back instead of dividing by 0.
+        let zero = group_rtn_mse_weighted(&w, 16, 2, &[0.0; 64]);
+        assert!((plain - zero).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_mse_tracks_where_the_energy_is() {
+        // Put all calibration energy on the rows where quantization is
+        // accurate vs where it is bad: the weighted numbers must differ
+        // and order accordingly.
+        let w = structured_weight(64, 16, 13);
+        let q = rtn_quantize(&w, 2, 16, true);
+        let deq = q.dequant();
+        let row_sse: Vec<f64> = (0..64)
+            .map(|r| {
+                deq.row(r)
+                    .iter()
+                    .zip(w.row(r))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..64).collect();
+        order.sort_by(|&a, &b| row_sse[a].total_cmp(&row_sse[b]));
+        let mut on_best = vec![0.0; 64];
+        let mut on_worst = vec![0.0; 64];
+        for &r in &order[..8] {
+            on_best[r] = 1.0;
+        }
+        for &r in &order[56..] {
+            on_worst[r] = 1.0;
+        }
+        let best = group_rtn_mse_weighted(&w, 16, 2, &on_best);
+        let worst = group_rtn_mse_weighted(&w, 16, 2, &on_worst);
+        assert!(
+            best < worst,
+            "weighting must follow activation energy: {best} !< {worst}"
+        );
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Streaming activation capture: corpus sequences → per-linear Hessians.
+//!
+//! Runs the native rotated forward (`model::forward::forward_quant_tapped`)
+//! over calibration sequences with taps at every linear's input and
+//! accumulates `XᵀX` into mergeable per-thread partials. The fan-out
+//! mirrors the search planner's worker model (`std::thread::scope` over
+//! an atomic cursor), but the unit of work is a **partial**, not a
+//! sequence: partial `p` owns sequences `p, p + N, p + 2N, …` for a
+//! fixed partial count `N`, and partials merge in index order — so the
+//! captured Hessians are bit-identical for any `--threads` value.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::hessian::{CaptureKey, HessianSet};
+use crate::config::cli::resolve_threads;
+use crate::model::config::ModelCfg;
+use crate::model::forward::{forward_quant_tapped, ActivationTap, TapSite};
+use crate::model::weights::QuantParams;
+
+/// Calibration knobs (`gsr calibrate` flags map 1:1 onto this).
+#[derive(Debug, Clone, Copy)]
+pub struct CalibCfg {
+    /// Number of corpus sequences to stream.
+    pub n_seqs: usize,
+    /// Tokens per sequence.
+    pub seq_len: usize,
+    /// Seed for drawing sequence offsets (recorded in the artifact).
+    pub seed: u64,
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl Default for CalibCfg {
+    fn default() -> Self {
+        Self { n_seqs: 32, seq_len: 64, seed: 0xCA11B, threads: 0 }
+    }
+}
+
+/// Number of mergeable partials, fixed independently of the worker
+/// count so the merged result does not depend on `--threads`.
+const N_PARTIALS: usize = 8;
+
+/// Tap that accumulates every recorded activation row into a partial
+/// [`HessianSet`].
+struct SetTap<'a> {
+    set: &'a mut HessianSet,
+}
+
+impl ActivationTap for SetTap<'_> {
+    fn record(&mut self, layer: usize, site: TapSite, rows: &[f32], width: usize) {
+        let acc = self.set.layers[layer].site_mut(site);
+        for row in rows.chunks(width) {
+            acc.add_row(row);
+        }
+    }
+}
+
+/// Stream `seqs` through the fused rotated forward of `params` and
+/// accumulate per-linear input Hessians.
+///
+/// `params` should be the **exact-dense** fusion (`fuse_to_dense` /
+/// `fuse_to_dense_plan`) of the checkpoint named by
+/// `key.checkpoint_fingerprint`, under the rotation basis named by
+/// `key.basis_fingerprint`: with no fake-quant in the loop the tapped
+/// activations are exactly the rotated-basis fp activations.
+pub fn capture_hessians(
+    cfg: &ModelCfg,
+    params: &QuantParams,
+    seqs: &[Vec<i32>],
+    threads: usize,
+    key: &CaptureKey,
+) -> HessianSet {
+    let n_partials = N_PARTIALS.min(seqs.len()).max(1);
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<HessianSet>>> = Mutex::new((0..n_partials).map(|_| None).collect());
+    let n_threads = resolve_threads(threads).min(n_partials);
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let p = cursor.fetch_add(1, Ordering::Relaxed);
+                if p >= n_partials {
+                    break;
+                }
+                let mut part = HessianSet::new(cfg, key);
+                let mut idx = p;
+                while idx < seqs.len() {
+                    let seq = &seqs[idx];
+                    if !seq.is_empty() {
+                        let mut tap = SetTap { set: &mut part };
+                        let _ = forward_quant_tapped(cfg, params, None, seq, &mut tap);
+                        part.tokens += seq.len() as u64;
+                    }
+                    idx += n_partials;
+                }
+                slots.lock().unwrap()[p] = Some(part);
+            });
+        }
+    });
+    // A worker panic propagates out of thread::scope before this line.
+    let slots = slots.into_inner().unwrap_or_else(|p| p.into_inner());
+    let mut out = HessianSet::new(cfg, key);
+    for part in slots.into_iter().flatten() {
+        out.merge(&part);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::draw_token_windows;
+    use crate::model::weights::FpParams;
+    use crate::quant::{build_plan_rotations, fuse_to_dense_plan, RotationPlan, RotationSpec};
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 64,
+            group: 16,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn captured_set(cfg: &ModelCfg, threads: usize) -> HessianSet {
+        let fp = FpParams::synthetic(cfg, 3);
+        let plan = RotationPlan::uniform(RotationSpec::baseline(cfg), cfg.n_layers, 11);
+        let rots = build_plan_rotations(cfg, &plan).unwrap();
+        let params = fuse_to_dense_plan(&fp, cfg, &rots);
+        let corpus = crate::data::CorpusGenerator::new(5).generate(2048);
+        let seqs = draw_token_windows(&corpus, 6, 12, cfg.vocab, 9);
+        let key = CaptureKey {
+            calib_seed: 9,
+            basis_fingerprint: plan.fingerprint(),
+            checkpoint_fingerprint: crate::calib::checkpoint_fingerprint(&fp),
+            plan_json: String::new(),
+        };
+        capture_hessians(cfg, &params, &seqs, threads, &key)
+    }
+
+    #[test]
+    fn capture_counts_tokens_and_fills_all_sites() {
+        let cfg = tiny_cfg();
+        let set = captured_set(&cfg, 2);
+        assert_eq!(set.tokens, 6 * 12);
+        assert_eq!(set.layers.len(), cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            for site in TapSite::ALL {
+                let acc = set.layers[l].site(site);
+                let diag_sum: f64 = (0..acc.dim).map(|i| acc.data[i * acc.dim + i]).sum();
+                assert!(
+                    diag_sum > 0.0,
+                    "layer {l} site {site:?} saw no activation energy"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn capture_is_bit_deterministic_across_thread_counts() {
+        let cfg = tiny_cfg();
+        let a = captured_set(&cfg, 1);
+        let b = captured_set(&cfg, 4);
+        assert_eq!(a, b, "thread count must not change the captured Hessians");
+    }
+
+    #[test]
+    fn hessians_are_psd_on_diagonal_and_symmetric_after_to_mat() {
+        let cfg = tiny_cfg();
+        let set = captured_set(&cfg, 0);
+        let m = set.hessian_mat(1, "wdown");
+        assert_eq!((m.rows, m.cols), (cfg.d_ffn, cfg.d_ffn));
+        for i in 0..m.rows {
+            assert!(m[(i, i)] >= 0.0);
+            for j in 0..m.cols {
+                assert_eq!(m[(i, j)].to_bits(), m[(j, i)].to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,575 @@
+//! Streaming activation Hessians and their on-disk artifact.
+//!
+//! A Hessian here is the GPTQ calibration statistic `H = XᵀX` over the
+//! rows of every activation matrix a fused linear consumes, accumulated
+//! **in the rotated basis that linear quantizes in** (see
+//! `model::forward::TapSite`). Accumulators are mergeable partials:
+//! capture fans sequences out over worker threads, each worker owns a
+//! partial, and partials merge in a fixed order (addition is
+//! commutative, so any merge order agrees up to fp associativity — a
+//! property the proptests pin down).
+//!
+//! The [`HessianSet`] artifact is versioned and keyed by model geometry,
+//! the calibration seed, a fingerprint of the rotation basis it was
+//! captured in, and a fingerprint of the checkpoint it was streamed
+//! from — so a calibration run is reusable across `gsr quantize-native
+//! --calib` and `gsr search --calib` invocations but can never be
+//! silently applied to a mismatched basis or checkpoint.
+
+use std::fs;
+use std::path::Path;
+
+use crate::model::config::ModelCfg;
+use crate::model::forward::TapSite;
+use crate::model::weights::FpParams;
+use crate::rng::SplitMix64;
+use crate::transform::Mat;
+
+/// Artifact magic + version (bump on any layout change).
+const MAGIC: [u8; 4] = *b"GSRH";
+const VERSION: u32 = 1;
+
+/// Order-sensitive 64-bit fingerprint over every tensor of an fp
+/// checkpoint — the third component of the calibration-artifact key.
+/// Geometry and rotation basis alone cannot distinguish two different
+/// checkpoints with identical shapes, and activations captured on one
+/// checkpoint must never silently calibrate another.
+pub fn checkpoint_fingerprint(fp: &FpParams) -> u64 {
+    fn fold(acc: u64, t: &[f32]) -> u64 {
+        let mut h = acc ^ t.len() as u64;
+        for &v in t {
+            h = h.rotate_left(25) ^ u64::from(v.to_bits()).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        SplitMix64::new(h).next_u64()
+    }
+    let mut acc = SplitMix64::new(0xC4EC_4B01_F1D6_E521).next_u64();
+    acc = fold(acc, &fp.embed);
+    acc = fold(acc, &fp.lm_head);
+    acc = fold(acc, &fp.ln_f);
+    for layer in &fp.layers {
+        for t in [
+            &layer.ln1, &layer.ln2, &layer.wq, &layer.wk, &layer.wv, &layer.wo, &layer.wgate,
+            &layer.wup, &layer.wdown,
+        ] {
+            acc = fold(acc, t);
+        }
+    }
+    acc
+}
+
+/// Provenance stamped into a captured [`HessianSet`]: the calibration
+/// seed, the rotation-basis fingerprint (with the plan that built it),
+/// and the checkpoint fingerprint.
+#[derive(Debug, Clone, Default)]
+pub struct CaptureKey {
+    /// Seed the calibration sequences were drawn with.
+    pub calib_seed: u64,
+    /// `RotationPlan::fingerprint()` of the capture basis.
+    pub basis_fingerprint: u64,
+    /// [`checkpoint_fingerprint`] of the checkpoint being streamed;
+    /// `0` = unknown (ad-hoc in-process capture, checkpoint unchecked).
+    pub checkpoint_fingerprint: u64,
+    /// JSON of the capture `RotationPlan` (empty for ad-hoc captures
+    /// that never leave the basis they were taken in).
+    pub plan_json: String,
+}
+
+/// One streaming `XᵀX` accumulator over `dim`-wide activation rows.
+///
+/// Only the upper triangle is accumulated (the statistic is symmetric);
+/// [`HessianAccum::to_mat`] mirrors it into a full matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HessianAccum {
+    pub dim: usize,
+    /// Row-major `[dim, dim]`, lower triangle identically zero.
+    pub data: Vec<f64>,
+}
+
+impl HessianAccum {
+    pub fn new(dim: usize) -> Self {
+        Self { dim, data: vec![0.0; dim * dim] }
+    }
+
+    /// Rank-1 update `H += x xᵀ` (upper triangle).
+    pub fn add_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dim);
+        let d = self.dim;
+        for (i, &xi) in row.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let xi = xi as f64;
+            let out = &mut self.data[i * d + i..(i + 1) * d];
+            for (o, &xj) in out.iter_mut().zip(&row[i..]) {
+                *o += xi * xj as f64;
+            }
+        }
+    }
+
+    /// Elementwise sum with another partial (commutative; associative up
+    /// to fp rounding).
+    pub fn merge(&mut self, other: &HessianAccum) {
+        assert_eq!(self.dim, other.dim, "Hessian partial dim mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Symmetrized full matrix, averaged over `tokens` rows (GPTQ is
+    /// invariant to the overall Hessian scale; averaging just keeps the
+    /// numbers in a friendly range).
+    pub fn to_mat(&self, tokens: u64) -> Mat {
+        let d = self.dim;
+        let norm = 1.0 / tokens.max(1) as f64;
+        let mut m = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                let v = self.data[i * d + j] * norm;
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+}
+
+/// The four per-layer activation Hessians, one per [`TapSite`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerHessians {
+    pub attn_in: HessianAccum,
+    pub o_in: HessianAccum,
+    pub ffn_in: HessianAccum,
+    pub down_in: HessianAccum,
+}
+
+impl LayerHessians {
+    pub fn new(cfg: &ModelCfg) -> Self {
+        Self {
+            attn_in: HessianAccum::new(cfg.d_model),
+            o_in: HessianAccum::new(cfg.d_model),
+            ffn_in: HessianAccum::new(cfg.d_model),
+            down_in: HessianAccum::new(cfg.d_ffn),
+        }
+    }
+
+    pub fn site(&self, site: TapSite) -> &HessianAccum {
+        match site {
+            TapSite::AttnIn => &self.attn_in,
+            TapSite::OIn => &self.o_in,
+            TapSite::FfnIn => &self.ffn_in,
+            TapSite::DownIn => &self.down_in,
+        }
+    }
+
+    pub fn site_mut(&mut self, site: TapSite) -> &mut HessianAccum {
+        match site {
+            TapSite::AttnIn => &mut self.attn_in,
+            TapSite::OIn => &mut self.o_in,
+            TapSite::FfnIn => &mut self.ffn_in,
+            TapSite::DownIn => &mut self.down_in,
+        }
+    }
+
+    /// The tap site whose activations feed a named linear.
+    pub fn site_of_linear(name: &str) -> TapSite {
+        match name {
+            "wq" | "wk" | "wv" => TapSite::AttnIn,
+            "wo" => TapSite::OIn,
+            "wgate" | "wup" => TapSite::FfnIn,
+            "wdown" => TapSite::DownIn,
+            other => panic!("unknown linear {other}"),
+        }
+    }
+
+    /// The accumulator for a named linear's input channels.
+    pub fn for_linear(&self, name: &str) -> &HessianAccum {
+        self.site(Self::site_of_linear(name))
+    }
+
+    pub fn merge(&mut self, other: &LayerHessians) {
+        self.attn_in.merge(&other.attn_in);
+        self.o_in.merge(&other.o_in);
+        self.ffn_in.merge(&other.ffn_in);
+        self.down_in.merge(&other.down_in);
+    }
+}
+
+/// A full calibration artifact: per-layer activation Hessians plus the
+/// provenance needed to reuse them safely (model geometry, calibration
+/// seed, rotation-basis fingerprint, checkpoint fingerprint, and the
+/// capture plan itself so the search objective can change basis).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HessianSet {
+    pub d_model: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    /// Seed the calibration sequences were drawn with.
+    pub calib_seed: u64,
+    /// `RotationPlan::fingerprint()` of the basis the activations were
+    /// captured in.
+    pub basis_fingerprint: u64,
+    /// [`checkpoint_fingerprint`] of the captured checkpoint (0 =
+    /// unknown, checkpoint unchecked).
+    pub checkpoint_fingerprint: u64,
+    /// JSON of the capture [`RotationPlan`] (empty for ad-hoc in-process
+    /// captures that never leave the basis they were taken in).
+    pub plan_json: String,
+    /// Total activation rows accumulated per site.
+    pub tokens: u64,
+    pub layers: Vec<LayerHessians>,
+}
+
+impl HessianSet {
+    pub fn new(cfg: &ModelCfg, key: &CaptureKey) -> Self {
+        Self {
+            d_model: cfg.d_model,
+            d_ffn: cfg.d_ffn,
+            n_layers: cfg.n_layers,
+            calib_seed: key.calib_seed,
+            basis_fingerprint: key.basis_fingerprint,
+            checkpoint_fingerprint: key.checkpoint_fingerprint,
+            plan_json: key.plan_json.clone(),
+            tokens: 0,
+            layers: (0..cfg.n_layers).map(|_| LayerHessians::new(cfg)).collect(),
+        }
+    }
+
+    /// Merge another partial captured under the same key.
+    pub fn merge(&mut self, other: &HessianSet) {
+        assert_eq!(
+            (self.d_model, self.d_ffn, self.n_layers),
+            (other.d_model, other.d_ffn, other.n_layers),
+            "Hessian partial geometry mismatch"
+        );
+        assert_eq!(self.basis_fingerprint, other.basis_fingerprint, "basis mismatch in merge");
+        self.tokens += other.tokens;
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.merge(b);
+        }
+    }
+
+    /// Checkpoint check: the consumer's fp checkpoint must be the one
+    /// the activations were streamed from (skipped for ad-hoc captures
+    /// that never recorded one).
+    pub fn check_checkpoint(&self, fp: &FpParams) -> Result<(), String> {
+        if self.checkpoint_fingerprint == 0 {
+            return Ok(());
+        }
+        let got = checkpoint_fingerprint(fp);
+        if self.checkpoint_fingerprint != got {
+            return Err(format!(
+                "Hessian artifact was captured on checkpoint {:016x}, but the model \
+                 being quantized is {got:016x} — re-run `gsr calibrate` on this checkpoint",
+                self.checkpoint_fingerprint
+            ));
+        }
+        Ok(())
+    }
+
+    /// Geometry check against the model about to consume these Hessians.
+    pub fn check_model(&self, cfg: &ModelCfg) -> Result<(), String> {
+        if (self.d_model, self.d_ffn, self.n_layers) != (cfg.d_model, cfg.d_ffn, cfg.n_layers) {
+            return Err(format!(
+                "Hessian artifact was captured for d_model={} d_ffn={} n_layers={}, \
+                 model is d_model={} d_ffn={} n_layers={}",
+                self.d_model, self.d_ffn, self.n_layers, cfg.d_model, cfg.d_ffn, cfg.n_layers
+            ));
+        }
+        if self.tokens == 0 {
+            return Err(
+                "Hessian artifact holds zero activation rows — re-run `gsr calibrate` \
+                 with a non-empty corpus"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Basis check: the consumer's rotation plan must be the one the
+    /// activations were captured under.
+    pub fn check_basis(&self, fingerprint: u64) -> Result<(), String> {
+        if self.basis_fingerprint != fingerprint {
+            return Err(format!(
+                "Hessian artifact basis fingerprint {:016x} does not match the \
+                 requested rotation basis {:016x} — re-run `gsr calibrate` with the \
+                 same plan/flags you are quantizing with",
+                self.basis_fingerprint, fingerprint
+            ));
+        }
+        Ok(())
+    }
+
+    /// Averaged, symmetrized Hessian for one layer's named linear.
+    pub fn hessian_mat(&self, layer: usize, linear: &str) -> Mat {
+        self.layers[layer].for_linear(linear).to_mat(self.tokens)
+    }
+
+    // -- binary artifact ---------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        for v in [
+            self.d_model as u64,
+            self.d_ffn as u64,
+            self.n_layers as u64,
+            self.calib_seed,
+            self.basis_fingerprint,
+            self.checkpoint_fingerprint,
+            self.tokens,
+            self.plan_json.len() as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(self.plan_json.as_bytes());
+        for layer in &self.layers {
+            for site in TapSite::ALL {
+                let acc = layer.site(site);
+                out.extend_from_slice(&(acc.dim as u64).to_le_bytes());
+                // The accumulator's lower triangle is identically zero
+                // (see `HessianAccum`), so only the dim·(dim+1)/2 upper
+                // entries travel to disk — half the artifact size.
+                for i in 0..acc.dim {
+                    for v in &acc.data[i * acc.dim + i..(i + 1) * acc.dim] {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        fs::write(path, &out).map_err(|e| format!("{path:?}: {e}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], String> {
+            let end = pos.checked_add(n).filter(|&e| e <= bytes.len());
+            if end.is_none() {
+                return Err(format!("Hessian artifact truncated at byte {}", *pos));
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        }
+        fn read_u64(bytes: &[u8], pos: &mut usize) -> Result<u64, String> {
+            Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+        }
+        fn read_acc(bytes: &[u8], pos: &mut usize, expect: usize) -> Result<HessianAccum, String> {
+            let dim = read_u64(bytes, pos)? as usize;
+            if dim != expect {
+                return Err(format!("Hessian block dim {dim}, expected {expect}"));
+            }
+            // Upper triangle only on disk; the lower stays zero exactly
+            // as the streaming accumulator leaves it.
+            let raw = take(bytes, pos, dim * (dim + 1) / 2 * 8)?;
+            let mut vals = raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap()));
+            let mut data = vec![0.0; dim * dim];
+            for i in 0..dim {
+                for j in i..dim {
+                    data[i * dim + j] = vals.next().expect("triangle length checked");
+                }
+            }
+            Ok(HessianAccum { dim, data })
+        }
+
+        let bytes = fs::read(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let mut pos = 0usize;
+        if take(&bytes, &mut pos, 4)? != &MAGIC[..] {
+            return Err("not a Hessian artifact (bad magic; expected GSRH)".into());
+        }
+        let ver = u32::from_le_bytes(take(&bytes, &mut pos, 4)?.try_into().unwrap());
+        if ver != VERSION {
+            return Err(format!("Hessian artifact version {ver}, this build reads {VERSION}"));
+        }
+        let d_model = read_u64(&bytes, &mut pos)? as usize;
+        let d_ffn = read_u64(&bytes, &mut pos)? as usize;
+        let n_layers = read_u64(&bytes, &mut pos)? as usize;
+        let calib_seed = read_u64(&bytes, &mut pos)?;
+        let basis_fingerprint = read_u64(&bytes, &mut pos)?;
+        let checkpoint_fingerprint = read_u64(&bytes, &mut pos)?;
+        let tokens = read_u64(&bytes, &mut pos)?;
+        let plan_len = read_u64(&bytes, &mut pos)? as usize;
+        // Corrupt-header guard: every block the header promises must fit
+        // in the file, BEFORE any allocation sized from header fields —
+        // a bit-flipped count must come back as Err, never a panic or an
+        // oversized allocation. Sites store their upper triangle only.
+        fn tri(d: usize) -> Option<usize> {
+            d.checked_add(1).and_then(|d1| d.checked_mul(d1)).map(|x| x / 2)
+        }
+        let per_layer = tri(d_model)
+            .and_then(|td| td.checked_mul(3))
+            .and_then(|t3| tri(d_ffn).and_then(|tf| t3.checked_add(tf)))
+            .and_then(|e| e.checked_mul(8))
+            .and_then(|e| e.checked_add(4 * 8))
+            .ok_or("Hessian artifact header dims overflow")?;
+        let body = n_layers
+            .checked_mul(per_layer)
+            .ok_or("Hessian artifact header dims overflow")?;
+        let promised = pos
+            .checked_add(plan_len)
+            .and_then(|p| p.checked_add(body))
+            .ok_or("Hessian artifact header sizes overflow")?;
+        if promised != bytes.len() {
+            return Err(format!(
+                "Hessian artifact header promises {promised} bytes, file has {}",
+                bytes.len()
+            ));
+        }
+        let plan_json = String::from_utf8(take(&bytes, &mut pos, plan_len)?.to_vec())
+            .map_err(|_| "Hessian artifact plan is not UTF-8".to_string())?;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let attn_in = read_acc(&bytes, &mut pos, d_model)?;
+            let o_in = read_acc(&bytes, &mut pos, d_model)?;
+            let ffn_in = read_acc(&bytes, &mut pos, d_model)?;
+            let down_in = read_acc(&bytes, &mut pos, d_ffn)?;
+            layers.push(LayerHessians { attn_in, o_in, ffn_in, down_in });
+        }
+        if pos != bytes.len() {
+            return Err(format!("Hessian artifact has {} trailing bytes", bytes.len() - pos));
+        }
+        Ok(Self {
+            d_model,
+            d_ffn,
+            n_layers,
+            calib_seed,
+            basis_fingerprint,
+            checkpoint_fingerprint,
+            plan_json,
+            tokens,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 16,
+            group: 4,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn accum_matches_dense_xtx() {
+        let rows = [[1.0f32, -2.0, 0.5], [0.0, 3.0, 1.0], [2.0, 0.0, -1.0]];
+        let mut acc = HessianAccum::new(3);
+        for r in &rows {
+            acc.add_row(r);
+        }
+        let m = acc.to_mat(rows.len() as u64);
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect: f64 = rows
+                    .iter()
+                    .map(|r| r[i] as f64 * r[j] as f64)
+                    .sum::<f64>()
+                    / rows.len() as f64;
+                assert!((m[(i, j)] - expect).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        // PSD diagonal.
+        for i in 0..3 {
+            assert!(m[(i, i)] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn merge_is_elementwise_sum() {
+        let mut a = HessianAccum::new(4);
+        let mut b = HessianAccum::new(4);
+        a.add_row(&[1.0, 0.0, 2.0, -1.0]);
+        b.add_row(&[0.5, 1.5, 0.0, 2.0]);
+        let mut both = HessianAccum::new(4);
+        both.add_row(&[1.0, 0.0, 2.0, -1.0]);
+        both.add_row(&[0.5, 1.5, 0.0, 2.0]);
+        a.merge(&b);
+        for (x, y) in a.data.iter().zip(&both.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn set_roundtrips_through_disk_bit_exact() {
+        let cfg = tiny_cfg();
+        let key = CaptureKey {
+            calib_seed: 7,
+            basis_fingerprint: 0xDEAD_BEEF,
+            checkpoint_fingerprint: 0xFEED_F00D,
+            plan_json: "{\"seed\":\"7\"}".to_string(),
+        };
+        let mut set = HessianSet::new(&cfg, &key);
+        set.tokens = 5;
+        for l in 0..cfg.n_layers {
+            for site in TapSite::ALL {
+                let acc = set.layers[l].site_mut(site);
+                let dim = acc.dim;
+                let row: Vec<f32> = (0..dim).map(|i| (i as f32 - 1.5) * 0.3).collect();
+                acc.add_row(&row);
+            }
+        }
+        let path = std::env::temp_dir().join("gsr_hessian_roundtrip_test.bin");
+        set.save(&path).unwrap();
+        let back = HessianSet::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(set, back, "artifact must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_checks_key() {
+        let path = std::env::temp_dir().join("gsr_hessian_garbage_test.bin");
+        std::fs::write(&path, b"definitely not a hessian artifact").unwrap();
+        assert!(HessianSet::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+
+        let cfg = tiny_cfg();
+        let key = CaptureKey { basis_fingerprint: 42, ..CaptureKey::default() };
+        let mut set = HessianSet::new(&cfg, &key);
+        // Empty capture is itself a key violation.
+        assert!(set.check_model(&cfg).is_err());
+        set.tokens = 1;
+        assert!(set.check_model(&cfg).is_ok());
+        let mut other = cfg.clone();
+        other.d_ffn *= 2;
+        assert!(set.check_model(&other).is_err());
+        assert!(set.check_basis(42).is_ok());
+        let err = set.check_basis(43).unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+    }
+
+    /// Corrupt header fields must come back as Err, never a panic or an
+    /// absurd allocation (the loader's clean-rejection contract).
+    #[test]
+    fn load_rejects_corrupt_header_without_panicking() {
+        let cfg = tiny_cfg();
+        let mut set = HessianSet::new(&cfg, &CaptureKey::default());
+        set.tokens = 1;
+        let path = std::env::temp_dir().join("gsr_hessian_corrupt_header_test.bin");
+        set.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Header layout after magic+version (byte 8): d_model, d_ffn,
+        // n_layers, calib_seed, basis, checkpoint, tokens, plan_len.
+        for (offset, val) in [
+            (8 + 16, u64::MAX),     // n_layers bit-flipped huge
+            (8, u64::MAX / 2),      // d_model huge → dim math must not overflow
+            (8 + 56, u64::MAX - 7), // plan_len huge → promised-size overflow
+        ] {
+            let mut bad = good.clone();
+            bad[offset..offset + 8].copy_from_slice(&val.to_le_bytes());
+            std::fs::write(&path, &bad).unwrap();
+            assert!(HessianSet::load(&path).is_err(), "offset {offset} must be rejected");
+        }
+        // Truncation with an intact header is also an error.
+        std::fs::write(&path, &good[..good.len() - 9]).unwrap();
+        assert!(HessianSet::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

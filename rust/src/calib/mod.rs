@@ -1,0 +1,34 @@
+//! `gsr calibrate` — streaming activation Hessians for calibrated GPTQ
+//! and the calibration-aware rotation search.
+//!
+//! The paper's GSR rotations are training-free, but their downstream
+//! quantizer (GPTQ) is calibration-based: its error-feedback step is
+//! weighted by the inverse Cholesky factor of `H = XᵀX` over real
+//! activations. The native pipeline historically fed GPTQ an *identity*
+//! Hessian; this subsystem closes that gap end to end:
+//!
+//! 1. [`capture`] streams held-out corpus sequences through the native
+//!    fused forward with per-linear taps (q/k/v, o, gate/up, down — in
+//!    the rotated basis each linear actually quantizes in) and
+//!    accumulates streaming `XᵀX` in mergeable per-thread partials.
+//! 2. [`hessian`] holds the accumulators and the versioned binary
+//!    artifact ([`HessianSet`]), keyed by model geometry + calibration
+//!    seed + rotation-basis fingerprint so one calibration run is safely
+//!    reusable.
+//! 3. Consumers: `quant::pipeline::quantize_native_plan_with` feeds the
+//!    captured Hessians to `gptq_quantize`, and
+//!    `search::CalibWeights` un-rotates them into the base basis so the
+//!    `gsr search` objective can weight group-RTN error by the
+//!    input-channel energy `diag(R_cᵀ H R_c)` of *any* candidate basis.
+//!
+//! CLI surface: `gsr calibrate [--synthetic] [--plan F] [--seqs N]
+//! [--seq-len N] [--out hessians.bin]`, then `--calib hessians.bin` on
+//! `quantize-native` and `search`.
+
+pub mod capture;
+pub mod hessian;
+
+pub use capture::{capture_hessians, CalibCfg};
+pub use hessian::{
+    checkpoint_fingerprint, CaptureKey, HessianAccum, HessianSet, LayerHessians,
+};

@@ -138,6 +138,24 @@ mod tests {
     }
 
     #[test]
+    fn calibrate_subcommand_grammar() {
+        let a = parse(
+            "calibrate --synthetic --seqs 16 --seq-len 48 --calib-seed 7 \
+             --threads 2 --out hessians.bin",
+        );
+        assert_eq!(a.subcommand, "calibrate");
+        assert!(a.has_flag("synthetic"));
+        assert_eq!(a.opt_usize("seqs", 0), 16);
+        assert_eq!(a.opt_usize("seq-len", 0), 48);
+        assert_eq!(a.opt_usize("calib-seed", 0), 7);
+        assert_eq!(a.opt("out"), Some("hessians.bin"));
+        // `--calib FILE` on consumers is a valued option, not a flag.
+        let b = parse("quantize-native --calib hessians.bin --bits 2");
+        assert_eq!(b.opt("calib"), Some("hessians.bin"));
+        assert_eq!(b.opt_usize("bits", 0), 2);
+    }
+
+    #[test]
     fn threads_default_is_available_parallelism() {
         let a = parse("search");
         assert!(a.opt_threads() >= 1);

@@ -96,6 +96,32 @@ impl CorpusGenerator {
     }
 }
 
+/// Deterministic calibration windows over a byte split: `n` windows of
+/// `len` tokens at SplitMix64-drawn offsets, bytes clamped into
+/// `[0, vocab)`. Shared by `gsr calibrate` and the calibration tests so
+/// both sides draw the exact same sequences for a given seed.
+pub fn draw_token_windows(
+    bytes: &[u8],
+    n: usize,
+    len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Vec<i32>> {
+    let mut rng = SplitMix64::new(seed);
+    let vocab = vocab.max(1);
+    let max_start = bytes.len().saturating_sub(len);
+    (0..n)
+        .map(|_| {
+            let start =
+                if max_start == 0 { 0 } else { rng.next_below(max_start as u64 + 1) as usize };
+            bytes[start..(start + len).min(bytes.len())]
+                .iter()
+                .map(|&b| (b as usize % vocab) as i32)
+                .collect()
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +154,22 @@ mod tests {
         let head: usize = counts[..8].iter().sum();
         let tail: usize = counts[128..136].iter().sum();
         assert!(head > tail * 3, "head {head} vs tail {tail}");
+    }
+
+    #[test]
+    fn draw_token_windows_shapes_and_range() {
+        let text = CorpusGenerator::new(SEED_CORPUS).generate(4096);
+        let a = draw_token_windows(&text, 5, 32, 64, 7);
+        let b = draw_token_windows(&text, 5, 32, 64, 7);
+        assert_eq!(a, b, "window draw must be seed-deterministic");
+        assert_eq!(a.len(), 5);
+        for w in &a {
+            assert_eq!(w.len(), 32);
+            assert!(w.iter().all(|&t| (0..64).contains(&t)));
+        }
+        // Short split degrades gracefully (one truncated window).
+        let short = draw_token_windows(&text[..10], 2, 32, 256, 1);
+        assert!(short.iter().all(|w| w.len() == 10));
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod corpus;
 pub mod tasks;
 pub mod tokenizer;
 
-pub use corpus::{CorpusGenerator, SEED_CORPUS};
+pub use corpus::{draw_token_windows, CorpusGenerator, SEED_CORPUS};
 pub use tasks::{Task, TaskKind, TaskSuite};
 pub use tokenizer::ByteTokenizer;

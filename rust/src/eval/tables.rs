@@ -183,6 +183,16 @@ pub fn sequency_table(n: usize, group: usize) -> Table {
     table
 }
 
+/// Human label of the GPTQ calibration mode for eval reports — derived
+/// from the mode actually in effect, so report lines can never misstate
+/// the method (the old output hardcoded "identity-Hessian GPTQ").
+pub fn calib_label(calib: Option<&crate::calib::HessianSet>) -> String {
+    match calib {
+        Some(set) => format!("Hessian-calibrated GPTQ, {} calib tokens", set.tokens),
+        None => "identity-Hessian GPTQ".to_string(),
+    }
+}
+
 /// Compressed label for a (possibly heterogeneous) rotation plan:
 /// uniform plans render like classic variants (`GSR/64+r4GH ×4`),
 /// heterogeneous ones list per-layer specs.

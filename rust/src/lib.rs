@@ -30,11 +30,16 @@
 //!   tables matching the paper's layout.
 //! * [`analysis`] — sequency-variance and outlier-spread analyses backing
 //!   the paper's §3.2 argument and Fig. 2.
+//! * [`calib`] — the `gsr calibrate` subsystem: streaming activation
+//!   Hessians captured from the rotated forward, persisted as a
+//!   reusable artifact, consumed by Hessian-calibrated GPTQ and the
+//!   calibration-aware `gsr search` objective.
 //! * [`search`] — the `gsr search` subsystem: a training-free per-layer
 //!   rotation auto-configuration search (candidate grid × proxy
 //!   objectives × parallel planner) producing a [`quant`] `RotationPlan`.
 
 pub mod analysis;
+pub mod calib;
 pub mod config;
 pub mod coordinator;
 pub mod data;

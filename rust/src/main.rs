@@ -9,6 +9,9 @@
 //! * `gen-corpus`         — write the synthetic corpus (native generator).
 //! * `search`             — training-free per-layer rotation auto-config:
 //!                          emit a rotation plan JSON for `quantize-native`.
+//! * `calibrate`          — stream corpus activations through the fused
+//!                          forward and write a reusable Hessian artifact
+//!                          for `--calib` on quantize-native and search.
 
 use std::path::Path;
 
@@ -32,6 +35,7 @@ fn main() {
         "gen-corpus" => cmd_gen_corpus(&args),
         "quantize-native" => cmd_quantize_native(&args),
         "search" => cmd_search(&args),
+        "calibrate" => cmd_calibrate(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -63,7 +67,10 @@ fn print_help() {
            gen-corpus [--bytes N]      write the synthetic corpus\n\
            quantize-native [--r1 K]    pure-Rust W2 quantization (no Python)\n\
                            [--plan F]  ...from a searched rotation plan JSON\n\
-           search [--out F]            training-free per-layer rotation search\n\
+                           [--calib F] ...with real Hessians from `calibrate`\n\
+           search [--out F] [--calib F] training-free per-layer rotation search\n\
+           calibrate [--out F]         stream corpus activations -> Hessian\n\
+                                       artifact for --calib (reusable)\n\
          \n\
          COMMON OPTIONS:\n\
            --artifacts DIR   artifact directory (default: artifacts)\n\
@@ -80,7 +87,18 @@ fn print_help() {
            --budget N        max candidates per layer (0 = whole grid)\n\
            --threads N       worker threads (default: available cores)\n\
            --seed N          rotation-build seed (default 2025)\n\
-           --synthetic       search a synthetic checkpoint (no artifacts)"
+           --calib FILE      Hessian artifact: diag(H)-weighted objective\n\
+           --synthetic       search a synthetic checkpoint (no artifacts)\n\
+         \n\
+         CALIBRATE OPTIONS:\n\
+           --out FILE        Hessian artifact path (default hessians.bin)\n\
+           --plan F          capture in a searched plan's basis (default:\n\
+                             uniform basis from --r1/--r4/--seed)\n\
+           --seqs N          calibration sequences (default 32)\n\
+           --seq-len N       tokens per sequence (default 64)\n\
+           --calib-seed N    sequence-draw seed (default 0xCA11B)\n\
+           --threads N       capture worker threads\n\
+           --synthetic       calibrate the synthetic checkpoint"
     );
 }
 
@@ -202,46 +220,132 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_quantize_native(args: &Args) -> Result<(), String> {
-    use gsr::eval::{EvalOpts, NativeModel};
-    use gsr::model::{DenseModel, FpParams, R4Kind};
-    use gsr::quant::{
-        build_plan_rotations, build_rotations, quantize_native, quantize_native_plan,
-        RotationPlan,
-    };
+/// Resolve the rotation plan a `--calib`-capable subcommand works in:
+/// an explicit `--plan` file, or the uniform plan the `--r1/--r4/--seed`
+/// flags describe. `gsr calibrate` and the `--calib` consumers share
+/// this one resolution so their basis fingerprints can only agree or
+/// loudly mismatch.
+fn plan_from_args(args: &Args, cfg: &gsr::model::ModelCfg) -> Result<gsr::quant::RotationPlan, String> {
+    use gsr::model::R4Kind;
+    use gsr::quant::{RotationPlan, RotationSpec};
     use gsr::transform::R1Kind;
+
+    if let Some(plan_path) = args.opt("plan") {
+        return RotationPlan::load(Path::new(plan_path));
+    }
+    let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR)")?;
+    let r4 = R4Kind::parse(args.opt_or("r4", "GH")).ok_or("bad --r4 (GH|LH)")?;
+    let seed = args.opt_usize("seed", 2025) as u64;
+    let spec = RotationSpec {
+        r1,
+        r1_block: cfg.group,
+        r4,
+        r4_block: if r4 == R4Kind::GH { cfg.d_ffn } else { cfg.group },
+    }
+    .canonical(cfg);
+    Ok(RotationPlan::uniform(spec, cfg.n_layers, seed))
+}
+
+fn cmd_quantize_native(args: &Args) -> Result<(), String> {
+    use gsr::calib::HessianSet;
+    use gsr::eval::{EvalOpts, NativeModel};
+    use gsr::model::{DenseModel, FpParams};
+    use gsr::quant::{build_plan_rotations, quantize_native_plan_with};
 
     let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
     let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
     let bits = args.opt_usize("bits", 2) as u32;
-    let t0 = std::time::Instant::now();
-    let (qp, sse) = if let Some(plan_path) = args.opt("plan") {
-        // Heterogeneous path: consume a plan emitted by `gsr search`.
-        let plan = RotationPlan::load(Path::new(plan_path))?;
-        let rots = build_plan_rotations(&arts.cfg, &plan)?;
-        println!(
-            "native W{bits} quantization from plan {plan_path}: {} ({} distinct rotation builds)",
-            tables::plan_summary(&plan),
-            rots.distinct
-        );
-        let (qp, sse, _) = quantize_native_plan(&fp, &arts.cfg, &rots, bits);
-        (qp, sse)
-    } else {
-        let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR)")?;
-        let r4 = R4Kind::parse(args.opt_or("r4", "GH")).ok_or("bad --r4 (GH|LH)")?;
-        let seed = args.opt_usize("seed", 2025) as u64;
-        println!("native W{bits} quantization: R1={r1} R4={} seed={seed}", r4.as_str());
-        let rots = build_rotations(&arts.cfg, r1, r4, seed);
-        let (qp, sse, _) = quantize_native(&fp, &arts.cfg, &rots, bits);
-        (qp, sse)
+    let calib = match args.opt("calib") {
+        Some(path) => Some(HessianSet::load(Path::new(path))?),
+        None => None,
     };
+    // One plan resolution and ONE rotation-build path (the plan
+    // pipeline) regardless of calibration, so `quantize-native` and
+    // `quantize-native --calib` with identical flags quantize the
+    // identical rotated model and their PPLs are directly comparable.
+    let plan = plan_from_args(args, &arts.cfg)?;
+    if let Some(set) = &calib {
+        set.check_model(&arts.cfg)?;
+        set.check_basis(plan.fingerprint())?;
+    }
+    let rots = build_plan_rotations(&arts.cfg, &plan)?;
+    println!(
+        "native W{bits} quantization ({}): {} ({} distinct rotation builds)",
+        tables::calib_label(calib.as_ref()),
+        tables::plan_summary(&plan),
+        rots.distinct
+    );
+    let t0 = std::time::Instant::now();
+    let (qp, sse, _) =
+        quantize_native_plan_with(&fp, &arts.cfg, &rots, bits, calib.as_ref())?;
     println!("quantized {} linears in {:?}; weight SSE {sse:.2}",
         arts.cfg.n_layers * 7, t0.elapsed());
     let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };
     let native = NativeModel { model: &model, batch: 1, seq: arts.seq };
     let opts = EvalOpts { windows: args.opt_usize("windows", 4), tasks_per_kind: 0 };
     let ev = gsr::eval::tables::eval_model(&native, &arts, opts)?;
-    println!("native-quantized PPL (identity-Hessian GPTQ): {:.3}", ev.ppl);
+    println!(
+        "native-quantized PPL ({}): {:.3}",
+        tables::calib_label(calib.as_ref()),
+        ev.ppl
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    use gsr::calib::{capture_hessians, checkpoint_fingerprint, CalibCfg, CaptureKey};
+    use gsr::data::{draw_token_windows, CorpusGenerator};
+    use gsr::model::{FpParams, ModelCfg};
+    use gsr::quant::{build_plan_rotations, fuse_to_dense_plan};
+
+    let seed = args.opt_usize("seed", 2025) as u64;
+    let (cfg, fp, corpus): (ModelCfg, FpParams, Vec<u8>) = if args.has_flag("synthetic") {
+        // Demo/CI path: the same structured synthetic checkpoint `gsr
+        // search --synthetic` uses, calibrated on freshly drawn corpus.
+        let cfg = ModelCfg::default();
+        let fp = FpParams::synthetic(&cfg, seed);
+        let corpus = CorpusGenerator::new(gsr::data::SEED_CORPUS).generate(1 << 16);
+        (cfg, fp, corpus)
+    } else {
+        let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
+        let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
+        // Train split only: PPL eval runs on the held-out test split.
+        (arts.cfg.clone(), fp, arts.calib_split().to_vec())
+    };
+    let plan = plan_from_args(args, &cfg)?;
+    plan.validate(&cfg)?;
+    let ccfg = CalibCfg {
+        n_seqs: args.opt_usize("seqs", 32),
+        seq_len: args.opt_usize("seq-len", 64),
+        seed: args.opt_usize("calib-seed", 0xCA11B) as u64,
+        threads: args.opt_threads(),
+    };
+    let rots = build_plan_rotations(&cfg, &plan)?;
+    let params = fuse_to_dense_plan(&fp, &cfg, &rots);
+    let seqs = draw_token_windows(&corpus, ccfg.n_seqs, ccfg.seq_len, cfg.vocab, ccfg.seed);
+    let key = CaptureKey {
+        calib_seed: ccfg.seed,
+        basis_fingerprint: plan.fingerprint(),
+        checkpoint_fingerprint: checkpoint_fingerprint(&fp),
+        plan_json: plan.to_json().to_string_pretty(),
+    };
+    let t0 = std::time::Instant::now();
+    let set = capture_hessians(&cfg, &params, &seqs, ccfg.threads, &key);
+    let out = args.opt_or("out", "hessians.bin");
+    set.save(Path::new(out))?;
+    println!(
+        "captured {} activation rows over {} sequences in {:?} ({} layers x 4 Hessians)",
+        set.tokens,
+        seqs.len(),
+        t0.elapsed(),
+        cfg.n_layers
+    );
+    println!(
+        "basis: {} (fingerprint {:016x}); wrote {out}",
+        tables::plan_summary(&plan),
+        set.basis_fingerprint
+    );
+    println!("next: gsr quantize-native --calib {out}   |   gsr search --calib {out}");
     Ok(())
 }
 
@@ -252,8 +356,9 @@ fn parse_list_usize(s: &str) -> Result<Vec<usize>, String> {
 }
 
 fn cmd_search(args: &Args) -> Result<(), String> {
+    use gsr::calib::HessianSet;
     use gsr::model::{FpParams, ModelCfg, R4Kind};
-    use gsr::search::{search_plan, GridCfg, SearchCfg};
+    use gsr::search::{search_plan_calibrated, CalibWeights, GridCfg, SearchCfg};
     use gsr::transform::R1Kind;
 
     let seed = args.opt_usize("seed", 2025) as u64;
@@ -289,16 +394,30 @@ fn cmd_search(args: &Args) -> Result<(), String> {
         threads: args.opt_threads(),
         seed,
     };
+    let calib = match args.opt("calib") {
+        Some(path) => {
+            let set = HessianSet::load(Path::new(path))?;
+            let weights = CalibWeights::from_hessian_set(&set, &cfg)?;
+            println!(
+                "calibration-aware objective: diag(H) weighting from {path} \
+                 ({} activation rows)",
+                weights.tokens
+            );
+            Some(weights)
+        }
+        None => None,
+    };
     let t0 = std::time::Instant::now();
-    let outcome = search_plan(&fp, &cfg, &scfg)?;
+    let outcome = search_plan_calibrated(&fp, &cfg, &scfg, calib.as_ref())?;
     let table = tables::search_table(&outcome);
     if args.has_flag("markdown") {
         println!("{}", table.render_markdown());
     } else {
         println!("{}", table.render());
     }
+    let objective = if calib.is_some() { "diag(H)-weighted group-RTN" } else { "group-RTN" };
     println!(
-        "searched {} layers in {:?} on {} threads: mean group-RTN MSE {:.4e} \
+        "searched {} layers in {:?} on {} threads: mean {objective} MSE {:.4e} \
          vs fixed-GSR {:.4e} ({} layer(s) strictly improved)",
         outcome.layers.len(),
         t0.elapsed(),

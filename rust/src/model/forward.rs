@@ -16,6 +16,39 @@ pub enum DenseModel {
 
 const ACT_CLIP: f32 = 0.9;
 
+// ---------------------------------------------------------------------------
+// Activation taps (calibration capture)
+// ---------------------------------------------------------------------------
+
+/// Where in the rotated forward an activation tap fires: each site is
+/// the exact input matrix one or more fused linears consume, **in the
+/// basis that linear quantizes in** (after norms, activation scales and
+/// fake-quant, immediately before the matmul).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapSite {
+    /// Input of `wq`/`wk`/`wv`: post-norm residual stream, layer R1 basis.
+    AttnIn,
+    /// Input of `wo`: attention output in the B2/R3 head basis.
+    OIn,
+    /// Input of `wgate`/`wup`: post-norm residual stream, layer R1 basis.
+    FfnIn,
+    /// Input of `wdown`: FFN activation after the online R4 rotation.
+    DownIn,
+}
+
+impl TapSite {
+    pub const ALL: [TapSite; 4] =
+        [TapSite::AttnIn, TapSite::OIn, TapSite::FfnIn, TapSite::DownIn];
+}
+
+/// Observer of per-linear input activations during
+/// [`forward_quant_tapped`] — the hook the `calib` subsystem uses to
+/// accumulate streaming `XᵀX` Hessians without copying activations.
+pub trait ActivationTap {
+    /// `rows` is a row-major `[T, width]` activation matrix.
+    fn record(&mut self, layer: usize, site: TapSite, rows: &[f32], width: usize);
+}
+
 impl DenseModel {
     pub fn cfg(&self) -> &ModelCfg {
         match self {
@@ -267,6 +300,30 @@ fn forward_quant(
     a_bits: Option<u32>,
     tokens: &[i32],
 ) -> Vec<f32> {
+    forward_quant_impl(cfg, p, a_bits, tokens, None)
+}
+
+/// [`forward_quant`] with an [`ActivationTap`] observing every linear's
+/// input matrix (calibration capture). With `a_bits = None` on
+/// fused-but-unquantized params the tapped activations are exactly the
+/// rotated-basis fp activations (Fig.-1 equivalence).
+pub fn forward_quant_tapped(
+    cfg: &ModelCfg,
+    p: &QuantParams,
+    a_bits: Option<u32>,
+    tokens: &[i32],
+    tap: &mut dyn ActivationTap,
+) -> Vec<f32> {
+    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap))
+}
+
+fn forward_quant_impl(
+    cfg: &ModelCfg,
+    p: &QuantParams,
+    a_bits: Option<u32>,
+    tokens: &[i32],
+    mut tap: Option<&mut dyn ActivationTap>,
+) -> Vec<f32> {
     let (t, d) = (tokens.len(), cfg.d_model);
     let (nh, dh) = (cfg.n_heads, cfg.head_dim());
     let g = cfg.group;
@@ -280,7 +337,7 @@ fn forward_quant(
         x[i * d..(i + 1) * d].copy_from_slice(&p.embed[tok as usize * d..(tok as usize + 1) * d]);
     }
     let (cos, sin) = rope_tables(t, dh, cfg.rope_base);
-    for layer in &p.layers {
+    for (l, layer) in p.layers.iter().enumerate() {
         // Heterogeneous plans: transition the residual stream from the
         // previous layer's R1 basis into this layer's (`x ← x R_{l-1}ᵀ R_l`).
         if let Some(tr) = &layer.basis_change {
@@ -291,6 +348,9 @@ fn forward_quant(
         rmsnorm_rows(&mut h, d, cfg.norm_eps);
         scale_rows(&mut h, &layer.ascale_attn);
         maybe_quant(&mut h);
+        if let Some(tp) = tap.as_mut() {
+            tp.record(l, TapSite::AttnIn, &h, d);
+        }
         let mut q = matmul(&h, w("wq"), t, d, d);
         let mut k = matmul(&h, w("wk"), t, d, d);
         let v = matmul(&h, w("wv"), t, d, d);
@@ -301,6 +361,9 @@ fn forward_quant(
         let mut o = attention(&q, &k, &v, t, nh, dh);
         scale_rows(&mut o, &layer.ascale_o);
         maybe_quant(&mut o);
+        if let Some(tp) = tap.as_mut() {
+            tp.record(l, TapSite::OIn, &o, d);
+        }
         let o = matmul(&o, w("wo"), t, d, d);
         for (xv, ov) in x.iter_mut().zip(&o) {
             *xv += ov;
@@ -309,6 +372,9 @@ fn forward_quant(
         rmsnorm_rows(&mut h, d, cfg.norm_eps);
         scale_rows(&mut h, &layer.ascale_ffn);
         maybe_quant(&mut h);
+        if let Some(tp) = tap.as_mut() {
+            tp.record(l, TapSite::FfnIn, &h, d);
+        }
         let gx = matmul(&h, w("wgate"), t, d, cfg.d_ffn);
         let ux = matmul(&h, w("wup"), t, d, cfg.d_ffn);
         let mut z: Vec<f32> = gx.iter().zip(&ux).map(|(&gv, &uv)| silu(gv) * uv).collect();
@@ -343,6 +409,9 @@ fn forward_quant(
         }
         scale_rows(&mut z, &layer.ascale_down);
         maybe_quant(&mut z);
+        if let Some(tp) = tap.as_mut() {
+            tp.record(l, TapSite::DownIn, &z, cfg.d_ffn);
+        }
         let zd = matmul(&z, w("wdown"), t, cfg.d_ffn, d);
         for (xv, zv) in x.iter_mut().zip(&zd) {
             *xv += zv;

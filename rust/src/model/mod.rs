@@ -10,5 +10,5 @@ pub mod forward;
 pub mod weights;
 
 pub use config::{ModelCfg, ParamSpec, R4Kind};
-pub use forward::DenseModel;
+pub use forward::{forward_quant_tapped, ActivationTap, DenseModel, TapSite};
 pub use weights::{FpParams, LayerR4, QuantParams};

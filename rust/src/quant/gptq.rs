@@ -12,32 +12,31 @@ use crate::transform::Mat;
 /// Hessian dampening fraction (matches the Python pipeline).
 pub const DAMP_FRAC: f64 = 0.01;
 
-/// GPTQ: walk input channels in order; quantize each against its group's
-/// scale/zero, then propagate the weighted residual into not-yet-
-/// quantized channels through the inverse-Hessian Cholesky factor.
-///
-/// `hessian` is `Xᵀ X` over calibration inputs (`[C, C]`).
-pub fn gptq_quantize(
-    w: &Mat,
-    hessian: &Mat,
-    bits: u32,
-    group: usize,
-    mse_clip: bool,
-) -> QuantizedLinear {
-    let (c, h) = (w.rows, w.cols);
-    assert_eq!(c % group, 0);
-    assert_eq!((hessian.rows, hessian.cols), (c, c));
-    let qmax = ((1u32 << bits) - 1) as f64;
+/// The weight-independent part of GPTQ: the damped Hessian's inverse
+/// Cholesky factor plus the dead-channel mask. Precompute once per
+/// Hessian and share across every linear quantized against it — the
+/// calibrated pipeline feeds one activation Hessian to wq/wk/wv (and
+/// one to wgate/wup), so hoisting the O(C³) inversion out of
+/// [`gptq_quantize`] removes the dominant duplicated cost.
+pub struct GptqFactor {
+    /// Upper Cholesky factor of the damped Hessian's inverse, `[C, C]`.
+    pub hinv_u: Mat,
+    /// Channels whose Hessian diagonal was exactly zero (their weights
+    /// are pinned to 0 during quantization).
+    pub dead: Vec<bool>,
+}
 
+/// Factor a calibration Hessian (`Xᵀ X`, `[C, C]`) for GPTQ.
+pub fn gptq_factor(hessian: &Mat) -> GptqFactor {
+    let c = hessian.rows;
+    assert_eq!((hessian.rows, hessian.cols), (c, c));
     let mut hess = hessian.clone();
-    let mut work = w.clone();
-    // Dead channels: zero diagonal → pin to 1, zero the weights.
+    // Dead channels: zero diagonal → pin to 1 (weights zeroed later).
+    let mut dead = vec![false; c];
     for i in 0..c {
         if hess[(i, i)] == 0.0 {
             hess[(i, i)] = 1.0;
-            for col in 0..h {
-                work[(i, col)] = 0.0;
-            }
+            dead[i] = true;
         }
     }
     let mean_diag: f64 = (0..c).map(|i| hess[(i, i)]).sum::<f64>() / c as f64;
@@ -46,6 +45,49 @@ pub fn gptq_quantize(
     }
     let hinv = spd_inverse(&hess).expect("damped Hessian must be SPD");
     let hinv_u = cholesky_upper(&hinv).expect("inverse Hessian must be SPD");
+    GptqFactor { hinv_u, dead }
+}
+
+/// GPTQ: walk input channels in order; quantize each against its group's
+/// scale/zero, then propagate the weighted residual into not-yet-
+/// quantized channels through the inverse-Hessian Cholesky factor.
+///
+/// `hessian` is `Xᵀ X` over calibration inputs (`[C, C]`). To quantize
+/// several linears against one Hessian, call [`gptq_factor`] once and
+/// use [`gptq_quantize_factored`].
+pub fn gptq_quantize(
+    w: &Mat,
+    hessian: &Mat,
+    bits: u32,
+    group: usize,
+    mse_clip: bool,
+) -> QuantizedLinear {
+    assert_eq!((hessian.rows, hessian.cols), (w.rows, w.rows));
+    gptq_quantize_factored(w, &gptq_factor(hessian), bits, group, mse_clip)
+}
+
+/// [`gptq_quantize`] against a prefactored Hessian.
+pub fn gptq_quantize_factored(
+    w: &Mat,
+    factor: &GptqFactor,
+    bits: u32,
+    group: usize,
+    mse_clip: bool,
+) -> QuantizedLinear {
+    let (c, h) = (w.rows, w.cols);
+    assert_eq!(c % group, 0);
+    assert_eq!((factor.hinv_u.rows, factor.hinv_u.cols), (c, c));
+    let qmax = ((1u32 << bits) - 1) as f64;
+
+    let mut work = w.clone();
+    for (i, &is_dead) in factor.dead.iter().enumerate() {
+        if is_dead {
+            for col in 0..h {
+                work[(i, col)] = 0.0;
+            }
+        }
+    }
+    let hinv_u = &factor.hinv_u;
 
     let n_groups = c / group;
     let mut codes = vec![0i32; c * h];
@@ -167,6 +209,24 @@ mod tests {
         let q = gptq_quantize(&w, &Mat::identity(c), 4, 8, false);
         let rtn = rtn_quantize(&w, 4, 8, false);
         assert!(q.mse(&w) <= rtn.mse(&w) * 1.5 + 1e-9);
+    }
+
+    /// Reusing one factor across linears is exactly the direct path.
+    #[test]
+    fn factored_path_matches_direct() {
+        let c = 32;
+        let mut rng = SplitMix64::new(12);
+        let w = Mat::from_fn(c, 8, |_, _| rng.next_normal());
+        let w2 = Mat::from_fn(c, 8, |_, _| rng.next_normal());
+        let hess = hessian_of(&correlated_inputs(64, c, 13), c);
+        let factor = gptq_factor(&hess);
+        for weight in [&w, &w2] {
+            let direct = gptq_quantize(weight, &hess, 2, 8, true);
+            let shared = gptq_quantize_factored(weight, &factor, 2, 8, true);
+            assert_eq!(direct.codes, shared.codes);
+            assert_eq!(direct.scale, shared.scale);
+            assert_eq!(direct.zero, shared.zero);
+        }
     }
 
     #[test]

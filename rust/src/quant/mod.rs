@@ -17,11 +17,11 @@ pub mod pack;
 pub mod pipeline;
 pub mod rtn;
 
-pub use gptq::gptq_quantize;
+pub use gptq::{gptq_factor, gptq_quantize, gptq_quantize_factored, GptqFactor};
 pub use pipeline::{
     build_plan_rotations, build_rotations, fuse_rotations, fuse_rotations_plan, fuse_to_dense,
-    fuse_to_dense_plan, quantize_native, quantize_native_plan, LayerRotations, PlanRotations,
-    RotationPlan, RotationSet, RotationSpec,
+    fuse_to_dense_plan, quantize_native, quantize_native_plan, quantize_native_plan_with,
+    quantize_native_with, LayerRotations, PlanRotations, RotationPlan, RotationSet, RotationSpec,
 };
 pub use pack::{pack2, unpack2};
 pub use rtn::{fake_quant_sym, group_params, rtn_quantize};

@@ -18,15 +18,17 @@
 //!   explicit residual-stream change of basis `R_{l-1}ᵀ R_l`, which is
 //!   what keeps Fig.-1 invariance exact for heterogeneous plans.
 //!
-//! Calibration here is identity-Hessian GPTQ (per-channel error feedback
-//! without cross-channel reordering); the Python path remains the
-//! reference for Hessian-calibrated GPTQ.
+//! GPTQ runs identity-Hessian by default; the `*_with` variants accept a
+//! `calib::HessianSet` (captured by `gsr calibrate` in the same rotated
+//! basis this pipeline fuses into) and become Hessian-calibrated GPTQ —
+//! the paper's measured setting, natively.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use super::{gptq_quantize, QuantizedLinear};
+use super::gptq::{gptq_factor, gptq_quantize_factored, GptqFactor};
+use super::QuantizedLinear;
 use crate::config::Json;
 use crate::model::config::{ModelCfg, R4Kind, LINEARS};
 use crate::model::weights::{FpParams, LayerR4, QuantLayer, QuantParams};
@@ -151,6 +153,24 @@ impl RotationPlan {
             spec.validate(cfg).map_err(|e| format!("layer {l}: {e}"))?;
         }
         Ok(())
+    }
+
+    /// Stable 64-bit fingerprint of the rotation **basis** this plan
+    /// builds: a SplitMix64 chain over the build seed and every layer's
+    /// spec fields. Calibration artifacts (`calib::HessianSet`) are
+    /// keyed on it so activations captured in one basis can never be
+    /// silently consumed under another. Canonicalize specs before
+    /// fingerprinting if they may carry ignored block fields.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = SplitMix64::new(self.seed ^ 0x6773_7248_6573_7321).next_u64();
+        for spec in &self.layers {
+            let fields = (spec.r1 as u64)
+                | ((spec.r4 as u64) << 4)
+                | ((spec.r1_block as u64) << 8)
+                | ((spec.r4_block as u64) << 36);
+            acc = SplitMix64::new(acc ^ fields).next_u64();
+        }
+        acc
     }
 
     // -- JSON round-trip ---------------------------------------------------
@@ -559,19 +579,61 @@ pub fn fuse_to_dense_plan(fp: &FpParams, cfg: &ModelCfg, rots: &PlanRotations) -
 // Quantization
 // ---------------------------------------------------------------------------
 
+/// Identity-Hessian GPTQ factors for the two linear input widths,
+/// built once per model (only when no calibration is supplied — the
+/// factor depends only on the dimension) and shared by every layer.
+fn identity_factors(cfg: &ModelCfg) -> (GptqFactor, GptqFactor) {
+    (gptq_factor(&Mat::identity(cfg.d_model)), gptq_factor(&Mat::identity(cfg.d_ffn)))
+}
+
 /// GPTQ every linear of one fused layer map; returns the dequantized
-/// dense map, accumulating SSE and the quantized linears.
+/// dense map, accumulating SSE and the quantized linears. With
+/// `hessians` the real per-linear activation Hessian replaces the
+/// identity (Hessian-calibrated GPTQ); without, the shared `identity`
+/// factors reproduce the legacy identity-Hessian behavior exactly.
 fn quantize_layer_map(
     map: &BTreeMap<String, Mat>,
     cfg: &ModelCfg,
     bits: u32,
+    hessians: Option<(&crate::calib::LayerHessians, u64)>,
+    identity: Option<&(GptqFactor, GptqFactor)>,
     sse: &mut f64,
     qlinears: &mut Vec<QuantizedLinear>,
 ) -> BTreeMap<String, Vec<f32>> {
+    use crate::model::forward::TapSite;
+
+    // One O(C³) Hessian factorization per tap site, shared across the
+    // linears that read it (wq/wk/wv share AttnIn, wgate/wup share
+    // FfnIn) — 4 factorizations per layer instead of 7. Uncalibrated
+    // layers reuse the two model-wide identity factors.
+    let site_factors: Option<Vec<(TapSite, GptqFactor)>> = hessians.map(|(lh, tokens)| {
+        TapSite::ALL
+            .iter()
+            .map(|&site| (site, gptq_factor(&lh.site(site).to_mat(tokens))))
+            .collect()
+    });
     let mut dense = BTreeMap::new();
     for name in LINEARS {
         let w = &map[name];
-        let q = gptq_quantize(w, &Mat::identity(w.rows), bits, cfg.group, true);
+        let site = crate::calib::LayerHessians::site_of_linear(name);
+        let factor = match &site_factors {
+            Some(factors) => {
+                &factors
+                    .iter()
+                    .find(|(s, _)| *s == site)
+                    .expect("every tap site is factored")
+                    .1
+            }
+            None => {
+                let id = identity.expect("identity factors required without calibration");
+                if site == TapSite::DownIn {
+                    &id.1
+                } else {
+                    &id.0
+                }
+            }
+        };
+        let q = gptq_quantize_factored(w, factor, bits, cfg.group, true);
         let deq = q.dequant();
         for (a, b) in deq.data.iter().zip(&w.data) {
             *sse += (a - b) * (a - b);
@@ -592,17 +654,49 @@ pub fn quantize_native(
     rots: &RotationSet,
     bits: u32,
 ) -> (QuantParams, f64, Vec<QuantizedLinear>) {
+    quantize_native_with(fp, cfg, rots, bits, None)
+        .expect("identity-Hessian path has no failure mode")
+}
+
+/// [`quantize_native`] with an optional calibration artifact: when
+/// `calib` is present every linear is GPTQ-quantized against its real
+/// activation Hessian (captured by `gsr calibrate` in the same rotated
+/// basis this pipeline fuses into). The caller is responsible for basis
+/// agreement (`HessianSet::check_basis`); geometry and checkpoint
+/// identity are checked here.
+pub fn quantize_native_with(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    rots: &RotationSet,
+    bits: u32,
+    calib: Option<&crate::calib::HessianSet>,
+) -> Result<(QuantParams, f64, Vec<QuantizedLinear>), String> {
+    if let Some(set) = calib {
+        set.check_model(cfg)?;
+        set.check_checkpoint(fp)?;
+    }
     let (embed, lm_head, fused_layers) = fuse_rotations(fp, cfg, rots);
+    let identity = if calib.is_none() { Some(identity_factors(cfg)) } else { None };
     let mut sse = 0.0;
     let mut qlinears = Vec::new();
     let layers = fused_layers
         .into_iter()
-        .map(|map| {
-            let dense = quantize_layer_map(&map, cfg, bits, &mut sse, &mut qlinears);
+        .enumerate()
+        .map(|(l, map)| {
+            let hess = calib.map(|set| (&set.layers[l], set.tokens));
+            let dense = quantize_layer_map(
+                &map,
+                cfg,
+                bits,
+                hess,
+                identity.as_ref(),
+                &mut sse,
+                &mut qlinears,
+            );
             unit_layer_scales(cfg, dense)
         })
         .collect();
-    (
+    Ok((
         QuantParams {
             embed: to_f32(&embed),
             lm_head: to_f32(&lm_head),
@@ -613,7 +707,7 @@ pub fn quantize_native(
         },
         sse,
         qlinears,
-    )
+    ))
 }
 
 /// Plan analogue of [`quantize_native`]: heterogeneous per-layer
@@ -624,14 +718,36 @@ pub fn quantize_native_plan(
     rots: &PlanRotations,
     bits: u32,
 ) -> (QuantParams, f64, Vec<QuantizedLinear>) {
+    quantize_native_plan_with(fp, cfg, rots, bits, None)
+        .expect("identity-Hessian path has no failure mode")
+}
+
+/// [`quantize_native_plan`] with an optional calibration artifact (see
+/// [`quantize_native_with`]).
+pub fn quantize_native_plan_with(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    rots: &PlanRotations,
+    bits: u32,
+    calib: Option<&crate::calib::HessianSet>,
+) -> Result<(QuantParams, f64, Vec<QuantizedLinear>), String> {
+    if let Some(set) = calib {
+        set.check_model(cfg)?;
+        set.check_checkpoint(fp)?;
+    }
     let (embed, lm_head, fused_layers, transitions) = fuse_rotations_plan(fp, cfg, rots);
+    let identity = if calib.is_none() { Some(identity_factors(cfg)) } else { None };
     let mut sse = 0.0;
     let mut qlinears = Vec::new();
     let dense: Vec<BTreeMap<String, Vec<f32>>> = fused_layers
         .iter()
-        .map(|map| quantize_layer_map(map, cfg, bits, &mut sse, &mut qlinears))
+        .enumerate()
+        .map(|(l, map)| {
+            let hess = calib.map(|set| (&set.layers[l], set.tokens));
+            quantize_layer_map(map, cfg, bits, hess, identity.as_ref(), &mut sse, &mut qlinears)
+        })
         .collect();
-    (plan_params(cfg, rots, &embed, &lm_head, dense, transitions), sse, qlinears)
+    Ok((plan_params(cfg, rots, &embed, &lm_head, dense, transitions), sse, qlinears))
 }
 
 #[cfg(test)]
@@ -810,6 +926,83 @@ mod tests {
         let model = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None };
         let logits = model.forward(&tokens);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// Plan fingerprints key on seed and every spec field — the property
+    /// the calibration artifact relies on.
+    #[test]
+    fn plan_fingerprint_keys_on_seed_and_specs() {
+        let plan = hetero_plan(7);
+        assert_eq!(plan.fingerprint(), hetero_plan(7).fingerprint());
+        assert_ne!(plan.fingerprint(), hetero_plan(8).fingerprint());
+        let mut other = hetero_plan(7);
+        other.layers[1].r1_block = 16;
+        assert_ne!(plan.fingerprint(), other.fingerprint());
+        let mut r4flip = hetero_plan(7);
+        r4flip.layers[0].r4 = R4Kind::LH;
+        r4flip.layers[0].r4_block = 16;
+        assert_ne!(plan.fingerprint(), r4flip.fingerprint());
+    }
+
+    /// Calibrated GPTQ consumes real Hessians: the quantization visibly
+    /// differs from the identity-Hessian run and still yields a finite,
+    /// runnable model.
+    #[test]
+    fn quantize_native_plan_calibrated_end_to_end() {
+        use crate::calib::{capture_hessians, checkpoint_fingerprint, CaptureKey};
+        use crate::data::{draw_token_windows, CorpusGenerator};
+
+        let cfg = tiny_cfg();
+        let fp = random_fp(&cfg, 5);
+        let plan = RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, 7);
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        let dense = fuse_to_dense_plan(&fp, &cfg, &rots);
+        let corpus = CorpusGenerator::new(42).generate(2048);
+        let seqs = draw_token_windows(&corpus, 8, 16, cfg.vocab, 3);
+        let key = CaptureKey {
+            calib_seed: 3,
+            basis_fingerprint: plan.fingerprint(),
+            checkpoint_fingerprint: checkpoint_fingerprint(&fp),
+            plan_json: String::new(),
+        };
+        let set = capture_hessians(&cfg, &dense, &seqs, 0, &key);
+        assert!(set.check_basis(plan.fingerprint()).is_ok());
+        assert!(set.check_checkpoint(&fp).is_ok());
+        // A different checkpoint with the same shapes is refused.
+        let other_fp = random_fp(&cfg, 6);
+        assert!(
+            quantize_native_plan_with(&other_fp, &cfg, &rots, 2, Some(&set)).is_err(),
+            "checkpoint mismatch must be rejected"
+        );
+
+        let (qp_id, sse_id, ql_id) = quantize_native_plan(&fp, &cfg, &rots, 2);
+        let (qp_cal, sse_cal, ql_cal) =
+            quantize_native_plan_with(&fp, &cfg, &rots, 2, Some(&set)).unwrap();
+        assert!(sse_id > 0.0 && sse_cal > 0.0);
+        assert_eq!(ql_cal.len(), ql_id.len());
+        // The Hessian must actually steer the codes somewhere.
+        let differs = ql_id
+            .iter()
+            .zip(&ql_cal)
+            .any(|(a, b)| a.codes != b.codes);
+        assert!(differs, "calibrated GPTQ produced identical codes to identity GPTQ");
+        let tokens: Vec<i32> = (0..10).map(|i| (i % 64) as i32).collect();
+        for qp in [qp_id, qp_cal] {
+            let model = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None };
+            assert!(model.forward(&tokens).iter().all(|v| v.is_finite()));
+        }
+    }
+
+    /// Geometry mismatches are reported, not silently accepted.
+    #[test]
+    fn calibrated_quantize_rejects_wrong_geometry() {
+        let cfg = tiny_cfg();
+        let fp = random_fp(&cfg, 5);
+        let rots = build_rotations(&cfg, R1Kind::GSR, R4Kind::GH, 7);
+        let mut other = cfg.clone();
+        other.n_layers = 5;
+        let set = crate::calib::HessianSet::new(&other, &crate::calib::CaptureKey::default());
+        assert!(quantize_native_with(&fp, &cfg, &rots, 2, Some(&set)).is_err());
     }
 
     /// Local rotations beat global on SSE for outlier-row weights —

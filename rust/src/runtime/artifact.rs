@@ -92,6 +92,13 @@ impl Artifacts {
         &self.corpus[self.train_end..]
     }
 
+    /// Calibration split: the training prefix of the corpus. `gsr
+    /// calibrate` draws its activation-capture sequences here so GPTQ
+    /// never calibrates on the tokens PPL is measured on.
+    pub fn calib_split(&self) -> &[u8] {
+        &self.corpus[..self.train_end]
+    }
+
     pub fn corpus_seed(&self) -> u64 {
         self.manifest
             .at("corpus")

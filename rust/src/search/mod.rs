@@ -23,13 +23,25 @@
 //! The result is a [`RotationPlan`] that round-trips through JSON
 //! (`rotation_plan.json`) into `gsr quantize-native --plan` and the
 //! heterogeneous fusion path in `quant::pipeline`.
+//!
+//! With `gsr search --calib` the objective runs in **calibration-aware**
+//! mode: a `calib::HessianSet` is un-rotated into the base basis
+//! ([`CalibWeights`]) and every candidate's error is weighted by the
+//! input-channel activation energy of *that candidate's* basis, so the
+//! search minimizes a diagonal proxy of the `‖X ΔW‖²` objective the
+//! Hessian-calibrated GPTQ pipeline actually optimizes.
 
 pub mod grid;
 pub mod objective;
 pub mod planner;
 
 pub use grid::{candidate_grid, GridCfg};
-pub use objective::{score_candidate, score_r1_group, CandidateScore, LayerWeights, Objective};
-pub use planner::{search_plan, LayerSearchResult, SearchCfg, SearchOutcome};
+pub use objective::{
+    rotated_diag, score_candidate, score_r1_group, BaseHessians, CalibWeights, CandidateScore,
+    LayerCalib, LayerWeights, Objective,
+};
+pub use planner::{
+    search_plan, search_plan_calibrated, LayerSearchResult, SearchCfg, SearchOutcome,
+};
 
 pub use crate::quant::{RotationPlan, RotationSpec};

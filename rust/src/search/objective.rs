@@ -10,12 +10,23 @@
 //! group-RTN MSE (`analysis::sequency::group_rtn_mse`). `wo` is skipped:
 //! its input channels see B2 (shared across candidates), so it cannot
 //! discriminate between them.
+//!
+//! **Calibrated mode** (`gsr search --calib`): a captured
+//! [`crate::calib::HessianSet`] is un-rotated into the base basis once
+//! ([`CalibWeights`]), and each candidate's group-RTN MSE is weighted by
+//! that candidate basis's input-channel energy `diag(R_cᵀ H R_c)` — the
+//! diagonal proxy of the `‖X ΔW‖²` objective calibrated GPTQ actually
+//! minimizes, so the search optimizes what the quantizer will see.
 
-use crate::analysis::sequency::{column_group_sequency_variance, group_rtn_mse};
-use crate::model::config::ModelCfg;
+use crate::analysis::sequency::{
+    column_group_sequency_variance, group_rtn_mse, group_rtn_mse_weighted,
+};
+use crate::calib::HessianSet;
+use crate::config::Json;
+use crate::model::config::{ModelCfg, R4Kind};
 use crate::model::weights::FpLayer;
-use crate::quant::pipeline::{build_r4, r1_seed, r4_seed};
-use crate::quant::RotationSpec;
+use crate::quant::pipeline::{build_plan_rotations, build_r4, r1_seed, r4_seed};
+use crate::quant::{RotationPlan, RotationSpec};
 use crate::rng::SplitMix64;
 use crate::transform::{try_build_r1, Mat};
 
@@ -31,6 +42,95 @@ pub struct Objective {
     pub seed: u64,
 }
 
+/// One layer's base-basis (un-rotated) activation Hessians — the
+/// calibration signal the diag(H)-weighted proxy consumes. `wo` has no
+/// entry because the objective skips it (its basis is candidate-
+/// invariant).
+#[derive(Debug, Clone)]
+pub struct BaseHessians {
+    /// Post-ln1 residual-stream Hessian (`wq`/`wk`/`wv` inputs), `[d, d]`.
+    pub attn: Mat,
+    /// Post-ln2 residual-stream Hessian (`wgate`/`wup` inputs), `[d, d]`.
+    pub ffn: Mat,
+    /// Pre-R4 FFN activation Hessian (`wdown` input), `[f, f]`.
+    pub down: Mat,
+}
+
+/// Calibration weights for the whole model, in the base basis so any
+/// candidate rotation can be scored: the capture basis satisfies
+/// `H_rot = Rᵀ H_base R` (RMSNorm commutes with orthogonal R1, so the
+/// rotated stream is exactly the base stream times R), hence
+/// `H_base = R H_rot Rᵀ` and a candidate's weights are
+/// `diag(R_cᵀ H_base R_c)`.
+#[derive(Debug, Clone)]
+pub struct CalibWeights {
+    /// Activation rows behind the estimate (diagnostic).
+    pub tokens: u64,
+    /// Checkpoint fingerprint carried over from the artifact (0 =
+    /// unknown); the planner verifies it against the searched model.
+    pub checkpoint: u64,
+    pub layers: Vec<BaseHessians>,
+}
+
+impl CalibWeights {
+    /// Un-rotate a captured [`HessianSet`] using the capture plan
+    /// embedded in the artifact.
+    pub fn from_hessian_set(set: &HessianSet, cfg: &ModelCfg) -> Result<Self, String> {
+        set.check_model(cfg)?;
+        if set.plan_json.is_empty() {
+            return Err(
+                "Hessian artifact carries no capture plan — it was taken in-process \
+                 and cannot be re-based for the search objective"
+                    .to_string(),
+            );
+        }
+        let plan = RotationPlan::from_json(&Json::parse(&set.plan_json)?)?;
+        set.check_basis(plan.fingerprint())?;
+        let rots = build_plan_rotations(cfg, &plan)?;
+        let layers = (0..cfg.n_layers)
+            .map(|l| {
+                let lr = &rots.layers[l];
+                let unrot = |h: &Mat, r: &Mat| r.matmul(h).matmul(&r.transpose());
+                BaseHessians {
+                    attn: unrot(&set.hessian_mat(l, "wq"), lr.r1.as_ref()),
+                    ffn: unrot(&set.hessian_mat(l, "wgate"), lr.r1.as_ref()),
+                    down: unrot(&set.hessian_mat(l, "wdown"), lr.r4.as_ref()),
+                }
+            })
+            .collect();
+        Ok(Self { tokens: set.tokens, checkpoint: set.checkpoint_fingerprint, layers })
+    }
+}
+
+/// `diag(Rᵀ H R)` without materializing the rotated Hessian: one matmul
+/// plus a column-wise contraction.
+pub fn rotated_diag(h: &Mat, r: &Mat) -> Vec<f64> {
+    debug_assert_eq!((h.rows, h.cols), (r.rows, r.rows));
+    let t = h.matmul(r);
+    (0..r.cols)
+        .map(|j| (0..r.rows).map(|i| r[(i, j)] * t[(i, j)]).sum())
+        .collect()
+}
+
+/// Per-layer calibration handle for scoring: the base Hessians plus an
+/// optional cache of down-projection diag weights per canonical
+/// `(r4, r4_block)`. The planner fills the cache once per layer so the
+/// O(d_ffn³) `diag(R4ᵀ H R4)` is computed once per distinct R4, not
+/// once per (R1 group × R4 spec); a missing entry falls back to the
+/// direct computation, bit-identically.
+#[derive(Clone, Copy)]
+pub struct LayerCalib<'a> {
+    pub base: &'a BaseHessians,
+    pub down_diags: Option<&'a std::collections::BTreeMap<(R4Kind, usize), Vec<f64>>>,
+}
+
+impl<'a> LayerCalib<'a> {
+    /// Uncached handle (used by `score_candidate` one-offs and tests).
+    pub fn uncached(base: &'a BaseHessians) -> Self {
+        Self { base, down_diags: None }
+    }
+}
+
 /// One layer's weights in objective form.
 pub struct LayerWeights {
     /// `diag(γ) W` for wq/wk/wv (ln1) and wgate/wup (ln2), horizontally
@@ -38,6 +138,8 @@ pub struct LayerWeights {
     /// along the shared input-channel axis, exactly as in the fused
     /// pipeline.
     pub stream: Mat,
+    /// Column where the ln2 (wgate/wup) block starts inside `stream`.
+    pub ffn_col0: usize,
     /// `W_down` as `[d_ffn, d_model]`.
     pub wdown: Mat,
 }
@@ -69,15 +171,21 @@ impl LayerWeights {
             rows: f,
             cols: d,
         };
-        Self { stream, wdown }
+        Self { stream, ffn_col0: 3 * d, wdown }
     }
+}
+
+/// Copy a contiguous column range out of a matrix.
+fn col_slice(m: &Mat, c0: usize, c1: usize) -> Mat {
+    Mat::from_fn(m.rows, c1 - c0, |r, c| m[(r, c0 + c)])
 }
 
 /// Score of one candidate on one layer.
 #[derive(Debug, Clone, Copy)]
 pub struct CandidateScore {
     pub spec: RotationSpec,
-    /// Element-weighted mean group-RTN MSE over all scored fused weights.
+    /// Element-weighted mean group-RTN MSE over all scored fused
+    /// weights; diag(H)-weighted when calibration is active.
     pub quant_mse: f64,
     /// Mean intra-group column-sequency variance of the candidate R1
     /// (diagnostic; reported, not optimized).
@@ -89,13 +197,16 @@ pub struct CandidateScore {
 /// sequency variance — the dominant cost) is done **once**; each spec
 /// adds only its R4 term. R1 builds are seeded by `r1_seed`, which keys
 /// on `(r1, r1_block)` alone, so the shared matrix is exactly the one
-/// the pipeline will build for every spec in the group. Geometry errors
-/// come back as per-spec `Err` (the planner counts them as skipped).
+/// the pipeline will build for every spec in the group. With `calib`,
+/// every MSE term is weighted by that candidate basis's input-channel
+/// energy. Geometry errors come back as per-spec `Err` (the planner
+/// counts them as skipped).
 pub fn score_r1_group(
     specs: &[RotationSpec],
     lw: &LayerWeights,
     cfg: &ModelCfg,
     obj: &Objective,
+    calib: Option<LayerCalib>,
 ) -> Vec<Result<CandidateScore, String>> {
     let key0 = match specs.first() {
         Some(s) => s.canonical(cfg),
@@ -105,7 +216,22 @@ pub fn score_r1_group(
         let mut rng = SplitMix64::new(r1_seed(&key0, obj.seed));
         let r1 = try_build_r1(key0.r1, cfg.d_model, key0.r1_block, &mut rng)?;
         let rotated_stream = r1.transpose().matmul(&lw.stream);
-        let mse_s = group_rtn_mse(&rotated_stream, obj.group, obj.bits);
+        let mse_s = match calib {
+            None => group_rtn_mse(&rotated_stream, obj.group, obj.bits),
+            Some(lc) => {
+                // Split the stream at the ln1/ln2 boundary: each half is
+                // weighted by its own site's rotated Hessian diagonal,
+                // then recombined by element count.
+                let wa = rotated_diag(&lc.base.attn, &r1);
+                let wf = rotated_diag(&lc.base.ffn, &r1);
+                let attn = col_slice(&rotated_stream, 0, lw.ffn_col0);
+                let ffn = col_slice(&rotated_stream, lw.ffn_col0, rotated_stream.cols);
+                let (na, nf) = (attn.data.len() as f64, ffn.data.len() as f64);
+                let mse_a = group_rtn_mse_weighted(&attn, obj.group, obj.bits, &wa);
+                let mse_f = group_rtn_mse_weighted(&ffn, obj.group, obj.bits, &wf);
+                (mse_a * na + mse_f * nf) / (na + nf)
+            }
+        };
         let vars = column_group_sequency_variance(&r1, obj.group)?;
         let seq_variance = vars.iter().sum::<f64>() / vars.len() as f64;
         Ok((r1, mse_s, seq_variance))
@@ -127,7 +253,22 @@ pub fn score_r1_group(
             let mut rng = SplitMix64::new(r4_seed(&key, obj.seed));
             let (r4, _signs) = build_r4(cfg, key.r4, key.r4_block, &mut rng)?;
             let rotated_down = r4.transpose().matmul(&lw.wdown).matmul(&r1);
-            let mse_d = group_rtn_mse(&rotated_down, obj.group, obj.bits);
+            let mse_d = match calib {
+                None => group_rtn_mse(&rotated_down, obj.group, obj.bits),
+                Some(lc) => {
+                    let cached =
+                        lc.down_diags.and_then(|m| m.get(&(key.r4, key.r4_block)));
+                    let computed;
+                    let wd: &[f64] = match cached {
+                        Some(v) => v,
+                        None => {
+                            computed = rotated_diag(&lc.base.down, &r4);
+                            &computed
+                        }
+                    };
+                    group_rtn_mse_weighted(&rotated_down, obj.group, obj.bits, wd)
+                }
+            };
             let (ns, nd) = (lw.stream.data.len() as f64, lw.wdown.data.len() as f64);
             let quant_mse = (mse_s * ns + mse_d * nd) / (ns + nd);
             Ok(CandidateScore { spec: key, quant_mse, seq_variance })
@@ -142,9 +283,10 @@ pub fn score_candidate(
     lw: &LayerWeights,
     cfg: &ModelCfg,
     obj: &Objective,
+    calib: Option<LayerCalib>,
 ) -> Result<CandidateScore, String> {
     spec.validate(cfg)?;
-    score_r1_group(std::slice::from_ref(spec), lw, cfg, obj)
+    score_r1_group(std::slice::from_ref(spec), lw, cfg, obj, calib)
         .pop()
         .expect("singleton group yields one score")
 }
@@ -169,6 +311,26 @@ mod tests {
         }
     }
 
+    fn captured_calib(cfg: &ModelCfg, fp: &FpParams) -> CalibWeights {
+        use crate::calib::{capture_hessians, checkpoint_fingerprint, CaptureKey};
+        use crate::data::{draw_token_windows, CorpusGenerator};
+        use crate::quant::fuse_to_dense_plan;
+
+        let plan = RotationPlan::uniform(RotationSpec::baseline(cfg), cfg.n_layers, 21);
+        let rots = build_plan_rotations(cfg, &plan).unwrap();
+        let dense = fuse_to_dense_plan(fp, cfg, &rots);
+        let corpus = CorpusGenerator::new(17).generate(2048);
+        let seqs = draw_token_windows(&corpus, 6, 16, cfg.vocab, 5);
+        let key = CaptureKey {
+            calib_seed: 5,
+            basis_fingerprint: plan.fingerprint(),
+            checkpoint_fingerprint: checkpoint_fingerprint(fp),
+            plan_json: plan.to_json().to_string_pretty(),
+        };
+        let set = capture_hessians(cfg, &dense, &seqs, 0, &key);
+        CalibWeights::from_hessian_set(&set, cfg).unwrap()
+    }
+
     #[test]
     fn stream_concat_carries_gamma() {
         let cfg = tiny_cfg();
@@ -176,6 +338,7 @@ mod tests {
         let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
         let d = cfg.d_model;
         assert_eq!((lw.stream.rows, lw.stream.cols), (d, 3 * d + 2 * cfg.d_ffn));
+        assert_eq!(lw.ffn_col0, 3 * d);
         // First block is diag(ln1) · wq.
         let g0 = fp.layers[0].ln1[0] as f64;
         let expect = g0 * fp.layers[0].wq[0] as f64;
@@ -189,8 +352,8 @@ mod tests {
         let lw = LayerWeights::from_layer(&fp.layers[1], &cfg);
         let obj = Objective { bits: 2, group: cfg.group, seed: 9 };
         let spec = RotationSpec::baseline(&cfg);
-        let a = score_candidate(&spec, &lw, &cfg, &obj).unwrap();
-        let b = score_candidate(&spec, &lw, &cfg, &obj).unwrap();
+        let a = score_candidate(&spec, &lw, &cfg, &obj, None).unwrap();
+        let b = score_candidate(&spec, &lw, &cfg, &obj, None).unwrap();
         assert_eq!(a.quant_mse.to_bits(), b.quant_mse.to_bits());
         assert!(a.quant_mse.is_finite() && a.quant_mse > 0.0);
         assert!(a.seq_variance.is_finite());
@@ -208,6 +371,44 @@ mod tests {
             r4: R4Kind::GH,
             r4_block: cfg.d_ffn,
         };
-        assert!(score_candidate(&bad, &lw, &cfg, &obj).is_err());
+        assert!(score_candidate(&bad, &lw, &cfg, &obj, None).is_err());
+    }
+
+    #[test]
+    fn rotated_diag_matches_dense_rotation() {
+        let mut rng = SplitMix64::new(4);
+        let x = Mat::from_fn(8, 8, |_, _| rng.next_normal());
+        // Symmetric PSD-ish H.
+        let h = x.matmul(&x.transpose());
+        let r = crate::transform::rht(8, &mut rng);
+        let fast = rotated_diag(&h, &r);
+        let dense = r.transpose().matmul(&h).matmul(&r);
+        for (j, v) in fast.iter().enumerate() {
+            assert!((v - dense[(j, j)]).abs() < 1e-9, "col {j}: {v} vs {}", dense[(j, j)]);
+        }
+    }
+
+    #[test]
+    fn calibrated_scoring_is_finite_deterministic_and_distinct() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 5);
+        let calib = captured_calib(&cfg, &fp);
+        let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let obj = Objective { bits: 2, group: cfg.group, seed: 21 };
+        let spec = RotationSpec::baseline(&cfg);
+        let lc = LayerCalib::uncached(&calib.layers[0]);
+        let a = score_candidate(&spec, &lw, &cfg, &obj, Some(lc)).unwrap();
+        let b = score_candidate(&spec, &lw, &cfg, &obj, Some(lc)).unwrap();
+        assert_eq!(a.quant_mse.to_bits(), b.quant_mse.to_bits());
+        assert!(a.quant_mse.is_finite() && a.quant_mse > 0.0);
+        // Real activation energy is not uniform across channels, so the
+        // calibrated score must differ from the unweighted one.
+        let plain = score_candidate(&spec, &lw, &cfg, &obj, None).unwrap();
+        assert!(
+            (a.quant_mse - plain.quant_mse).abs() > 1e-15,
+            "diag(H) weighting had no effect: {} vs {}",
+            a.quant_mse,
+            plain.quant_mse
+        );
     }
 }

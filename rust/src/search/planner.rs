@@ -14,10 +14,15 @@ use std::sync::Mutex;
 use std::collections::BTreeMap;
 
 use super::grid::{candidate_grid, GridCfg};
-use super::objective::{score_r1_group, CandidateScore, LayerWeights, Objective};
-use crate::model::config::ModelCfg;
+use super::objective::{
+    rotated_diag, score_r1_group, CalibWeights, CandidateScore, LayerCalib, LayerWeights,
+    Objective,
+};
+use crate::model::config::{ModelCfg, R4Kind};
 use crate::model::weights::FpParams;
+use crate::quant::pipeline::{build_r4, r4_seed};
 use crate::quant::{RotationPlan, RotationSpec};
+use crate::rng::SplitMix64;
 use crate::transform::R1Kind;
 
 /// Search configuration (`gsr search` flags map 1:1 onto this).
@@ -89,6 +94,36 @@ pub fn search_plan(
     cfg: &ModelCfg,
     scfg: &SearchCfg,
 ) -> Result<SearchOutcome, String> {
+    search_plan_calibrated(fp, cfg, scfg, None)
+}
+
+/// [`search_plan`] under the calibration-aware objective: with `calib`,
+/// every candidate's group-RTN MSE is weighted by the input-channel
+/// activation energy of that candidate's basis (`gsr search --calib`).
+/// The fixed-GSR baseline sits in every layer's grid and is scored under
+/// the same objective, so the searched plan still cannot lose to it.
+pub fn search_plan_calibrated(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    scfg: &SearchCfg,
+    calib: Option<&CalibWeights>,
+) -> Result<SearchOutcome, String> {
+    if let Some(c) = calib {
+        if c.layers.len() != cfg.n_layers {
+            return Err(format!(
+                "calibration covers {} layers, model has {}",
+                c.layers.len(),
+                cfg.n_layers
+            ));
+        }
+        if c.checkpoint != 0 && c.checkpoint != crate::calib::checkpoint_fingerprint(fp) {
+            return Err(
+                "calibration was captured on a different checkpoint than the one \
+                 being searched — re-run `gsr calibrate` on this checkpoint"
+                    .to_string(),
+            );
+        }
+    }
     let mut candidates = candidate_grid(cfg, &scfg.grid);
     if candidates.is_empty() {
         return Err("empty candidate grid".to_string());
@@ -121,6 +156,36 @@ pub fn search_plan(
         }
     }
 
+    // Calibrated mode: precompute each layer's down-projection diag
+    // weights once per distinct canonical R4 — they are identical for
+    // every R1 group, and the O(d_ffn³) diag(R4ᵀ H R4) would otherwise
+    // be recomputed per (R1 group × R4 spec).
+    let down_diags: Option<Vec<BTreeMap<(R4Kind, usize), Vec<f64>>>> = calib.map(|c| {
+        let mut r4_keys: Vec<(R4Kind, usize)> = Vec::new();
+        for spec in &candidates {
+            let k = spec.canonical(cfg);
+            if !r4_keys.contains(&(k.r4, k.r4_block)) {
+                r4_keys.push((k.r4, k.r4_block));
+            }
+        }
+        c.layers
+            .iter()
+            .map(|bh| {
+                let mut per_layer = BTreeMap::new();
+                for &(r4, r4_block) in &r4_keys {
+                    // r4_seed keys on the R4 fields alone, so any R1
+                    // fields yield the exact matrix the scorer builds.
+                    let probe = RotationSpec { r1: R1Kind::GSR, r1_block: cfg.group, r4, r4_block };
+                    let mut rng = SplitMix64::new(r4_seed(&probe, scfg.seed));
+                    if let Ok((m, _)) = build_r4(cfg, r4, r4_block, &mut rng) {
+                        per_layer.insert((r4, r4_block), rotated_diag(&bh.down, &m));
+                    }
+                }
+                per_layer
+            })
+            .collect()
+    });
+
     // One (layer, r1-group) cell per work item.
     let work: Vec<(usize, usize)> = (0..layer_weights.len())
         .flat_map(|l| (0..groups.len()).map(move |g| (l, g)))
@@ -137,7 +202,11 @@ pub fn search_plan(
                     break;
                 }
                 let (l, g) = work[i];
-                let scores = score_r1_group(&groups[g], &layer_weights[l], cfg, &obj);
+                let lcal = calib.map(|c| LayerCalib {
+                    base: &c.layers[l],
+                    down_diags: down_diags.as_ref().map(|d| &d[l]),
+                });
+                let scores = score_r1_group(&groups[g], &layer_weights[l], cfg, &obj, lcal);
                 cells.lock().unwrap()[i] = Some(scores);
             });
         }
@@ -265,6 +334,71 @@ mod tests {
         let baseline = RotationSpec::baseline(&cfg).canonical(&cfg);
         assert!(out.plan.layers.iter().all(|&s| s == baseline));
         assert_eq!(out.improved_layers(), 0);
+    }
+
+    /// Calibrated search keeps the unbeatable-baseline property: the
+    /// fixed-GSR spec is scored under the same diag(H)-weighted
+    /// objective inside every layer's grid.
+    #[test]
+    fn calibrated_search_never_loses_to_baseline() {
+        use crate::calib::{capture_hessians, checkpoint_fingerprint, CaptureKey};
+        use crate::data::{draw_token_windows, CorpusGenerator};
+        use crate::quant::fuse_to_dense_plan;
+
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 19);
+        let scfg = SearchCfg { grid: tiny_grid(), threads: 2, ..SearchCfg::default() };
+        let plan =
+            RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, scfg.seed);
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        let dense = fuse_to_dense_plan(&fp, &cfg, &rots);
+        let corpus = CorpusGenerator::new(23).generate(2048);
+        let seqs = draw_token_windows(&corpus, 6, 12, cfg.vocab, 7);
+        let key = CaptureKey {
+            calib_seed: 7,
+            basis_fingerprint: plan.fingerprint(),
+            checkpoint_fingerprint: checkpoint_fingerprint(&fp),
+            plan_json: plan.to_json().to_string_pretty(),
+        };
+        let set = capture_hessians(&cfg, &dense, &seqs, 0, &key);
+        let calib = CalibWeights::from_hessian_set(&set, &cfg).unwrap();
+        let out = search_plan_calibrated(&fp, &cfg, &scfg, Some(&calib)).unwrap();
+        for l in &out.layers {
+            assert!(
+                l.best.quant_mse <= l.baseline.quant_mse,
+                "layer {}: calibrated searched {} > baseline {}",
+                l.layer,
+                l.best.quant_mse,
+                l.baseline.quant_mse
+            );
+        }
+        build_plan_rotations(&cfg, &out.plan).expect("calibrated plan must build");
+        // The planner's down-diag cache must not change scores: an
+        // uncached rescore of the winning spec is bit-identical.
+        let lw0 = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let obj = Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed };
+        let rescore = crate::search::objective::score_candidate(
+            &out.layers[0].best.spec,
+            &lw0,
+            &cfg,
+            &obj,
+            Some(LayerCalib::uncached(&calib.layers[0])),
+        )
+        .unwrap();
+        assert_eq!(
+            rescore.quant_mse.to_bits(),
+            out.layers[0].best.quant_mse.to_bits(),
+            "cached and uncached calibrated scores must agree exactly"
+        );
+        // The weighting must be able to change the searched outcome or
+        // at least the measured numbers.
+        let plain = search_plan(&fp, &cfg, &scfg).unwrap();
+        let differs = out
+            .layers
+            .iter()
+            .zip(&plain.layers)
+            .any(|(a, b)| a.best.quant_mse.to_bits() != b.best.quant_mse.to_bits());
+        assert!(differs, "calibrated objective scored identically to the plain one");
     }
 
     /// Thread count must not change the outcome (determinism).

@@ -1,0 +1,207 @@
+//! End-to-end tests of the calibration subsystem: capture → artifact →
+//! calibrated GPTQ → eval, plus the basis-fingerprint safety rails.
+//! Pure native (no PJRT, no prebuilt artifacts).
+
+use std::path::PathBuf;
+
+use gsr::calib::{capture_hessians, checkpoint_fingerprint, CaptureKey, HessianSet};
+use gsr::data::{draw_token_windows, CorpusGenerator, SEED_CORPUS};
+use gsr::eval::{NativeModel, PplEngine};
+use gsr::model::config::LINEARS;
+use gsr::model::{DenseModel, FpParams, ModelCfg};
+use gsr::quant::{
+    build_plan_rotations, fuse_rotations_plan, fuse_to_dense_plan, quantize_native_plan,
+    quantize_native_plan_with, QuantizedLinear, RotationPlan, RotationSpec,
+};
+use gsr::search::{search_plan_calibrated, CalibWeights, GridCfg, SearchCfg};
+use gsr::transform::{Mat, R1Kind};
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+/// Shared fixture: checkpoint, baseline plan, fused dense params, and a
+/// Hessian set captured on the calibration split.
+struct Fixture {
+    cfg: ModelCfg,
+    fp: FpParams,
+    plan: RotationPlan,
+    set: HessianSet,
+    eval_split: Vec<u8>,
+}
+
+fn fixture() -> Fixture {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 11);
+    let corpus = CorpusGenerator::new(SEED_CORPUS).generate(24_000);
+    let (calib_split, eval_split) = corpus.split_at(16_000);
+    let plan = RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, 2025);
+    let rots = build_plan_rotations(&cfg, &plan).unwrap();
+    let dense = fuse_to_dense_plan(&fp, &cfg, &rots);
+    let seqs = draw_token_windows(calib_split, 24, 48, cfg.vocab, 0xCA11B);
+    let key = CaptureKey {
+        calib_seed: 0xCA11B,
+        basis_fingerprint: plan.fingerprint(),
+        checkpoint_fingerprint: checkpoint_fingerprint(&fp),
+        plan_json: plan.to_json().to_string_pretty(),
+    };
+    let set = capture_hessians(&cfg, &dense, &seqs, 0, &key);
+    Fixture { cfg, fp, plan, set, eval_split: eval_split.to_vec() }
+}
+
+fn ppl_of(cfg: &ModelCfg, params: gsr::model::QuantParams, text: &[u8]) -> f64 {
+    let tokens: Vec<u8> = text.iter().map(|&b| b % cfg.vocab as u8).collect();
+    let model = DenseModel::Quant { cfg: cfg.clone(), params, a_bits: None };
+    let native = NativeModel { model: &model, batch: 1, seq: 48 };
+    PplEngine::new(40).evaluate(&native, &tokens).unwrap().ppl
+}
+
+/// The acceptance property: with real Hessians from corpus activations,
+/// GPTQ produces a model whose perplexity on the held-out synthetic eval
+/// split is no worse than the identity-Hessian pipeline's (small
+/// multiplicative slack for fp jitter; in practice the gap is real).
+#[test]
+fn calibrated_ppl_no_worse_than_identity_on_synthetic_eval() {
+    let fx = fixture();
+    let rots = build_plan_rotations(&fx.cfg, &fx.plan).unwrap();
+    let (qp_id, _, _) = quantize_native_plan(&fx.fp, &fx.cfg, &rots, 2);
+    let (qp_cal, _, _) =
+        quantize_native_plan_with(&fx.fp, &fx.cfg, &rots, 2, Some(&fx.set)).unwrap();
+    let ppl_id = ppl_of(&fx.cfg, qp_id, &fx.eval_split);
+    let ppl_cal = ppl_of(&fx.cfg, qp_cal, &fx.eval_split);
+    assert!(
+        ppl_cal.is_finite() && ppl_id.is_finite(),
+        "non-finite PPL: calibrated {ppl_cal}, identity {ppl_id}"
+    );
+    assert!(
+        ppl_cal <= ppl_id * 1.02,
+        "calibrated GPTQ PPL {ppl_cal:.3} worse than identity-Hessian PPL {ppl_id:.3}"
+    );
+}
+
+/// The quantity calibrated GPTQ actually minimizes — reconstruction
+/// error on the calibration inputs themselves, `Σ tr(ΔWᵀ H ΔW)` over
+/// every linear — must not regress versus identity-Hessian GPTQ.
+#[test]
+fn calibrated_gptq_cuts_reconstruction_error_on_calib_inputs() {
+    let fx = fixture();
+    let rots = build_plan_rotations(&fx.cfg, &fx.plan).unwrap();
+    let (_, _, ql_id) = quantize_native_plan(&fx.fp, &fx.cfg, &rots, 2);
+    let (_, _, ql_cal) =
+        quantize_native_plan_with(&fx.fp, &fx.cfg, &rots, 2, Some(&fx.set)).unwrap();
+    let (_, _, fused, _) = fuse_rotations_plan(&fx.fp, &fx.cfg, &rots);
+
+    let hessian_loss = |qlinears: &[QuantizedLinear]| -> f64 {
+        let mut total = 0.0;
+        for (l, map) in fused.iter().enumerate() {
+            for (i, name) in LINEARS.iter().enumerate() {
+                let w = &map[*name];
+                let q = &qlinears[l * LINEARS.len() + i];
+                let deq = q.dequant();
+                let dw = Mat::from_fn(w.rows, w.cols, |r, c| deq[(r, c)] - w[(r, c)]);
+                let h = fx.set.hessian_mat(l, name);
+                let hdw = h.matmul(&dw);
+                total += dw.data.iter().zip(&hdw.data).map(|(a, b)| a * b).sum::<f64>();
+            }
+        }
+        total
+    };
+    let loss_id = hessian_loss(&ql_id);
+    let loss_cal = hessian_loss(&ql_cal);
+    assert!(loss_id.is_finite() && loss_cal.is_finite());
+    assert!(
+        loss_cal <= loss_id * 1.01 + 1e-9,
+        "calibrated ‖XΔW‖² {loss_cal:.4} regressed vs identity {loss_id:.4}"
+    );
+}
+
+/// The artifact is reusable: save → load → quantize must agree exactly
+/// with quantizing from the in-memory capture.
+#[test]
+fn hessian_artifact_reuse_is_exact() {
+    let fx = fixture();
+    let path: PathBuf = std::env::temp_dir().join("gsr_calibration_reuse_test.bin");
+    fx.set.save(&path).unwrap();
+    let reloaded = HessianSet::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(fx.set, reloaded);
+    assert_eq!(reloaded.basis_fingerprint, fx.plan.fingerprint());
+
+    let rots = build_plan_rotations(&fx.cfg, &fx.plan).unwrap();
+    let (qp_a, sse_a, _) =
+        quantize_native_plan_with(&fx.fp, &fx.cfg, &rots, 2, Some(&fx.set)).unwrap();
+    let (qp_b, sse_b, _) =
+        quantize_native_plan_with(&fx.fp, &fx.cfg, &rots, 2, Some(&reloaded)).unwrap();
+    assert_eq!(sse_a.to_bits(), sse_b.to_bits());
+    for (la, lb) in qp_a.layers.iter().zip(&qp_b.layers) {
+        for name in LINEARS {
+            assert_eq!(la.dense[name], lb.dense[name], "{name} dequant drifted");
+        }
+    }
+}
+
+/// Basis fingerprints fence misuse: Hessians captured under one rotation
+/// basis refuse to serve another.
+#[test]
+fn fingerprint_guards_against_basis_mismatch() {
+    let fx = fixture();
+    assert!(fx.set.check_basis(fx.plan.fingerprint()).is_ok());
+    let mut other = fx.plan.clone();
+    other.layers[0] = RotationSpec {
+        r1: R1Kind::LH,
+        r1_block: 8,
+        r4: fx.plan.layers[0].r4,
+        r4_block: fx.plan.layers[0].r4_block,
+    };
+    assert_ne!(other.fingerprint(), fx.plan.fingerprint());
+    assert!(fx.set.check_basis(other.fingerprint()).is_err());
+    // Checkpoint identity is the third key component: same geometry,
+    // different weights → refused.
+    let other_fp = FpParams::synthetic(&fx.cfg, 12);
+    assert!(fx.set.check_checkpoint(&fx.fp).is_ok());
+    assert!(fx.set.check_checkpoint(&other_fp).is_err());
+}
+
+/// `gsr search --calib` end to end: weights from a reloaded artifact
+/// drive the diag(H)-weighted objective; the searched plan stays valid
+/// and never loses to the fixed-GSR baseline under that objective.
+#[test]
+fn calibrated_search_from_artifact_end_to_end() {
+    let fx = fixture();
+    let path: PathBuf = std::env::temp_dir().join("gsr_calibration_search_test.bin");
+    fx.set.save(&path).unwrap();
+    let reloaded = HessianSet::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let calib = CalibWeights::from_hessian_set(&reloaded, &fx.cfg).unwrap();
+    assert_eq!(calib.tokens, fx.set.tokens);
+    let scfg = SearchCfg {
+        grid: GridCfg {
+            r1_kinds: vec![R1Kind::GH, R1Kind::GSR, R1Kind::LH],
+            blocks: vec![8, 16, 32],
+            r4_kinds: vec![gsr::model::R4Kind::GH, gsr::model::R4Kind::LH],
+        },
+        threads: 2,
+        ..SearchCfg::default()
+    };
+    let out = search_plan_calibrated(&fx.fp, &fx.cfg, &scfg, Some(&calib)).unwrap();
+    for l in &out.layers {
+        assert!(
+            l.best.quant_mse <= l.baseline.quant_mse,
+            "layer {}: {} > baseline {}",
+            l.layer,
+            l.best.quant_mse,
+            l.baseline.quant_mse
+        );
+        assert!(l.evaluated > 1, "grid must actually be explored");
+    }
+    build_plan_rotations(&fx.cfg, &out.plan).expect("searched plan must build");
+}

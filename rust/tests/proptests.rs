@@ -5,6 +5,7 @@
 //! case generation with failure reporting of the offending seed. Each
 //! property runs across a seed sweep; a failing seed reproduces exactly.
 
+use gsr::calib::HessianAccum;
 use gsr::quant::{fake_quant_sym, gptq_quantize, pack2, rtn_quantize, unpack2};
 use gsr::rng::SplitMix64;
 use gsr::transform::{
@@ -186,6 +187,88 @@ fn prop_gptq_no_worse_than_rtn_hessian_loss() {
         let lg = loss(&gptq_quantize(&w, &hess, 2, group, true));
         let lr = loss(&rtn_quantize(&w, 2, group, true));
         assert!(lg <= lr * 1.02 + 1e-9, "seed {seed}: gptq {lg} vs rtn {lr}");
+    });
+}
+
+#[test]
+fn prop_hessian_partial_merge_is_order_invariant() {
+    // Streaming calibration merges per-thread partials; any merge order
+    // must agree up to fp associativity (addition is commutative, so
+    // reordering only reshuffles rounding). Checked against a shuffled
+    // merge order with a tight relative tolerance.
+    for_seeds(16, |seed, rng| {
+        let dim = 4 * (1 + rng.next_below(6) as usize);
+        let n_parts = 3 + rng.next_below(4) as usize;
+        let parts: Vec<HessianAccum> = (0..n_parts)
+            .map(|_| {
+                let mut acc = HessianAccum::new(dim);
+                for _ in 0..(2 + rng.next_below(6)) {
+                    let row: Vec<f32> =
+                        (0..dim).map(|_| (rng.next_normal() * 2.0) as f32).collect();
+                    acc.add_row(&row);
+                }
+                acc
+            })
+            .collect();
+        let mut forward = HessianAccum::new(dim);
+        for p in &parts {
+            forward.merge(p);
+        }
+        // Fisher–Yates order shuffle.
+        let mut order: Vec<usize> = (0..n_parts).collect();
+        for i in (1..n_parts).rev() {
+            order.swap(i, rng.next_below(i as u64 + 1) as usize);
+        }
+        let mut shuffled = HessianAccum::new(dim);
+        for &i in &order {
+            shuffled.merge(&parts[i]);
+        }
+        for (a, b) in forward.data.iter().zip(&shuffled.data) {
+            let scale = a.abs().max(b.abs()).max(1.0);
+            assert!(
+                (a - b).abs() <= 1e-9 * scale,
+                "seed {seed}: merge order changed a Hessian entry ({a} vs {b})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_calibrated_gptq_no_worse_than_identity_on_calib_inputs() {
+    // The calibrated-pipeline contract: on the calibration inputs
+    // themselves (loss tr(ΔWᵀ H ΔW) with H = XᵀX streamed through the
+    // calib accumulator), GPTQ fed the real Hessian must not lose to
+    // GPTQ fed the identity.
+    for_seeds(8, |seed, rng| {
+        let c = 32;
+        let h = 8;
+        let group = 8;
+        let w = Mat::from_fn(c, h, |_, _| rng.next_normal());
+        let mut acc = HessianAccum::new(c);
+        let rows = 96;
+        for _ in 0..rows {
+            let base = rng.next_normal();
+            let row: Vec<f32> = (0..c)
+                .map(|j| {
+                    let amp = if j % 9 == 0 { 5.0 } else { 1.0 };
+                    (amp * (0.5 * base + 0.5 * rng.next_normal())) as f32
+                })
+                .collect();
+            acc.add_row(&row);
+        }
+        let hess = acc.to_mat(rows);
+        let loss = |q: &gsr::quant::QuantizedLinear| -> f64 {
+            let deq = q.dequant();
+            let dw = Mat::from_fn(c, h, |r, cc| deq[(r, cc)] - w[(r, cc)]);
+            let hdw = hess.matmul(&dw);
+            dw.data.iter().zip(&hdw.data).map(|(a, b)| a * b).sum()
+        };
+        let cal = loss(&gptq_quantize(&w, &hess, 2, group, true));
+        let ident = loss(&gptq_quantize(&w, &Mat::identity(c), 2, group, true));
+        assert!(
+            cal <= ident * 1.02 + 1e-9,
+            "seed {seed}: calibrated {cal} vs identity {ident}"
+        );
     });
 }
 
