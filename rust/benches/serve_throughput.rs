@@ -1,0 +1,91 @@
+//! Batched vs serial native forward throughput — the number the unified
+//! execution backend exists to move. The serial loop is the pre-refactor
+//! eval/serving path (one `DenseModel::forward` per sequence on one
+//! thread); the batched path is `exec::NativeBackend` fanning the same
+//! rows over its worker pool. Logits are bit-identical by construction
+//! (asserted below before timing), so the speedup is free.
+//!
+//! No artifacts needed: runs on the synthetic checkpoint, fp and a
+//! heterogeneous searched-plan quantized variant.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use gsr::exec::{Backend, NativeBackend};
+use gsr::model::{DenseModel, FpParams, ModelCfg, R4Kind};
+use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
+use gsr::transform::R1Kind;
+
+fn bench_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 256,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ffn: 256,
+        group: 64,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn hetero_plan(cfg: &ModelCfg) -> RotationPlan {
+    let base = RotationSpec::baseline(cfg);
+    let mut layers = vec![base; cfg.n_layers];
+    layers[1] = RotationSpec { r1: R1Kind::LH, r1_block: 32, r4: R4Kind::LH, r4_block: 64 };
+    RotationPlan { seed: 2025, layers }
+}
+
+fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) {
+    let vocab = model.cfg().vocab;
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| ((i * 7 + 1) % vocab) as i32).collect();
+
+    // Correctness first: batched rows must be bit-identical to serial.
+    let backend = NativeBackend::new(Arc::clone(&model), batch, seq, 0);
+    let batched_out = backend.forward_batch(&tokens).expect("batched forward");
+    for row in 0..batch {
+        let serial = model.forward(&tokens[row * seq..(row + 1) * seq]);
+        let got = &batched_out[row * seq * vocab..(row + 1) * seq * vocab];
+        for (a, b) in got.iter().zip(&serial) {
+            assert_eq!(a.to_bits(), b.to_bits(), "batched forward diverged from serial");
+        }
+    }
+
+    let n_tokens = (batch * seq) as f64;
+    let serial = common::time_it(&format!("serial  fwd {label} b={batch}"), 1, 3, || {
+        let mut last = 0f32;
+        for row in 0..batch {
+            let out = model.forward(&tokens[row * seq..(row + 1) * seq]);
+            last = out[0];
+        }
+        last
+    });
+    let batched = common::time_it(&format!("batched fwd {label} b={batch}"), 1, 3, || {
+        backend.forward_batch(&tokens).unwrap()
+    });
+    let tok_s = |d: std::time::Duration| n_tokens / d.as_secs_f64().max(1e-12);
+    println!(
+        "  {label} b={batch}: serial {:.0} tok/s, batched {:.0} tok/s — {:.2}x speedup\n",
+        tok_s(serial),
+        tok_s(batched),
+        serial.as_secs_f64() / batched.as_secs_f64().max(1e-12),
+    );
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let fp = FpParams::synthetic(&cfg, 7);
+    let fp_model = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() });
+    let rots = build_plan_rotations(&cfg, &hetero_plan(&cfg)).unwrap();
+    let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+    let plan_model = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
+    let seq = 64;
+    for batch in [4usize, 8] {
+        bench_model("fp       ", Arc::clone(&fp_model), batch, seq);
+    }
+    for batch in [4usize, 8] {
+        bench_model("searched ", Arc::clone(&plan_model), batch, seq);
+    }
+}

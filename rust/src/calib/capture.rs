@@ -1,22 +1,23 @@
 //! Streaming activation capture: corpus sequences → per-linear Hessians.
 //!
-//! Runs the native rotated forward (`model::forward::forward_quant_tapped`)
-//! over calibration sequences with taps at every linear's input and
-//! accumulates `XᵀX` into mergeable per-thread partials. The fan-out
-//! mirrors the search planner's worker model (`std::thread::scope` over
-//! an atomic cursor), but the unit of work is a **partial**, not a
-//! sequence: partial `p` owns sequences `p, p + N, p + 2N, …` for a
-//! fixed partial count `N`, and partials merge in index order — so the
-//! captured Hessians are bit-identical for any `--threads` value.
+//! Runs the native rotated forward with taps at every linear's input
+//! (`model::forward::forward_quant_tapped_with`) over calibration
+//! sequences and accumulates `XᵀX` into mergeable partials. Capture is
+//! scheduled on the same [`exec::ExecPool`](crate::exec::ExecPool) that
+//! serves batched scoring — long-lived workers with reusable scratch
+//! buffers — but the unit of work is a **partial**, not a sequence:
+//! partial `p` owns sequences `p, p + N, p + 2N, …` for a fixed partial
+//! count `N`, and partials merge in index order — so the captured
+//! Hessians are bit-identical for any `--threads` value.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use super::hessian::{CaptureKey, HessianSet};
-use crate::config::cli::resolve_threads;
+use crate::exec::NativeBackend;
 use crate::model::config::ModelCfg;
-use crate::model::forward::{forward_quant_tapped, ActivationTap, TapSite};
+use crate::model::forward::{forward_quant_tapped_with, ActivationTap, TapSite};
 use crate::model::weights::QuantParams;
+use crate::model::DenseModel;
 
 /// Calibration knobs (`gsr calibrate` flags map 1:1 onto this).
 #[derive(Debug, Clone, Copy)]
@@ -56,14 +57,77 @@ impl ActivationTap for SetTap<'_> {
     }
 }
 
-/// Stream `seqs` through the fused rotated forward of `params` and
-/// accumulate per-linear input Hessians.
+/// Stream `seqs` through the backend's fused rotated model with
+/// activation taps and accumulate per-linear input Hessians, scheduling
+/// the partials on the backend's worker pool.
 ///
-/// `params` should be the **exact-dense** fusion (`fuse_to_dense` /
-/// `fuse_to_dense_plan`) of the checkpoint named by
-/// `key.checkpoint_fingerprint`, under the rotation basis named by
-/// `key.basis_fingerprint`: with no fake-quant in the loop the tapped
-/// activations are exactly the rotated-basis fp activations.
+/// The backend must hold a `DenseModel::Quant` — the **exact-dense**
+/// fusion (`fuse_to_dense` / `fuse_to_dense_plan`) of the checkpoint
+/// named by `key.checkpoint_fingerprint`, under the rotation basis named
+/// by `key.basis_fingerprint`. The capture always runs without
+/// fake-quant (`a_bits = None`), so the tapped activations are exactly
+/// the rotated-basis fp activations.
+pub fn capture_hessians_on(
+    backend: &NativeBackend,
+    seqs: Arc<Vec<Vec<i32>>>,
+    key: &CaptureKey,
+) -> Result<HessianSet, String> {
+    let model = Arc::clone(backend.model());
+    if !matches!(&*model, DenseModel::Quant { .. }) {
+        return Err("calibration capture needs a fused (quant-layout) model".to_string());
+    }
+    let cfg = model.cfg().clone();
+    // Validate up front, like `forward_batch`: a bad token id must be
+    // this call's error, not a panic that kills a shared pool worker.
+    for seq in seqs.iter() {
+        if let Some(&bad) = seq.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
+            return Err(format!(
+                "calibration token id {bad} outside vocab 0..{}",
+                cfg.vocab
+            ));
+        }
+    }
+    let n_partials = N_PARTIALS.min(seqs.len()).max(1);
+    let jobs: Vec<_> = (0..n_partials)
+        .map(|p| {
+            let model = Arc::clone(&model);
+            let seqs = Arc::clone(&seqs);
+            let cfg = cfg.clone();
+            let key = key.clone();
+            move |scratch: &mut crate::model::ForwardScratch| {
+                let params = match &*model {
+                    DenseModel::Quant { params, .. } => params,
+                    DenseModel::Fp { .. } => unreachable!("checked above"),
+                };
+                let mut part = HessianSet::new(&cfg, &key);
+                let mut idx = p;
+                while idx < seqs.len() {
+                    let seq = &seqs[idx];
+                    if !seq.is_empty() {
+                        let mut tap = SetTap { set: &mut part };
+                        let _ =
+                            forward_quant_tapped_with(&cfg, params, None, seq, &mut tap, scratch);
+                        part.tokens += seq.len() as u64;
+                    }
+                    idx += n_partials;
+                }
+                part
+            }
+        })
+        .collect();
+    // `run_jobs` returns partials in index order regardless of which
+    // worker ran what — the merge below is therefore deterministic.
+    let parts = backend.pool().run_jobs(jobs)?;
+    let mut out = HessianSet::new(&cfg, key);
+    for part in &parts {
+        out.merge(part);
+    }
+    Ok(out)
+}
+
+/// Convenience wrapper over [`capture_hessians_on`] for callers that
+/// hold raw borrowed data: clones the params and sequences into a
+/// backend with its own pool (the `_on` form is the zero-copy path).
 pub fn capture_hessians(
     cfg: &ModelCfg,
     params: &QuantParams,
@@ -71,39 +135,15 @@ pub fn capture_hessians(
     threads: usize,
     key: &CaptureKey,
 ) -> HessianSet {
-    let n_partials = N_PARTIALS.min(seqs.len()).max(1);
-    let cursor = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<HessianSet>>> = Mutex::new((0..n_partials).map(|_| None).collect());
-    let n_threads = resolve_threads(threads).min(n_partials);
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads {
-            scope.spawn(|| loop {
-                let p = cursor.fetch_add(1, Ordering::Relaxed);
-                if p >= n_partials {
-                    break;
-                }
-                let mut part = HessianSet::new(cfg, key);
-                let mut idx = p;
-                while idx < seqs.len() {
-                    let seq = &seqs[idx];
-                    if !seq.is_empty() {
-                        let mut tap = SetTap { set: &mut part };
-                        let _ = forward_quant_tapped(cfg, params, None, seq, &mut tap);
-                        part.tokens += seq.len() as u64;
-                    }
-                    idx += n_partials;
-                }
-                slots.lock().unwrap()[p] = Some(part);
-            });
-        }
+    let model = Arc::new(DenseModel::Quant {
+        cfg: cfg.clone(),
+        params: params.clone(),
+        a_bits: None,
     });
-    // A worker panic propagates out of thread::scope before this line.
-    let slots = slots.into_inner().unwrap_or_else(|p| p.into_inner());
-    let mut out = HessianSet::new(cfg, key);
-    for part in slots.into_iter().flatten() {
-        out.merge(&part);
-    }
-    out
+    let seq_len = seqs.iter().map(|s| s.len()).max().unwrap_or(1).max(1);
+    let backend = NativeBackend::new(model, 1, seq_len, threads);
+    capture_hessians_on(&backend, Arc::new(seqs.to_vec()), key)
+        .expect("capture on a fused quant model cannot fail")
 }
 
 #[cfg(test)]
@@ -166,6 +206,41 @@ mod tests {
         let a = captured_set(&cfg, 1);
         let b = captured_set(&cfg, 4);
         assert_eq!(a, b, "thread count must not change the captured Hessians");
+    }
+
+    /// Capture through a shared serving backend agrees exactly with the
+    /// standalone wrapper — calibration and scoring really share one
+    /// execution engine.
+    #[test]
+    fn capture_on_serving_backend_matches_wrapper() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 3);
+        let plan = RotationPlan::uniform(RotationSpec::baseline(&cfg), cfg.n_layers, 11);
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        let params = fuse_to_dense_plan(&fp, &cfg, &rots);
+        let corpus = crate::data::CorpusGenerator::new(5).generate(2048);
+        let seqs = draw_token_windows(&corpus, 6, 12, cfg.vocab, 9);
+        let key = CaptureKey {
+            calib_seed: 9,
+            basis_fingerprint: plan.fingerprint(),
+            checkpoint_fingerprint: crate::calib::checkpoint_fingerprint(&fp),
+            plan_json: String::new(),
+        };
+        let model = Arc::new(DenseModel::Quant {
+            cfg: cfg.clone(),
+            params: params.clone(),
+            a_bits: None,
+        });
+        use crate::exec::Backend as _;
+        let backend = NativeBackend::new(model, 2, 12, 3);
+        // The backend also serves scoring before and after the capture.
+        let tokens: Vec<i32> = (0..24).map(|i| (i % 64) as i32).collect();
+        let before = backend.forward_batch(&tokens).unwrap();
+        let via_backend = capture_hessians_on(&backend, Arc::new(seqs.clone()), &key).unwrap();
+        let after = backend.forward_batch(&tokens).unwrap();
+        assert_eq!(before, after, "capture must not disturb scoring");
+        let via_wrapper = capture_hessians(&cfg, &params, &seqs, 2, &key);
+        assert_eq!(via_backend, via_wrapper);
     }
 
     #[test]

@@ -28,7 +28,7 @@
 pub mod capture;
 pub mod hessian;
 
-pub use capture::{capture_hessians, CalibCfg};
+pub use capture::{capture_hessians, capture_hessians_on, CalibCfg};
 pub use hessian::{
     checkpoint_fingerprint, CaptureKey, HessianAccum, HessianSet, LayerHessians,
 };

@@ -2,6 +2,7 @@
 //! on size or deadline — the standard continuous-batching trade-off
 //! (throughput vs tail latency) at the scale of this testbed.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Flush policy.
@@ -20,22 +21,23 @@ impl Default for BatchPolicy {
 }
 
 /// Accumulates items and decides when a batch is ready.
+///
+/// Each item carries its enqueue time, so the deadline always tracks
+/// the oldest *remaining* item: flushing a full batch does not restart
+/// the clock for what stays behind, and no item can wait longer than
+/// `max_wait` past its own enqueue under sustained load.
 pub struct DynamicBatcher<T> {
     policy: BatchPolicy,
-    pending: Vec<T>,
-    oldest: Option<Instant>,
+    pending: VecDeque<(Instant, T)>,
 }
 
 impl<T> DynamicBatcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
-        Self { policy, pending: Vec::new(), oldest: None }
+        Self { policy, pending: VecDeque::new() }
     }
 
     pub fn push(&mut self, item: T) {
-        if self.pending.is_empty() {
-            self.oldest = Some(Instant::now());
-        }
-        self.pending.push(item);
+        self.pending.push_back((Instant::now(), item));
     }
 
     pub fn len(&self) -> usize {
@@ -51,27 +53,25 @@ impl<T> DynamicBatcher<T> {
         if self.pending.len() >= self.policy.max_batch {
             return true;
         }
-        match self.oldest {
-            Some(t0) if !self.pending.is_empty() => now.duration_since(t0) >= self.policy.max_wait,
-            _ => false,
+        match self.pending.front() {
+            Some((t0, _)) => now.saturating_duration_since(*t0) >= self.policy.max_wait,
+            None => false,
         }
     }
 
     /// Time until the deadline flush (None if empty).
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        self.oldest.map(|t0| {
-            let elapsed = now.duration_since(t0);
+        self.pending.front().map(|(t0, _)| {
+            let elapsed = now.saturating_duration_since(*t0);
             self.policy.max_wait.saturating_sub(elapsed)
         })
     }
 
-    /// Take up to `max_batch` items (FIFO). Resets the deadline for the
-    /// remainder.
+    /// Take up to `max_batch` items (FIFO). The remainder keeps its
+    /// original enqueue times — deadlines carry over, never reset.
     pub fn take_batch(&mut self) -> Vec<T> {
         let n = self.pending.len().min(self.policy.max_batch);
-        let batch: Vec<T> = self.pending.drain(..n).collect();
-        self.oldest = if self.pending.is_empty() { None } else { Some(Instant::now()) };
-        batch
+        self.pending.drain(..n).map(|(_, item)| item).collect()
     }
 }
 
@@ -110,6 +110,29 @@ mod tests {
         assert_eq!(b.take_batch(), vec![0, 1]);
         assert_eq!(b.take_batch(), vec![2, 3]);
         assert_eq!(b.len(), 1);
+    }
+
+    /// Regression: taking a full batch must NOT restart the remainder's
+    /// deadline. Items enqueued before the flush keep their original
+    /// enqueue time, so an already-overdue remainder flushes immediately
+    /// instead of waiting another `max_wait` (previously the wait could
+    /// grow without bound under sustained load).
+    #[test]
+    fn deadline_tracks_oldest_remaining_item() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(40),
+        });
+        b.push(1);
+        b.push(2);
+        b.push(3);
+        std::thread::sleep(Duration::from_millis(45));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec![1, 2]);
+        // Item 3 has already waited past max_wait: still ready, zero
+        // time to deadline — its clock did not restart at the flush.
+        assert!(b.ready(Instant::now()), "remainder deadline must carry over");
+        assert_eq!(b.time_to_deadline(Instant::now()), Some(Duration::ZERO));
     }
 
     #[test]

@@ -60,21 +60,37 @@ impl LatencyHistogram {
 }
 
 /// Aggregate serving metrics.
+///
+/// Two latency views: `request_latency` is queue-to-reply per request
+/// (what a client feels), `exec_latency` is the backend's forward time
+/// per batch (what the executor pays) — the gap between them is the
+/// batching wait the policy trades for throughput.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub request_latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
     pub batch_sizes: Vec<usize>,
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
+    /// Requests refused without execution: longer than the backend's
+    /// seq, out-of-vocab token ids, or an unknown variant.
+    pub rejected: u64,
 }
 
 impl Metrics {
-    pub fn record_batch(&mut self, batch_size: usize, tokens: u64, latency: Duration) {
+    /// Account one executed batch: its size, the real (unpadded) token
+    /// count, and the backend forward latency.
+    pub fn record_batch(&mut self, batch_size: usize, tokens: u64, exec: Duration) {
         self.batches += 1;
-        self.requests += batch_size as u64;
         self.tokens += tokens;
         self.batch_sizes.push(batch_size);
+        self.exec_latency.record(exec);
+    }
+
+    /// Account one completed request and its queue-to-reply latency.
+    pub fn record_request(&mut self, latency: Duration) {
+        self.requests += 1;
         self.request_latency.record(latency);
     }
 
@@ -87,9 +103,11 @@ impl Metrics {
 
     pub fn report(&self, wall: Duration) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.2} tokens={} \
-             throughput={:.0} tok/s p50={:?} p99={:?} max={:?}",
+            "requests={} rejected={} batches={} mean_batch={:.2} tokens={} \
+             throughput={:.0} tok/s req p50={:?} p99={:?} max={:?} \
+             exec p50={:?} max={:?}",
             self.requests,
+            self.rejected,
             self.batches,
             self.mean_batch_size(),
             self.tokens,
@@ -97,6 +115,8 @@ impl Metrics {
             self.request_latency.quantile(0.5),
             self.request_latency.quantile(0.99),
             self.request_latency.max(),
+            self.exec_latency.quantile(0.5),
+            self.exec_latency.max(),
         )
     }
 }
@@ -123,9 +143,15 @@ mod tests {
         let mut m = Metrics::default();
         m.record_batch(4, 512, Duration::from_millis(3));
         m.record_batch(2, 256, Duration::from_millis(2));
+        for _ in 0..6 {
+            m.record_request(Duration::from_millis(4));
+        }
         assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
         assert_eq!(m.requests, 6);
         assert_eq!(m.tokens, 768);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.exec_latency.count(), 2);
+        assert_eq!(m.request_latency.count(), 6);
     }
 
     #[test]

@@ -1,18 +1,20 @@
 //! L3 coordinator: request router, dynamic batcher, executor, metrics.
 //!
-//! Serving shape (vLLM-router-like, scaled to a single CPU PJRT device):
+//! Serving shape (vLLM-router-like, scaled to one host):
 //!
 //! ```text
 //!  clients ──▶ Router ──▶ per-variant queue ──▶ DynamicBatcher ──▶
-//!              Executor thread (owns Engine + resident variants) ──▶
+//!              Executor thread (owns a BackendSet: PJRT engine+variants
+//!              or native models on a shared worker pool) ──▶
 //!              response channels
 //! ```
 //!
-//! PJRT handles are not `Send`/`Sync`-safe to share, so a single executor
-//! thread owns the `Engine` and all `VariantRunner`s; the router and
-//! batcher run on the calling/side threads and communicate over std
-//! mpsc channels. Python is never involved: the executor only replays
-//! AOT artifacts.
+//! The executor is generic over [`crate::exec::BackendSet`]: the PJRT
+//! set is built inside the executor thread (PJRT handles are not
+//! `Send`/`Sync`-safe to share), while the native set — a pure-Rust
+//! multi-threaded engine — can be built anywhere and moved in, and is
+//! the only path that serves heterogeneous searched rotation plans.
+//! Python is never involved on the request path.
 
 pub mod batcher;
 pub mod metrics;
@@ -21,5 +23,5 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use metrics::{LatencyHistogram, Metrics};
-pub use router::{Router, RoutePolicy};
-pub use server::{Server, Request, Response};
+pub use router::{RoutePolicy, Router};
+pub use server::{Request, Response, Server, ServerHandle};

@@ -1,13 +1,18 @@
-//! The serving loop: executor thread owning PJRT, fed by a batched queue.
+//! The serving loop: an executor thread owning a [`BackendSet`], fed by
+//! per-variant batched queues.
 //!
-//! `Server::start` spawns one executor thread that owns the `Engine` and
-//! all requested `VariantRunner`s (PJRT handles never cross threads).
-//! Clients submit `Request`s over an mpsc sender and receive `Response`s
-//! on their own per-request channel. A `DynamicBatcher` per variant
-//! packs score requests into the graph's fixed `[batch, seq]` shape;
-//! under-full batches are padded (pad rows discarded).
+//! `Server::start_set` spawns one executor thread that builds and owns
+//! the backend set (PJRT handles never cross threads, so the PJRT set is
+//! constructed *inside* the thread; the native set may be built anywhere
+//! and moved in). Clients submit `Request`s over an mpsc sender and
+//! receive `Response`s on their own per-request channel. A
+//! `DynamicBatcher` per variant packs score requests up to the backend's
+//! `[batch, seq]` shape; under-full flushes run as partial batches (no
+//! compute on padding rows). Malformed requests — longer than the
+//! backend's `seq`, out-of-vocab token ids, unknown variants — are
+//! rejected individually at enqueue with a clear error, never silently
+//! truncated and never able to fail a batch they were packed with.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -15,15 +20,14 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::Metrics;
-use crate::runtime::{Artifacts, Engine, VariantRunner};
+use crate::exec::{Backend, BackendSet, NativeSet, PjrtSet};
 
-/// A scoring request: tokens (≤ seq) for one sequence; the server returns
-/// per-position logits of the final `n_last` positions to keep responses
-/// small (PPL/zero-shot clients only need targeted positions).
+/// A scoring request: tokens (≤ seq) for one sequence; the server
+/// returns per-position logits for exactly the positions sent.
 pub struct Request {
     /// Variant name ("fp" for the reference model).
     pub variant: String,
-    /// Token sequence, length ≤ graph seq (right-padded internally).
+    /// Token sequence, length ≤ backend seq (right-padded internally).
     pub tokens: Vec<i32>,
     /// Reply channel.
     pub reply: mpsc::Sender<Response>,
@@ -45,44 +49,75 @@ pub struct Server {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Cloneable submission handle — hand one to each client thread
+/// (`mpsc::Sender` is `Send`, so clones cross threads freely).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+fn submit_on(tx: &mpsc::Sender<Job>, req: Request) -> Result<(), String> {
+    tx.send(Job::Score(req, Instant::now())).map_err(|_| "server stopped".to_string())
+}
+
+fn score_on(tx: &mpsc::Sender<Job>, variant: &str, tokens: Vec<i32>) -> Result<Vec<f32>, String> {
+    let (reply, rx) = mpsc::channel();
+    submit_on(tx, Request { variant: variant.to_string(), tokens, reply })?;
+    rx.recv().map_err(|_| "no response".to_string())?.logits
+}
+
+impl ServerHandle {
+    /// Submit a scoring request (non-blocking).
+    pub fn submit(&self, req: Request) -> Result<(), String> {
+        submit_on(&self.tx, req)
+    }
+
+    /// Convenience: synchronous score of one sequence.
+    pub fn score(&self, variant: &str, tokens: Vec<i32>) -> Result<Vec<f32>, String> {
+        score_on(&self.tx, variant, tokens)
+    }
+}
+
 impl Server {
-    /// Start the executor with the given variants resident.
+    /// Start the executor over the PJRT runtime with the given variants
+    /// resident (compiled graphs + uploaded weights).
     pub fn start(
         artifacts_dir: &Path,
         variant_names: &[String],
         policy: BatchPolicy,
     ) -> Result<Self, String> {
-        let (tx, rx) = mpsc::channel::<Job>();
         let dir = artifacts_dir.to_path_buf();
         let names: Vec<String> = variant_names.to_vec();
+        Self::start_set(move || PjrtSet::load(&dir, &names), policy)
+    }
+
+    /// Start the executor over a prebuilt native backend set — serves
+    /// fp, quantized and heterogeneous searched-plan variants with no
+    /// PJRT involvement.
+    pub fn start_native(set: NativeSet, policy: BatchPolicy) -> Result<Self, String> {
+        if set.is_empty() {
+            return Err("native backend set is empty".to_string());
+        }
+        Self::start_set(move || Ok(set), policy)
+    }
+
+    /// Start the executor over any [`BackendSet`]. `build` runs on the
+    /// executor thread, so non-`Send` sets (PJRT) work; its error is
+    /// propagated out of `start_set` via a ready handshake.
+    pub fn start_set<V, F>(build: F, policy: BatchPolicy) -> Result<Self, String>
+    where
+        V: BackendSet + 'static,
+        F: FnOnce() -> Result<V, String> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let handle = std::thread::spawn(move || {
-            let setup = (|| -> Result<(Engine, Artifacts, BTreeMap<String, VariantRunner>), String> {
-                let arts = Artifacts::load(&dir)?;
-                let mut engine = Engine::new()?;
-                let mut runners = BTreeMap::new();
-                for name in &names {
-                    let runner = if name == "fp" {
-                        VariantRunner::load_fp(&mut engine, &arts)?
-                    } else {
-                        let meta = arts
-                            .variant(name)
-                            .ok_or_else(|| format!("unknown variant {name}"))?
-                            .clone();
-                        VariantRunner::load(&mut engine, &arts, &meta)?
-                    };
-                    runners.insert(name.clone(), runner);
-                }
-                Ok((engine, arts, runners))
-            })();
-            match setup {
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                }
-                Ok((engine, _arts, runners)) => {
-                    let _ = ready_tx.send(Ok(()));
-                    executor_loop(engine, runners, rx, policy);
-                }
+        let handle = std::thread::spawn(move || match build() {
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+            }
+            Ok(set) => {
+                let _ = ready_tx.send(Ok(()));
+                executor_loop(set, rx, policy);
             }
         });
         ready_rx
@@ -91,18 +126,19 @@ impl Server {
         Ok(Self { tx, handle: Some(handle) })
     }
 
+    /// Cloneable submission handle for concurrent client threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { tx: self.tx.clone() }
+    }
+
     /// Submit a scoring request (non-blocking).
     pub fn submit(&self, req: Request) -> Result<(), String> {
-        self.tx
-            .send(Job::Score(req, Instant::now()))
-            .map_err(|_| "server stopped".to_string())
+        submit_on(&self.tx, req)
     }
 
     /// Convenience: synchronous score of one sequence.
     pub fn score(&self, variant: &str, tokens: Vec<i32>) -> Result<Vec<f32>, String> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(Request { variant: variant.to_string(), tokens, reply })?;
-        rx.recv().map_err(|_| "no response".to_string())?.logits
+        score_on(&self.tx, variant, tokens)
     }
 
     /// Stop and collect metrics.
@@ -117,39 +153,86 @@ impl Server {
     }
 }
 
-fn executor_loop(
-    engine: Engine,
-    runners: BTreeMap<String, VariantRunner>,
-    rx: mpsc::Receiver<Job>,
-    policy: BatchPolicy,
-) {
-    let mut queues: BTreeMap<String, DynamicBatcher<(Request, Instant)>> = runners
-        .keys()
-        .map(|k| (k.clone(), DynamicBatcher::new(policy)))
-        .collect();
+/// One resident variant's queue plus the backend geometry probed at
+/// startup, so malformed requests are rejected at enqueue — a doomed
+/// request never waits out `max_wait` or occupies a batch slot.
+struct VariantQueue {
+    name: String,
+    seq: usize,
+    vocab: usize,
+    backend_label: String,
+    q: DynamicBatcher<(Request, Instant)>,
+}
+
+impl VariantQueue {
+    /// Validate a request against static data: length, token range.
+    /// Malformed requests are refused individually with a clear error —
+    /// never clipped (wrong-but-plausible logits for PPL clients) and
+    /// never allowed near a batch they could fail wholesale.
+    fn admit(&self, req: &Request) -> Result<(), String> {
+        if req.tokens.len() > self.seq {
+            return Err(format!(
+                "request has {} tokens but backend {} serves seq {}; \
+                 split the request instead of truncating",
+                req.tokens.len(),
+                self.backend_label,
+                self.seq
+            ));
+        }
+        if let Some(&bad) = req.tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            return Err(format!("token id {bad} outside vocab 0..{}", self.vocab));
+        }
+        Ok(())
+    }
+}
+
+fn executor_loop<V: BackendSet>(set: V, rx: mpsc::Receiver<Job>, policy: BatchPolicy) {
+    // Per-variant queue, its max_batch clamped to the backend's actual
+    // batch capacity so one flush never overflows one forward call.
+    let mut queues: Vec<VariantQueue> = Vec::new();
+    for name in set.names() {
+        let mut cap = policy.max_batch.max(1);
+        let (mut seq, mut vocab, mut backend_label) = (0, 0, String::new());
+        set.run(&name, &mut |backend| {
+            cap = cap.min(backend.batch()).max(1);
+            seq = backend.seq();
+            vocab = backend.vocab();
+            backend_label = backend.name().to_string();
+        });
+        let q = DynamicBatcher::new(BatchPolicy { max_batch: cap, ..policy });
+        queues.push(VariantQueue { name, seq, vocab, backend_label, q });
+    }
     let mut metrics = Metrics::default();
     loop {
         // Wait bounded by the nearest batch deadline.
         let timeout = queues
-            .values()
-            .filter_map(|q| q.time_to_deadline(Instant::now()))
+            .iter()
+            .filter_map(|vq| vq.q.time_to_deadline(Instant::now()))
             .min()
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Job::Score(req, t0)) => {
-                if let Some(q) = queues.get_mut(&req.variant) {
-                    q.push((req, t0));
-                } else {
-                    let _ = req.reply.send(Response {
-                        logits: Err(format!("variant {} not resident", req.variant)),
-                    });
+                match queues.iter_mut().find(|vq| vq.name == req.variant) {
+                    Some(vq) => match vq.admit(&req) {
+                        Ok(()) => vq.q.push((req, t0)),
+                        Err(e) => {
+                            metrics.rejected += 1;
+                            let _ = req.reply.send(Response { logits: Err(e) });
+                        }
+                    },
+                    None => {
+                        metrics.rejected += 1;
+                        let _ = req.reply.send(Response {
+                            logits: Err(format!("variant {} not resident", req.variant)),
+                        });
+                    }
                 }
             }
             Ok(Job::Shutdown(mtx)) => {
                 // Drain everything before stopping.
-                for (name, q) in queues.iter_mut() {
-                    while !q.is_empty() {
-                        run_batch(&engine, &runners[name], q.take_batch(), &mut metrics);
+                for vq in queues.iter_mut() {
+                    while !vq.q.is_empty() {
+                        dispatch(&set, &vq.name, vq.q.take_batch(), &mut metrics);
                     }
                 }
                 let _ = mtx.send(metrics);
@@ -159,46 +242,66 @@ fn executor_loop(
             Err(mpsc::RecvTimeoutError::Disconnected) => return,
         }
         let now = Instant::now();
-        for (name, q) in queues.iter_mut() {
-            while q.ready(now) {
-                run_batch(&engine, &runners[name], q.take_batch(), &mut metrics);
+        for vq in queues.iter_mut() {
+            while vq.q.ready(now) {
+                dispatch(&set, &vq.name, vq.q.take_batch(), &mut metrics);
             }
         }
     }
 }
 
-fn run_batch(
-    engine: &Engine,
-    runner: &VariantRunner,
+/// Route one flushed batch to its backend (`Option` shuttle because
+/// `BackendSet::run` takes an `FnMut` callback).
+fn dispatch<V: BackendSet>(
+    set: &V,
+    name: &str,
     batch: Vec<(Request, Instant)>,
     metrics: &mut Metrics,
 ) {
+    let mut slot = Some(batch);
+    let found = set.run(name, &mut |backend| {
+        if let Some(batch) = slot.take() {
+            run_batch(backend, batch, metrics);
+        }
+    });
+    if !found {
+        for (req, _) in slot.take().into_iter().flatten() {
+            metrics.rejected += 1;
+            let _ = req.reply.send(Response {
+                logits: Err(format!("variant {name} not resident")),
+            });
+        }
+    }
+}
+
+fn run_batch(backend: &dyn Backend, batch: Vec<(Request, Instant)>, metrics: &mut Metrics) {
     if batch.is_empty() {
         return;
     }
-    let (b, s, v) = (runner.batch, runner.seq, runner.vocab);
-    let mut tokens = vec![0i32; b * s];
-    let mut lens = Vec::with_capacity(batch.len());
+    let (b, s, v) = (backend.batch(), backend.seq(), backend.vocab());
+    debug_assert!(batch.len() <= b, "batcher flushed more than the backend batch");
+    // Requests were validated at enqueue (`VariantQueue::admit`), so
+    // every one fits. Pack exactly `batch.len()` rows — backends take
+    // partial batches, so an under-full flush never pays for the
+    // forward pass of padding rows it doesn't need.
+    let rows = batch.len();
+    let mut tokens = vec![0i32; rows * s];
+    let mut lens = Vec::with_capacity(rows);
     for (i, (req, _)) in batch.iter().enumerate() {
-        let take = req.tokens.len().min(s);
-        tokens[i * s..i * s + take].copy_from_slice(&req.tokens[..take]);
-        lens.push(take);
+        tokens[i * s..i * s + req.tokens.len()].copy_from_slice(&req.tokens);
+        lens.push(req.tokens.len());
     }
     let t_exec = Instant::now();
-    let result = runner.forward(engine, &tokens);
+    let result = backend.forward_batch(&tokens);
+    let exec_elapsed = t_exec.elapsed();
     let n_tokens: u64 = lens.iter().sum::<usize>() as u64;
-    let n_requests = batch.len();
     for (i, (req, t0)) in batch.into_iter().enumerate() {
         let logits = match &result {
             Ok(all) => Ok(all[i * s * v..(i * s + lens[i]) * v].to_vec()),
             Err(e) => Err(e.clone()),
         };
         let _ = req.reply.send(Response { logits });
-        metrics.request_latency.record(t0.elapsed());
-        metrics.requests += 1;
+        metrics.record_request(t0.elapsed());
     }
-    metrics.batches += 1;
-    metrics.tokens += n_tokens;
-    metrics.batch_sizes.push(n_requests);
-    let _ = t_exec;
+    metrics.record_batch(rows, n_tokens, exec_elapsed);
 }

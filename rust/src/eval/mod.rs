@@ -1,5 +1,11 @@
 //! Evaluation engines: perplexity (WikiText-2 stand-in) and zero-shot
 //! task accuracy, plus the paper-layout report tables.
+//!
+//! Every engine scores a [`crate::exec::Backend`] — the unified batched
+//! execution contract — so the same PPL/zero-shot code runs against the
+//! PJRT graphs (`exec::PjrtBackend`) and the multi-threaded native
+//! engine (`exec::NativeBackend`), including heterogeneous searched-plan
+//! variants PJRT cannot serve.
 
 pub mod ppl;
 pub mod report;
@@ -11,61 +17,4 @@ pub use report::Table;
 pub use tables::{eval_model, eval_variant, EvalOpts};
 pub use zeroshot::ZeroShotEngine;
 
-/// Anything that turns a `[batch, seq]` token matrix into
-/// `[batch, seq, vocab]` logits. Implemented by the PJRT runner wrapper
-/// and by the native reference model (tests / fallback).
-pub trait LogitModel {
-    fn batch(&self) -> usize;
-    fn seq(&self) -> usize;
-    fn vocab(&self) -> usize;
-    /// `tokens.len() == batch()*seq()`; returns row-major logits.
-    fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String>;
-}
-
-/// PJRT-backed model (engine + resident variant).
-pub struct PjrtModel<'a> {
-    pub engine: &'a crate::runtime::Engine,
-    pub runner: &'a crate::runtime::VariantRunner,
-}
-
-impl LogitModel for PjrtModel<'_> {
-    fn batch(&self) -> usize {
-        self.runner.batch
-    }
-    fn seq(&self) -> usize {
-        self.runner.seq
-    }
-    fn vocab(&self) -> usize {
-        self.runner.vocab
-    }
-    fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
-        self.runner.forward(self.engine, tokens)
-    }
-}
-
-/// Native reference model adapter (single-sequence loop).
-pub struct NativeModel<'a> {
-    pub model: &'a crate::model::DenseModel,
-    pub batch: usize,
-    pub seq: usize,
-}
-
-impl LogitModel for NativeModel<'_> {
-    fn batch(&self) -> usize {
-        self.batch
-    }
-    fn seq(&self) -> usize {
-        self.seq
-    }
-    fn vocab(&self) -> usize {
-        self.model.cfg().vocab
-    }
-    fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
-        let mut out = Vec::with_capacity(self.batch * self.seq * self.vocab());
-        for b in 0..self.batch {
-            let seq_tokens = &tokens[b * self.seq..(b + 1) * self.seq];
-            out.extend(self.model.forward(seq_tokens));
-        }
-        Ok(out)
-    }
-}
+pub use crate::exec::Backend;

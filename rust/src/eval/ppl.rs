@@ -2,7 +2,7 @@
 //! held-out split of the synthetic corpus (context length = the graph's
 //! fixed `seq`, matching the paper's fixed-context protocol).
 
-use super::LogitModel;
+use crate::exec::Backend;
 
 /// Sum of next-token NLLs for one sequence's logits.
 ///
@@ -41,9 +41,10 @@ impl PplEngine {
     /// Evaluate byte perplexity of `model` on `text`.
     ///
     /// Windows of `seq+1` tokens, stride `seq` (every byte predicted
-    /// exactly once); windows are packed into `[batch, seq]` calls, the
-    /// final partial batch padded with repeats whose NLL is discarded.
-    pub fn evaluate(&self, model: &dyn LogitModel, text: &[u8]) -> Result<PplResult, String> {
+    /// exactly once); windows are packed into `[rows ≤ batch, seq]`
+    /// calls — the final batch stays partial, never padded, so no
+    /// forward pass is spent on rows whose NLL would be discarded.
+    pub fn evaluate(&self, model: &dyn Backend, text: &[u8]) -> Result<PplResult, String> {
         let (b, s, v) = (model.batch(), model.seq(), model.vocab());
         let tokens: Vec<i32> = text.iter().map(|&x| x as i32).collect();
         let mut windows: Vec<&[i32]> = Vec::new();
@@ -61,9 +62,8 @@ impl PplEngine {
         let mut nll_sum = 0.0f64;
         let mut n_tokens = 0usize;
         for chunk in windows.chunks(b) {
-            let mut batch_tokens = Vec::with_capacity(b * s);
-            for i in 0..b {
-                let w = chunk.get(i).unwrap_or(&chunk[0]); // pad with repeat
+            let mut batch_tokens = Vec::with_capacity(chunk.len() * s);
+            for w in chunk {
                 batch_tokens.extend_from_slice(&w[..s]);
             }
             let logits = model.forward_batch(&batch_tokens)?;
@@ -90,7 +90,7 @@ mod tests {
         vocab: usize,
     }
 
-    impl LogitModel for Uniform {
+    impl Backend for Uniform {
         fn batch(&self) -> usize {
             2
         }

@@ -4,9 +4,10 @@
 use std::path::Path;
 
 use super::report::{fmt, Table};
-use super::{LogitModel, PjrtModel, PplEngine, ZeroShotEngine};
+use super::{PplEngine, ZeroShotEngine};
 use crate::data::tasks::TaskSuite;
-use crate::runtime::{Artifacts, Engine, VariantRunner};
+use crate::exec::{Backend, PjrtBackend};
+use crate::runtime::{Artifacts, Engine};
 
 /// Evaluation knobs (trade precision for wall-clock).
 #[derive(Debug, Clone, Copy)]
@@ -31,7 +32,7 @@ pub struct VariantEval {
 }
 
 pub fn eval_model(
-    model: &dyn LogitModel,
+    model: &dyn Backend,
     arts: &Artifacts,
     opts: EvalOpts,
 ) -> Result<VariantEval, String> {
@@ -56,13 +57,8 @@ pub fn eval_variant(
     name: &str,
     opts: EvalOpts,
 ) -> Result<VariantEval, String> {
-    let runner = if name == "fp" {
-        VariantRunner::load_fp(engine, arts)?
-    } else {
-        let meta = arts.variant(name).ok_or_else(|| format!("unknown variant {name}"))?.clone();
-        VariantRunner::load(engine, arts, &meta)?
-    };
-    let model = PjrtModel { engine, runner: &runner };
+    let runner = crate::exec::load_runner(engine, arts, name)?;
+    let model = PjrtBackend { engine, runner: &runner };
     eval_model(&model, arts, opts)
 }
 

@@ -6,8 +6,8 @@
 //! paper's Tables 3–4 report.
 
 use super::ppl::log_softmax_nll;
-use super::LogitModel;
 use crate::data::tasks::{Task, TaskKind};
+use crate::exec::Backend;
 
 /// Zero-shot engine over a task suite.
 pub struct ZeroShotEngine;
@@ -27,11 +27,12 @@ impl TaskScore {
 
 impl ZeroShotEngine {
     /// Score one task: returns the predicted choice index.
-    pub fn predict(model: &dyn LogitModel, task: &Task) -> Result<usize, String> {
+    pub fn predict(model: &dyn Backend, task: &Task) -> Result<usize, String> {
         let (b, s, v) = (model.batch(), model.seq(), model.vocab());
         assert!(task.choices.len() <= b, "choices exceed graph batch");
-        // Build one [batch, seq] call: row i = context ‖ choice_i, padded.
-        let mut batch_tokens = vec![0i32; b * s];
+        // One partial [choices, seq] call: row i = context ‖ choice_i —
+        // no forward pass is spent on batch rows with no choice in them.
+        let mut batch_tokens = vec![0i32; task.choices.len() * s];
         let mut spans = Vec::with_capacity(task.choices.len());
         for (i, choice) in task.choices.iter().enumerate() {
             let mut seq_bytes = task.context.clone();
@@ -45,8 +46,8 @@ impl ZeroShotEngine {
             let chlen = choice.len().min(take.saturating_sub(1));
             spans.push((take, chlen));
         }
-        // Unused rows stay zero (causal padding on the right of used rows
-        // does not affect their scored prefix positions).
+        // Right-padding inside a used row does not affect its scored
+        // prefix positions (causal attention).
         let logits = model.forward_batch(&batch_tokens)?;
         let mut best = (f64::NEG_INFINITY, 0usize);
         for (i, choice) in task.choices.iter().enumerate() {
@@ -72,7 +73,7 @@ impl ZeroShotEngine {
     }
 
     /// Accuracy over a batch of tasks of one kind.
-    pub fn score_tasks(model: &dyn LogitModel, tasks: &[Task]) -> Result<TaskScore, String> {
+    pub fn score_tasks(model: &dyn Backend, tasks: &[Task]) -> Result<TaskScore, String> {
         let mut correct = 0;
         for t in tasks {
             if Self::predict(model, t)? == t.answer {
@@ -88,7 +89,7 @@ impl ZeroShotEngine {
 
     /// Full suite: per-task accuracies plus macro average.
     pub fn score_suite(
-        model: &dyn LogitModel,
+        model: &dyn Backend,
         suite: &[(TaskKind, Vec<Task>)],
     ) -> Result<(Vec<TaskScore>, f64), String> {
         let mut scores = Vec::new();
@@ -137,7 +138,7 @@ mod tests {
         }
     }
 
-    impl LogitModel for BigramOracle {
+    impl Backend for BigramOracle {
         fn batch(&self) -> usize {
             4
         }
@@ -148,14 +149,10 @@ mod tests {
             256
         }
         fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
-            let (b, s, v) = (4, 128, 256);
-            let mut out = vec![0f32; b * s * v];
-            for i in 0..b {
-                for pos in 0..s {
-                    let cur = tokens[i * s + pos] as usize;
-                    out[(i * s + pos) * v..(i * s + pos + 1) * v]
-                        .copy_from_slice(&self.table[cur]);
-                }
+            let v = 256;
+            let mut out = vec![0f32; tokens.len() * v];
+            for (pos, &tok) in tokens.iter().enumerate() {
+                out[pos * v..(pos + 1) * v].copy_from_slice(&self.table[tok as usize]);
             }
             Ok(out)
         }

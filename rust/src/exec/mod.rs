@@ -1,0 +1,60 @@
+//! Unified batched execution: one [`Backend`] trait serving eval,
+//! calibration and the coordinator.
+//!
+//! Everything that turns a `[batch, seq]` token matrix into
+//! `[batch, seq, vocab]` logits lives behind [`Backend`]:
+//!
+//! * [`NativeBackend`] — the pure-Rust engine: a persistent
+//!   [`ExecPool`] of worker threads, each owning a reusable
+//!   [`model::ForwardScratch`](crate::model::ForwardScratch), fans the
+//!   batch rows out and reassembles them in order. Per-sequence logits
+//!   are **bit-identical** to the serial `DenseModel::forward` for any
+//!   batch composition and any thread count (each row is computed by
+//!   one worker with the exact single-sequence arithmetic). This is the
+//!   only path that can serve heterogeneous searched `RotationPlan`
+//!   variants today.
+//! * [`PjrtBackend`] — a view over the PJRT `Engine` + resident
+//!   `VariantRunner` replaying the AOT graphs.
+//!
+//! The serving coordinator is generic over a [`BackendSet`] — a named
+//! collection of resident backends — with [`PjrtSet`] (one engine, many
+//! graph variants) and [`NativeSet`] (many native models, optionally
+//! sharing one pool) as the two implementations.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::{ExecPool, NativeBackend, NativeSet};
+pub use pjrt::{load_runner, PjrtBackend, PjrtSet};
+
+/// Anything that turns a `[batch, seq]` token matrix into
+/// `[batch, seq, vocab]` logits — the single execution contract shared
+/// by `eval` (PPL / zero-shot), `calib` and the serving coordinator.
+pub trait Backend {
+    /// Batch capacity of one `forward_batch` call.
+    fn batch(&self) -> usize;
+    /// Sequence length of one `forward_batch` call.
+    fn seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// Short human label for reports ("native", "pjrt", …).
+    fn name(&self) -> &str {
+        "backend"
+    }
+    /// `tokens.len() == rows * seq()` for some `1 ≤ rows ≤ batch()`;
+    /// returns row-major `[rows, seq, vocab]` logits. Partial batches
+    /// are first-class so under-full flushes never pay for padding
+    /// rows; a backend with a fixed graph shape (PJRT) pads internally
+    /// and truncates its result.
+    fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String>;
+}
+
+/// A named collection of resident [`Backend`]s — what the serving
+/// executor owns. `run` uses a callback (rather than returning
+/// `&dyn Backend`) so implementations may materialize short-lived views
+/// over shared state, as [`PjrtSet`] does over its single `Engine`.
+pub trait BackendSet {
+    /// Resident variant names, in stable order.
+    fn names(&self) -> Vec<String>;
+    /// Run `f` against the named backend; `false` if not resident.
+    fn run(&self, name: &str, f: &mut dyn FnMut(&dyn Backend)) -> bool;
+}

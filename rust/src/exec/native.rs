@@ -1,0 +1,356 @@
+//! The batched, multi-threaded native execution engine.
+//!
+//! An [`ExecPool`] owns long-lived worker threads, each with one
+//! reusable [`ForwardScratch`] — steady-state execution allocates
+//! nothing per call beyond the returned logits. [`NativeBackend`] fans
+//! a `[batch, seq]` token block out over the pool (one job per row) and
+//! reassembles rows in order; because every row runs the exact
+//! single-sequence arithmetic of `DenseModel::forward`, the per-sequence
+//! logits are bit-identical to the serial path for any batch
+//! composition and any `--threads` value (tested below and in
+//! `tests/serve_native.rs`).
+//!
+//! The pool deliberately executes opaque jobs (`FnOnce(&mut
+//! ForwardScratch)`) rather than only token rows: the calibration
+//! subsystem schedules whole capture *partials* on the same workers
+//! (`calib::capture_hessians_on`), so one thread pool serves scoring,
+//! eval and calibration without re-spawning threads per call.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::{Backend, BackendSet};
+use crate::config::cli::resolve_threads;
+use crate::model::{DenseModel, ForwardScratch};
+
+type Job = Box<dyn FnOnce(&mut ForwardScratch) + Send + 'static>;
+
+/// Persistent worker pool with per-thread reusable scratch buffers.
+pub struct ExecPool {
+    /// `Mutex` (not bare `Sender`) so the pool is `Sync` and can be
+    /// shared behind an `Arc` by several backends; `None` after drop.
+    tx: Mutex<Option<Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ExecPool {
+    /// Spawn `threads` workers (0 = available parallelism).
+    pub fn new(threads: usize) -> Self {
+        let threads = resolve_threads(threads);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || {
+                    let mut scratch = ForwardScratch::new();
+                    loop {
+                        // Lock only around recv; the job itself runs
+                        // unlocked so workers proceed concurrently.
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break, // a sibling poisoned the lock
+                        };
+                        match job {
+                            Ok(job) => job(&mut scratch),
+                            Err(_) => break, // pool dropped
+                        }
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Mutex::new(Some(tx)), workers, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` on the pool and return their results **in job order**
+    /// (scheduling order never leaks into results — the determinism
+    /// contract every caller relies on).
+    pub fn run_jobs<R, F>(&self, jobs: Vec<F>) -> Result<Vec<R>, String>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut ForwardScratch) -> R + Send + 'static,
+    {
+        let n = jobs.len();
+        let (rtx, rrx) = channel::<(usize, R)>();
+        {
+            let guard = self.tx.lock().map_err(|_| "execution pool lock poisoned".to_string())?;
+            let tx = guard.as_ref().ok_or_else(|| "execution pool stopped".to_string())?;
+            for (i, job) in jobs.into_iter().enumerate() {
+                let rtx = rtx.clone();
+                tx.send(Box::new(move |scratch: &mut ForwardScratch| {
+                    let _ = rtx.send((i, job(scratch)));
+                }))
+                .map_err(|_| "execution pool stopped".to_string())?;
+            }
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx
+                .recv()
+                .map_err(|_| "a native execution worker died (panic during forward)".to_string())?;
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.ok_or_else(|| "missing job result".to_string()))
+            .collect()
+    }
+}
+
+impl Default for ExecPool {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        if let Ok(guard) = self.tx.get_mut() {
+            guard.take(); // close the channel → workers drain and exit
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+/// Batched native execution of one [`DenseModel`] (fp, quantized, or a
+/// heterogeneous searched-plan variant — anything the native forward
+/// runs).
+pub struct NativeBackend {
+    model: Arc<DenseModel>,
+    pool: Arc<ExecPool>,
+    label: &'static str,
+    batch: usize,
+    seq: usize,
+}
+
+impl NativeBackend {
+    /// Backend with its own worker pool (`threads` 0 = all cores).
+    pub fn new(model: Arc<DenseModel>, batch: usize, seq: usize, threads: usize) -> Self {
+        Self::with_pool(model, batch, seq, Arc::new(ExecPool::new(threads)))
+    }
+
+    /// Backend sharing an existing pool — how a multi-variant
+    /// [`NativeSet`] keeps one set of workers for all residents.
+    pub fn with_pool(
+        model: Arc<DenseModel>,
+        batch: usize,
+        seq: usize,
+        pool: Arc<ExecPool>,
+    ) -> Self {
+        assert!(batch > 0, "backend batch must be positive");
+        assert!(seq > 0, "backend seq must be positive");
+        let label = match &*model {
+            DenseModel::Fp { .. } => "native-fp",
+            DenseModel::Quant { .. } => "native-quant",
+        };
+        Self { model, pool, label, batch, seq }
+    }
+
+    pub fn model(&self) -> &Arc<DenseModel> {
+        &self.model
+    }
+
+    pub fn pool(&self) -> &Arc<ExecPool> {
+        &self.pool
+    }
+}
+
+impl Backend for NativeBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.cfg().vocab
+    }
+
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        let (b, s, v) = (self.batch, self.seq, self.vocab());
+        if tokens.is_empty() || tokens.len() % s != 0 || tokens.len() / s > b {
+            return Err(format!(
+                "forward_batch wants rows*{s} tokens for 1..={b} rows, got {}",
+                tokens.len()
+            ));
+        }
+        let rows = tokens.len() / s;
+        // Validate up front: a bad token id must surface as an error on
+        // this call, not a panic that kills a pool worker.
+        if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= v) {
+            return Err(format!("token id {bad} outside vocab 0..{v}"));
+        }
+        let shared = Arc::new(tokens.to_vec());
+        let jobs: Vec<_> = (0..rows)
+            .map(|row| {
+                let model = Arc::clone(&self.model);
+                let toks = Arc::clone(&shared);
+                move |scratch: &mut ForwardScratch| {
+                    model.forward_with(&toks[row * s..(row + 1) * s], scratch)
+                }
+            })
+            .collect();
+        let row_logits = self.pool.run_jobs(jobs)?;
+        let mut out = Vec::with_capacity(rows * s * v);
+        for row in row_logits {
+            debug_assert_eq!(row.len(), s * v);
+            out.extend_from_slice(&row);
+        }
+        Ok(out)
+    }
+}
+
+/// Named native backends, typically sharing one [`ExecPool`].
+#[derive(Default)]
+pub struct NativeSet {
+    backends: BTreeMap<String, NativeBackend>,
+}
+
+impl NativeSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, backend: NativeBackend) {
+        self.backends.insert(name.to_string(), backend);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&NativeBackend> {
+        self.backends.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+}
+
+impl BackendSet for NativeSet {
+    fn names(&self) -> Vec<String> {
+        self.backends.keys().cloned().collect()
+    }
+
+    fn run(&self, name: &str, f: &mut dyn FnMut(&dyn Backend)) -> bool {
+        match self.backends.get(name) {
+            Some(b) => {
+                f(b);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{FpParams, ModelCfg};
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 64,
+            group: 16,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn tiny_model() -> Arc<DenseModel> {
+        let cfg = tiny_cfg();
+        Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: FpParams::synthetic(&cfg, 3) })
+    }
+
+    #[test]
+    fn batched_rows_bit_identical_to_serial_for_any_threads() {
+        let model = tiny_model();
+        let (b, s) = (4, 12);
+        let tokens: Vec<i32> = (0..b * s).map(|i| ((i * 7 + 3) % 64) as i32).collect();
+        let expect: Vec<Vec<f32>> = (0..b)
+            .map(|row| model.forward(&tokens[row * s..(row + 1) * s]))
+            .collect();
+        for threads in [1, 2, 4] {
+            let backend = NativeBackend::new(Arc::clone(&model), b, s, threads);
+            let out = backend.forward_batch(&tokens).unwrap();
+            let v = backend.vocab();
+            for (row, want) in expect.iter().enumerate() {
+                let got = &out[row * s * v..(row + 1) * s * v];
+                assert_eq!(got.len(), want.len());
+                for (a, e) in got.iter().zip(want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        e.to_bits(),
+                        "row {row} diverges from serial forward at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_validates_shape_and_tokens() {
+        let backend = NativeBackend::new(tiny_model(), 2, 8, 1);
+        assert!(backend.forward_batch(&[0i32; 7]).is_err(), "wrong length must error");
+        let mut bad = vec![0i32; 16];
+        bad[5] = 64; // == vocab → out of range
+        let err = backend.forward_batch(&bad).unwrap_err();
+        assert!(err.contains("outside vocab"), "{err}");
+        // The pool must survive the rejected call.
+        assert!(backend.forward_batch(&[1i32; 16]).is_ok());
+    }
+
+    #[test]
+    fn shared_pool_serves_multiple_backends() {
+        let pool = Arc::new(ExecPool::new(2));
+        let model = tiny_model();
+        let a = NativeBackend::with_pool(Arc::clone(&model), 1, 6, Arc::clone(&pool));
+        let b = NativeBackend::with_pool(Arc::clone(&model), 2, 6, Arc::clone(&pool));
+        let t1: Vec<i32> = (0..6).map(|i| i as i32).collect();
+        let t2: Vec<i32> = (0..12).map(|i| (i % 5) as i32).collect();
+        let ra = a.forward_batch(&t1).unwrap();
+        let rb = b.forward_batch(&t2).unwrap();
+        assert_eq!(ra.len(), 6 * 64);
+        assert_eq!(rb.len(), 12 * 64);
+        let mut set = NativeSet::new();
+        set.insert("a", a);
+        set.insert("b", b);
+        assert_eq!(set.names(), vec!["a".to_string(), "b".to_string()]);
+        let mut seen = 0usize;
+        assert!(set.run("a", &mut |bk| seen = bk.batch()));
+        assert_eq!(seen, 1);
+        assert!(!set.run("missing", &mut |_| {}));
+    }
+
+    #[test]
+    fn run_jobs_returns_results_in_job_order() {
+        let pool = ExecPool::new(4);
+        let jobs: Vec<_> = (0..32usize)
+            .map(|i| move |_scratch: &mut ForwardScratch| i * i)
+            .collect();
+        let out = pool.run_jobs(jobs).unwrap();
+        let expect: Vec<usize> = (0..32).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+}

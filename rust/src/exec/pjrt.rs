@@ -1,0 +1,116 @@
+//! PJRT implementations of the execution contract.
+//!
+//! [`PjrtBackend`] is a borrowed view pairing the compile-cache
+//! [`Engine`] with one resident [`VariantRunner`] — the shape the eval
+//! tables use, where one engine hosts many variants in sequence.
+//! [`PjrtSet`] owns the engine plus every resident runner for the
+//! serving executor; `run` materializes a short-lived view per call.
+//! PJRT handles never cross threads: a `PjrtSet` is built *inside* the
+//! executor thread (see `coordinator::Server::start`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::{Backend, BackendSet};
+use crate::runtime::{Artifacts, Engine, VariantRunner};
+
+/// PJRT-backed model view (engine + one resident variant).
+pub struct PjrtBackend<'a> {
+    pub engine: &'a Engine,
+    pub runner: &'a VariantRunner,
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn batch(&self) -> usize {
+        self.runner.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.runner.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.runner.vocab
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        let (b, s, v) = (self.runner.batch, self.runner.seq, self.runner.vocab);
+        if tokens.is_empty() || tokens.len() % s != 0 || tokens.len() / s > b {
+            return Err(format!(
+                "forward_batch wants rows*{s} tokens for 1..={b} rows, got {}",
+                tokens.len()
+            ));
+        }
+        let rows = tokens.len() / s;
+        if rows == b {
+            return self.runner.forward(self.engine, tokens);
+        }
+        // The compiled graph has a fixed [batch, seq] shape: pad the
+        // partial batch, run, and truncate the result to the real rows.
+        let mut padded = vec![0i32; b * s];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let mut out = self.runner.forward(self.engine, &padded)?;
+        out.truncate(rows * s * v);
+        Ok(out)
+    }
+}
+
+/// Resolve one variant name to a resident runner: `"fp"` is the W16A16
+/// reference graph, anything else a quantized variant from the
+/// manifest. The single copy of this rule — eval and serving both load
+/// through it.
+pub fn load_runner(
+    engine: &mut Engine,
+    arts: &Artifacts,
+    name: &str,
+) -> Result<VariantRunner, String> {
+    if name == "fp" {
+        VariantRunner::load_fp(engine, arts)
+    } else {
+        let meta = arts
+            .variant(name)
+            .ok_or_else(|| format!("unknown variant {name}"))?
+            .clone();
+        VariantRunner::load(engine, arts, &meta)
+    }
+}
+
+/// One PJRT engine with every requested variant resident — the serving
+/// executor's backend set ("fp" = the W16A16 reference graph).
+pub struct PjrtSet {
+    engine: Engine,
+    runners: BTreeMap<String, VariantRunner>,
+}
+
+impl PjrtSet {
+    /// Compile graphs and upload weights for each named variant.
+    pub fn load(artifacts_dir: &Path, names: &[String]) -> Result<Self, String> {
+        let arts = Artifacts::load(artifacts_dir)?;
+        let mut engine = Engine::new()?;
+        let mut runners = BTreeMap::new();
+        for name in names {
+            runners.insert(name.clone(), load_runner(&mut engine, &arts, name)?);
+        }
+        Ok(Self { engine, runners })
+    }
+}
+
+impl BackendSet for PjrtSet {
+    fn names(&self) -> Vec<String> {
+        self.runners.keys().cloned().collect()
+    }
+
+    fn run(&self, name: &str, f: &mut dyn FnMut(&dyn Backend)) -> bool {
+        match self.runners.get(name) {
+            Some(runner) => {
+                f(&PjrtBackend { engine: &self.engine, runner });
+                true
+            }
+            None => false,
+        }
+    }
+}

@@ -24,6 +24,10 @@
 //!   task suite.
 //! * [`runtime`] — PJRT client wrapper: load HLO text, upload weights,
 //!   execute.
+//! * [`exec`] — the unified batched execution layer: one `Backend`
+//!   trait with a multi-threaded native engine (persistent worker pool,
+//!   per-thread scratch, bit-deterministic batching) and the PJRT
+//!   runner view; serves eval, calibration and the coordinator.
 //! * [`coordinator`] — request router, dynamic batcher, variant registry,
 //!   metrics.
 //! * [`eval`] — perplexity and zero-shot evaluation engines + report
@@ -44,6 +48,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod exec;
 pub mod model;
 pub mod quant;
 pub mod rng;

@@ -64,6 +64,10 @@ fn print_help() {
            table1 | table2 | table3    regenerate the paper's tables\n\
            analyze                     sequency variance + Fig.2 spread\n\
            serve [--requests N]        batching server + demo load\n\
+                 [--backend pjrt|native] execution backend (default pjrt)\n\
+                 [--plan F [--calib F]]  (native) quantize + serve a searched\n\
+                                         heterogeneous rotation plan in-process\n\
+                 [--variants A,B] [--batch N] [--threads N] [--bits N]\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
            quantize-native [--r1 K]    pure-Rust W2 quantization (no Python)\n\
                            [--plan F]  ...from a searched rotation plan JSON\n\
@@ -188,18 +192,36 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let dir = artifacts_dir(args);
     let arts = Artifacts::load(Path::new(&dir))?;
-    let variants: Vec<String> = match args.opt("variants") {
-        Some(list) => list.split(',').map(String::from).collect(),
-        None => {
-            let mut v = vec!["fp".to_string()];
-            if let Some(m) = arts.variant("quarot_w2a16_gsr_r4gh") {
-                v.push(m.name.clone());
-            }
-            v
-        }
+    let backend = args.opt_or("backend", "pjrt").to_string();
+    let policy = BatchPolicy {
+        max_batch: args.opt_usize("batch", arts.batch.max(1)).max(1),
+        ..BatchPolicy::default()
     };
-    println!("starting server with variants: {variants:?}");
-    let server = Server::start(Path::new(&dir), &variants, BatchPolicy::default())?;
+    let (server, variants) = match backend.as_str() {
+        "pjrt" => {
+            if args.opt("plan").is_some() || args.opt("calib").is_some() {
+                return Err(
+                    "--plan/--calib need `--backend native`: the PJRT graphs cannot \
+                     serve searched rotation plans"
+                        .to_string(),
+                );
+            }
+            let variants: Vec<String> = match args.opt("variants") {
+                Some(list) => list.split(',').map(String::from).collect(),
+                None => {
+                    let mut v = vec!["fp".to_string()];
+                    if let Some(m) = arts.variant("quarot_w2a16_gsr_r4gh") {
+                        v.push(m.name.clone());
+                    }
+                    v
+                }
+            };
+            (Server::start(Path::new(&dir), &variants, policy)?, variants)
+        }
+        "native" => start_native_server(args, &arts, policy)?,
+        other => return Err(format!("unknown --backend {other:?} (pjrt|native)")),
+    };
+    println!("serving {} variant(s) on the {backend} backend: {variants:?}", variants.len());
     // Demo load: score random corpus windows round-robin over variants.
     let n_requests = args.opt_usize("requests", 32);
     let seq = arts.seq;
@@ -218,6 +240,81 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let metrics = server.shutdown();
     println!("{}", metrics.report(wall));
     Ok(())
+}
+
+/// Build and start the native serving path: fp plus any artifact
+/// variants from `--variants`, plus — the bit PJRT cannot do — a
+/// searched (possibly heterogeneous) `--plan`, quantized in-process
+/// (optionally Hessian-calibrated via `--calib`) and served from the
+/// same shared worker pool.
+fn start_native_server(
+    args: &Args,
+    arts: &Artifacts,
+    policy: BatchPolicy,
+) -> Result<(Server, Vec<String>), String> {
+    use gsr::calib::HessianSet;
+    use gsr::exec::{ExecPool, NativeBackend, NativeSet};
+    use gsr::model::{DenseModel, FpParams, QuantParams};
+    use gsr::quant::{build_plan_rotations, quantize_native_plan_with, RotationPlan};
+    use std::sync::Arc;
+
+    let (b, s) = (policy.max_batch, arts.seq);
+    let pool = Arc::new(ExecPool::new(args.opt_threads()));
+    let mut set = NativeSet::new();
+    let mut variants = vec!["fp".to_string()];
+    let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
+    set.insert(
+        "fp",
+        NativeBackend::with_pool(
+            Arc::new(DenseModel::Fp { cfg: arts.cfg.clone(), params: fp.clone() }),
+            b,
+            s,
+            Arc::clone(&pool),
+        ),
+    );
+    if let Some(list) = args.opt("variants") {
+        for name in list.split(',').filter(|n| !n.is_empty() && *n != "fp") {
+            let meta = arts
+                .variant(name)
+                .ok_or_else(|| format!("unknown variant {name}"))?
+                .clone();
+            let qp = QuantParams::load(&arts.weights_path(&meta), &arts.cfg, meta.r4_kind())?;
+            let model = DenseModel::Quant {
+                cfg: arts.cfg.clone(),
+                params: qp,
+                a_bits: meta.a_bits(),
+            };
+            set.insert(name, NativeBackend::with_pool(Arc::new(model), b, s, Arc::clone(&pool)));
+            variants.push(name.to_string());
+        }
+    }
+    if let Some(plan_path) = args.opt("plan") {
+        let plan = RotationPlan::load(Path::new(plan_path))?;
+        let calib = match args.opt("calib") {
+            Some(path) => {
+                let hessians = HessianSet::load(Path::new(path))?;
+                hessians.check_model(&arts.cfg)?;
+                hessians.check_basis(plan.fingerprint())?;
+                Some(hessians)
+            }
+            None => None,
+        };
+        let bits = args.opt_usize("bits", 2) as u32;
+        let rots = build_plan_rotations(&arts.cfg, &plan)?;
+        let t0 = std::time::Instant::now();
+        let (qp, sse, _) =
+            quantize_native_plan_with(&fp, &arts.cfg, &rots, bits, calib.as_ref())?;
+        println!(
+            "quantized searched plan {} for serving in {:?} ({}; weight SSE {sse:.2})",
+            tables::plan_summary(&plan),
+            t0.elapsed(),
+            tables::calib_label(calib.as_ref()),
+        );
+        let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };
+        set.insert("searched", NativeBackend::with_pool(Arc::new(model), b, s, pool));
+        variants.push("searched".to_string());
+    }
+    Ok((Server::start_native(set, policy)?, variants))
 }
 
 /// Resolve the rotation plan a `--calib`-capable subcommand works in:
@@ -248,7 +345,8 @@ fn plan_from_args(args: &Args, cfg: &gsr::model::ModelCfg) -> Result<gsr::quant:
 
 fn cmd_quantize_native(args: &Args) -> Result<(), String> {
     use gsr::calib::HessianSet;
-    use gsr::eval::{EvalOpts, NativeModel};
+    use gsr::eval::EvalOpts;
+    use gsr::exec::NativeBackend;
     use gsr::model::{DenseModel, FpParams};
     use gsr::quant::{build_plan_rotations, quantize_native_plan_with};
 
@@ -281,7 +379,12 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
     println!("quantized {} linears in {:?}; weight SSE {sse:.2}",
         arts.cfg.n_layers * 7, t0.elapsed());
     let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };
-    let native = NativeModel { model: &model, batch: 1, seq: arts.seq };
+    let native = NativeBackend::new(
+        std::sync::Arc::new(model),
+        arts.batch.max(1),
+        arts.seq,
+        args.opt_threads(),
+    );
     let opts = EvalOpts { windows: args.opt_usize("windows", 4), tasks_per_kind: 0 };
     let ev = gsr::eval::tables::eval_model(&native, &arts, opts)?;
     println!(
@@ -293,9 +396,10 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_calibrate(args: &Args) -> Result<(), String> {
-    use gsr::calib::{capture_hessians, checkpoint_fingerprint, CalibCfg, CaptureKey};
+    use gsr::calib::{capture_hessians_on, checkpoint_fingerprint, CalibCfg, CaptureKey};
     use gsr::data::{draw_token_windows, CorpusGenerator};
-    use gsr::model::{FpParams, ModelCfg};
+    use gsr::exec::NativeBackend;
+    use gsr::model::{DenseModel, FpParams, ModelCfg};
     use gsr::quant::{build_plan_rotations, fuse_to_dense_plan};
 
     let seed = args.opt_usize("seed", 2025) as u64;
@@ -322,7 +426,13 @@ fn cmd_calibrate(args: &Args) -> Result<(), String> {
     };
     let rots = build_plan_rotations(&cfg, &plan)?;
     let params = fuse_to_dense_plan(&fp, &cfg, &rots);
-    let seqs = draw_token_windows(&corpus, ccfg.n_seqs, ccfg.seq_len, cfg.vocab, ccfg.seed);
+    let seqs = std::sync::Arc::new(draw_token_windows(
+        &corpus,
+        ccfg.n_seqs,
+        ccfg.seq_len,
+        cfg.vocab,
+        ccfg.seed,
+    ));
     let key = CaptureKey {
         calib_seed: ccfg.seed,
         basis_fingerprint: plan.fingerprint(),
@@ -330,7 +440,16 @@ fn cmd_calibrate(args: &Args) -> Result<(), String> {
         plan_json: plan.to_json().to_string_pretty(),
     };
     let t0 = std::time::Instant::now();
-    let set = capture_hessians(&cfg, &params, &seqs, ccfg.threads, &key);
+    // Capture runs on the same batched execution backend that serves
+    // eval and the coordinator — one pool, reusable per-thread scratch.
+    let model = DenseModel::Quant { cfg: cfg.clone(), params, a_bits: None };
+    let backend = NativeBackend::new(
+        std::sync::Arc::new(model),
+        1,
+        ccfg.seq_len.max(1),
+        ccfg.threads,
+    );
+    let set = capture_hessians_on(&backend, std::sync::Arc::clone(&seqs), &key)?;
     let out = args.opt_or("out", "hessians.bin");
     set.save(Path::new(out))?;
     println!(

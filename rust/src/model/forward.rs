@@ -3,7 +3,18 @@
 //! Mirrors `python/compile/model.py::forward_fp` / `forward_rotated` on
 //! single sequences. Used to (a) cross-validate the PJRT path against an
 //! independent implementation, (b) run the Fig.-1 rotation-invariance
-//! cargo test, and (c) provide a PJRT-free eval fallback.
+//! cargo test, and (c) back the batched native execution engine
+//! (`exec::NativeBackend`) that serves eval, calibration and the
+//! coordinator.
+//!
+//! Every intermediate lives in a caller-supplied [`ForwardScratch`] so a
+//! long-lived worker thread pays zero allocation per forward call, and
+//! every linear runs through the cache-blocked tiled [`matmul_into`].
+//! Both are bit-transparent: per output element the f64 accumulation
+//! order is unchanged, so `forward` produces logits bit-identical to the
+//! original straight-line implementation — the invariant the batched
+//! engine's "same logits for any batch composition / thread count"
+//! guarantee rests on.
 
 use super::config::{ModelCfg, R4Kind};
 use super::weights::{FpParams, QuantParams};
@@ -49,6 +60,51 @@ pub trait ActivationTap {
     fn record(&mut self, layer: usize, site: TapSite, rows: &[f32], width: usize);
 }
 
+// ---------------------------------------------------------------------------
+// Reusable scratch
+// ---------------------------------------------------------------------------
+
+/// Reusable buffers for one forward call. A worker thread keeps one of
+/// these alive across calls so the steady state allocates nothing: every
+/// buffer is `clear()`+`resize()`d (capacity retained) and fully
+/// overwritten before it is read, so no state leaks between sequences —
+/// results are bit-identical whether a scratch is fresh or reused.
+#[derive(Default)]
+pub struct ForwardScratch {
+    /// Residual stream `[T, d]`.
+    x: Vec<f32>,
+    /// Basis-change double buffer for `x`.
+    xt: Vec<f32>,
+    /// Post-norm linear input `[T, d]`.
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention output `[T, d]`.
+    o: Vec<f32>,
+    /// FFN gate / up projections `[T, d_ffn]`.
+    g: Vec<f32>,
+    u: Vec<f32>,
+    /// FFN activation `[T, d_ffn]`.
+    z: Vec<f32>,
+    /// Output of `wo` / `wdown` `[T, d]`.
+    zd: Vec<f32>,
+    /// f64 matmul accumulator (the tiled fast path sums here).
+    acc: Vec<f64>,
+    /// Attention score row (f64, one per key position).
+    scores: Vec<f64>,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    /// Per-head rotation temp (`head_dim` wide).
+    head_tmp: Vec<f32>,
+}
+
+impl ForwardScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 impl DenseModel {
     pub fn cfg(&self) -> &ModelCfg {
         match self {
@@ -59,10 +115,16 @@ impl DenseModel {
 
     /// Forward a single token sequence → logits `[T, vocab]` (row-major).
     pub fn forward(&self, tokens: &[i32]) -> Vec<f32> {
+        self.forward_with(tokens, &mut ForwardScratch::new())
+    }
+
+    /// [`DenseModel::forward`] with caller-owned scratch buffers —
+    /// allocation-free in steady state, bit-identical results.
+    pub fn forward_with(&self, tokens: &[i32], scratch: &mut ForwardScratch) -> Vec<f32> {
         match self {
-            DenseModel::Fp { cfg, params } => forward_fp(cfg, params, tokens),
+            DenseModel::Fp { cfg, params } => forward_fp(cfg, params, tokens, scratch),
             DenseModel::Quant { cfg, params, a_bits } => {
-                forward_quant(cfg, params, *a_bits, tokens)
+                forward_quant_impl(cfg, params, *a_bits, tokens, None, scratch)
             }
         }
     }
@@ -72,29 +134,58 @@ impl DenseModel {
 // Primitives
 // ---------------------------------------------------------------------------
 
-/// `out[T,H] = x[T,C] @ w[C,H]` with f64 accumulation.
-pub fn matmul(x: &[f32], w: &[f32], t: usize, c: usize, h: usize) -> Vec<f32> {
+/// `out[T,H] = x[T,C] @ w[C,H]` with f64 accumulation, cache-blocked
+/// over `(k, j)` like `transform::Mat::matmul`: a `MM_BK × MM_BJ` tile
+/// of `w` stays cache-resident while every token row sweeps it, cutting
+/// B-matrix traffic by ~`MM_BK`× once `w` outgrows L2. Per output
+/// element the summation order is k ascending — `kb` blocks ascend and
+/// `k` ascends within each block — identical to the naive loop, so
+/// results are bit-for-bit unchanged. Zero activations are skipped
+/// (padding rows stay cheap).
+pub fn matmul_into(
+    x: &[f32],
+    w: &[f32],
+    t: usize,
+    c: usize,
+    h: usize,
+    out: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+) {
     debug_assert_eq!(x.len(), t * c);
     debug_assert_eq!(w.len(), c * h);
-    let mut out = vec![0f32; t * h];
-    for row in 0..t {
-        let xr = &x[row * c..(row + 1) * c];
-        let or = &mut out[row * h..(row + 1) * h];
-        let mut acc = vec![0f64; h];
-        for (k, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
+    const MM_BK: usize = 64;
+    const MM_BJ: usize = 128;
+    acc.clear();
+    acc.resize(t * h, 0.0);
+    for kb in (0..c).step_by(MM_BK) {
+        let ke = (kb + MM_BK).min(c);
+        for jb in (0..h).step_by(MM_BJ) {
+            let je = (jb + MM_BJ).min(h);
+            for row in 0..t {
+                let xr = &x[row * c + kb..row * c + ke];
+                let arow = &mut acc[row * h + jb..row * h + je];
+                for (k, &xv) in xr.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let xv = xv as f64;
+                    let wrow = &w[(kb + k) * h + jb..(kb + k) * h + je];
+                    for (a, &wv) in arow.iter_mut().zip(wrow) {
+                        *a += xv * wv as f64;
+                    }
+                }
             }
-            let wr = &w[k * h..(k + 1) * h];
-            let xv = xv as f64;
-            for (a, &wv) in acc.iter_mut().zip(wr) {
-                *a += xv * wv as f64;
-            }
-        }
-        for (o, a) in or.iter_mut().zip(&acc) {
-            *o = *a as f32;
         }
     }
+    out.clear();
+    out.extend(acc.iter().map(|&a| a as f32));
+}
+
+/// Allocating wrapper around [`matmul_into`].
+pub fn matmul(x: &[f32], w: &[f32], t: usize, c: usize, h: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    let mut acc = Vec::new();
+    matmul_into(x, w, t, c, h, &mut out, &mut acc);
     out
 }
 
@@ -158,11 +249,13 @@ fn fwht_f32(x: &mut [f32]) {
     }
 }
 
-/// RoPE tables: `(cos, sin)` each `[T, head_dim/2]`.
-fn rope_tables(t: usize, head_dim: usize, base: f64) -> (Vec<f32>, Vec<f32>) {
+/// RoPE tables into scratch: `(cos, sin)` each `[T, head_dim/2]`.
+fn rope_tables_into(t: usize, head_dim: usize, base: f64, cos: &mut Vec<f32>, sin: &mut Vec<f32>) {
     let half = head_dim / 2;
-    let mut cos = vec![0f32; t * half];
-    let mut sin = vec![0f32; t * half];
+    cos.clear();
+    cos.resize(t * half, 0.0);
+    sin.clear();
+    sin.resize(t * half, 0.0);
     for pos in 0..t {
         for i in 0..half {
             let inv = 1.0 / base.powf(i as f64 / half as f64);
@@ -171,7 +264,6 @@ fn rope_tables(t: usize, head_dim: usize, base: f64) -> (Vec<f32>, Vec<f32>) {
             sin[pos * half + i] = angle.sin() as f32;
         }
     }
-    (cos, sin)
 }
 
 /// Apply RoPE in-place to `[T, n_heads, head_dim]` (paired halves layout,
@@ -194,8 +286,9 @@ fn apply_rope(x: &mut [f32], t: usize, n_heads: usize, dh: usize, cos: &[f32], s
 }
 
 /// Per-head right-multiplication by `r [dh, dh]` over `[T, heads, dh]`.
-fn rotate_heads(x: &mut [f32], t: usize, n_heads: usize, dh: usize, r: &[f32]) {
-    let mut tmp = vec![0f32; dh];
+fn rotate_heads(x: &mut [f32], t: usize, n_heads: usize, dh: usize, r: &[f32], tmp: &mut Vec<f32>) {
+    tmp.clear();
+    tmp.resize(dh, 0.0);
     for pos in 0..t {
         for head in 0..n_heads {
             let off = (pos * n_heads + head) * dh;
@@ -206,16 +299,28 @@ fn rotate_heads(x: &mut [f32], t: usize, n_heads: usize, dh: usize, r: &[f32]) {
                 }
                 *tv = acc as f32;
             }
-            x[off..off + dh].copy_from_slice(&tmp);
+            x[off..off + dh].copy_from_slice(tmp);
         }
     }
 }
 
-/// Causal attention over `[T, heads, dh]` tensors → same layout.
-fn attention(q: &[f32], k: &[f32], v: &[f32], t: usize, n_heads: usize, dh: usize) -> Vec<f32> {
-    let mut out = vec![0f32; t * n_heads * dh];
+/// Causal attention over `[T, heads, dh]` tensors → same layout,
+/// written into `out` (fully overwritten).
+fn attention_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    n_heads: usize,
+    dh: usize,
+    out: &mut Vec<f32>,
+    scores: &mut Vec<f64>,
+) {
+    out.clear();
+    out.resize(t * n_heads * dh, 0.0);
+    scores.clear();
+    scores.resize(t, 0.0);
     let scale = 1.0 / (dh as f64).sqrt();
-    let mut scores = vec![0f64; t];
     for head in 0..n_heads {
         for qi in 0..t {
             let qoff = (qi * n_heads + head) * dh;
@@ -237,74 +342,84 @@ fn attention(q: &[f32], k: &[f32], v: &[f32], t: usize, n_heads: usize, dh: usiz
             let ooff = (qi * n_heads + head) * dh;
             for d in 0..dh {
                 let mut acc = 0f64;
-                for ki in 0..=qi {
+                for (ki, sc) in scores.iter().enumerate().take(qi + 1) {
                     let voff = (ki * n_heads + head) * dh;
-                    acc += scores[ki] * v[voff + d] as f64;
+                    acc += sc * v[voff + d] as f64;
                 }
                 out[ooff + d] = (acc / denom) as f32;
             }
         }
     }
-    out
+}
+
+/// Gather embedding rows for `tokens` into `x` `[T, d]`.
+fn embed_into(x: &mut Vec<f32>, embed: &[f32], tokens: &[i32], d: usize) {
+    x.clear();
+    for &tok in tokens {
+        let tok = tok as usize;
+        x.extend_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+}
+
+/// `x += y` elementwise.
+fn add_assign(x: &mut [f32], y: &[f32]) {
+    for (xv, yv) in x.iter_mut().zip(y) {
+        *xv += yv;
+    }
 }
 
 // ---------------------------------------------------------------------------
 // fp forward (training layout)
 // ---------------------------------------------------------------------------
 
-fn forward_fp(cfg: &ModelCfg, p: &FpParams, tokens: &[i32]) -> Vec<f32> {
+fn forward_fp(
+    cfg: &ModelCfg,
+    p: &FpParams,
+    tokens: &[i32],
+    scratch: &mut ForwardScratch,
+) -> Vec<f32> {
     let (t, d) = (tokens.len(), cfg.d_model);
     let (nh, dh) = (cfg.n_heads, cfg.head_dim());
-    let mut x = vec![0f32; t * d];
-    for (i, &tok) in tokens.iter().enumerate() {
-        x[i * d..(i + 1) * d].copy_from_slice(&p.embed[tok as usize * d..(tok as usize + 1) * d]);
-    }
-    let (cos, sin) = rope_tables(t, dh, cfg.rope_base);
+    let ForwardScratch { x, h, q, k, v, o, g, u, z, zd, acc, scores, cos, sin, .. } = scratch;
+    embed_into(x, &p.embed, tokens, d);
+    rope_tables_into(t, dh, cfg.rope_base, cos, sin);
     for layer in &p.layers {
-        let mut h = x.clone();
-        rmsnorm_rows(&mut h, d, cfg.norm_eps);
-        scale_rows(&mut h, &layer.ln1);
-        let mut q = matmul(&h, &layer.wq, t, d, d);
-        let mut k = matmul(&h, &layer.wk, t, d, d);
-        let v = matmul(&h, &layer.wv, t, d, d);
-        apply_rope(&mut q, t, nh, dh, &cos, &sin);
-        apply_rope(&mut k, t, nh, dh, &cos, &sin);
-        let o = attention(&q, &k, &v, t, nh, dh);
-        let o = matmul(&o, &layer.wo, t, d, d);
-        for (xv, ov) in x.iter_mut().zip(&o) {
-            *xv += ov;
-        }
-        let mut h = x.clone();
-        rmsnorm_rows(&mut h, d, cfg.norm_eps);
-        scale_rows(&mut h, &layer.ln2);
-        let g = matmul(&h, &layer.wgate, t, d, cfg.d_ffn);
-        let u = matmul(&h, &layer.wup, t, d, cfg.d_ffn);
-        let z: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
-        let zd = matmul(&z, &layer.wdown, t, cfg.d_ffn, d);
-        for (xv, zv) in x.iter_mut().zip(&zd) {
-            *xv += zv;
-        }
+        h.clear();
+        h.extend_from_slice(x);
+        rmsnorm_rows(h, d, cfg.norm_eps);
+        scale_rows(h, &layer.ln1);
+        matmul_into(h, &layer.wq, t, d, d, q, acc);
+        matmul_into(h, &layer.wk, t, d, d, k, acc);
+        matmul_into(h, &layer.wv, t, d, d, v, acc);
+        apply_rope(q, t, nh, dh, cos, sin);
+        apply_rope(k, t, nh, dh, cos, sin);
+        attention_into(q, k, v, t, nh, dh, o, scores);
+        matmul_into(o, &layer.wo, t, d, d, zd, acc);
+        add_assign(x, zd);
+        h.clear();
+        h.extend_from_slice(x);
+        rmsnorm_rows(h, d, cfg.norm_eps);
+        scale_rows(h, &layer.ln2);
+        matmul_into(h, &layer.wgate, t, d, cfg.d_ffn, g, acc);
+        matmul_into(h, &layer.wup, t, d, cfg.d_ffn, u, acc);
+        z.clear();
+        z.extend(g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv));
+        matmul_into(z, &layer.wdown, t, cfg.d_ffn, d, zd, acc);
+        add_assign(x, zd);
     }
-    rmsnorm_rows(&mut x, d, cfg.norm_eps);
-    scale_rows(&mut x, &p.ln_f);
-    matmul(&x, &p.lm_head, t, d, cfg.vocab)
+    rmsnorm_rows(x, d, cfg.norm_eps);
+    scale_rows(x, &p.ln_f);
+    let mut logits = Vec::new();
+    matmul_into(x, &p.lm_head, t, d, cfg.vocab, &mut logits, acc);
+    logits
 }
 
 // ---------------------------------------------------------------------------
 // rotated/quantized forward (deployed layout)
 // ---------------------------------------------------------------------------
 
-fn forward_quant(
-    cfg: &ModelCfg,
-    p: &QuantParams,
-    a_bits: Option<u32>,
-    tokens: &[i32],
-) -> Vec<f32> {
-    forward_quant_impl(cfg, p, a_bits, tokens, None)
-}
-
-/// [`forward_quant`] with an [`ActivationTap`] observing every linear's
-/// input matrix (calibration capture). With `a_bits = None` on
+/// Rotated/quantized forward with an [`ActivationTap`] observing every
+/// linear's input matrix (calibration capture). With `a_bits = None` on
 /// fused-but-unquantized params the tapped activations are exactly the
 /// rotated-basis fp activations (Fig.-1 equivalence).
 pub fn forward_quant_tapped(
@@ -314,7 +429,21 @@ pub fn forward_quant_tapped(
     tokens: &[i32],
     tap: &mut dyn ActivationTap,
 ) -> Vec<f32> {
-    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap))
+    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap), &mut ForwardScratch::new())
+}
+
+/// [`forward_quant_tapped`] with caller-owned scratch — the form the
+/// pooled calibration capture runs so long-lived workers allocate
+/// nothing per sequence.
+pub fn forward_quant_tapped_with(
+    cfg: &ModelCfg,
+    p: &QuantParams,
+    a_bits: Option<u32>,
+    tokens: &[i32],
+    tap: &mut dyn ActivationTap,
+    scratch: &mut ForwardScratch,
+) -> Vec<f32> {
+    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap), scratch)
 }
 
 fn forward_quant_impl(
@@ -323,67 +452,70 @@ fn forward_quant_impl(
     a_bits: Option<u32>,
     tokens: &[i32],
     mut tap: Option<&mut dyn ActivationTap>,
+    scratch: &mut ForwardScratch,
 ) -> Vec<f32> {
     let (t, d) = (tokens.len(), cfg.d_model);
     let (nh, dh) = (cfg.n_heads, cfg.head_dim());
-    let g = cfg.group;
-    let maybe_quant = |x: &mut Vec<f32>| {
-        if let Some(bits) = a_bits {
-            act_fake_quant(x, g, bits);
-        }
-    };
-    let mut x = vec![0f32; t * d];
-    for (i, &tok) in tokens.iter().enumerate() {
-        x[i * d..(i + 1) * d].copy_from_slice(&p.embed[tok as usize * d..(tok as usize + 1) * d]);
-    }
-    let (cos, sin) = rope_tables(t, dh, cfg.rope_base);
+    let grp = cfg.group;
+    let ForwardScratch { x, xt, h, q, k, v, o, g, u, z, zd, acc, scores, cos, sin, head_tmp } =
+        scratch;
+    embed_into(x, &p.embed, tokens, d);
+    rope_tables_into(t, dh, cfg.rope_base, cos, sin);
     for (l, layer) in p.layers.iter().enumerate() {
         // Heterogeneous plans: transition the residual stream from the
         // previous layer's R1 basis into this layer's (`x ← x R_{l-1}ᵀ R_l`).
         if let Some(tr) = &layer.basis_change {
-            x = matmul(&x, tr, t, d, d);
+            matmul_into(x, tr, t, d, d, xt, acc);
+            std::mem::swap(x, xt);
         }
         let w = |name: &str| layer.dense[name].as_slice();
-        let mut h = x.clone();
-        rmsnorm_rows(&mut h, d, cfg.norm_eps);
-        scale_rows(&mut h, &layer.ascale_attn);
-        maybe_quant(&mut h);
+        h.clear();
+        h.extend_from_slice(x);
+        rmsnorm_rows(h, d, cfg.norm_eps);
+        scale_rows(h, &layer.ascale_attn);
+        if let Some(bits) = a_bits {
+            act_fake_quant(h, grp, bits);
+        }
         if let Some(tp) = tap.as_mut() {
-            tp.record(l, TapSite::AttnIn, &h, d);
+            tp.record(l, TapSite::AttnIn, h, d);
         }
-        let mut q = matmul(&h, w("wq"), t, d, d);
-        let mut k = matmul(&h, w("wk"), t, d, d);
-        let v = matmul(&h, w("wv"), t, d, d);
-        apply_rope(&mut q, t, nh, dh, &cos, &sin);
-        apply_rope(&mut k, t, nh, dh, &cos, &sin);
-        rotate_heads(&mut q, t, nh, dh, &p.r3);
-        rotate_heads(&mut k, t, nh, dh, &p.r3);
-        let mut o = attention(&q, &k, &v, t, nh, dh);
-        scale_rows(&mut o, &layer.ascale_o);
-        maybe_quant(&mut o);
+        matmul_into(h, w("wq"), t, d, d, q, acc);
+        matmul_into(h, w("wk"), t, d, d, k, acc);
+        matmul_into(h, w("wv"), t, d, d, v, acc);
+        apply_rope(q, t, nh, dh, cos, sin);
+        apply_rope(k, t, nh, dh, cos, sin);
+        rotate_heads(q, t, nh, dh, &p.r3, head_tmp);
+        rotate_heads(k, t, nh, dh, &p.r3, head_tmp);
+        attention_into(q, k, v, t, nh, dh, o, scores);
+        scale_rows(o, &layer.ascale_o);
+        if let Some(bits) = a_bits {
+            act_fake_quant(o, grp, bits);
+        }
         if let Some(tp) = tap.as_mut() {
-            tp.record(l, TapSite::OIn, &o, d);
+            tp.record(l, TapSite::OIn, o, d);
         }
-        let o = matmul(&o, w("wo"), t, d, d);
-        for (xv, ov) in x.iter_mut().zip(&o) {
-            *xv += ov;
+        matmul_into(o, w("wo"), t, d, d, zd, acc);
+        add_assign(x, zd);
+        h.clear();
+        h.extend_from_slice(x);
+        rmsnorm_rows(h, d, cfg.norm_eps);
+        scale_rows(h, &layer.ascale_ffn);
+        if let Some(bits) = a_bits {
+            act_fake_quant(h, grp, bits);
         }
-        let mut h = x.clone();
-        rmsnorm_rows(&mut h, d, cfg.norm_eps);
-        scale_rows(&mut h, &layer.ascale_ffn);
-        maybe_quant(&mut h);
         if let Some(tp) = tap.as_mut() {
-            tp.record(l, TapSite::FfnIn, &h, d);
+            tp.record(l, TapSite::FfnIn, h, d);
         }
-        let gx = matmul(&h, w("wgate"), t, d, cfg.d_ffn);
-        let ux = matmul(&h, w("wup"), t, d, cfg.d_ffn);
-        let mut z: Vec<f32> = gx.iter().zip(&ux).map(|(&gv, &uv)| silu(gv) * uv).collect();
+        matmul_into(h, w("wgate"), t, d, cfg.d_ffn, g, acc);
+        matmul_into(h, w("wup"), t, d, cfg.d_ffn, u, acc);
+        z.clear();
+        z.extend(g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv));
         // Online R4: fast (grouped) Hadamard + signs — the L1 kernel's
         // math. A heterogeneous plan overrides kind/signs per layer; the
         // LH block size is carried by the sign-vector length (legacy
         // variants store `group` signs, plans may pick any valid block).
         let (r4_kind, r4_signs) = match &layer.r4 {
-            Some(o) => (o.kind, o.signs.as_slice()),
+            Some(ov) => (ov.kind, ov.signs.as_slice()),
             None => (p.r4_kind, p.r4_signs.as_slice()),
         };
         match r4_kind {
@@ -407,18 +539,20 @@ fn forward_quant_impl(
                 }
             }
         }
-        scale_rows(&mut z, &layer.ascale_down);
-        maybe_quant(&mut z);
+        scale_rows(z, &layer.ascale_down);
+        if let Some(bits) = a_bits {
+            act_fake_quant(z, grp, bits);
+        }
         if let Some(tp) = tap.as_mut() {
-            tp.record(l, TapSite::DownIn, &z, cfg.d_ffn);
+            tp.record(l, TapSite::DownIn, z, cfg.d_ffn);
         }
-        let zd = matmul(&z, w("wdown"), t, cfg.d_ffn, d);
-        for (xv, zv) in x.iter_mut().zip(&zd) {
-            *xv += zv;
-        }
+        matmul_into(z, w("wdown"), t, cfg.d_ffn, d, zd, acc);
+        add_assign(x, zd);
     }
-    rmsnorm_rows(&mut x, d, cfg.norm_eps);
-    matmul(&x, &p.lm_head, t, d, cfg.vocab)
+    rmsnorm_rows(x, d, cfg.norm_eps);
+    let mut logits = Vec::new();
+    matmul_into(x, &p.lm_head, t, d, cfg.vocab, &mut logits, acc);
+    logits
 }
 
 #[cfg(test)]
@@ -446,11 +580,16 @@ mod tests {
         for (i, qv) in q.iter_mut().enumerate() {
             *qv += (i % 3) as f32 * 0.05;
         }
-        let out1 = attention(&q, &k, &v, t, nh, dh);
+        let attn = |q: &[f32], k: &[f32], v: &[f32]| {
+            let (mut out, mut scores) = (Vec::new(), Vec::new());
+            attention_into(q, k, v, t, nh, dh, &mut out, &mut scores);
+            out
+        };
+        let out1 = attn(&q, &k, &v);
         for d in 0..dh {
             v[(t - 1) * dh + d] = 99.0; // mutate last position's value
         }
-        let out2 = attention(&q, &k, &v, t, nh, dh);
+        let out2 = attn(&q, &k, &v);
         assert_eq!(&out1[..(t - 1) * dh], &out2[..(t - 1) * dh]);
         assert_ne!(&out1[(t - 1) * dh..], &out2[(t - 1) * dh..]);
     }
@@ -480,5 +619,68 @@ mod tests {
         let x = vec![1.0, 2.0, 3.0, 4.0];
         let w = vec![1.0, 0.0, 0.0, 1.0];
         assert_eq!(matmul(&x, &w, 2, 2, 2), x);
+    }
+
+    /// The blocked matmul must agree bit-for-bit with the straight
+    /// k-ascending reference at tile-unaligned sizes — the invariant the
+    /// "same logits regardless of batching" guarantee rests on.
+    #[test]
+    fn blocked_matmul_bit_identical_to_naive() {
+        let naive = |x: &[f32], w: &[f32], t: usize, c: usize, h: usize| -> Vec<f32> {
+            let mut out = vec![0f32; t * h];
+            for row in 0..t {
+                let mut acc = vec![0f64; h];
+                for (kk, &xv) in x[row * c..(row + 1) * c].iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (a, &wv) in acc.iter_mut().zip(&w[kk * h..(kk + 1) * h]) {
+                        *a += xv as f64 * wv as f64;
+                    }
+                }
+                for (ov, &a) in out[row * h..(row + 1) * h].iter_mut().zip(&acc) {
+                    *ov = a as f32;
+                }
+            }
+            out
+        };
+        let mut rng = crate::rng::SplitMix64::new(17);
+        for (t, c, h) in [(3, 70, 130), (5, 64, 128), (1, 200, 7), (4, 1, 300)] {
+            let x: Vec<f32> = (0..t * c).map(|_| rng.next_normal() as f32).collect();
+            let w: Vec<f32> = (0..c * h).map(|_| rng.next_normal() as f32).collect();
+            let fast = matmul(&x, &w, t, c, h);
+            let slow = naive(&x, &w, t, c, h);
+            assert_eq!(fast.len(), slow.len());
+            for (a, b) in fast.iter().zip(&slow) {
+                assert_eq!(a.to_bits(), b.to_bits(), "blocked matmul is not bit-identical");
+            }
+        }
+    }
+
+    /// Scratch reuse must not change results: a warm scratch that just
+    /// ran a different sequence yields the same bits as a fresh one.
+    #[test]
+    fn scratch_reuse_is_bit_transparent() {
+        let cfg = ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 64,
+            group: 16,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        };
+        let model = DenseModel::Fp { cfg: cfg.clone(), params: FpParams::synthetic(&cfg, 5) };
+        let a: Vec<i32> = (0..9).map(|i| (i * 5 % 64) as i32).collect();
+        let b: Vec<i32> = (0..14).map(|i| (i * 11 % 64) as i32).collect();
+        let fresh = model.forward(&b);
+        let mut scratch = ForwardScratch::new();
+        let _ = model.forward_with(&a, &mut scratch); // warm with another length
+        let warm = model.forward_with(&b, &mut scratch);
+        assert_eq!(fresh.len(), warm.len());
+        for (x, y) in fresh.iter().zip(&warm) {
+            assert_eq!(x.to_bits(), y.to_bits(), "scratch reuse changed logits");
+        }
     }
 }

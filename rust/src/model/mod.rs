@@ -10,5 +10,8 @@ pub mod forward;
 pub mod weights;
 
 pub use config::{ModelCfg, ParamSpec, R4Kind};
-pub use forward::{forward_quant_tapped, ActivationTap, DenseModel, TapSite};
+pub use forward::{
+    forward_quant_tapped, forward_quant_tapped_with, ActivationTap, DenseModel, ForwardScratch,
+    TapSite,
+};
 pub use weights::{FpParams, LayerR4, QuantParams};

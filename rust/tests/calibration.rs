@@ -6,7 +6,8 @@ use std::path::PathBuf;
 
 use gsr::calib::{capture_hessians, checkpoint_fingerprint, CaptureKey, HessianSet};
 use gsr::data::{draw_token_windows, CorpusGenerator, SEED_CORPUS};
-use gsr::eval::{NativeModel, PplEngine};
+use gsr::eval::PplEngine;
+use gsr::exec::NativeBackend;
 use gsr::model::config::LINEARS;
 use gsr::model::{DenseModel, FpParams, ModelCfg};
 use gsr::quant::{
@@ -61,7 +62,7 @@ fn fixture() -> Fixture {
 fn ppl_of(cfg: &ModelCfg, params: gsr::model::QuantParams, text: &[u8]) -> f64 {
     let tokens: Vec<u8> = text.iter().map(|&b| b % cfg.vocab as u8).collect();
     let model = DenseModel::Quant { cfg: cfg.clone(), params, a_bits: None };
-    let native = NativeModel { model: &model, batch: 1, seq: 48 };
+    let native = NativeBackend::new(std::sync::Arc::new(model), 4, 48, 2);
     PplEngine::new(40).evaluate(&native, &tokens).unwrap().ppl
 }
 

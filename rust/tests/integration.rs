@@ -6,7 +6,8 @@ use std::path::Path;
 use gsr::analysis::{outlier_spread, sequency_variance_report};
 use gsr::data::tasks::TaskSuite;
 use gsr::data::{ByteTokenizer, CorpusGenerator, SEED_CORPUS};
-use gsr::eval::{log_softmax_nll, LogitModel, PplEngine, ZeroShotEngine};
+use gsr::eval::{log_softmax_nll, PplEngine, ZeroShotEngine};
+use gsr::exec::Backend;
 use gsr::quant::{gptq_quantize, rtn_quantize};
 use gsr::rng::SplitMix64;
 use gsr::transform::{build_r1, Mat, R1Kind};
@@ -116,7 +117,7 @@ fn rotation_plus_gptq_pipeline_native() {
 #[test]
 fn ppl_engine_with_tokenizer_windows() {
     struct Peaked;
-    impl LogitModel for Peaked {
+    impl Backend for Peaked {
         fn batch(&self) -> usize {
             2
         }
@@ -159,7 +160,7 @@ fn ppl_engine_with_tokenizer_windows() {
 #[test]
 fn zeroshot_chance_floor_and_oracle_ceiling() {
     struct Uniform;
-    impl LogitModel for Uniform {
+    impl Backend for Uniform {
         fn batch(&self) -> usize {
             4
         }

@@ -7,7 +7,8 @@
 use std::path::Path;
 
 use gsr::coordinator::{BatchPolicy, Server};
-use gsr::eval::{EvalOpts, LogitModel, NativeModel, PjrtModel, PplEngine};
+use gsr::eval::{EvalOpts, PplEngine};
+use gsr::exec::{NativeBackend, PjrtBackend};
 use gsr::model::{DenseModel, FpParams, QuantParams};
 use gsr::runtime::{Artifacts, Engine, VariantRunner};
 
@@ -93,13 +94,14 @@ fn ppl_pjrt_vs_native_and_fp_ordering() {
     let mut engine = Engine::new().unwrap();
     let fp_runner = VariantRunner::load_fp(&mut engine, &arts).unwrap();
     let engine_ref = &engine;
-    let fp_model = PjrtModel { engine: engine_ref, runner: &fp_runner };
+    let fp_model = PjrtBackend { engine: engine_ref, runner: &fp_runner };
     let ppl_engine = PplEngine::new(6);
     let fp_ppl = ppl_engine.evaluate(&fp_model, arts.test_split()).unwrap().ppl;
 
     let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg).unwrap();
     let native = DenseModel::Fp { cfg: arts.cfg.clone(), params: fp };
-    let native_model = NativeModel { model: &native, batch: arts.batch, seq: arts.seq };
+    let native_model =
+        NativeBackend::new(std::sync::Arc::new(native), arts.batch, arts.seq, 0);
     let native_ppl = ppl_engine.evaluate(&native_model, arts.test_split()).unwrap().ppl;
     assert!(
         (fp_ppl - native_ppl).abs() / native_ppl < 0.02,
@@ -108,7 +110,7 @@ fn ppl_pjrt_vs_native_and_fp_ordering() {
 
     if let Some(meta) = arts.variant("quarot_w2a16_gh_r4gh").cloned() {
         let qrunner = VariantRunner::load(&mut engine, &arts, &meta).unwrap();
-        let qmodel = PjrtModel { engine: &engine, runner: &qrunner };
+        let qmodel = PjrtBackend { engine: &engine, runner: &qrunner };
         let qppl = PplEngine::new(6).evaluate(&qmodel, arts.test_split()).unwrap().ppl;
         assert!(
             qppl > fp_ppl,

@@ -1,0 +1,263 @@
+//! End-to-end tests of the native serving path: the unified `Backend`
+//! trait, the batched multi-threaded native engine, and the coordinator
+//! serving fp + quantized (heterogeneous searched-plan) variants with
+//! no PJRT and no prebuilt artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gsr::coordinator::{BatchPolicy, Server};
+use gsr::exec::{Backend, ExecPool, NativeBackend, NativeSet};
+use gsr::model::{DenseModel, FpParams, ModelCfg, R4Kind};
+use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
+use gsr::transform::R1Kind;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+/// A genuinely heterogeneous plan: layer 1 switches both R1 and R4, so
+/// serving it exercises the per-layer basis change — the configuration
+/// the PJRT/AOT path cannot represent.
+fn hetero_plan(cfg: &ModelCfg, seed: u64) -> RotationPlan {
+    RotationPlan {
+        seed,
+        layers: vec![
+            RotationSpec { r1: R1Kind::GSR, r1_block: 8, r4: R4Kind::GH, r4_block: 64 },
+            RotationSpec { r1: R1Kind::GH, r1_block: cfg.d_model, r4: R4Kind::LH, r4_block: 16 },
+        ],
+    }
+}
+
+fn fp_model(cfg: &ModelCfg, seed: u64) -> (FpParams, Arc<DenseModel>) {
+    let fp = FpParams::synthetic(cfg, seed);
+    let model = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() });
+    (fp, model)
+}
+
+fn searched_model(cfg: &ModelCfg, fp: &FpParams, seed: u64) -> Arc<DenseModel> {
+    let rots = build_plan_rotations(cfg, &hetero_plan(cfg, seed)).unwrap();
+    let (qp, _, _) = quantize_native_plan(fp, cfg, &rots, 2);
+    Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None })
+}
+
+fn window(seed: usize, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7 + seed * 13 + 1) % vocab) as i32).collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: logit {i} differs ({a} vs {b})");
+    }
+}
+
+/// The acceptance property: batched native logits are bit-identical to
+/// the serial `DenseModel::forward` for every batch composition and
+/// every thread count — on fp *and* on a heterogeneous searched plan.
+#[test]
+fn batched_logits_bit_identical_for_any_batch_and_threads() {
+    let cfg = tiny_cfg();
+    let (fp, fp_m) = fp_model(&cfg, 11);
+    let plan_m = searched_model(&cfg, &fp, 7);
+    let s = 16;
+    let seqs: Vec<Vec<i32>> = (0..4).map(|i| window(i, s, cfg.vocab)).collect();
+    for model in [fp_m, plan_m] {
+        let expect: Vec<Vec<f32>> = seqs.iter().map(|w| model.forward(w)).collect();
+        for threads in [1, 3] {
+            for batch in [1, 2, 4] {
+                let backend = NativeBackend::new(Arc::clone(&model), batch, s, threads);
+                let v = backend.vocab();
+                for chunk in seqs.chunks(batch) {
+                    // Pad under-full batches with zeros (a valid token).
+                    let mut tokens = vec![0i32; batch * s];
+                    for (i, w) in chunk.iter().enumerate() {
+                        tokens[i * s..(i + 1) * s].copy_from_slice(w);
+                    }
+                    let out = backend.forward_batch(&tokens).unwrap();
+                    for (i, w) in chunk.iter().enumerate() {
+                        let row = &out[i * s * v..(i + 1) * s * v];
+                        let idx = seqs.iter().position(|x| x == w).unwrap();
+                        assert_bits_eq(
+                            row,
+                            &expect[idx],
+                            &format!("{} b={batch} t={threads}", backend.name()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serve end to end: concurrent clients across fp + a heterogeneous
+/// searched variant, logits bit-exact vs the direct forward, metrics
+/// counters consistent.
+#[test]
+fn serve_native_end_to_end_with_concurrent_clients() {
+    let cfg = tiny_cfg();
+    let (fp, fp_m) = fp_model(&cfg, 11);
+    let plan_m = searched_model(&cfg, &fp, 7);
+    let (b, s) = (3, 20);
+    let pool = Arc::new(ExecPool::new(3));
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::with_pool(Arc::clone(&fp_m), b, s, Arc::clone(&pool)));
+    set.insert("searched", NativeBackend::with_pool(Arc::clone(&plan_m), b, s, pool));
+    let policy = BatchPolicy { max_batch: b, max_wait: Duration::from_millis(2) };
+    let server = Server::start_native(set, policy).expect("native server start");
+
+    // Variable lengths exercise padding; expectations are the *direct*
+    // serial forward on exactly the submitted tokens.
+    let n_clients = 3;
+    let per_client = 4;
+    let mut cases: Vec<(String, Vec<i32>, Vec<f32>)> = Vec::new();
+    for c in 0..n_clients {
+        for r in 0..per_client {
+            let (name, model) = if (c + r) % 2 == 0 {
+                ("fp", &fp_m)
+            } else {
+                ("searched", &plan_m)
+            };
+            let len = s - (r % 3); // s, s-1, s-2
+            let tokens = window(c * per_client + r, len, cfg.vocab);
+            let expect = model.forward(&tokens);
+            cases.push((name.to_string(), tokens, expect));
+        }
+    }
+    std::thread::scope(|scope| {
+        for (c, client_cases) in cases.chunks(per_client).enumerate() {
+            let handle = server.handle();
+            scope.spawn(move || {
+                for (i, (variant, tokens, expect)) in client_cases.iter().enumerate() {
+                    let logits = handle
+                        .score(variant, tokens.clone())
+                        .unwrap_or_else(|e| panic!("client {c} req {i}: {e}"));
+                    assert_bits_eq(&logits, expect, &format!("client {c} req {i} ({variant})"));
+                }
+            });
+        }
+    });
+    let total = (n_clients * per_client) as u64;
+    let n_tokens: u64 = cases.iter().map(|(_, t, _)| t.len() as u64).sum();
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, total);
+    assert_eq!(metrics.rejected, 0);
+    assert_eq!(metrics.tokens, n_tokens);
+    assert_eq!(
+        metrics.batch_sizes.iter().sum::<usize>() as u64,
+        total,
+        "batch sizes must account for every request exactly once"
+    );
+    assert_eq!(metrics.batches as usize, metrics.batch_sizes.len());
+    assert!(metrics.batches >= 1 && metrics.batches <= total);
+    assert_eq!(metrics.request_latency.count(), total);
+    assert_eq!(metrics.exec_latency.count(), metrics.batches);
+}
+
+/// Malformed requests are rejected individually with a clear error —
+/// oversized sequences are never silently truncated, a bad token id
+/// never fails the requests it was batched with, and the server keeps
+/// serving afterwards.
+#[test]
+fn serve_native_rejects_malformed_requests() {
+    let cfg = tiny_cfg();
+    let (_, fp_m) = fp_model(&cfg, 5);
+    let s = 12;
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, s, 2));
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    let server = Server::start_native(set, policy).unwrap();
+    let err = server
+        .score("fp", window(1, s + 5, cfg.vocab))
+        .expect_err("oversized request must be refused");
+    assert!(err.contains("split the request"), "unhelpful error: {err}");
+    // An out-of-vocab token is refused per-request, not per-batch: the
+    // valid request submitted alongside it still gets its logits.
+    let good = window(2, s, cfg.vocab);
+    let mut bad = good.clone();
+    bad[3] = cfg.vocab as i32; // == vocab → out of range
+    let handle = server.handle();
+    let (good_tx, good_rx) = std::sync::mpsc::channel();
+    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    handle
+        .submit(gsr::coordinator::Request {
+            variant: "fp".into(),
+            tokens: bad,
+            reply: bad_tx,
+        })
+        .unwrap();
+    handle
+        .submit(gsr::coordinator::Request {
+            variant: "fp".into(),
+            tokens: good.clone(),
+            reply: good_tx,
+        })
+        .unwrap();
+    let bad_err = bad_rx.recv().unwrap().logits.expect_err("bad token must be refused");
+    assert!(bad_err.contains("outside vocab"), "{bad_err}");
+    let logits = good_rx.recv().unwrap().logits.expect("co-batched request must survive");
+    assert_bits_eq(&logits, &fp_m.forward(&good), "co-batched request");
+    // Unknown variants error without hanging and count as rejected.
+    assert!(server.score("nope", vec![1, 2]).is_err());
+    let metrics = server.shutdown();
+    assert_eq!(metrics.rejected, 3, "oversized + bad token + unknown variant");
+    assert_eq!(metrics.requests, 1, "only the good request completes");
+}
+
+/// The PPL engine through the batched backend agrees bit-for-bit with a
+/// serial single-sequence reference — eval really did not change
+/// numerics when it moved onto the batched execution layer.
+#[test]
+fn ppl_through_batched_backend_matches_serial_reference() {
+    use gsr::eval::PplEngine;
+
+    struct SerialRef {
+        model: Arc<DenseModel>,
+        batch: usize,
+        seq: usize,
+    }
+
+    impl Backend for SerialRef {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn vocab(&self) -> usize {
+            self.model.cfg().vocab
+        }
+        fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
+            let rows = tokens.len() / self.seq;
+            let mut out = Vec::new();
+            for row in 0..rows {
+                out.extend(self.model.forward(&tokens[row * self.seq..(row + 1) * self.seq]));
+            }
+            Ok(out)
+        }
+    }
+
+    let cfg = tiny_cfg();
+    let (_, model) = fp_model(&cfg, 9);
+    let text: Vec<u8> = (0..600u32).map(|i| ((i * 11 + 3) % 64) as u8).collect();
+    let (b, s) = (4, 24);
+    let serial = SerialRef { model: Arc::clone(&model), batch: b, seq: s };
+    let engine = PplEngine::new(0);
+    let want = engine.evaluate(&serial, &text).unwrap();
+    for threads in [1, 4] {
+        let batched = NativeBackend::new(Arc::clone(&model), b, s, threads);
+        let got = engine.evaluate(&batched, &text).unwrap();
+        assert_eq!(got.ppl.to_bits(), want.ppl.to_bits(), "PPL drifted at {threads} threads");
+        assert_eq!(got.tokens, want.tokens);
+        assert_eq!(got.windows, want.windows);
+    }
+}

@@ -1,12 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 verification in one command: build, test, lint.
+# Tier-1 verification in one command: format, build, test, lint.
 #
 #   ./scripts/check.sh
 #
-# Runs from any working directory. Clippy is skipped (with a notice) on
-# toolchains that don't ship it.
+# Runs from any working directory. rustfmt/clippy are skipped (with a
+# notice) on toolchains that don't ship them.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --all -- --check
+else
+  echo "rustfmt unavailable on this toolchain — skipped"
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -15,7 +22,7 @@ echo "== cargo test -q =="
 cargo test -q
 
 if cargo clippy --version >/dev/null 2>&1; then
-  echo "== cargo clippy -- -D warnings =="
+  echo "== cargo clippy --all-targets -- -D warnings =="
   cargo clippy --all-targets -- -D warnings
 else
   echo "clippy unavailable on this toolchain — skipped"
