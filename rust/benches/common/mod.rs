@@ -7,6 +7,36 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use gsr::model::{ModelCfg, R4Kind};
+use gsr::quant::{RotationPlan, RotationSpec};
+use gsr::transform::R1Kind;
+
+/// The shared benchmark model geometry (d=128, 4 layers, byte vocab)
+/// used by the serving/decoding throughput benches — one definition so
+/// their tok/s numbers stay comparable.
+pub fn bench_model_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 256,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ffn: 256,
+        group: 64,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+/// A genuinely heterogeneous plan over [`bench_model_cfg`]: layer 1
+/// switches both R1 and R4, so benches exercise the per-layer basis
+/// change and online-R4 override paths.
+pub fn bench_hetero_plan(cfg: &ModelCfg) -> RotationPlan {
+    let base = RotationSpec::baseline(cfg);
+    let mut layers = vec![base; cfg.n_layers];
+    layers[1] = RotationSpec { r1: R1Kind::LH, r1_block: 32, r4: R4Kind::LH, r4_block: 64 };
+    RotationPlan { seed: 2025, layers }
+}
+
 /// Time `f` over `iters` runs after `warmup` runs; returns per-run stats.
 pub fn time_it<T>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Duration {
     for _ in 0..warmup {

@@ -14,29 +14,8 @@ mod common;
 use std::sync::Arc;
 
 use gsr::exec::{Backend, NativeBackend};
-use gsr::model::{DenseModel, FpParams, ModelCfg, R4Kind};
-use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
-use gsr::transform::R1Kind;
-
-fn bench_cfg() -> ModelCfg {
-    ModelCfg {
-        vocab: 256,
-        d_model: 128,
-        n_layers: 4,
-        n_heads: 4,
-        d_ffn: 256,
-        group: 64,
-        rope_base: 10_000.0,
-        norm_eps: 1e-5,
-    }
-}
-
-fn hetero_plan(cfg: &ModelCfg) -> RotationPlan {
-    let base = RotationSpec::baseline(cfg);
-    let mut layers = vec![base; cfg.n_layers];
-    layers[1] = RotationSpec { r1: R1Kind::LH, r1_block: 32, r4: R4Kind::LH, r4_block: 64 };
-    RotationPlan { seed: 2025, layers }
-}
+use gsr::model::{DenseModel, FpParams};
+use gsr::quant::{build_plan_rotations, quantize_native_plan};
 
 fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) {
     let vocab = model.cfg().vocab;
@@ -75,10 +54,10 @@ fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) {
 }
 
 fn main() {
-    let cfg = bench_cfg();
+    let cfg = common::bench_model_cfg();
     let fp = FpParams::synthetic(&cfg, 7);
     let fp_model = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() });
-    let rots = build_plan_rotations(&cfg, &hetero_plan(&cfg)).unwrap();
+    let rots = build_plan_rotations(&cfg, &common::bench_hetero_plan(&cfg)).unwrap();
     let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
     let plan_model = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
     let seq = 64;

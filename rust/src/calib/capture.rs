@@ -80,12 +80,8 @@ pub fn capture_hessians_on(
     // Validate up front, like `forward_batch`: a bad token id must be
     // this call's error, not a panic that kills a shared pool worker.
     for seq in seqs.iter() {
-        if let Some(&bad) = seq.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
-            return Err(format!(
-                "calibration token id {bad} outside vocab 0..{}",
-                cfg.vocab
-            ));
-        }
+        crate::model::tokens_in_vocab(seq, cfg.vocab)
+            .map_err(|e| format!("calibration sequence: {e}"))?;
     }
     let n_partials = N_PARTIALS.min(seqs.len()).max(1);
     let jobs: Vec<_> = (0..n_partials)

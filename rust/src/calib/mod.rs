@@ -24,6 +24,14 @@
 //! CLI surface: `gsr calibrate [--synthetic] [--plan F] [--seqs N]
 //! [--seq-len N] [--out hessians.bin]`, then `--calib hessians.bin` on
 //! `quantize-native` and `search`.
+//!
+//! Determinism: capture accumulates into a **fixed number** of partials
+//! (independent of `--threads`) and merges them in index order, so the
+//! resulting `HessianSet` is bit-identical for any worker count — the
+//! same guarantee the execution layer gives logits. An artifact is
+//! keyed by model geometry + calibration seed + rotation-basis
+//! fingerprint + checkpoint fingerprint, so a stale or mismatched
+//! artifact is rejected at load/use instead of silently skewing GPTQ.
 
 pub mod capture;
 pub mod hessian;

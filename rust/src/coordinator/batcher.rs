@@ -26,6 +26,18 @@ impl Default for BatchPolicy {
 /// the oldest *remaining* item: flushing a full batch does not restart
 /// the clock for what stays behind, and no item can wait longer than
 /// `max_wait` past its own enqueue under sustained load.
+///
+/// ```
+/// use gsr::coordinator::{BatchPolicy, DynamicBatcher};
+/// use std::time::{Duration, Instant};
+/// let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) };
+/// let mut b = DynamicBatcher::new(policy);
+/// b.push("a");
+/// assert!(!b.ready(Instant::now())); // under-full, deadline far away
+/// b.push("b");
+/// assert!(b.ready(Instant::now())); // full batch flushes immediately
+/// assert_eq!(b.take_batch(), vec!["a", "b"]);
+/// ```
 pub struct DynamicBatcher<T> {
     policy: BatchPolicy,
     pending: VecDeque<(Instant, T)>,

@@ -42,6 +42,11 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us)
     }
 
+    /// Total recorded time — what throughput rates divide by.
+    pub fn total(&self) -> Duration {
+        Duration::from_micros(self.sum_us)
+    }
+
     /// Approximate quantile from bucket upper bounds.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
@@ -65,17 +70,44 @@ impl LatencyHistogram {
 /// (what a client feels), `exec_latency` is the backend's forward time
 /// per batch (what the executor pays) — the gap between them is the
 /// batching wait the policy trades for throughput.
+///
+/// Generation adds its own family: `decode_latency` is the backend time
+/// of one *batched decode round* (the per-step number a serving loop
+/// tunes), `generated_tokens` counts emitted tokens, and the cache
+/// gauges track KV occupancy — so decode tok/s is reported directly
+/// instead of being inferred from prefill batch latency.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub request_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
+    /// Per-step backend latency of batched decode rounds.
+    pub decode_latency: LatencyHistogram,
     pub batch_sizes: Vec<usize>,
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
     /// Requests refused without execution: longer than the backend's
-    /// seq, out-of-vocab token ids, or an unknown variant.
+    /// seq, out-of-vocab token ids, invalid generation bounds, or an
+    /// unknown variant.
     pub rejected: u64,
+    /// Completed generation requests (also counted in `requests`).
+    pub generations: u64,
+    /// Generations that failed *after* admission (prefill or decode
+    /// error). Together with `generations` and `rejected`, every
+    /// submitted generation is accounted exactly once.
+    pub generation_failures: u64,
+    /// Tokens emitted to generation clients (stop tokens excluded).
+    pub generated_tokens: u64,
+    /// Batched decode rounds executed.
+    pub decode_steps: u64,
+    /// Sequence-steps across all decode rounds (= tokens decoded,
+    /// including a final stop token that is not emitted).
+    pub decode_seqs: u64,
+    /// Sum over decode rounds of the round's total KV-cache occupancy
+    /// (tokens); `/ decode_steps` = mean cached tokens per round.
+    pub cache_tokens: u64,
+    /// Largest single-round KV-cache occupancy seen (tokens).
+    pub cache_tokens_peak: u64,
 }
 
 impl Metrics {
@@ -94,6 +126,25 @@ impl Metrics {
         self.request_latency.record(latency);
     }
 
+    /// Account one batched decode round: `seqs` sequences stepped
+    /// together, holding `cache_tokens` total cached tokens afterwards,
+    /// in `exec` backend time.
+    pub fn record_decode(&mut self, seqs: usize, cache_tokens: u64, exec: Duration) {
+        self.decode_steps += 1;
+        self.decode_seqs += seqs as u64;
+        self.cache_tokens += cache_tokens;
+        self.cache_tokens_peak = self.cache_tokens_peak.max(cache_tokens);
+        self.decode_latency.record(exec);
+    }
+
+    /// Account one completed generation: `emitted` tokens delivered to
+    /// the client, `latency` submit-to-reply.
+    pub fn record_generation(&mut self, emitted: u64, latency: Duration) {
+        self.generations += 1;
+        self.generated_tokens += emitted;
+        self.record_request(latency);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             return 0.0;
@@ -101,8 +152,18 @@ impl Metrics {
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
+    /// Decoded sequence-steps per second of backend decode time — the
+    /// serving-side decode throughput (0 when nothing was generated).
+    pub fn decode_tok_per_s(&self) -> f64 {
+        let secs = self.decode_latency.total().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.decode_seqs as f64 / secs
+    }
+
     pub fn report(&self, wall: Duration) -> String {
-        format!(
+        let mut out = format!(
             "requests={} rejected={} batches={} mean_batch={:.2} tokens={} \
              throughput={:.0} tok/s req p50={:?} p99={:?} max={:?} \
              exec p50={:?} max={:?}",
@@ -117,7 +178,26 @@ impl Metrics {
             self.request_latency.max(),
             self.exec_latency.quantile(0.5),
             self.exec_latency.max(),
-        )
+        );
+        if self.decode_steps > 0 || self.generations > 0 || self.generation_failures > 0 {
+            let steps = self.decode_steps.max(1) as f64;
+            out.push_str(&format!(
+                " | gen: completed={} failed={} emitted={} decode={:.0} tok/s \
+                 steps={} mean_step_seqs={:.2} step p50={:?} max={:?} \
+                 cache mean={:.0} peak={} tokens",
+                self.generations,
+                self.generation_failures,
+                self.generated_tokens,
+                self.decode_tok_per_s(),
+                self.decode_steps,
+                self.decode_seqs as f64 / steps,
+                self.decode_latency.quantile(0.5),
+                self.decode_latency.max(),
+                self.cache_tokens as f64 / steps,
+                self.cache_tokens_peak,
+            ));
+        }
+        out
     }
 }
 
@@ -159,5 +239,27 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn decode_metrics_accumulate() {
+        let mut m = Metrics::default();
+        assert_eq!(m.decode_tok_per_s(), 0.0, "no decode yet");
+        m.record_decode(3, 30, Duration::from_millis(10));
+        m.record_decode(2, 24, Duration::from_millis(10));
+        m.record_generation(4, Duration::from_millis(25));
+        m.record_generation(1, Duration::from_millis(30));
+        assert_eq!(m.decode_steps, 2);
+        assert_eq!(m.decode_seqs, 5);
+        assert_eq!(m.cache_tokens, 54);
+        assert_eq!(m.cache_tokens_peak, 30);
+        assert_eq!(m.generations, 2);
+        assert_eq!(m.generated_tokens, 5);
+        assert_eq!(m.requests, 2, "generations count as requests");
+        // 5 sequence-steps over 20ms of decode time = 250 tok/s.
+        assert!((m.decode_tok_per_s() - 250.0).abs() < 1.0);
+        assert!(m.report(Duration::from_millis(40)).contains("gen:"));
+        let quiet = Metrics::default();
+        assert!(!quiet.report(Duration::from_millis(1)).contains("gen:"));
     }
 }

@@ -7,14 +7,29 @@
 //!              Executor thread (owns a BackendSet: PJRT engine+variants
 //!              or native models on a shared worker pool) ──▶
 //!              response channels
+//!
+//!  generate ──▶ admit ──▶ prefill (KV cache) ──▶ batched decode rounds
+//!              (active sequences of a variant step together; each
+//!               completes individually on max_new / stop) ──▶ reply
 //! ```
 //!
 //! The executor is generic over [`crate::exec::BackendSet`]: the PJRT
 //! set is built inside the executor thread (PJRT handles are not
 //! `Send`/`Sync`-safe to share), while the native set — a pure-Rust
 //! multi-threaded engine — can be built anywhere and moved in, and is
-//! the only path that serves heterogeneous searched rotation plans.
-//! Python is never involved on the request path.
+//! the only path that serves heterogeneous searched rotation plans or
+//! incremental generation. Python is never involved on the request
+//! path.
+//!
+//! Determinism: scoring logits are bit-identical to the serial forward
+//! for any batch composition and thread count, and greedy generations
+//! are bit-reproducible — decode logits equal a full re-forward of the
+//! prefix at every step, so batching rounds differently (or not at all)
+//! can never change what a request returns. Partial batches execute
+//! without padding-row compute; malformed requests are rejected
+//! individually at admission (counted in `Metrics::rejected`), never
+//! silently truncated, and can never fail a batch they were packed
+//! with.
 
 pub mod batcher;
 pub mod metrics;
@@ -24,4 +39,6 @@ pub mod server;
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use router::{RoutePolicy, Router};
-pub use server::{Request, Response, Server, ServerHandle};
+pub use server::{
+    Generated, GenerateRequest, GenerateResponse, Request, Response, Server, ServerHandle,
+};

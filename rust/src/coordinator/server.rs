@@ -12,6 +12,19 @@
 //! backend's `seq`, out-of-vocab token ids, unknown variants — are
 //! rejected individually at enqueue with a clear error, never silently
 //! truncated and never able to fail a batch they were packed with.
+//!
+//! ## Generation
+//!
+//! [`GenerateRequest`]s run greedy incremental decoding on backends
+//! that support it: the executor prefills the prompt once
+//! (`Backend::start_generation`), then interleaves *batched decode
+//! rounds* — up to `batch` active sequences of a variant step together
+//! per round — with normal queue service. Sequences complete
+//! individually (on `max_new` or a stop token) and reply immediately;
+//! the round simply shrinks. Decode logits are bit-identical to a full
+//! re-forward of the prefix, so a greedy decode is reproducible no
+//! matter how rounds were batched. Shutdown drains scoring queues and
+//! runs every active generation to completion before reporting metrics.
 
 use std::path::Path;
 use std::sync::mpsc;
@@ -20,7 +33,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::Metrics;
-use crate::exec::{Backend, BackendSet, NativeSet, PjrtSet};
+use crate::exec::{greedy_argmax, Backend, BackendSet, Generation, NativeSet, PjrtSet};
 
 /// A scoring request: tokens (≤ seq) for one sequence; the server
 /// returns per-position logits for exactly the positions sent.
@@ -38,9 +51,58 @@ pub struct Response {
     pub logits: Result<Vec<f32>, String>,
 }
 
+/// A greedy-decoding request: prefill `prompt`, then decode up to
+/// `max_new` tokens incrementally (KV-cached, never re-running the
+/// prefix). `prompt.len() + max_new` must fit the backend's `seq` — the
+/// per-sequence cache capacity.
+pub struct GenerateRequest {
+    /// Variant name ("fp" for the reference model).
+    pub variant: String,
+    /// Prompt tokens (non-empty, each in `0..vocab`).
+    pub prompt: Vec<i32>,
+    /// Maximum tokens to generate (≥ 1).
+    pub max_new: usize,
+    /// Optional stop token: generation ends *without emitting it* when
+    /// greedy decoding produces this id.
+    pub stop: Option<i32>,
+    /// Reply channel.
+    pub reply: mpsc::Sender<GenerateResponse>,
+}
+
+/// Response to a [`GenerateRequest`].
+pub struct GenerateResponse {
+    pub result: Result<Generated, String>,
+}
+
+/// A completed greedy generation.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    /// Emitted tokens, in order (stop token excluded).
+    pub tokens: Vec<i32>,
+    /// Prompt length the decode started from.
+    pub prompt_len: usize,
+}
+
 enum Job {
     Score(Request, Instant),
+    Generate(GenerateRequest, Instant),
     Shutdown(mpsc::Sender<Metrics>),
+}
+
+/// One in-flight generation owned by the executor.
+struct ActiveGen {
+    /// Index into the executor's `queues` (variant identity).
+    variant_idx: usize,
+    gen: Generation,
+    prompt_len: usize,
+    /// Token to feed the next decode round (last greedy pick).
+    next_token: i32,
+    /// Emitted tokens so far.
+    produced: Vec<i32>,
+    max_new: usize,
+    stop: Option<i32>,
+    reply: mpsc::Sender<GenerateResponse>,
+    t0: Instant,
 }
 
 /// Handle to the running server.
@@ -66,6 +128,25 @@ fn score_on(tx: &mpsc::Sender<Job>, variant: &str, tokens: Vec<i32>) -> Result<V
     rx.recv().map_err(|_| "no response".to_string())?.logits
 }
 
+fn submit_generate_on(tx: &mpsc::Sender<Job>, req: GenerateRequest) -> Result<(), String> {
+    tx.send(Job::Generate(req, Instant::now())).map_err(|_| "server stopped".to_string())
+}
+
+fn generate_on(
+    tx: &mpsc::Sender<Job>,
+    variant: &str,
+    prompt: Vec<i32>,
+    max_new: usize,
+    stop: Option<i32>,
+) -> Result<Generated, String> {
+    let (reply, rx) = mpsc::channel();
+    submit_generate_on(
+        tx,
+        GenerateRequest { variant: variant.to_string(), prompt, max_new, stop, reply },
+    )?;
+    rx.recv().map_err(|_| "no response".to_string())?.result
+}
+
 impl ServerHandle {
     /// Submit a scoring request (non-blocking).
     pub fn submit(&self, req: Request) -> Result<(), String> {
@@ -75,6 +156,22 @@ impl ServerHandle {
     /// Convenience: synchronous score of one sequence.
     pub fn score(&self, variant: &str, tokens: Vec<i32>) -> Result<Vec<f32>, String> {
         score_on(&self.tx, variant, tokens)
+    }
+
+    /// Submit a generation request (non-blocking).
+    pub fn submit_generate(&self, req: GenerateRequest) -> Result<(), String> {
+        submit_generate_on(&self.tx, req)
+    }
+
+    /// Convenience: synchronous greedy generation of one sequence.
+    pub fn generate(
+        &self,
+        variant: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Option<i32>,
+    ) -> Result<Generated, String> {
+        generate_on(&self.tx, variant, prompt, max_new, stop)
     }
 }
 
@@ -141,6 +238,22 @@ impl Server {
         score_on(&self.tx, variant, tokens)
     }
 
+    /// Submit a generation request (non-blocking).
+    pub fn submit_generate(&self, req: GenerateRequest) -> Result<(), String> {
+        submit_generate_on(&self.tx, req)
+    }
+
+    /// Convenience: synchronous greedy generation of one sequence.
+    pub fn generate(
+        &self,
+        variant: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Option<i32>,
+    ) -> Result<Generated, String> {
+        generate_on(&self.tx, variant, prompt, max_new, stop)
+    }
+
     /// Stop and collect metrics.
     pub fn shutdown(mut self) -> Metrics {
         let (mtx, mrx) = mpsc::channel();
@@ -160,6 +273,10 @@ struct VariantQueue {
     name: String,
     seq: usize,
     vocab: usize,
+    /// Effective decode-round width (policy clamped to backend batch).
+    cap: usize,
+    /// Probed once: does the backend implement prefill/decode?
+    generation: bool,
     backend_label: String,
     q: DynamicBatcher<(Request, Instant)>,
 }
@@ -170,6 +287,9 @@ impl VariantQueue {
     /// never clipped (wrong-but-plausible logits for PPL clients) and
     /// never allowed near a batch they could fail wholesale.
     fn admit(&self, req: &Request) -> Result<(), String> {
+        if req.tokens.is_empty() {
+            return Err("scoring request needs at least one token".to_string());
+        }
         if req.tokens.len() > self.seq {
             return Err(format!(
                 "request has {} tokens but backend {} serves seq {}; \
@@ -179,10 +299,50 @@ impl VariantQueue {
                 self.seq
             ));
         }
-        if let Some(&bad) = req.tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
-            return Err(format!("token id {bad} outside vocab 0..{}", self.vocab));
+        self.check_tokens(&req.tokens)
+    }
+
+    /// Validate a generation request: backend support, prompt + budget
+    /// versus the per-sequence KV-cache capacity (= backend seq), token
+    /// ranges. Rejections happen before prefill ever runs.
+    fn admit_generate(&self, req: &GenerateRequest) -> Result<(), String> {
+        if !self.generation {
+            return Err(format!(
+                "backend {} does not support incremental decoding; \
+                 use a native variant for generate requests",
+                self.backend_label
+            ));
+        }
+        if req.prompt.is_empty() {
+            return Err("generation needs a non-empty prompt".to_string());
+        }
+        if req.max_new == 0 {
+            return Err("generation needs max_new >= 1".to_string());
+        }
+        // Peak cache occupancy is `prompt + max_new - 1`: the final
+        // emitted token is returned to the client, never fed back into
+        // the cache — so a request may use every cache slot.
+        if req.prompt.len() + req.max_new > self.seq + 1 {
+            return Err(format!(
+                "prompt of {} tokens + max_new {} needs {} kv cache slots but \
+                 backend {} has {}; shorten the prompt or the budget",
+                req.prompt.len(),
+                req.max_new,
+                req.prompt.len() + req.max_new - 1,
+                self.backend_label,
+                self.seq
+            ));
+        }
+        self.check_tokens(&req.prompt)?;
+        if let Some(stop) = req.stop {
+            self.check_tokens(&[stop])
+                .map_err(|e| format!("stop token invalid: {e}"))?;
         }
         Ok(())
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<(), String> {
+        crate::model::tokens_in_vocab(tokens, self.vocab)
     }
 }
 
@@ -192,59 +352,285 @@ fn executor_loop<V: BackendSet>(set: V, rx: mpsc::Receiver<Job>, policy: BatchPo
     let mut queues: Vec<VariantQueue> = Vec::new();
     for name in set.names() {
         let mut cap = policy.max_batch.max(1);
-        let (mut seq, mut vocab, mut backend_label) = (0, 0, String::new());
+        let (mut seq, mut vocab, mut generation) = (0, 0, false);
+        let mut backend_label = String::new();
         set.run(&name, &mut |backend| {
             cap = cap.min(backend.batch()).max(1);
             seq = backend.seq();
             vocab = backend.vocab();
+            generation = backend.supports_generation();
             backend_label = backend.name().to_string();
         });
         let q = DynamicBatcher::new(BatchPolicy { max_batch: cap, ..policy });
-        queues.push(VariantQueue { name, seq, vocab, backend_label, q });
+        queues.push(VariantQueue { name, seq, vocab, cap, generation, backend_label, q });
     }
     let mut metrics = Metrics::default();
+    let mut active: Vec<ActiveGen> = Vec::new();
     loop {
-        // Wait bounded by the nearest batch deadline.
-        let timeout = queues
-            .iter()
-            .filter_map(|vq| vq.q.time_to_deadline(Instant::now()))
-            .min()
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Job::Score(req, t0)) => {
-                match queues.iter_mut().find(|vq| vq.name == req.variant) {
-                    Some(vq) => match vq.admit(&req) {
-                        Ok(()) => vq.q.push((req, t0)),
-                        Err(e) => {
-                            metrics.rejected += 1;
-                            let _ = req.reply.send(Response { logits: Err(e) });
-                        }
-                    },
-                    None => {
-                        metrics.rejected += 1;
-                        let _ = req.reply.send(Response {
-                            logits: Err(format!("variant {} not resident", req.variant)),
-                        });
-                    }
-                }
-            }
-            Ok(Job::Shutdown(mtx)) => {
-                // Drain everything before stopping.
-                for vq in queues.iter_mut() {
-                    while !vq.q.is_empty() {
-                        dispatch(&set, &vq.name, vq.q.take_batch(), &mut metrics);
-                    }
-                }
-                let _ = mtx.send(metrics);
-                return;
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        // Wait bounded by the nearest batch deadline — or not at all
+        // while generations are active: decode rounds are the idle work.
+        let timeout = if active.is_empty() {
+            queues
+                .iter()
+                .filter_map(|vq| vq.q.time_to_deadline(Instant::now()))
+                .min()
+                .unwrap_or(Duration::from_millis(50))
+        } else {
+            Duration::ZERO
+        };
+        let first = match rx.recv_timeout(timeout) {
+            Ok(job) => Some(job),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
             Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        // Admit the received job plus everything already queued behind
+        // it (non-blocking drain): a burst reaches the batchers in one
+        // loop turn instead of trickling in one job per decode round.
+        for job in first.into_iter().chain(std::iter::from_fn(|| rx.try_recv().ok())) {
+            match handle_job(job, &set, &mut queues, &mut active, &mut metrics) {
+                Flow::Continue => {}
+                Flow::Stop => return,
+            }
         }
         let now = Instant::now();
         for vq in queues.iter_mut() {
             while vq.q.ready(now) {
                 dispatch(&set, &vq.name, vq.q.take_batch(), &mut metrics);
+            }
+        }
+        // One decode round per loop turn keeps generation throughput
+        // high while queued scoring work still gets serviced between
+        // rounds.
+        decode_round(&set, &queues, &mut active, &mut metrics);
+    }
+}
+
+enum Flow {
+    Continue,
+    Stop,
+}
+
+/// Admit one incoming job: enqueue/reject a score request, prefill or
+/// reject a generate request, or drain-and-stop on shutdown.
+fn handle_job<V: BackendSet>(
+    job: Job,
+    set: &V,
+    queues: &mut [VariantQueue],
+    active: &mut Vec<ActiveGen>,
+    metrics: &mut Metrics,
+) -> Flow {
+    match job {
+        Job::Score(req, t0) => {
+            match queues.iter_mut().find(|vq| vq.name == req.variant) {
+                Some(vq) => match vq.admit(&req) {
+                    Ok(()) => vq.q.push((req, t0)),
+                    Err(e) => {
+                        metrics.rejected += 1;
+                        let _ = req.reply.send(Response { logits: Err(e) });
+                    }
+                },
+                None => {
+                    metrics.rejected += 1;
+                    let _ = req.reply.send(Response {
+                        logits: Err(format!("variant {} not resident", req.variant)),
+                    });
+                }
+            }
+            Flow::Continue
+        }
+        Job::Generate(req, t0) => {
+            match queues.iter().position(|vq| vq.name == req.variant) {
+                Some(idx) => match queues[idx].admit_generate(&req) {
+                    Ok(()) => {
+                        let name = queues[idx].name.clone();
+                        start_generation(set, idx, &name, req, t0, active, metrics);
+                    }
+                    Err(e) => {
+                        metrics.rejected += 1;
+                        let _ = req.reply.send(GenerateResponse { result: Err(e) });
+                    }
+                },
+                None => {
+                    metrics.rejected += 1;
+                    let _ = req.reply.send(GenerateResponse {
+                        result: Err(format!("variant {} not resident", req.variant)),
+                    });
+                }
+            }
+            Flow::Continue
+        }
+        Job::Shutdown(mtx) => {
+            // Drain everything before stopping: queued score batches,
+            // then active generations to completion.
+            for vq in queues.iter_mut() {
+                while !vq.q.is_empty() {
+                    dispatch(set, &vq.name, vq.q.take_batch(), metrics);
+                }
+            }
+            while !active.is_empty() {
+                decode_round(set, queues, active, metrics);
+            }
+            let _ = mtx.send(metrics.clone());
+            Flow::Stop
+        }
+    }
+}
+
+/// Prefill one admitted generation and either complete it immediately
+/// (first pick hits `stop`, or `max_new == 1`) or add it to the active
+/// set for batched decode rounds.
+fn start_generation<V: BackendSet>(
+    set: &V,
+    variant_idx: usize,
+    name: &str,
+    req: GenerateRequest,
+    t0: Instant,
+    active: &mut Vec<ActiveGen>,
+    metrics: &mut Metrics,
+) {
+    let mut res: Option<Result<(Generation, Vec<f32>), String>> = None;
+    set.run(name, &mut |backend| {
+        res = Some(backend.start_generation(&req.prompt));
+    });
+    let (gen, last_logits) = match res {
+        Some(Ok(pair)) => pair,
+        Some(Err(e)) => {
+            metrics.generation_failures += 1;
+            let _ = req.reply.send(GenerateResponse { result: Err(e) });
+            return;
+        }
+        None => {
+            metrics.generation_failures += 1;
+            let _ = req.reply.send(GenerateResponse {
+                result: Err(format!("variant {name} not resident")),
+            });
+            return;
+        }
+    };
+    let first = greedy_argmax(&last_logits);
+    let mut ag = ActiveGen {
+        variant_idx,
+        gen,
+        prompt_len: req.prompt.len(),
+        next_token: first,
+        produced: Vec::new(),
+        max_new: req.max_new,
+        stop: req.stop,
+        reply: req.reply,
+        t0,
+    };
+    if ag.stop == Some(first) {
+        finish_generation(ag, metrics);
+        return;
+    }
+    ag.produced.push(first);
+    if ag.produced.len() >= ag.max_new {
+        finish_generation(ag, metrics);
+        return;
+    }
+    active.push(ag);
+}
+
+/// Reply with a finished generation and account it.
+fn finish_generation(ag: ActiveGen, metrics: &mut Metrics) {
+    metrics.record_generation(ag.produced.len() as u64, ag.t0.elapsed());
+    let _ = ag.reply.send(GenerateResponse {
+        result: Ok(Generated { tokens: ag.produced, prompt_len: ag.prompt_len }),
+    });
+}
+
+/// One batched decode round: for each variant with active sequences,
+/// step up to `cap` of them together through `Backend::decode_batch`,
+/// then greedily pick each sequence's next token, completing sequences
+/// individually as they hit `max_new` or their stop token.
+fn decode_round<V: BackendSet>(
+    set: &V,
+    queues: &[VariantQueue],
+    active: &mut Vec<ActiveGen>,
+    metrics: &mut Metrics,
+) {
+    if active.is_empty() {
+        return;
+    }
+    for (qi, vq) in queues.iter().enumerate() {
+        // Pull this round's group from the *front* of `active` (stable
+        // FIFO partition): survivors re-enter at the tail, so when more
+        // sequences are active than fit one round, slots round-robin
+        // fairly instead of favoring the newest arrivals. Selection
+        // order never affects logits — decode is per-sequence
+        // deterministic — only scheduling fairness.
+        let mut group: Vec<ActiveGen> = Vec::new();
+        let mut rest: Vec<ActiveGen> = Vec::with_capacity(active.len());
+        for ag in active.drain(..) {
+            if ag.variant_idx == qi && group.len() < vq.cap {
+                group.push(ag);
+            } else {
+                rest.push(ag);
+            }
+        }
+        active.append(&mut rest);
+        if group.is_empty() {
+            continue;
+        }
+        let tokens: Vec<i32> = group.iter().map(|a| a.next_token).collect();
+        let mut res: Option<Result<Vec<Result<Vec<f32>, String>>, String>> = None;
+        let t_exec = Instant::now();
+        set.run(&vq.name, &mut |backend| {
+            let gens: Vec<&mut Generation> = group.iter_mut().map(|a| &mut a.gen).collect();
+            res = Some(backend.decode_batch(gens, &tokens));
+        });
+        let exec_elapsed = t_exec.elapsed();
+        let rows = match res {
+            Some(Ok(rows)) => rows,
+            other => {
+                // Call-level backend error (or vanished variant): fail
+                // the whole round's sequences rather than looping
+                // forever.
+                let e = match other {
+                    Some(Err(e)) => e,
+                    _ => format!("variant {} not resident", vq.name),
+                };
+                for ag in group {
+                    metrics.generation_failures += 1;
+                    let _ = ag.reply.send(GenerateResponse { result: Err(e.clone()) });
+                }
+                continue;
+            }
+        };
+        // Account the round over the sequences that actually stepped.
+        let stepped: Vec<bool> = rows.iter().map(|r| r.is_ok()).collect();
+        let seqs = stepped.iter().filter(|&&ok| ok).count();
+        let cache_tokens: u64 = group
+            .iter()
+            .zip(&stepped)
+            .filter(|(_, &ok)| ok)
+            .map(|(a, _)| a.gen.len() as u64)
+            .sum();
+        if seqs > 0 {
+            metrics.record_decode(seqs, cache_tokens, exec_elapsed);
+        }
+        for (mut ag, row) in group.into_iter().zip(rows) {
+            let logits = match row {
+                Ok(logits) => logits,
+                Err(e) => {
+                    // Per-sequence failure: only this generation ends;
+                    // its round-mates' results stand.
+                    metrics.generation_failures += 1;
+                    let _ = ag.reply.send(GenerateResponse { result: Err(e) });
+                    continue;
+                }
+            };
+            let tok = greedy_argmax(&logits);
+            if ag.stop == Some(tok) {
+                finish_generation(ag, metrics);
+                continue;
+            }
+            ag.produced.push(tok);
+            if ag.produced.len() >= ag.max_new {
+                finish_generation(ag, metrics);
+            } else {
+                ag.next_token = tok;
+                active.push(ag);
             }
         }
     }

@@ -6,6 +6,12 @@
 //! PJRT graphs (`exec::PjrtBackend`) and the multi-threaded native
 //! engine (`exec::NativeBackend`), including heterogeneous searched-plan
 //! variants PJRT cannot serve.
+//!
+//! Determinism: engines submit full and partial batches but never pad
+//! with fabricated rows, and the native backend's per-sequence logits
+//! are bit-identical to the serial forward — so a reported PPL is the
+//! same number for any `--threads` and any batch geometry (pinned by
+//! `tests/serve_native.rs`).
 
 pub mod ppl;
 pub mod report;

@@ -20,9 +20,33 @@
 //! collection of resident backends — with [`PjrtSet`] (one engine, many
 //! graph variants) and [`NativeSet`] (many native models, optionally
 //! sharing one pool) as the two implementations.
+//!
+//! ## Determinism contract
+//!
+//! Every native result is a pure function of `(model, tokens)`: batch
+//! composition, partial-batch packing, `--threads`, shard counts and
+//! scheduling order never leak into logits. Partial batches (`rows <
+//! batch`) are first-class — the native engine computes only the rows
+//! it is given, PJRT pads internally and truncates.
+//!
+//! ## Incremental generation
+//!
+//! Backends that can decode incrementally (today: [`NativeBackend`])
+//! implement the prefill/decode contract: [`Backend::start_generation`]
+//! runs the prompt once and returns an opaque per-sequence
+//! [`Generation`] (a KV cache underneath), then each
+//! [`Backend::decode`] / [`Backend::decode_batch`] step absorbs one
+//! token per sequence in `O(1)` forward cost instead of re-running the
+//! whole prefix. Decode logits are **bit-identical to a full
+//! re-forward** of the prefix at every step, for any thread count —
+//! greedy decodes are therefore reproducible across every execution
+//! strategy. Backends without the contract return a clear error
+//! (`supports_generation` lets callers probe up front).
 
 pub mod native;
 pub mod pjrt;
+
+use std::any::Any;
 
 pub use native::{ExecPool, NativeBackend, NativeSet};
 pub use pjrt::{load_runner, PjrtBackend, PjrtSet};
@@ -46,6 +70,134 @@ pub trait Backend {
     /// rows; a backend with a fixed graph shape (PJRT) pads internally
     /// and truncates its result.
     fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String>;
+
+    /// Does this backend implement the incremental prefill/decode
+    /// contract below? Callers that need generation should probe this
+    /// once instead of relying on the default methods' errors.
+    fn supports_generation(&self) -> bool {
+        false
+    }
+
+    /// Prefill: run `prompt` once, filling a fresh per-sequence
+    /// [`Generation`] whose cache holds up to `seq()` tokens. Returns
+    /// the state plus the last prompt position's `[vocab]` logits (what
+    /// greedy decoding samples the first new token from).
+    fn start_generation(&self, _prompt: &[i32]) -> Result<(Generation, Vec<f32>), String> {
+        Err(format!("the {} backend does not support incremental decoding", self.name()))
+    }
+
+    /// One decode step: absorb `token` at position `gen.len()` and
+    /// return that position's `[vocab]` logits — bit-identical to a
+    /// full re-forward over the whole prefix.
+    fn decode(&self, _gen: &mut Generation, _token: i32) -> Result<Vec<f32>, String> {
+        Err(format!("the {} backend does not support incremental decoding", self.name()))
+    }
+
+    /// One decode step for several sequences at once (`tokens[i]` feeds
+    /// `gens[i]`); backends parallelize across sequences where they
+    /// can. Per-sequence logits match [`Backend::decode`] bit-for-bit.
+    ///
+    /// Failures are per-sequence: the outer `Err` is reserved for
+    /// call-level problems (shape mismatch, dead pool), while one bad
+    /// sequence yields its own inner `Err` — its cache untouched —
+    /// without discarding its round-mates' results. A sequence's
+    /// `Generation` advances exactly when its inner result is `Ok`.
+    fn decode_batch(
+        &self,
+        gens: Vec<&mut Generation>,
+        tokens: &[i32],
+    ) -> Result<Vec<Result<Vec<f32>, String>>, String> {
+        if gens.len() != tokens.len() {
+            return Err(format!(
+                "decode_batch got {} sequences but {} tokens",
+                gens.len(),
+                tokens.len()
+            ));
+        }
+        Ok(gens.into_iter().zip(tokens).map(|(g, &t)| self.decode(g, t)).collect())
+    }
+}
+
+/// Opaque per-sequence incremental-generation state (a KV cache plus
+/// whatever else the owning backend needs). Created by
+/// [`Backend::start_generation`], advanced by [`Backend::decode`]; the
+/// caller owns it, so one backend can drive any number of concurrent
+/// sequences without internal bookkeeping.
+pub struct Generation {
+    state: Box<dyn Any + Send>,
+    len: usize,
+    capacity: usize,
+}
+
+impl Generation {
+    /// Wrap backend-specific state; `len` counts the prompt tokens
+    /// already cached, `capacity` the cache's token limit.
+    pub fn new(state: Box<dyn Any + Send>, len: usize, capacity: usize) -> Self {
+        Self { state, len, capacity }
+    }
+
+    /// Tokens absorbed so far (prompt + decoded) — the cache occupancy.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Cache capacity in tokens (the owning backend's `seq()`).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Decode steps left before the cache is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Downcast to the owning backend's state type (`None` means this
+    /// state belongs to a different backend implementation).
+    pub fn state_mut<T: Any>(&mut self) -> Option<&mut T> {
+        self.state.downcast_mut::<T>()
+    }
+
+    /// Record `n` newly cached tokens.
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+    }
+}
+
+/// Validate a `forward_batch` token block against a backend's
+/// `(batch, seq)` shape and return the row count — the single shape
+/// rule every backend implementation enforces, so partial-batch
+/// validation and its wording can never diverge between backends.
+pub fn batch_rows(tokens_len: usize, batch: usize, seq: usize) -> Result<usize, String> {
+    if tokens_len == 0 || tokens_len % seq != 0 || tokens_len / seq > batch {
+        return Err(format!(
+            "forward_batch wants rows*{seq} tokens for 1..={batch} rows, got {tokens_len}"
+        ));
+    }
+    Ok(tokens_len / seq)
+}
+
+/// First-maximum argmax over one position's logits — the single greedy
+/// sampling rule shared by the coordinator, tests and benches. Ties
+/// break to the lowest token id, so bit-identical logits always yield
+/// identical decodes.
+///
+/// ```
+/// use gsr::exec::greedy_argmax;
+/// assert_eq!(greedy_argmax(&[0.1, 0.9, 0.9, 0.2]), 1); // first max wins
+/// ```
+pub fn greedy_argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    // Empty logits degrade to token 0 (backends always return vocab ≥ 1).
+    best as i32
 }
 
 /// A named collection of resident [`Backend`]s — what the serving

@@ -14,16 +14,24 @@
 //! ForwardScratch)`) rather than only token rows: the calibration
 //! subsystem schedules whole capture *partials* on the same workers
 //! (`calib::capture_hessians_on`), so one thread pool serves scoring,
-//! eval and calibration without re-spawning threads per call.
+//! eval and calibration without re-spawning threads per call. The
+//! scoped variant ([`ExecPool::run_scoped`]) additionally lets jobs
+//! borrow the caller's stack frame, which is how a *single* decode
+//! step parallelizes **within** a sequence: `NativeBackend`'s
+//! generation path shards each linear's output columns and each
+//! attention call's heads across the same workers (`model::DecodePar`),
+//! while batched decode rounds fall back to one-job-per-sequence. All
+//! strategies are bit-identical — logits are a pure function of
+//! `(model, tokens)`, never of thread count or shard layout.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use super::{Backend, BackendSet};
+use super::{Backend, BackendSet, Generation};
 use crate::config::cli::resolve_threads;
-use crate::model::{DenseModel, ForwardScratch};
+use crate::model::{DecodePar, DenseModel, ForwardScratch, KvCache, ShardJob, ShardRunner};
 
 type Job = Box<dyn FnOnce(&mut ForwardScratch) + Send + 'static>;
 
@@ -77,20 +85,69 @@ impl ExecPool {
         R: Send + 'static,
         F: FnOnce(&mut ForwardScratch) -> R + Send + 'static,
     {
+        self.run_scoped(jobs)
+    }
+
+    /// [`ExecPool::run_jobs`] for jobs that **borrow the caller's stack
+    /// frame** (`'env` instead of `'static`) — what lets a decode step
+    /// shard one matmul's columns or one attention call's heads over
+    /// the pool without `Arc`-wrapping every tensor it touches.
+    ///
+    /// Soundness: this call does not return while any enqueued job can
+    /// still run. Every job sends its `(index, result)` on a private
+    /// channel whose senders exist only inside job closures — running
+    /// jobs drop theirs on completion or unwind, and jobs still queued
+    /// when the pool's job receiver disconnects are discarded by the
+    /// channel, dropping theirs too. So `recv()` on the result channel
+    /// disconnects exactly when every enqueued job has finished or been
+    /// destroyed; both exit paths below block on that, and only then do
+    /// the `'env` borrows go dead and the function return.
+    pub fn run_scoped<'env, R, F>(&self, jobs: Vec<F>) -> Result<Vec<R>, String>
+    where
+        R: Send + 'env,
+        F: FnOnce(&mut ForwardScratch) -> R + Send + 'env,
+    {
         let n = jobs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
         let (rtx, rrx) = channel::<(usize, R)>();
+        let mut enqueue_err = None;
         {
             let guard = self.tx.lock().map_err(|_| "execution pool lock poisoned".to_string())?;
             let tx = guard.as_ref().ok_or_else(|| "execution pool stopped".to_string())?;
             for (i, job) in jobs.into_iter().enumerate() {
                 let rtx = rtx.clone();
-                tx.send(Box::new(move |scratch: &mut ForwardScratch| {
-                    let _ = rtx.send((i, job(scratch)));
-                }))
-                .map_err(|_| "execution pool stopped".to_string())?;
+                let wrapped: Box<dyn FnOnce(&mut ForwardScratch) + Send + 'env> =
+                    Box::new(move |scratch| {
+                        let _ = rtx.send((i, job(scratch)));
+                    });
+                // SAFETY: the trait objects differ only in lifetime
+                // bound. Both exit paths below block until the result
+                // channel disconnects, which cannot happen before every
+                // transmuted job (running or queued) has been consumed
+                // or destroyed — so no `'env` borrow outlives this call.
+                let wrapped: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce(&mut ForwardScratch) + Send + 'env>, Job>(
+                        wrapped,
+                    )
+                };
+                if tx.send(wrapped).is_err() {
+                    enqueue_err = Some("execution pool stopped".to_string());
+                    break;
+                }
             }
         }
         drop(rtx);
+        if let Some(e) = enqueue_err {
+            // Dead pool (send fails only once the job receiver is gone,
+            // i.e. every worker has exited): any already-sent job has
+            // either run, unwound, or been discarded with the queue.
+            // Drain until the result channel disconnects so no borrow
+            // can outlive this frame, then report the failure.
+            while rrx.recv().is_ok() {}
+            return Err(e);
+        }
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (i, r) = rrx
@@ -102,6 +159,18 @@ impl ExecPool {
             .into_iter()
             .map(|s| s.ok_or_else(|| "missing job result".to_string()))
             .collect()
+    }
+}
+
+/// The pool is the forward pass's intra-sequence shard executor: each
+/// shard of a decode-step linear / attention call runs as one scoped
+/// job. Results come back in job order, so reassembly — and therefore
+/// every logit bit — is independent of scheduling.
+impl ShardRunner for ExecPool {
+    fn run<'env>(&self, jobs: Vec<ShardJob<'env>>) -> Result<Vec<Vec<f32>>, String> {
+        self.run_scoped(
+            jobs.into_iter().map(|job| move |_scratch: &mut ForwardScratch| job()).collect(),
+        )
     }
 }
 
@@ -163,6 +232,42 @@ impl NativeBackend {
     pub fn pool(&self) -> &Arc<ExecPool> {
         &self.pool
     }
+
+    /// Intra-sequence parallelism for single-sequence prefill/decode:
+    /// shard the step's linears and attention over the pool. `None` on
+    /// a one-worker pool (nothing to win). Never changes logits.
+    fn decode_par(&self) -> Option<DecodePar<'_>> {
+        let threads = self.pool.threads();
+        (threads > 1).then(|| DecodePar { runner: &*self.pool, shards: threads })
+    }
+
+    fn validate_tokens(&self, tokens: &[i32]) -> Result<(), String> {
+        crate::model::tokens_in_vocab(tokens, self.vocab())
+    }
+}
+
+/// Per-sequence native generation state behind [`Generation`]: the KV
+/// cache plus a dedicated scratch, so a sequence can decode on any
+/// thread without touching backend-global state.
+struct NativeGen {
+    /// The exact model that filled this cache. Decoding through a
+    /// different backend — even one with identical geometry — would
+    /// silently mix weights with a foreign cache, so ownership is
+    /// checked by pointer identity on every step.
+    model: Arc<DenseModel>,
+    cache: KvCache,
+    scratch: ForwardScratch,
+}
+
+/// The one ownership rule for generation state: the state must be
+/// native *and* born from this backend's exact model.
+fn owned_state<'g>(
+    gen: &'g mut Generation,
+    model: &Arc<DenseModel>,
+) -> Result<&'g mut NativeGen, String> {
+    gen.state_mut::<NativeGen>()
+        .filter(|st| Arc::ptr_eq(&st.model, model))
+        .ok_or_else(|| "generation was started on a different backend".to_string())
 }
 
 impl Backend for NativeBackend {
@@ -184,35 +289,131 @@ impl Backend for NativeBackend {
 
     fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
         let (b, s, v) = (self.batch, self.seq, self.vocab());
-        if tokens.is_empty() || tokens.len() % s != 0 || tokens.len() / s > b {
-            return Err(format!(
-                "forward_batch wants rows*{s} tokens for 1..={b} rows, got {}",
-                tokens.len()
-            ));
-        }
-        let rows = tokens.len() / s;
+        let rows = super::batch_rows(tokens.len(), b, s)?;
         // Validate up front: a bad token id must surface as an error on
         // this call, not a panic that kills a pool worker.
-        if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= v) {
-            return Err(format!("token id {bad} outside vocab 0..{v}"));
-        }
-        let shared = Arc::new(tokens.to_vec());
+        self.validate_tokens(tokens)?;
+        // Scoped jobs borrow the caller's token slice and the model
+        // directly — no per-call copy, no Arc traffic.
+        let model: &DenseModel = &self.model;
         let jobs: Vec<_> = (0..rows)
             .map(|row| {
-                let model = Arc::clone(&self.model);
-                let toks = Arc::clone(&shared);
                 move |scratch: &mut ForwardScratch| {
-                    model.forward_with(&toks[row * s..(row + 1) * s], scratch)
+                    model.forward_with(&tokens[row * s..(row + 1) * s], scratch)
                 }
             })
             .collect();
-        let row_logits = self.pool.run_jobs(jobs)?;
+        let row_logits = self.pool.run_scoped(jobs)?;
         let mut out = Vec::with_capacity(rows * s * v);
         for row in row_logits {
             debug_assert_eq!(row.len(), s * v);
             out.extend_from_slice(&row);
         }
         Ok(out)
+    }
+
+    fn supports_generation(&self) -> bool {
+        true
+    }
+
+    /// Prefill with intra-sequence parallelism: the prompt's linears
+    /// column-shard and its attention head-shards across the pool. The
+    /// cache holds up to `seq()` tokens (prompt + decoded).
+    fn start_generation(&self, prompt: &[i32]) -> Result<(Generation, Vec<f32>), String> {
+        let v = self.vocab();
+        if prompt.is_empty() {
+            return Err("generation needs a non-empty prompt".to_string());
+        }
+        if prompt.len() > self.seq {
+            return Err(format!(
+                "prompt of {} tokens exceeds the {}-token kv cache; raise --seq or trim it",
+                prompt.len(),
+                self.seq
+            ));
+        }
+        self.validate_tokens(prompt)?;
+        let mut state = NativeGen {
+            model: Arc::clone(&self.model),
+            cache: KvCache::new(self.model.cfg(), self.seq),
+            scratch: ForwardScratch::new(),
+        };
+        let logits = self.model.forward_cached_par(
+            prompt,
+            &mut state.cache,
+            &mut state.scratch,
+            self.decode_par().as_ref(),
+        )?;
+        // The prefill sized every scratch buffer to the whole prompt
+        // (including a `prompt × vocab` f64 accumulator); decode steps
+        // only ever need single-row buffers, so drop the prefill-sized
+        // allocations instead of carrying them for the generation's
+        // lifetime.
+        state.scratch = ForwardScratch::new();
+        let last = logits[(prompt.len() - 1) * v..].to_vec();
+        Ok((Generation::new(Box::new(state), prompt.len(), self.seq), last))
+    }
+
+    /// Single-sequence decode step, intra-sequence parallel: the hot
+    /// loop's matmuls and attention split across the pool workers while
+    /// staying bit-identical to the serial step (and to a full
+    /// re-forward of the prefix).
+    fn decode(&self, gen: &mut Generation, token: i32) -> Result<Vec<f32>, String> {
+        self.validate_tokens(&[token])?;
+        let par = self.decode_par();
+        let state = owned_state(gen, &self.model)?;
+        let out = self.model.forward_cached_par(
+            &[token],
+            &mut state.cache,
+            &mut state.scratch,
+            par.as_ref(),
+        )?;
+        gen.advance(1);
+        Ok(out)
+    }
+
+    /// Batched decode round: one pool job per sequence (each runs the
+    /// serial cached step on a worker-owned scratch — nesting shard
+    /// jobs inside pool jobs could deadlock the fixed-size pool). A
+    /// single sequence falls back to the intra-parallel
+    /// [`Backend::decode`]. Both strategies are bit-identical, so the
+    /// coordinator may mix them freely as load changes. Failures are
+    /// per-sequence (inner `Result`): a bad sequence — foreign state,
+    /// full cache — neither advances nor disturbs its round-mates.
+    fn decode_batch(
+        &self,
+        gens: Vec<&mut Generation>,
+        tokens: &[i32],
+    ) -> Result<Vec<Result<Vec<f32>, String>>, String> {
+        if gens.len() != tokens.len() {
+            return Err(format!(
+                "decode_batch got {} sequences but {} tokens",
+                gens.len(),
+                tokens.len()
+            ));
+        }
+        if gens.len() <= 1 {
+            return Ok(gens.into_iter().zip(tokens).map(|(g, &t)| self.decode(g, t)).collect());
+        }
+        let model: &Arc<DenseModel> = &self.model;
+        let vocab = self.vocab();
+        let jobs: Vec<_> = gens
+            .into_iter()
+            .zip(tokens.iter().copied())
+            .map(|(g, tok)| {
+                move |scratch: &mut ForwardScratch| -> Result<Vec<f32>, String> {
+                    crate::model::tokens_in_vocab(&[tok], vocab)?;
+                    let st = owned_state(g, model)?;
+                    // Worker-owned scratch: bit-transparent (scratch
+                    // reuse never changes logits) and allocation-free.
+                    let out = model.forward_cached(&[tok], &mut st.cache, scratch)?;
+                    // Advance inside the job, only on success, so
+                    // `Generation::len` stays in sync with its cache.
+                    g.advance(1);
+                    Ok(out)
+                }
+            })
+            .collect();
+        self.pool.run_scoped(jobs)
     }
 }
 
@@ -352,5 +553,146 @@ mod tests {
         let out = pool.run_jobs(jobs).unwrap();
         let expect: Vec<usize> = (0..32).map(|i| i * i).collect();
         assert_eq!(out, expect);
+    }
+
+    /// Scoped jobs may borrow the caller's stack frame; results still
+    /// come back in job order.
+    #[test]
+    fn run_scoped_jobs_borrow_environment() {
+        let pool = ExecPool::new(3);
+        let data: Vec<f64> = (0..64).map(|i| i as f64 * 0.5).collect();
+        let chunks: Vec<&[f64]> = data.chunks(16).collect();
+        let jobs: Vec<_> = chunks
+            .iter()
+            .map(|chunk| {
+                let chunk: &[f64] = chunk;
+                move |_scratch: &mut ForwardScratch| chunk.iter().sum::<f64>()
+            })
+            .collect();
+        let sums = pool.run_scoped(jobs).unwrap();
+        let expect: Vec<f64> = chunks.iter().map(|c| c.iter().sum()).collect();
+        assert_eq!(sums, expect);
+    }
+
+    /// The generation contract end to end on the backend: prefill +
+    /// per-token decode logits are bit-identical to a full re-forward
+    /// of the prefix, for one worker and for many (intra-sequence
+    /// sharding active).
+    #[test]
+    fn generation_bit_identical_to_full_forward_for_any_threads() {
+        let model = tiny_model();
+        let (vocab, seq) = (64usize, 14usize);
+        let prompt: Vec<i32> = (0..6).map(|i| ((i * 11 + 2) % 64) as i32).collect();
+        let cont: Vec<i32> = (0..6).map(|i| ((i * 17 + 9) % 64) as i32).collect();
+        for threads in [1, 3] {
+            let backend = NativeBackend::new(Arc::clone(&model), 2, seq, threads);
+            let (mut gen, last) = backend.start_generation(&prompt).unwrap();
+            let full = model.forward(&prompt);
+            assert_eq!(last.len(), vocab);
+            for (a, b) in last.iter().zip(&full[(prompt.len() - 1) * vocab..]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "prefill logits diverge at t={threads}");
+            }
+            let mut prefix = prompt.clone();
+            for &tok in &cont {
+                let got = backend.decode(&mut gen, tok).unwrap();
+                prefix.push(tok);
+                let full = model.forward(&prefix);
+                let want = &full[(prefix.len() - 1) * vocab..];
+                for (a, b) in got.iter().zip(want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "decode at len {} diverges at t={threads}",
+                        prefix.len()
+                    );
+                }
+                assert_eq!(gen.len(), prefix.len());
+            }
+        }
+    }
+
+    /// Batched decode (one pool job per sequence) matches per-sequence
+    /// decode bit-for-bit, and sequences at different lengths coexist.
+    #[test]
+    fn decode_batch_matches_single_sequence_decode() {
+        let model = tiny_model();
+        let backend = NativeBackend::new(Arc::clone(&model), 4, 16, 3);
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|s| (0..3 + s).map(|i| ((i * 7 + s * 5 + 1) % 64) as i32).collect())
+            .collect();
+        let steps: Vec<Vec<i32>> =
+            (0..3).map(|s| (0..4).map(|i| ((i * 13 + s * 3 + 2) % 64) as i32).collect()).collect();
+        // Reference: each sequence decoded alone.
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (prompt, toks) in prompts.iter().zip(&steps) {
+            let (mut gen, _) = backend.start_generation(prompt).unwrap();
+            want.push(toks.iter().map(|&t| backend.decode(&mut gen, t).unwrap()).collect());
+        }
+        // Batched: all sequences step together.
+        let mut gens: Vec<Generation> = prompts
+            .iter()
+            .map(|p| backend.start_generation(p).unwrap().0)
+            .collect();
+        for step in 0..4 {
+            let toks: Vec<i32> = steps.iter().map(|s| s[step]).collect();
+            let got = backend.decode_batch(gens.iter_mut().collect(), &toks).unwrap();
+            for (s, row) in got.iter().enumerate() {
+                let row = row.as_ref().expect("per-sequence decode must succeed");
+                for (a, b) in row.iter().zip(&want[s][step]) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "batched decode diverges (seq {s}, step {step})"
+                    );
+                }
+            }
+        }
+        for (s, gen) in gens.iter().enumerate() {
+            assert_eq!(gen.len(), prompts[s].len() + 4);
+        }
+    }
+
+    /// decode_batch failures are per-sequence: a foreign Generation
+    /// fails alone, its round-mates' steps stand and stay decodable.
+    #[test]
+    fn decode_batch_failures_are_per_sequence() {
+        let backend = NativeBackend::new(tiny_model(), 4, 12, 2);
+        let (mut good1, _) = backend.start_generation(&[1, 2, 3]).unwrap();
+        let mut foreign = Generation::new(Box::new(42u32), 1, 12);
+        let (mut good2, _) = backend.start_generation(&[4, 5]).unwrap();
+        let rows = backend
+            .decode_batch(vec![&mut good1, &mut foreign, &mut good2], &[7, 8, 9])
+            .unwrap();
+        assert!(rows[0].is_ok() && rows[2].is_ok(), "round-mates must survive");
+        assert!(rows[1].as_ref().unwrap_err().contains("different backend"));
+        assert_eq!((good1.len(), foreign.len(), good2.len()), (4, 1, 3));
+        assert!(backend.decode(&mut good1, 1).is_ok(), "survivors keep decoding");
+    }
+
+    /// Generation misuse errors cleanly: empty/oversized prompts, bad
+    /// tokens, cache exhaustion — and the pool survives all of it.
+    #[test]
+    fn generation_validates_inputs() {
+        let backend = NativeBackend::new(tiny_model(), 2, 6, 2);
+        assert!(backend.start_generation(&[]).is_err(), "empty prompt");
+        assert!(backend.start_generation(&[0i32; 7]).is_err(), "prompt beyond cache");
+        assert!(backend.start_generation(&[0, 64]).is_err(), "bad token id");
+        let (mut gen, _) = backend.start_generation(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(gen.remaining(), 2);
+        assert!(backend.decode(&mut gen, 64).is_err(), "bad decode token");
+        backend.decode(&mut gen, 5).unwrap();
+        backend.decode(&mut gen, 6).unwrap();
+        let err = backend.decode(&mut gen, 7).unwrap_err();
+        assert!(err.contains("kv cache full"), "{err}");
+        // The backend still serves scoring and fresh generations.
+        assert!(backend.forward_batch(&[1i32; 6]).is_ok());
+        let (mut gen2, _) = backend.start_generation(&[1, 2]).unwrap();
+        // Ownership is by model identity, not geometry: a different
+        // backend over an identically-shaped model must refuse the
+        // state instead of silently decoding a foreign cache.
+        let other = NativeBackend::new(tiny_model(), 2, 6, 1);
+        let err = other.decode(&mut gen2, 1).unwrap_err();
+        assert!(err.contains("different backend"), "{err}");
+        assert!(backend.decode(&mut gen2, 1).is_ok(), "the owner still decodes");
     }
 }

@@ -39,13 +39,7 @@ impl Backend for PjrtBackend<'_> {
 
     fn forward_batch(&self, tokens: &[i32]) -> Result<Vec<f32>, String> {
         let (b, s, v) = (self.runner.batch, self.runner.seq, self.runner.vocab);
-        if tokens.is_empty() || tokens.len() % s != 0 || tokens.len() / s > b {
-            return Err(format!(
-                "forward_batch wants rows*{s} tokens for 1..={b} rows, got {}",
-                tokens.len()
-            ));
-        }
-        let rows = tokens.len() / s;
+        let rows = super::batch_rows(tokens.len(), b, s)?;
         if rows == b {
             return self.runner.forward(self.engine, tokens);
         }

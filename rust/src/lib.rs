@@ -19,7 +19,8 @@
 //!   block-diagonal (local) rotations, fast WHT.
 //! * [`quant`] — RTN / GPTQ group quantizers, MSE clipping, bit packing.
 //! * [`model`] — model configuration and a pure-Rust fp32 reference
-//!   forward used to validate the PJRT path.
+//!   forward used to validate the PJRT path, plus the KV-cached
+//!   incremental forward behind generation.
 //! * [`data`] — synthetic corpus generation, byte tokenizer, zero-shot
 //!   task suite.
 //! * [`runtime`] — PJRT client wrapper: load HLO text, upload weights,
@@ -27,9 +28,10 @@
 //! * [`exec`] — the unified batched execution layer: one `Backend`
 //!   trait with a multi-threaded native engine (persistent worker pool,
 //!   per-thread scratch, bit-deterministic batching) and the PJRT
-//!   runner view; serves eval, calibration and the coordinator.
+//!   runner view, plus the incremental prefill/decode generation
+//!   contract; serves eval, calibration and the coordinator.
 //! * [`coordinator`] — request router, dynamic batcher, variant registry,
-//!   metrics.
+//!   batched greedy generation, metrics.
 //! * [`eval`] — perplexity and zero-shot evaluation engines + report
 //!   tables matching the paper's layout.
 //! * [`analysis`] — sequency-variance and outlier-spread analyses backing

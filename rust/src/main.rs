@@ -6,6 +6,8 @@
 //! * `table1|table2|table3` — regenerate the paper's tables.
 //! * `analyze`            — §3.2 sequency variance + Fig. 2 outlier spread.
 //! * `serve`              — start the batching server and run a demo load.
+//! * `generate`           — greedy incremental decoding (KV-cached) on the
+//!                          native backend; reports decode tok/s.
 //! * `gen-corpus`         — write the synthetic corpus (native generator).
 //! * `search`             — training-free per-layer rotation auto-config:
 //!                          emit a rotation plan JSON for `quantize-native`.
@@ -32,6 +34,7 @@ fn main() {
         "table3" => cmd_table(&args, 3),
         "analyze" => cmd_analyze(&args),
         "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
         "gen-corpus" => cmd_gen_corpus(&args),
         "quantize-native" => cmd_quantize_native(&args),
         "search" => cmd_search(&args),
@@ -68,10 +71,16 @@ fn print_help() {
                  [--plan F [--calib F]]  (native) quantize + serve a searched\n\
                                          heterogeneous rotation plan in-process\n\
                  [--variants A,B] [--batch N] [--threads N] [--bits N]\n\
+           generate [--requests N]     greedy KV-cached decoding demo load\n\
+                 [--prompt-len N] [--max-new N]   (native backend only)\n\
+                 [--plan F [--calib F]] [--variants A,B] [--batch N]\n\
+                 [--threads N] [--bits N]\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
-           quantize-native [--r1 K]    pure-Rust W2 quantization (no Python)\n\
+           quantize-native [--r1 K --r4 K --seed N]\n\
+                                       pure-Rust W2 quantization (no Python)\n\
                            [--plan F]  ...from a searched rotation plan JSON\n\
                            [--calib F] ...with real Hessians from `calibrate`\n\
+                           [--bits N] [--windows N]\n\
            search [--out F] [--calib F] training-free per-layer rotation search\n\
            calibrate [--out F]         stream corpus activations -> Hessian\n\
                                        artifact for --calib (reusable)\n\
@@ -226,6 +235,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_requests = args.opt_usize("requests", 32);
     let seq = arts.seq;
     let test = arts.test_split().to_vec();
+    if test.len() < seq + 2 {
+        return Err(format!(
+            "test split of {} bytes is too small for the serving demo load \
+             (need at least seq + 2 = {})",
+            test.len(),
+            seq + 2
+        ));
+    }
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         let variant = &variants[i % variants.len()];
@@ -315,6 +332,102 @@ fn start_native_server(
         variants.push("searched".to_string());
     }
     Ok((Server::start_native(set, policy)?, variants))
+}
+
+/// `gsr generate` — greedy incremental decoding through the serving
+/// coordinator: prompts drawn from the held-out test split are
+/// prefilled once, then decoded token by token on the KV-cached native
+/// path. All requests are submitted up front so decode rounds batch
+/// across sequences; metrics report decode tok/s and cache occupancy.
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    use gsr::coordinator::GenerateRequest;
+    use std::sync::mpsc;
+
+    let dir = artifacts_dir(args);
+    let arts = Artifacts::load(Path::new(&dir))?;
+    let backend = args.opt_or("backend", "native");
+    if backend != "native" {
+        return Err(format!(
+            "generate needs --backend native: the {backend} backend does not export \
+             an incremental decode path"
+        ));
+    }
+    let policy = BatchPolicy {
+        max_batch: args.opt_usize("batch", arts.batch.max(1)).max(1),
+        ..BatchPolicy::default()
+    };
+    let (server, variants) = start_native_server(args, &arts, policy)?;
+    let n_requests = args.opt_usize("requests", 8);
+    let prompt_len = args.opt_usize("prompt-len", (arts.seq / 2).max(1));
+    let default_new = (arts.seq + 1).saturating_sub(prompt_len).clamp(1, 32);
+    let max_new = args.opt_usize("max-new", default_new).max(1);
+    if prompt_len == 0 {
+        return Err("--prompt-len must be >= 1".to_string());
+    }
+    // Peak occupancy is prompt + max_new - 1 (the last token is
+    // returned, never cached) — mirror the server's admission rule.
+    if prompt_len + max_new > arts.seq + 1 {
+        return Err(format!(
+            "--prompt-len {prompt_len} + --max-new {max_new} needs {} kv cache \
+             slots but the backend seq is {}",
+            prompt_len + max_new - 1,
+            arts.seq
+        ));
+    }
+    let test = arts.test_split().to_vec();
+    if test.len() < prompt_len + 2 {
+        return Err("test split too small for the requested prompt length".to_string());
+    }
+    println!(
+        "generating {n_requests} completion(s) over {} variant(s) on the native backend \
+         (prompt {prompt_len} tokens, up to {max_new} new)",
+        variants.len()
+    );
+    let t0 = std::time::Instant::now();
+    // Submit everything up front so the executor batches decode rounds
+    // across concurrently active sequences.
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let variant = variants[i % variants.len()].clone();
+        let start = (i * 131) % (test.len() - prompt_len - 1);
+        let prompt: Vec<i32> =
+            test[start..start + prompt_len].iter().map(|&b| b as i32).collect();
+        let (reply, rx) = mpsc::channel();
+        server.submit_generate(GenerateRequest {
+            variant: variant.clone(),
+            prompt,
+            max_new,
+            stop: None,
+            reply,
+        })?;
+        pending.push((variant, rx));
+    }
+    for (i, (variant, rx)) in pending.into_iter().enumerate() {
+        let out = rx.recv().map_err(|_| "no response".to_string())?.result?;
+        if i == 0 {
+            println!("first completion ({variant}): {:?}", render_tokens(&out.tokens));
+        }
+        println!(
+            "[{i}] {variant}: {} prompt + {} generated tokens",
+            out.prompt_len,
+            out.tokens.len()
+        );
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    println!("{}", metrics.report(wall));
+    Ok(())
+}
+
+/// Byte-vocab tokens as readable text (non-printable bytes → '·').
+fn render_tokens(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| match u8::try_from(t) {
+            Ok(b) if (32..127).contains(&b) => b as char,
+            _ => '·',
+        })
+        .collect()
 }
 
 /// Resolve the rotation plan a `--calib`-capable subcommand works in:

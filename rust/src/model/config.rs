@@ -102,6 +102,17 @@ impl Default for ModelCfg {
 
 pub const LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
 
+/// The one token-range rule: ids must lie in `0..vocab`. Every layer
+/// that validates tokens — the cached forward, the native backend, the
+/// serving admission, calibration capture — delegates here so rejection
+/// behavior and wording can never diverge.
+pub fn tokens_in_vocab(tokens: &[i32], vocab: usize) -> Result<(), String> {
+    if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+        return Err(format!("token id {bad} outside vocab 0..{vocab}"));
+    }
+    Ok(())
+}
+
 impl ModelCfg {
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads

@@ -15,6 +15,28 @@
 //! original straight-line implementation — the invariant the batched
 //! engine's "same logits for any batch composition / thread count"
 //! guarantee rests on.
+//!
+//! ## Incremental decoding
+//!
+//! [`DenseModel::forward_cached`] is the same forward in *incremental*
+//! form: a [`KvCache`] holds every previous position's attention keys
+//! and values (post-RoPE — and post-R3 on the quantized path — exactly
+//! the tensors attention consumes), so absorbing a chunk costs
+//! `O(chunk)` linears plus attention against the cache instead of a
+//! full-prefix re-forward. Because the fused SpinQuant-style rotations
+//! (R1/R2 and any per-layer R4 override) are folded into the weights
+//! *before* the cached tensors are produced, cached rows stay valid
+//! across steps even for heterogeneous searched plans. Every primitive
+//! is shared with the full forward and keeps its per-element f64
+//! accumulation order, so cached logits are **bit-identical** to a full
+//! re-forward of the prefix at every step (pinned by the decode parity
+//! proptests).
+//!
+//! [`DenseModel::forward_cached_par`] adds intra-sequence parallelism:
+//! large linears are column-sharded and attention is head-sharded over a
+//! [`ShardRunner`] (the exec layer's worker pool). Each output element's
+//! accumulation is unchanged by any partition, so sharding is
+//! bit-transparent too — `--threads` never changes decode logits.
 
 use super::config::{ModelCfg, R4Kind};
 use super::weights::{FpParams, QuantParams};
@@ -105,6 +127,167 @@ impl ForwardScratch {
     }
 }
 
+// ---------------------------------------------------------------------------
+// KV cache (incremental decoding)
+// ---------------------------------------------------------------------------
+
+/// Per-sequence attention state for incremental decoding: one growing
+/// `[len, d_model]` key and value buffer per layer.
+///
+/// Cached rows are the exact tensors attention consumes — keys after
+/// RoPE (and after the R3 head rotation on the quantized path), values
+/// straight out of `wv` — so a row written at position `p` never needs
+/// to be touched again: all R1/R2 and per-layer R4 rotations are fused
+/// into the weights *upstream* of these tensors, which is what makes a
+/// cached decode path valid for heterogeneous searched plans too.
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+    /// Positions already absorbed (prompt + decoded tokens).
+    len: usize,
+    /// Maximum positions this cache may hold.
+    capacity: usize,
+    /// Row width (`d_model`) — part of the geometry check.
+    width: usize,
+}
+
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// Empty cache for `cfg`'s geometry holding up to `capacity` tokens
+    /// (buffers are pre-reserved so steady-state decode never
+    /// reallocates).
+    ///
+    /// ```
+    /// use gsr::model::{KvCache, ModelCfg};
+    /// let cache = KvCache::new(&ModelCfg::default(), 8);
+    /// assert_eq!((cache.len(), cache.remaining()), (0, 8));
+    /// ```
+    pub fn new(cfg: &ModelCfg, capacity: usize) -> Self {
+        let width = cfg.d_model;
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerKv {
+                k: Vec::with_capacity(capacity * width),
+                v: Vec::with_capacity(capacity * width),
+            })
+            .collect();
+        Self { layers, len: 0, capacity, width }
+    }
+
+    /// Tokens currently cached — the sequence position decode resumes at.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum tokens this cache may hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Tokens that can still be absorbed before the cache is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Reset for a new sequence, keeping the allocations.
+    pub fn clear(&mut self) {
+        for layer in &mut self.layers {
+            layer.k.clear();
+            layer.v.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Roll back to `len` cached positions (error-path cleanup: a failed
+    /// chunk must not leave half-appended rows behind).
+    fn truncate(&mut self, len: usize) {
+        for layer in &mut self.layers {
+            layer.k.truncate(len * self.width);
+            layer.v.truncate(len * self.width);
+        }
+        self.len = len;
+    }
+
+    fn check(&self, cfg: &ModelCfg, t: usize) -> Result<(), String> {
+        if self.layers.len() != cfg.n_layers || self.width != cfg.d_model {
+            return Err(format!(
+                "kv cache geometry [{} layers x {}] does not match model [{} layers x {}]",
+                self.layers.len(),
+                self.width,
+                cfg.n_layers,
+                cfg.d_model
+            ));
+        }
+        if t == 0 {
+            return Err("cached forward needs at least one token".to_string());
+        }
+        if self.len + t > self.capacity {
+            return Err(format!(
+                "kv cache full: {} cached + {t} new tokens exceeds capacity {}",
+                self.len, self.capacity
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Intra-sequence work sharding (decode parallelism hook)
+// ---------------------------------------------------------------------------
+
+/// One shard of a decode-step linear or attention call: produces its
+/// packed output slice. Boxed so [`ShardRunner`] stays object-safe.
+pub type ShardJob<'env> = Box<dyn FnOnce() -> Vec<f32> + Send + 'env>;
+
+/// Executes a set of independent [`ShardJob`]s — possibly concurrently —
+/// and returns their outputs **in job order**. Implemented by the exec
+/// layer's worker pool (`exec::ExecPool`); defined here so the forward
+/// pass can shard work without depending on the execution layer.
+///
+/// Implementations must not return until every job has finished or been
+/// dropped: jobs borrow the caller's stack frame.
+pub trait ShardRunner {
+    fn run<'env>(&self, jobs: Vec<ShardJob<'env>>) -> Result<Vec<Vec<f32>>, String>;
+}
+
+/// Intra-sequence parallelism for [`DenseModel::forward_cached_par`]:
+/// large linears split their output columns and attention splits its
+/// heads into at most `shards` jobs on `runner`. Sharding never changes
+/// bits — each output element's f64 accumulation order is identical for
+/// every partition — so any `shards` value yields the same logits.
+pub struct DecodePar<'a> {
+    pub runner: &'a dyn ShardRunner,
+    /// Upper bound on concurrent shards (typically the pool's workers).
+    pub shards: usize,
+}
+
+/// Columns below this stay serial: a shard must amortize its dispatch.
+const MIN_SHARD_COLS: usize = 32;
+
+/// Split `0..n` into at most `max_shards` contiguous near-equal ranges
+/// of at least `min_chunk` elements; `None` when sharding isn't worth it.
+fn shard_ranges(n: usize, min_chunk: usize, max_shards: usize) -> Option<Vec<(usize, usize)>> {
+    let shards = max_shards.min(n / min_chunk);
+    if shards < 2 {
+        return None;
+    }
+    let (base, rem) = (n / shards, n % shards);
+    let mut ranges = Vec::with_capacity(shards);
+    let mut start = 0;
+    for i in 0..shards {
+        let end = start + base + usize::from(i < rem);
+        ranges.push((start, end));
+        start = end;
+    }
+    Some(ranges)
+}
+
 impl DenseModel {
     pub fn cfg(&self) -> &ModelCfg {
         match self {
@@ -122,17 +305,81 @@ impl DenseModel {
     /// allocation-free in steady state, bit-identical results.
     pub fn forward_with(&self, tokens: &[i32], scratch: &mut ForwardScratch) -> Vec<f32> {
         match self {
-            DenseModel::Fp { cfg, params } => forward_fp(cfg, params, tokens, scratch),
+            DenseModel::Fp { cfg, params } => {
+                forward_fp_impl(cfg, params, tokens, scratch, None, None)
+            }
             DenseModel::Quant { cfg, params, a_bits } => {
-                forward_quant_impl(cfg, params, *a_bits, tokens, None, scratch)
+                forward_quant_impl(cfg, params, *a_bits, tokens, None, scratch, None, None)
             }
         }
+        // With no cache and no shard runner every fallible path is
+        // unreachable: the serial forward cannot error.
+        .expect("serial uncached forward is infallible")
+    }
+
+    /// Incremental (KV-cached) forward: absorb `tokens` at positions
+    /// `cache.len()..` and return row-major `[tokens.len(), vocab]`
+    /// logits for exactly the absorbed positions.
+    ///
+    /// Prefill is a call on an empty cache with the whole prompt; decode
+    /// is a call with one token. At every step the logits are
+    /// **bit-identical** to [`DenseModel::forward`] over the full prefix
+    /// — the cached rows and the chunk rows run the exact per-position
+    /// arithmetic of the full pass. On error the cache is rolled back to
+    /// its pre-call state.
+    pub fn forward_cached(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        scratch: &mut ForwardScratch,
+    ) -> Result<Vec<f32>, String> {
+        self.forward_cached_par(tokens, cache, scratch, None)
+    }
+
+    /// [`DenseModel::forward_cached`] with optional intra-sequence
+    /// parallelism: linears column-shard and attention head-shards over
+    /// `par`'s workers. Bit-transparent — any shard count (including
+    /// `None`) produces the same logits.
+    pub fn forward_cached_par(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        scratch: &mut ForwardScratch,
+        par: Option<&DecodePar>,
+    ) -> Result<Vec<f32>, String> {
+        let cfg = self.cfg();
+        cache.check(cfg, tokens.len())?;
+        super::config::tokens_in_vocab(tokens, cfg.vocab)?;
+        let checkpoint = cache.len;
+        let res = match self {
+            DenseModel::Fp { cfg, params } => {
+                forward_fp_impl(cfg, params, tokens, scratch, Some(&mut *cache), par)
+            }
+            DenseModel::Quant { cfg, params, a_bits } => forward_quant_impl(
+                cfg,
+                params,
+                *a_bits,
+                tokens,
+                None,
+                scratch,
+                Some(&mut *cache),
+                par,
+            ),
+        };
+        if res.is_err() {
+            cache.truncate(checkpoint);
+        }
+        res
     }
 }
 
 // ---------------------------------------------------------------------------
 // Primitives
 // ---------------------------------------------------------------------------
+
+/// Matmul tile sizes shared by [`matmul_into`] and [`matmul_cols`].
+const MM_BK: usize = 64;
+const MM_BJ: usize = 128;
 
 /// `out[T,H] = x[T,C] @ w[C,H]` with f64 accumulation, cache-blocked
 /// over `(k, j)` like `transform::Mat::matmul`: a `MM_BK × MM_BJ` tile
@@ -153,17 +400,39 @@ pub fn matmul_into(
 ) {
     debug_assert_eq!(x.len(), t * c);
     debug_assert_eq!(w.len(), c * h);
-    const MM_BK: usize = 64;
-    const MM_BJ: usize = 128;
     acc.clear();
     acc.resize(t * h, 0.0);
+    matmul_core(x, w, t, c, h, 0, h, acc);
+    out.clear();
+    out.extend(acc.iter().map(|&a| a as f32));
+}
+
+/// The one tiled kernel both matmul entry points run: accumulate
+/// `x[T,C] @ w[C, jb0..je0]` into `acc` (packed `[T, je0-jb0]`, assumed
+/// zeroed). Keeping a single copy is what makes the "sharding never
+/// changes bits" guarantee structural: per output element the f64
+/// summation order is k-ascending (`kb` blocks ascend, `k` ascends
+/// within each) regardless of the `(jb0, je0)` column range, so the
+/// full-range call and any column partition agree bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn matmul_core(
+    x: &[f32],
+    w: &[f32],
+    t: usize,
+    c: usize,
+    h: usize,
+    jb0: usize,
+    je0: usize,
+    acc: &mut [f64],
+) {
+    let wj = je0 - jb0;
     for kb in (0..c).step_by(MM_BK) {
         let ke = (kb + MM_BK).min(c);
-        for jb in (0..h).step_by(MM_BJ) {
-            let je = (jb + MM_BJ).min(h);
+        for jb in (jb0..je0).step_by(MM_BJ) {
+            let je = (jb + MM_BJ).min(je0);
             for row in 0..t {
                 let xr = &x[row * c + kb..row * c + ke];
-                let arow = &mut acc[row * h + jb..row * h + je];
+                let arow = &mut acc[row * wj + (jb - jb0)..row * wj + (je - jb0)];
                 for (k, &xv) in xr.iter().enumerate() {
                     if xv == 0.0 {
                         continue;
@@ -177,8 +446,6 @@ pub fn matmul_into(
             }
         }
     }
-    out.clear();
-    out.extend(acc.iter().map(|&a| a as f32));
 }
 
 /// Allocating wrapper around [`matmul_into`].
@@ -187,6 +454,70 @@ pub fn matmul(x: &[f32], w: &[f32], t: usize, c: usize, h: usize) -> Vec<f32> {
     let mut acc = Vec::new();
     matmul_into(x, w, t, c, h, &mut out, &mut acc);
     out
+}
+
+/// Column-restricted [`matmul_into`]: `x[T,C] @ w[C, jb0..je0]`,
+/// returned packed as `[T, je0-jb0]` — the form one decode shard runs.
+/// Shares [`matmul_core`] with the full matmul, so any column partition
+/// reassembles bit-identically by construction.
+#[allow(clippy::too_many_arguments)]
+fn matmul_cols(
+    x: &[f32],
+    w: &[f32],
+    t: usize,
+    c: usize,
+    h: usize,
+    jb0: usize,
+    je0: usize,
+) -> Vec<f32> {
+    let mut acc = vec![0f64; t * (je0 - jb0)];
+    matmul_core(x, w, t, c, h, jb0, je0, &mut acc);
+    acc.iter().map(|&a| a as f32).collect()
+}
+
+/// One forward linear, serial or column-sharded over the decode pool.
+/// Sharding cannot change bits (see [`matmul_cols`]), so callers may
+/// freely mix sharded and serial execution of the same model.
+///
+/// Shard outputs and per-shard f64 accumulators are freshly allocated
+/// (results must be owned to cross the pool boundary); that cost is
+/// small next to the `O(t·c·cols)` multiply each shard amortizes, and
+/// the serial path stays allocation-free through `scratch`.
+#[allow(clippy::too_many_arguments)]
+fn mm(
+    par: Option<&DecodePar>,
+    x: &[f32],
+    w: &[f32],
+    t: usize,
+    c: usize,
+    h: usize,
+    out: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+) -> Result<(), String> {
+    if let Some(p) = par {
+        if let Some(ranges) = shard_ranges(h, MIN_SHARD_COLS, p.shards) {
+            let jobs: Vec<ShardJob<'_>> = ranges
+                .iter()
+                .map(|&(jb, je)| {
+                    let (x, w) = (&*x, &*w);
+                    Box::new(move || matmul_cols(x, w, t, c, h, jb, je)) as ShardJob<'_>
+                })
+                .collect();
+            let parts = p.runner.run(jobs)?;
+            out.clear();
+            out.resize(t * h, 0.0);
+            for (part, &(jb, je)) in parts.iter().zip(&ranges) {
+                let wj = je - jb;
+                for row in 0..t {
+                    out[row * h + jb..row * h + je]
+                        .copy_from_slice(&part[row * wj..(row + 1) * wj]);
+                }
+            }
+            return Ok(());
+        }
+    }
+    matmul_into(x, w, t, c, h, out, acc);
+    Ok(())
 }
 
 fn rmsnorm_rows(x: &mut [f32], d: usize, eps: f64) {
@@ -249,19 +580,30 @@ fn fwht_f32(x: &mut [f32]) {
     }
 }
 
-/// RoPE tables into scratch: `(cos, sin)` each `[T, head_dim/2]`.
-fn rope_tables_into(t: usize, head_dim: usize, base: f64, cos: &mut Vec<f32>, sin: &mut Vec<f32>) {
+/// RoPE tables into scratch: `(cos, sin)` each `[T, head_dim/2]`, for
+/// the `t` **absolute** positions `pos0..pos0+t` (row `r` holds position
+/// `pos0 + r`). Each entry is computed independently, so a decode step's
+/// single-row table is bit-identical to the matching row of a full
+/// prefix table.
+fn rope_tables_into(
+    pos0: usize,
+    t: usize,
+    head_dim: usize,
+    base: f64,
+    cos: &mut Vec<f32>,
+    sin: &mut Vec<f32>,
+) {
     let half = head_dim / 2;
     cos.clear();
     cos.resize(t * half, 0.0);
     sin.clear();
     sin.resize(t * half, 0.0);
-    for pos in 0..t {
+    for rel in 0..t {
         for i in 0..half {
             let inv = 1.0 / base.powf(i as f64 / half as f64);
-            let angle = pos as f64 * inv;
-            cos[pos * half + i] = angle.cos() as f32;
-            sin[pos * half + i] = angle.sin() as f32;
+            let angle = (pos0 + rel) as f64 * inv;
+            cos[rel * half + i] = angle.cos() as f32;
+            sin[rel * half + i] = angle.sin() as f32;
         }
     }
 }
@@ -305,7 +647,9 @@ fn rotate_heads(x: &mut [f32], t: usize, n_heads: usize, dh: usize, r: &[f32], t
 }
 
 /// Causal attention over `[T, heads, dh]` tensors → same layout,
-/// written into `out` (fully overwritten).
+/// written into `out` (fully overwritten). Test-only convenience: the
+/// forward paths call [`attention_cached`] / [`attention_heads_packed`].
+#[cfg(test)]
 fn attention_into(
     q: &[f32],
     k: &[f32],
@@ -316,16 +660,44 @@ fn attention_into(
     out: &mut Vec<f32>,
     scores: &mut Vec<f64>,
 ) {
+    attention_heads_packed(q, k, v, t, 0, n_heads, dh, 0, n_heads, out, scores);
+}
+
+/// Causal attention core over the contiguous head range `h0..h1`:
+/// queries are the `t` chunk rows `[t, n_heads, dh]` at absolute
+/// positions `pos0..pos0+t`; keys/values span **all** `pos0 + t` cached
+/// rows. Output is packed `[t, h1-h0, dh]` (the standard layout when
+/// the range covers every head). Per output element the f64
+/// accumulation order is key-ascending and independent of `(h0, h1)`,
+/// so head-sharded attention reassembles bit-identically to the serial
+/// pass, and a cached decode step (`pos0 > 0`) matches the same query
+/// row of a full-prefix pass exactly.
+#[allow(clippy::too_many_arguments)]
+fn attention_heads_packed(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    pos0: usize,
+    n_heads: usize,
+    dh: usize,
+    h0: usize,
+    h1: usize,
+    out: &mut Vec<f32>,
+    scores: &mut Vec<f64>,
+) {
+    let lh = h1 - h0;
     out.clear();
-    out.resize(t * n_heads * dh, 0.0);
+    out.resize(t * lh * dh, 0.0);
     scores.clear();
-    scores.resize(t, 0.0);
+    scores.resize(pos0 + t, 0.0);
     let scale = 1.0 / (dh as f64).sqrt();
-    for head in 0..n_heads {
+    for head in h0..h1 {
         for qi in 0..t {
+            let aq = pos0 + qi;
             let qoff = (qi * n_heads + head) * dh;
             let mut maxs = f64::NEG_INFINITY;
-            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+            for (ki, sc) in scores.iter_mut().enumerate().take(aq + 1) {
                 let koff = (ki * n_heads + head) * dh;
                 let mut dot = 0f64;
                 for d in 0..dh {
@@ -335,14 +707,14 @@ fn attention_into(
                 maxs = maxs.max(*sc);
             }
             let mut denom = 0f64;
-            for sc in scores.iter_mut().take(qi + 1) {
+            for sc in scores.iter_mut().take(aq + 1) {
                 *sc = (*sc - maxs).exp();
                 denom += *sc;
             }
-            let ooff = (qi * n_heads + head) * dh;
+            let ooff = (qi * lh + (head - h0)) * dh;
             for d in 0..dh {
                 let mut acc = 0f64;
-                for (ki, sc) in scores.iter().enumerate().take(qi + 1) {
+                for (ki, sc) in scores.iter().enumerate().take(aq + 1) {
                     let voff = (ki * n_heads + head) * dh;
                     acc += sc * v[voff + d] as f64;
                 }
@@ -350,6 +722,57 @@ fn attention_into(
             }
         }
     }
+}
+
+/// Cached-path attention: chunk queries against the full cached K/V,
+/// serial or head-sharded over the decode pool (bit-transparent either
+/// way — see [`attention_heads_packed`]).
+#[allow(clippy::too_many_arguments)]
+fn attention_cached(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    pos0: usize,
+    n_heads: usize,
+    dh: usize,
+    out: &mut Vec<f32>,
+    scores: &mut Vec<f64>,
+    par: Option<&DecodePar>,
+) -> Result<(), String> {
+    if let Some(p) = par {
+        if let Some(ranges) = shard_ranges(n_heads, 1, p.shards) {
+            let jobs: Vec<ShardJob<'_>> = ranges
+                .iter()
+                .map(|&(h0, h1)| {
+                    let (q, k, v) = (&*q, &*k, &*v);
+                    Box::new(move || {
+                        let (mut part, mut sc) = (Vec::new(), Vec::new());
+                        attention_heads_packed(
+                            q, k, v, t, pos0, n_heads, dh, h0, h1, &mut part, &mut sc,
+                        );
+                        part
+                    }) as ShardJob<'_>
+                })
+                .collect();
+            let parts = p.runner.run(jobs)?;
+            out.clear();
+            out.resize(t * n_heads * dh, 0.0);
+            for (part, &(h0, h1)) in parts.iter().zip(&ranges) {
+                let lh = h1 - h0;
+                for qi in 0..t {
+                    for head in h0..h1 {
+                        let src = (qi * lh + (head - h0)) * dh;
+                        let dst = (qi * n_heads + head) * dh;
+                        out[dst..dst + dh].copy_from_slice(&part[src..src + dh]);
+                    }
+                }
+            }
+            return Ok(());
+        }
+    }
+    attention_heads_packed(q, k, v, t, pos0, n_heads, dh, 0, n_heads, out, scores);
+    Ok(())
 }
 
 /// Gather embedding rows for `tokens` into `x` `[T, d]`.
@@ -372,46 +795,66 @@ fn add_assign(x: &mut [f32], y: &[f32]) {
 // fp forward (training layout)
 // ---------------------------------------------------------------------------
 
-fn forward_fp(
+/// fp forward, full-sequence (`kv: None`) or incremental (`kv: Some`,
+/// where `tokens` is the chunk appended at positions `cache.len()..`).
+/// With `kv: None` and `par: None` this is the exact pre-cache serial
+/// pass — every branch below degenerates to the original straight-line
+/// code, which is why one implementation can back both paths without a
+/// parity gap.
+fn forward_fp_impl(
     cfg: &ModelCfg,
     p: &FpParams,
     tokens: &[i32],
     scratch: &mut ForwardScratch,
-) -> Vec<f32> {
+    mut kv: Option<&mut KvCache>,
+    par: Option<&DecodePar>,
+) -> Result<Vec<f32>, String> {
     let (t, d) = (tokens.len(), cfg.d_model);
     let (nh, dh) = (cfg.n_heads, cfg.head_dim());
+    let pos0 = kv.as_deref().map_or(0, |c| c.len);
     let ForwardScratch { x, h, q, k, v, o, g, u, z, zd, acc, scores, cos, sin, .. } = scratch;
     embed_into(x, &p.embed, tokens, d);
-    rope_tables_into(t, dh, cfg.rope_base, cos, sin);
-    for layer in &p.layers {
+    rope_tables_into(pos0, t, dh, cfg.rope_base, cos, sin);
+    for (l, layer) in p.layers.iter().enumerate() {
         h.clear();
         h.extend_from_slice(x);
         rmsnorm_rows(h, d, cfg.norm_eps);
         scale_rows(h, &layer.ln1);
-        matmul_into(h, &layer.wq, t, d, d, q, acc);
-        matmul_into(h, &layer.wk, t, d, d, k, acc);
-        matmul_into(h, &layer.wv, t, d, d, v, acc);
+        mm(par, h, &layer.wq, t, d, d, q, acc)?;
+        mm(par, h, &layer.wk, t, d, d, k, acc)?;
+        mm(par, h, &layer.wv, t, d, d, v, acc)?;
         apply_rope(q, t, nh, dh, cos, sin);
         apply_rope(k, t, nh, dh, cos, sin);
-        attention_into(q, k, v, t, nh, dh, o, scores);
-        matmul_into(o, &layer.wo, t, d, d, zd, acc);
+        match kv.as_deref_mut() {
+            Some(cache) => {
+                let lk = &mut cache.layers[l];
+                lk.k.extend_from_slice(k);
+                lk.v.extend_from_slice(v);
+                attention_cached(q, &lk.k, &lk.v, t, pos0, nh, dh, o, scores, par)?;
+            }
+            None => attention_cached(q, k, v, t, 0, nh, dh, o, scores, par)?,
+        }
+        mm(par, o, &layer.wo, t, d, d, zd, acc)?;
         add_assign(x, zd);
         h.clear();
         h.extend_from_slice(x);
         rmsnorm_rows(h, d, cfg.norm_eps);
         scale_rows(h, &layer.ln2);
-        matmul_into(h, &layer.wgate, t, d, cfg.d_ffn, g, acc);
-        matmul_into(h, &layer.wup, t, d, cfg.d_ffn, u, acc);
+        mm(par, h, &layer.wgate, t, d, cfg.d_ffn, g, acc)?;
+        mm(par, h, &layer.wup, t, d, cfg.d_ffn, u, acc)?;
         z.clear();
         z.extend(g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv));
-        matmul_into(z, &layer.wdown, t, cfg.d_ffn, d, zd, acc);
+        mm(par, z, &layer.wdown, t, cfg.d_ffn, d, zd, acc)?;
         add_assign(x, zd);
     }
     rmsnorm_rows(x, d, cfg.norm_eps);
     scale_rows(x, &p.ln_f);
     let mut logits = Vec::new();
-    matmul_into(x, &p.lm_head, t, d, cfg.vocab, &mut logits, acc);
-    logits
+    mm(par, x, &p.lm_head, t, d, cfg.vocab, &mut logits, acc)?;
+    if let Some(cache) = kv {
+        cache.len += t;
+    }
+    Ok(logits)
 }
 
 // ---------------------------------------------------------------------------
@@ -429,7 +872,8 @@ pub fn forward_quant_tapped(
     tokens: &[i32],
     tap: &mut dyn ActivationTap,
 ) -> Vec<f32> {
-    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap), &mut ForwardScratch::new())
+    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap), &mut ForwardScratch::new(), None, None)
+        .expect("serial uncached forward is infallible")
 }
 
 /// [`forward_quant_tapped`] with caller-owned scratch — the form the
@@ -443,9 +887,17 @@ pub fn forward_quant_tapped_with(
     tap: &mut dyn ActivationTap,
     scratch: &mut ForwardScratch,
 ) -> Vec<f32> {
-    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap), scratch)
+    forward_quant_impl(cfg, p, a_bits, tokens, Some(tap), scratch, None, None)
+        .expect("serial uncached forward is infallible")
 }
 
+/// Rotated/quantized forward, full-sequence (`kv: None`) or incremental
+/// (`kv: Some`, `tokens` = the chunk at positions `cache.len()..`). See
+/// [`forward_fp_impl`] — same unification, plus the rotated-path
+/// specifics: cached keys are post-RoPE *and* post-R3, and the online
+/// per-layer R4 override runs on the chunk's FFN activations exactly as
+/// in the full pass (R4 lives upstream of `wdown`, never in the cache).
+#[allow(clippy::too_many_arguments)]
 fn forward_quant_impl(
     cfg: &ModelCfg,
     p: &QuantParams,
@@ -453,19 +905,22 @@ fn forward_quant_impl(
     tokens: &[i32],
     mut tap: Option<&mut dyn ActivationTap>,
     scratch: &mut ForwardScratch,
-) -> Vec<f32> {
+    mut kv: Option<&mut KvCache>,
+    par: Option<&DecodePar>,
+) -> Result<Vec<f32>, String> {
     let (t, d) = (tokens.len(), cfg.d_model);
     let (nh, dh) = (cfg.n_heads, cfg.head_dim());
     let grp = cfg.group;
+    let pos0 = kv.as_deref().map_or(0, |c| c.len);
     let ForwardScratch { x, xt, h, q, k, v, o, g, u, z, zd, acc, scores, cos, sin, head_tmp } =
         scratch;
     embed_into(x, &p.embed, tokens, d);
-    rope_tables_into(t, dh, cfg.rope_base, cos, sin);
+    rope_tables_into(pos0, t, dh, cfg.rope_base, cos, sin);
     for (l, layer) in p.layers.iter().enumerate() {
         // Heterogeneous plans: transition the residual stream from the
         // previous layer's R1 basis into this layer's (`x ← x R_{l-1}ᵀ R_l`).
         if let Some(tr) = &layer.basis_change {
-            matmul_into(x, tr, t, d, d, xt, acc);
+            mm(par, x, tr, t, d, d, xt, acc)?;
             std::mem::swap(x, xt);
         }
         let w = |name: &str| layer.dense[name].as_slice();
@@ -479,14 +934,22 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::AttnIn, h, d);
         }
-        matmul_into(h, w("wq"), t, d, d, q, acc);
-        matmul_into(h, w("wk"), t, d, d, k, acc);
-        matmul_into(h, w("wv"), t, d, d, v, acc);
+        mm(par, h, w("wq"), t, d, d, q, acc)?;
+        mm(par, h, w("wk"), t, d, d, k, acc)?;
+        mm(par, h, w("wv"), t, d, d, v, acc)?;
         apply_rope(q, t, nh, dh, cos, sin);
         apply_rope(k, t, nh, dh, cos, sin);
         rotate_heads(q, t, nh, dh, &p.r3, head_tmp);
         rotate_heads(k, t, nh, dh, &p.r3, head_tmp);
-        attention_into(q, k, v, t, nh, dh, o, scores);
+        match kv.as_deref_mut() {
+            Some(cache) => {
+                let lk = &mut cache.layers[l];
+                lk.k.extend_from_slice(k);
+                lk.v.extend_from_slice(v);
+                attention_cached(q, &lk.k, &lk.v, t, pos0, nh, dh, o, scores, par)?;
+            }
+            None => attention_cached(q, k, v, t, 0, nh, dh, o, scores, par)?,
+        }
         scale_rows(o, &layer.ascale_o);
         if let Some(bits) = a_bits {
             act_fake_quant(o, grp, bits);
@@ -494,7 +957,7 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::OIn, o, d);
         }
-        matmul_into(o, w("wo"), t, d, d, zd, acc);
+        mm(par, o, w("wo"), t, d, d, zd, acc)?;
         add_assign(x, zd);
         h.clear();
         h.extend_from_slice(x);
@@ -506,8 +969,8 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::FfnIn, h, d);
         }
-        matmul_into(h, w("wgate"), t, d, cfg.d_ffn, g, acc);
-        matmul_into(h, w("wup"), t, d, cfg.d_ffn, u, acc);
+        mm(par, h, w("wgate"), t, d, cfg.d_ffn, g, acc)?;
+        mm(par, h, w("wup"), t, d, cfg.d_ffn, u, acc)?;
         z.clear();
         z.extend(g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv));
         // Online R4: fast (grouped) Hadamard + signs — the L1 kernel's
@@ -546,13 +1009,16 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::DownIn, z, cfg.d_ffn);
         }
-        matmul_into(z, w("wdown"), t, cfg.d_ffn, d, zd, acc);
+        mm(par, z, w("wdown"), t, cfg.d_ffn, d, zd, acc)?;
         add_assign(x, zd);
     }
     rmsnorm_rows(x, d, cfg.norm_eps);
     let mut logits = Vec::new();
-    matmul_into(x, &p.lm_head, t, d, cfg.vocab, &mut logits, acc);
-    logits
+    mm(par, x, &p.lm_head, t, d, cfg.vocab, &mut logits, acc)?;
+    if let Some(cache) = kv {
+        cache.len += t;
+    }
+    Ok(logits)
 }
 
 #[cfg(test)]
@@ -655,6 +1121,149 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "blocked matmul is not bit-identical");
             }
         }
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        assert_eq!(shard_ranges(10, 32, 4), None, "too small to shard");
+        assert_eq!(shard_ranges(64, 32, 1), None, "one worker never shards");
+        let r = shard_ranges(100, 32, 4).unwrap();
+        assert_eq!(r.len(), 3); // 100/32 = 3 shards
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+        }
+        let r = shard_ranges(4, 1, 8).unwrap();
+        assert_eq!(r, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn matmul_cols_partition_reassembles_bit_identical() {
+        let mut rng = crate::rng::SplitMix64::new(23);
+        let (t, c, h) = (3, 70, 130);
+        let x: Vec<f32> = (0..t * c).map(|_| rng.next_normal() as f32).collect();
+        let w: Vec<f32> = (0..c * h).map(|_| rng.next_normal() as f32).collect();
+        let full = matmul(&x, &w, t, c, h);
+        for splits in [vec![(0, 130)], vec![(0, 50), (50, 130)], vec![(0, 1), (1, 64), (64, 130)]]
+        {
+            let mut out = vec![0f32; t * h];
+            for &(jb, je) in &splits {
+                let part = matmul_cols(&x, &w, t, c, h, jb, je);
+                let wj = je - jb;
+                for row in 0..t {
+                    out[row * h + jb..row * h + je]
+                        .copy_from_slice(&part[row * wj..(row + 1) * wj]);
+                }
+            }
+            for (a, b) in out.iter().zip(&full) {
+                assert_eq!(a.to_bits(), b.to_bits(), "column partition changed bits");
+            }
+        }
+    }
+
+    fn kv_test_model() -> DenseModel {
+        let cfg = ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 64,
+            group: 16,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+        };
+        DenseModel::Fp { cfg: cfg.clone(), params: FpParams::synthetic(&cfg, 21) }
+    }
+
+    /// The decode-path invariant: prefill + per-token decode produces,
+    /// at every step, logits bit-identical to a full re-forward of the
+    /// whole prefix. (Plan-kind coverage lives in `tests/proptests.rs`.)
+    #[test]
+    fn cached_decode_bit_identical_to_full_forward() {
+        let model = kv_test_model();
+        let seq: Vec<i32> = (0..12).map(|i| ((i * 13 + 5) % 64) as i32).collect();
+        let prompt_len = 5;
+        let mut cache = KvCache::new(model.cfg(), seq.len());
+        let mut scratch = ForwardScratch::new();
+        let prefill = model.forward_cached(&seq[..prompt_len], &mut cache, &mut scratch).unwrap();
+        let full = model.forward(&seq[..prompt_len]);
+        assert_eq!(prefill.len(), full.len());
+        for (a, b) in prefill.iter().zip(&full) {
+            assert_eq!(a.to_bits(), b.to_bits(), "prefill diverged from full forward");
+        }
+        let v = model.cfg().vocab;
+        for step in prompt_len..seq.len() {
+            let got = model.forward_cached(&seq[step..step + 1], &mut cache, &mut scratch).unwrap();
+            let full = model.forward(&seq[..step + 1]);
+            let want = &full[step * v..(step + 1) * v];
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "decode step {step} diverged");
+            }
+            assert_eq!(cache.len(), step + 1);
+        }
+    }
+
+    /// Sharded execution (column-split linears, head-split attention)
+    /// must reproduce the serial bits for any shard bound.
+    #[test]
+    fn sharded_cached_forward_bit_identical_to_serial() {
+        struct InlineRunner;
+        impl ShardRunner for InlineRunner {
+            fn run<'env>(&self, jobs: Vec<ShardJob<'env>>) -> Result<Vec<Vec<f32>>, String> {
+                Ok(jobs.into_iter().map(|j| j()).collect())
+            }
+        }
+        let model = kv_test_model();
+        let seq: Vec<i32> = (0..9).map(|i| ((i * 7 + 2) % 64) as i32).collect();
+        let serial = {
+            let mut cache = KvCache::new(model.cfg(), seq.len());
+            let mut scratch = ForwardScratch::new();
+            let mut out = model.forward_cached(&seq[..4], &mut cache, &mut scratch).unwrap();
+            for step in 4..seq.len() {
+                out = model.forward_cached(&seq[step..step + 1], &mut cache, &mut scratch).unwrap();
+            }
+            out
+        };
+        for shards in [2, 3, 8] {
+            let par = DecodePar { runner: &InlineRunner, shards };
+            let mut cache = KvCache::new(model.cfg(), seq.len());
+            let mut scratch = ForwardScratch::new();
+            let mut out = model
+                .forward_cached_par(&seq[..4], &mut cache, &mut scratch, Some(&par))
+                .unwrap();
+            for step in 4..seq.len() {
+                out = model
+                    .forward_cached_par(&seq[step..step + 1], &mut cache, &mut scratch, Some(&par))
+                    .unwrap();
+            }
+            assert_eq!(out.len(), serial.len());
+            for (a, b) in out.iter().zip(&serial) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sharding ({shards}) changed decode bits");
+            }
+        }
+    }
+
+    /// Misuse is an error, never a panic or a corrupted cache: overflow
+    /// and bad token ids reject cleanly and leave the cache untouched.
+    #[test]
+    fn cached_forward_validates_and_rolls_back() {
+        let model = kv_test_model();
+        let mut cache = KvCache::new(model.cfg(), 4);
+        let mut scratch = ForwardScratch::new();
+        assert!(model.forward_cached(&[], &mut cache, &mut scratch).is_err());
+        let err = model.forward_cached(&[1, 2, 3, 4, 5], &mut cache, &mut scratch).unwrap_err();
+        assert!(err.contains("kv cache full"), "{err}");
+        let err = model.forward_cached(&[1, 99], &mut cache, &mut scratch).unwrap_err();
+        assert!(err.contains("outside vocab"), "{err}");
+        assert_eq!(cache.len(), 0, "failed calls must not grow the cache");
+        model.forward_cached(&[1, 2, 3, 4], &mut cache, &mut scratch).unwrap();
+        assert_eq!(cache.remaining(), 0);
+        assert!(model.forward_cached(&[1], &mut cache, &mut scratch).is_err());
+        cache.clear();
+        assert_eq!(cache.len(), 0);
+        assert!(model.forward_cached(&[1], &mut cache, &mut scratch).is_ok());
     }
 
     /// Scratch reuse must not change results: a warm scratch that just

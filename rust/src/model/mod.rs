@@ -4,14 +4,20 @@
 //! used to validate the PJRT execution path end-to-end: both consume the
 //! same artifact blobs and must agree to float tolerance. It also powers
 //! the Fig.-1 rotation-invariance test and a PJRT-free fallback eval.
+//!
+//! Beyond the full-sequence pass, [`forward`] provides the incremental
+//! decoding primitives: a per-sequence [`KvCache`] plus
+//! `DenseModel::forward_cached`, whose per-step logits are bit-identical
+//! to a full re-forward of the prefix, and the [`ShardRunner`] hook the
+//! execution layer uses to parallelize a single decode step.
 
 pub mod config;
 pub mod forward;
 pub mod weights;
 
-pub use config::{ModelCfg, ParamSpec, R4Kind};
+pub use config::{tokens_in_vocab, ModelCfg, ParamSpec, R4Kind};
 pub use forward::{
-    forward_quant_tapped, forward_quant_tapped_with, ActivationTap, DenseModel, ForwardScratch,
-    TapSite,
+    forward_quant_tapped, forward_quant_tapped_with, ActivationTap, DecodePar, DenseModel,
+    ForwardScratch, KvCache, ShardJob, ShardRunner, TapSite,
 };
 pub use weights::{FpParams, LayerR4, QuantParams};

@@ -30,6 +30,12 @@
 //! input-channel activation energy of *that candidate's* basis, so the
 //! search minimizes a diagonal proxy of the `‖X ΔW‖²` objective the
 //! Hessian-calibrated GPTQ pipeline actually optimizes.
+//!
+//! Determinism: every candidate score is a pure function of
+//! `(checkpoint, cfg, spec, seed)` — rotation builds are seeded by the
+//! spec itself and scores are reduced per layer in grid order, so the
+//! emitted plan is identical for any `--threads` value and any
+//! scheduling of the layer × candidate cells.
 
 pub mod grid;
 pub mod objective;

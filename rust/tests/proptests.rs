@@ -338,3 +338,124 @@ fn prop_router_in_flight_balanced() {
         }
     });
 }
+
+/// Decode-path parity: for every rotation-plan kind — identity (the
+/// unrotated fp checkpoint), a uniform global Walsh plan, and a
+/// heterogeneous searched-style plan with a per-layer basis change and
+/// R4 override — a KV-cached prefill + per-token decode yields logits
+/// **bit-identical** to a full `forward` of the prefix at every step,
+/// both at the library level and through the `NativeBackend` generation
+/// contract at several thread counts (intra-sequence sharding active).
+#[test]
+fn prop_cached_decode_bit_identical_to_full_forward() {
+    use gsr::exec::{Backend, NativeBackend};
+    use gsr::model::{DenseModel, ForwardScratch, FpParams, KvCache, ModelCfg, R4Kind};
+    use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
+    use std::sync::Arc;
+
+    let cfg = ModelCfg {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    };
+    let assert_bits = |got: &[f32], want: &[f32], what: &str| {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what}: logit {i} ({a} vs {b})");
+        }
+    };
+    for_seeds(4, |seed, rng| {
+        let fp = FpParams::synthetic(&cfg, 100 + seed);
+        let mut models: Vec<(&str, Arc<DenseModel>)> = vec![(
+            "identity",
+            Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() }),
+        )];
+        let gw_plan = RotationPlan::uniform(
+            RotationSpec {
+                r1: R1Kind::GW,
+                r1_block: cfg.d_model,
+                r4: R4Kind::GH,
+                r4_block: cfg.d_ffn,
+            },
+            cfg.n_layers,
+            7 + seed,
+        );
+        let het_plan = RotationPlan {
+            seed: 11 + seed,
+            layers: vec![
+                RotationSpec {
+                    r1: R1Kind::GSR,
+                    r1_block: 8,
+                    r4: R4Kind::GH,
+                    r4_block: cfg.d_ffn,
+                },
+                RotationSpec {
+                    r1: R1Kind::GH,
+                    r1_block: cfg.d_model,
+                    r4: R4Kind::LH,
+                    r4_block: 16,
+                },
+            ],
+        };
+        for (label, plan) in [("global-walsh", gw_plan), ("hetero", het_plan)] {
+            let rots = build_plan_rotations(&cfg, &plan).unwrap();
+            let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+            models.push((
+                label,
+                Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None }),
+            ));
+        }
+        let prompt_len = 1 + rng.next_below(6) as usize;
+        let decode_len = 1 + rng.next_below(6) as usize;
+        let total = prompt_len + decode_len;
+        let seq: Vec<i32> =
+            (0..total).map(|_| rng.next_below(cfg.vocab as u64) as i32).collect();
+        let v = cfg.vocab;
+        for (label, model) in &models {
+            // Library level: prefill + decode against the full forward.
+            let mut cache = KvCache::new(&cfg, total);
+            let mut scratch = ForwardScratch::new();
+            let prefill =
+                model.forward_cached(&seq[..prompt_len], &mut cache, &mut scratch).unwrap();
+            let full = model.forward(&seq[..prompt_len]);
+            assert_bits(&prefill, &full, &format!("seed {seed} {label} prefill"));
+            for step in prompt_len..total {
+                let got =
+                    model.forward_cached(&seq[step..step + 1], &mut cache, &mut scratch).unwrap();
+                let full = model.forward(&seq[..step + 1]);
+                assert_bits(
+                    &got,
+                    &full[step * v..],
+                    &format!("seed {seed} {label} decode step {step}"),
+                );
+            }
+            // Backend level: the generation contract, serial and with
+            // intra-sequence sharding across pool workers.
+            for threads in [1usize, 3] {
+                let backend = NativeBackend::new(Arc::clone(model), 2, total, threads);
+                let (mut gen, last) = backend.start_generation(&seq[..prompt_len]).unwrap();
+                let full = model.forward(&seq[..prompt_len]);
+                assert_bits(
+                    &last,
+                    &full[(prompt_len - 1) * v..],
+                    &format!("seed {seed} {label} t={threads} prefill tail"),
+                );
+                for step in prompt_len..total {
+                    let got = backend.decode(&mut gen, seq[step]).unwrap();
+                    let full = model.forward(&seq[..step + 1]);
+                    assert_bits(
+                        &got,
+                        &full[step * v..],
+                        &format!("seed {seed} {label} t={threads} decode step {step}"),
+                    );
+                }
+                assert_eq!(gen.len(), total, "seed {seed} {label}: cache occupancy");
+            }
+        }
+    });
+}

@@ -206,10 +206,13 @@ fn serve_native_rejects_malformed_requests() {
     assert!(bad_err.contains("outside vocab"), "{bad_err}");
     let logits = good_rx.recv().unwrap().logits.expect("co-batched request must survive");
     assert_bits_eq(&logits, &fp_m.forward(&good), "co-batched request");
+    // Empty requests are refused instead of silently scoring padding.
+    let empty_err = server.score("fp", vec![]).expect_err("empty request must be refused");
+    assert!(empty_err.contains("at least one token"), "{empty_err}");
     // Unknown variants error without hanging and count as rejected.
     assert!(server.score("nope", vec![1, 2]).is_err());
     let metrics = server.shutdown();
-    assert_eq!(metrics.rejected, 3, "oversized + bad token + unknown variant");
+    assert_eq!(metrics.rejected, 4, "oversized + bad token + empty + unknown variant");
     assert_eq!(metrics.requests, 1, "only the good request completes");
 }
 
@@ -260,4 +263,169 @@ fn ppl_through_batched_backend_matches_serial_reference() {
         assert_eq!(got.tokens, want.tokens);
         assert_eq!(got.windows, want.windows);
     }
+}
+
+/// Greedy reference decode by full re-forward: the semantics the
+/// coordinator's KV-cached path must reproduce exactly. Returns the
+/// emitted tokens and the number of decode rounds the sequence needs
+/// (picks beyond the prefill pick).
+fn greedy_reference(
+    model: &DenseModel,
+    prompt: &[i32],
+    max_new: usize,
+    stop: Option<i32>,
+) -> (Vec<i32>, u64) {
+    let v = model.cfg().vocab;
+    let mut seq = prompt.to_vec();
+    let mut out = Vec::new();
+    let mut iters = 0u64;
+    loop {
+        iters += 1;
+        let logits = model.forward(&seq);
+        let tok = gsr::exec::greedy_argmax(&logits[(seq.len() - 1) * v..]);
+        if stop == Some(tok) {
+            break;
+        }
+        out.push(tok);
+        if out.len() >= max_new {
+            break;
+        }
+        seq.push(tok);
+    }
+    (out, iters - 1)
+}
+
+/// Generate end to end through the server: concurrent requests across
+/// fp + a heterogeneous searched variant, batched decode rounds,
+/// per-sequence completion (max_new and stop-token), and results equal
+/// to a serial full-re-forward greedy reference — token for token.
+#[test]
+fn generate_native_end_to_end_matches_full_reforward_greedy() {
+    let cfg = tiny_cfg();
+    let (fp, fp_m) = fp_model(&cfg, 31);
+    let plan_m = searched_model(&cfg, &fp, 13);
+    let (b, s) = (3, 24);
+    let pool = Arc::new(ExecPool::new(3));
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::with_pool(Arc::clone(&fp_m), b, s, Arc::clone(&pool)));
+    set.insert("searched", NativeBackend::with_pool(Arc::clone(&plan_m), b, s, pool));
+    let policy = BatchPolicy { max_batch: b, max_wait: Duration::from_millis(2) };
+    let server = Server::start_native(set, policy).expect("native server start");
+
+    // Build cases with references first (the stop case derives its stop
+    // token from its own no-stop reference).
+    struct Case {
+        variant: &'static str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Option<i32>,
+        want: Vec<i32>,
+        rounds: u64,
+    }
+    let mut cases = Vec::new();
+    for (i, &(variant, model, max_new)) in [
+        ("fp", &fp_m, 5usize),
+        ("searched", &plan_m, 3),
+        ("fp", &fp_m, 6),
+        ("searched", &plan_m, 6),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let prompt = window(40 + i, 6 + i % 3, cfg.vocab);
+        let stop;
+        let want;
+        let rounds;
+        if i == 2 {
+            // Early-stop case: stop on the first token the no-stop
+            // reference emits at an index whose prefix doesn't contain
+            // it, so the expected cut is unambiguous.
+            let (no_stop, _) = greedy_reference(model, &prompt, max_new, None);
+            let j = (1..no_stop.len())
+                .find(|&j| !no_stop[..j].contains(&no_stop[j]))
+                .unwrap_or(0);
+            stop = Some(no_stop[j]);
+            let r = greedy_reference(model, &prompt, max_new, stop);
+            want = r.0;
+            rounds = r.1;
+            assert_eq!(want, no_stop[..j].to_vec(), "stop must cut at index {j}");
+        } else {
+            stop = None;
+            let r = greedy_reference(model, &prompt, max_new, None);
+            want = r.0;
+            rounds = r.1;
+        }
+        cases.push(Case { variant, prompt, max_new, stop, want, rounds });
+    }
+
+    // Submit everything up front so decode rounds batch across
+    // sequences, then collect.
+    let mut pending = Vec::new();
+    for case in &cases {
+        let (reply, rx) = std::sync::mpsc::channel();
+        server
+            .submit_generate(gsr::coordinator::GenerateRequest {
+                variant: case.variant.to_string(),
+                prompt: case.prompt.clone(),
+                max_new: case.max_new,
+                stop: case.stop,
+                reply,
+            })
+            .unwrap();
+        pending.push(rx);
+    }
+    for (i, (case, rx)) in cases.iter().zip(pending).enumerate() {
+        let got = rx.recv().unwrap().result.unwrap_or_else(|e| panic!("case {i}: {e}"));
+        assert_eq!(got.tokens, case.want, "case {i} ({}) diverged from reference", case.variant);
+        assert_eq!(got.prompt_len, case.prompt.len());
+    }
+    let metrics = server.shutdown();
+    let total_emitted: u64 = cases.iter().map(|c| c.want.len() as u64).sum();
+    let total_rounds: u64 = cases.iter().map(|c| c.rounds).sum();
+    assert_eq!(metrics.generations, cases.len() as u64);
+    assert_eq!(metrics.generation_failures, 0);
+    assert_eq!(metrics.generated_tokens, total_emitted);
+    assert_eq!(metrics.requests, cases.len() as u64, "generations count as requests");
+    assert_eq!(metrics.rejected, 0);
+    assert_eq!(metrics.decode_seqs, total_rounds, "every sequence-step accounted once");
+    assert!(metrics.decode_steps >= 1 && metrics.decode_steps <= total_rounds);
+    assert_eq!(metrics.decode_latency.count(), metrics.decode_steps);
+    assert!(metrics.cache_tokens_peak >= 7, "peak occupancy covers prompt + decode");
+    assert!(metrics.decode_tok_per_s() > 0.0);
+}
+
+/// Generation admission mirrors scoring admission: unsupported budgets,
+/// empty prompts, bad token ids and unknown variants are refused with
+/// clear errors, counted in `rejected`, and the server keeps serving.
+#[test]
+fn generate_rejects_invalid_requests() {
+    let cfg = tiny_cfg();
+    let (_, fp_m) = fp_model(&cfg, 3);
+    let s = 10;
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, s, 2));
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    let server = Server::start_native(set, policy).unwrap();
+    let err = server
+        .generate("fp", window(1, 8, cfg.vocab), 5, None)
+        .expect_err("prompt + budget beyond the cache must be refused");
+    assert!(err.contains("kv cache"), "unhelpful error: {err}");
+    assert!(server.generate("fp", vec![], 3, None).is_err(), "empty prompt");
+    assert!(server.generate("fp", vec![1, 2], 0, None).is_err(), "zero budget");
+    assert!(server.generate("fp", vec![1, 64], 3, None).is_err(), "bad prompt token");
+    assert!(server.generate("fp", vec![1, 2], 3, Some(-1)).is_err(), "bad stop token");
+    assert!(server.generate("nope", vec![1, 2], 3, None).is_err(), "unknown variant");
+    // A valid request still succeeds afterwards, and scoring coexists.
+    let out = server.generate("fp", window(2, 4, cfg.vocab), 3, None).unwrap();
+    assert_eq!(out.tokens.len(), 3);
+    // Exact-fit boundary: peak occupancy is prompt + max_new - 1 = seq,
+    // so a request that uses every cache slot is admitted.
+    let out = server.generate("fp", window(5, 8, cfg.vocab), 3, None).unwrap();
+    assert_eq!(out.tokens.len(), 3, "exact-fit budget must decode fully");
+    assert!(server.score("fp", window(3, s, cfg.vocab)).is_ok());
+    let metrics = server.shutdown();
+    assert_eq!(metrics.rejected, 6);
+    assert_eq!(metrics.generations, 2);
+    assert_eq!(metrics.generation_failures, 0);
+    assert_eq!(metrics.generated_tokens, 6);
 }

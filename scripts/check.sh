@@ -21,6 +21,9 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo doc --no-deps (rustdoc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== cargo clippy --all-targets -- -D warnings =="
   cargo clippy --all-targets -- -D warnings
