@@ -123,7 +123,7 @@ def dequant(
 
 
 # ---------------------------------------------------------------------------
-# Packed 2-bit storage + dequant-matmul
+# Packed 2-/4-bit storage + dequant-matmul
 # ---------------------------------------------------------------------------
 
 
@@ -148,6 +148,27 @@ def unpack2(packed: jnp.ndarray) -> jnp.ndarray:
         [(p >> 0) & 3, (p >> 2) & 3, (p >> 4) & 3, (p >> 6) & 3], axis=1
     )
     return parts.reshape(cb * 4, h)
+
+
+def pack4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack 4-bit codes ``[C, H]`` (values 0..15) into uint8 ``[C/2, H]``.
+
+    Codes for input channels ``2b`` / ``2b+1`` live in bits ``[0:4]`` /
+    ``[4:8]`` of byte ``b`` — the same LSB-first rule as :func:`pack2`,
+    matching ``rust/src/quant/pack.rs::pack4``.
+    """
+    c, h = codes.shape
+    assert c % 2 == 0
+    u = codes.astype(jnp.uint8).reshape(c // 2, 2, h)
+    return u[:, 0] | (u[:, 1] << 4)
+
+
+def unpack4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack4` — uint8 ``[C/2, H]`` → int32 codes ``[C, H]``."""
+    cb, h = packed.shape
+    p = packed.astype(jnp.int32)
+    parts = jnp.stack([(p >> 0) & 15, (p >> 4) & 15], axis=1)
+    return parts.reshape(cb * 2, h)
 
 
 def dequant_matmul(

@@ -1,0 +1,106 @@
+//! Packed fused kernels vs the dense reference path — the numbers the
+//! `--kernels fast` layer exists to move.
+//!
+//! Two comparisons, parity asserted before any timing:
+//!
+//! * **Fused dequant-matmul** (int2 and int4): consuming the packed
+//!   bytes directly, one cache-hot tile at a time, against (a) the
+//!   honest baseline of dequantize-to-f32 then dense matmul per call,
+//!   and (b) the resident-dense f64-accumulation matmul the reference
+//!   forward actually runs (weights pre-dequantized once).
+//! * **Structured rotation**: FWHT + sequency permutation through
+//!   [`R1Desc`] against the dense `[n, n]` rotation matmul.
+//!
+//! No artifacts needed; shapes follow the serving bench geometry.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gsr::model::forward::matmul;
+use gsr::model::{packed_matmul_into, PackedLinear, R1Desc};
+use gsr::rng::SplitMix64;
+use gsr::transform::{walsh, R1Kind};
+
+fn assert_close(fast: &[f32], reference: &[f32], tol: f32, what: &str) {
+    assert_eq!(fast.len(), reference.len(), "{what}: length");
+    for (a, b) in fast.iter().zip(reference) {
+        assert!(
+            (a - b).abs() <= tol * b.abs().max(1.0),
+            "{what}: parity failed before timing ({a} vs {b})"
+        );
+    }
+}
+
+fn bench_packed(bits: u32) {
+    let (t, c, h, group) = (32usize, 512usize, 512usize, 64usize);
+    let mut rng = SplitMix64::new(0xBE << bits);
+    let qmax = (1u64 << bits) - 1;
+    let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(qmax + 1) as i32).collect();
+    let ng = c / group;
+    let scale: Vec<f32> = (0..ng * h).map(|_| 0.01 + rng.next_f64() as f32 * 0.05).collect();
+    let zero: Vec<f32> = (0..ng * h).map(|_| rng.next_below(qmax + 1) as f32).collect();
+    let w = PackedLinear::from_codes(&codes, c, h, group, scale, zero, bits).unwrap();
+    let x: Vec<f32> = (0..t * c).map(|_| rng.next_normal() as f32).collect();
+
+    let resident = w.dequant_dense();
+    let want = matmul(&x, &resident, t, c, h);
+    let (mut out, mut acc) = (Vec::new(), Vec::new());
+    packed_matmul_into(&x, &w, t, &mut out, &mut acc);
+    assert_close(&out, &want, 1e-4, &format!("int{bits} fused matmul"));
+
+    let dequant = common::time_it(&format!("int{bits} dequant-to-f32 + dense matmul"), 2, 7, || {
+        matmul(&x, &w.dequant_dense(), t, c, h)
+    });
+    let dense = common::time_it(&format!("int{bits} resident dense matmul (f64 acc)"), 2, 7, || {
+        matmul(&x, &resident, t, c, h)
+    });
+    let fused = common::time_it(&format!("int{bits} packed fused matmul"), 2, 7, || {
+        packed_matmul_into(&x, &w, t, &mut out, &mut acc);
+        out.len()
+    });
+    println!(
+        "  int{bits} [{t}x{c}]@[{c}x{h}]: fused {:.2}x vs dequant-to-f32, {:.2}x vs resident \
+         dense\n",
+        dequant.as_secs_f64() / fused.as_secs_f64().max(1e-12),
+        dense.as_secs_f64() / fused.as_secs_f64().max(1e-12),
+    );
+    assert!(
+        fused < dequant,
+        "int{bits}: the fused kernel must beat the dequant-to-f32 baseline \
+         ({fused:?} vs {dequant:?})"
+    );
+}
+
+fn bench_rotation() {
+    let (rows, n) = (256usize, 256usize);
+    let w = walsh(n);
+    let desc = R1Desc::from_mat(R1Kind::GW, n, &w).expect("walsh recognized");
+    let dense: Vec<f32> = w.data.iter().map(|&v| v as f32).collect();
+    let mut rng = SplitMix64::new(0x40);
+    let x: Vec<f32> = (0..rows * n).map(|_| rng.next_normal() as f32).collect();
+
+    let want = matmul(&x, &dense, rows, n, n);
+    let mut got = x.clone();
+    let mut tmp = Vec::new();
+    desc.forward_rows(&mut got, &mut tmp);
+    assert_close(&got, &want, 1e-3, "fwht rotation");
+
+    let dense_t = common::time_it("rotation dense matmul [256, 256x256]", 2, 7, || {
+        matmul(&x, &dense, rows, n, n)
+    });
+    let fwht_t = common::time_it("rotation fwht + sequency perm        ", 2, 7, || {
+        let mut y = x.clone();
+        desc.forward_rows(&mut y, &mut tmp);
+        y.len()
+    });
+    println!(
+        "  rotation [{rows}x{n}]: fwht {:.2}x vs dense matmul\n",
+        dense_t.as_secs_f64() / fwht_t.as_secs_f64().max(1e-12),
+    );
+}
+
+fn main() {
+    bench_packed(2);
+    bench_packed(4);
+    bench_rotation();
+}

@@ -156,6 +156,17 @@ mod tests {
     }
 
     #[test]
+    fn kernels_is_a_valued_option() {
+        // `--kernels fast` must parse as a value, not swallow `fast`
+        // into the flag list — the kernel-mode dispatch depends on it.
+        let a = parse("serve --backend native --kernels fast --threads 2");
+        assert_eq!(a.opt("kernels"), Some("fast"));
+        assert!(!a.has_flag("kernels"));
+        let b = parse("quantize-native --kernels reference");
+        assert_eq!(b.opt("kernels"), Some("reference"));
+    }
+
+    #[test]
     fn threads_default_is_available_parallelism() {
         let a = parse("search");
         assert!(a.opt_threads() >= 1);

@@ -31,7 +31,9 @@ use std::thread::JoinHandle;
 
 use super::{Backend, BackendSet, Generation};
 use crate::config::cli::resolve_threads;
-use crate::model::{DecodePar, DenseModel, ForwardScratch, KvCache, ShardJob, ShardRunner};
+use crate::model::{
+    DecodePar, DenseModel, ForwardScratch, KernelMode, KvCache, ShardJob, ShardRunner,
+};
 
 type Job = Box<dyn FnOnce(&mut ForwardScratch) + Send + 'static>;
 
@@ -220,6 +222,9 @@ impl NativeBackend {
         assert!(seq > 0, "backend seq must be positive");
         let label = match &*model {
             DenseModel::Fp { .. } => "native-fp",
+            DenseModel::Quant { params, .. } if params.kernels == KernelMode::Fast => {
+                "native-quant-fast"
+            }
             DenseModel::Quant { .. } => "native-quant",
         };
         Self { model, pool, label, batch, seq }

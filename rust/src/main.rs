@@ -71,16 +71,18 @@ fn print_help() {
                  [--plan F [--calib F]]  (native) quantize + serve a searched\n\
                                          heterogeneous rotation plan in-process\n\
                  [--variants A,B] [--batch N] [--threads N] [--bits N]\n\
+                 [--kernels reference|fast] (native) quantized-kernel mode\n\
            generate [--requests N]     greedy KV-cached decoding demo load\n\
                  [--prompt-len N] [--max-new N]   (native backend only)\n\
                  [--plan F [--calib F]] [--variants A,B] [--batch N]\n\
-                 [--threads N] [--bits N]\n\
+                 [--threads N] [--bits N] [--kernels reference|fast]\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
            quantize-native [--r1 K --r4 K --seed N]\n\
                                        pure-Rust W2 quantization (no Python)\n\
                            [--plan F]  ...from a searched rotation plan JSON\n\
                            [--calib F] ...with real Hessians from `calibrate`\n\
                            [--bits N] [--windows N]\n\
+                           [--kernels reference|fast] eval kernel mode\n\
            search [--out F] [--calib F] training-free per-layer rotation search\n\
            calibrate [--out F]         stream corpus activations -> Hessian\n\
                                        artifact for --calib (reusable)\n\
@@ -215,6 +217,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                         .to_string(),
                 );
             }
+            if args.opt("kernels").is_some() {
+                return Err(
+                    "--kernels needs `--backend native`: kernel-mode selection only \
+                     applies to the native execution path"
+                        .to_string(),
+                );
+            }
             let variants: Vec<String> = match args.opt("variants") {
                 Some(list) => list.split(',').map(String::from).collect(),
                 None => {
@@ -276,6 +285,7 @@ fn start_native_server(
     use std::sync::Arc;
 
     let (b, s) = (policy.max_batch, arts.seq);
+    let kernels = kernel_mode_from_args(args)?;
     let pool = Arc::new(ExecPool::new(args.opt_threads()));
     let mut set = NativeSet::new();
     let mut variants = vec!["fp".to_string()];
@@ -295,7 +305,8 @@ fn start_native_server(
                 .variant(name)
                 .ok_or_else(|| format!("unknown variant {name}"))?
                 .clone();
-            let qp = QuantParams::load(&arts.weights_path(&meta), &arts.cfg, meta.r4_kind())?;
+            let mut qp = QuantParams::load(&arts.weights_path(&meta), &arts.cfg, meta.r4_kind())?;
+            qp.kernels = kernels;
             let model = DenseModel::Quant {
                 cfg: arts.cfg.clone(),
                 params: qp,
@@ -319,8 +330,9 @@ fn start_native_server(
         let bits = args.opt_usize("bits", 2) as u32;
         let rots = build_plan_rotations(&arts.cfg, &plan)?;
         let t0 = std::time::Instant::now();
-        let (qp, sse, _) =
+        let (mut qp, sse, _) =
             quantize_native_plan_with(&fp, &arts.cfg, &rots, bits, calib.as_ref())?;
+        qp.kernels = kernels;
         println!(
             "quantized searched plan {} for serving in {:?} ({}; weight SSE {sse:.2})",
             tables::plan_summary(&plan),
@@ -430,6 +442,17 @@ fn render_tokens(tokens: &[i32]) -> String {
         .collect()
 }
 
+/// Resolve `--kernels {reference,fast}` (default `reference`). The
+/// reference mode is the bit-exact f64-accumulation path; `fast`
+/// switches quantized variants to the packed-domain kernels
+/// (`model::kernels`), which relax accumulation order within the
+/// tolerance pinned by `tests/kernels.rs`.
+fn kernel_mode_from_args(args: &Args) -> Result<gsr::model::KernelMode, String> {
+    let raw = args.opt_or("kernels", "reference");
+    gsr::model::KernelMode::parse(raw)
+        .ok_or_else(|| format!("bad --kernels {raw:?} (reference|fast)"))
+}
+
 /// Resolve the rotation plan a `--calib`-capable subcommand works in:
 /// an explicit `--plan` file, or the uniform plan the `--r1/--r4/--seed`
 /// flags describe. `gsr calibrate` and the `--calib` consumers share
@@ -487,8 +510,9 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
         rots.distinct
     );
     let t0 = std::time::Instant::now();
-    let (qp, sse, _) =
+    let (mut qp, sse, _) =
         quantize_native_plan_with(&fp, &arts.cfg, &rots, bits, calib.as_ref())?;
+    qp.kernels = kernel_mode_from_args(args)?;
     println!("quantized {} linears in {:?}; weight SSE {sse:.2}",
         arts.cfg.n_layers * 7, t0.elapsed());
     let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };

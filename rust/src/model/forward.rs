@@ -39,6 +39,7 @@
 //! bit-transparent too — `--threads` never changes decode logits.
 
 use super::config::{ModelCfg, R4Kind};
+use super::kernels::{packed_matmul_cols, packed_matmul_into, KernelMode, PackedLinear, R1Desc};
 use super::weights::{FpParams, QuantParams};
 
 /// A runnable dense model: fp checkpoint or dequantized variant.
@@ -520,6 +521,55 @@ fn mm(
     Ok(())
 }
 
+/// Quant-path linear: the packed fused kernel when the variant runs in
+/// [`KernelMode::Fast`] and a packed form exists (serial or
+/// column-sharded — the packed kernel's column partitions reassemble to
+/// identical values by construction), the dense reference [`mm`]
+/// otherwise. Callers pass `packed: None` in reference mode, so that
+/// path executes byte-for-byte the pre-kernel-layer code.
+#[allow(clippy::too_many_arguments)]
+fn mm_quant(
+    par: Option<&DecodePar>,
+    packed: Option<&PackedLinear>,
+    x: &[f32],
+    w: &[f32],
+    t: usize,
+    c: usize,
+    h: usize,
+    out: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+) -> Result<(), String> {
+    let pl = match packed {
+        Some(pl) => pl,
+        None => return mm(par, x, w, t, c, h, out, acc),
+    };
+    debug_assert_eq!((pl.c, pl.h), (c, h));
+    if let Some(p) = par {
+        if let Some(ranges) = shard_ranges(h, MIN_SHARD_COLS, p.shards) {
+            let jobs: Vec<ShardJob<'_>> = ranges
+                .iter()
+                .map(|&(jb, je)| {
+                    let x = &*x;
+                    Box::new(move || packed_matmul_cols(x, pl, t, jb, je)) as ShardJob<'_>
+                })
+                .collect();
+            let parts = p.runner.run(jobs)?;
+            out.clear();
+            out.resize(t * h, 0.0);
+            for (part, &(jb, je)) in parts.iter().zip(&ranges) {
+                let wj = je - jb;
+                for row in 0..t {
+                    out[row * h + jb..row * h + je]
+                        .copy_from_slice(&part[row * wj..(row + 1) * wj]);
+                }
+            }
+            return Ok(());
+        }
+    }
+    packed_matmul_into(x, pl, t, out, acc);
+    Ok(())
+}
+
 fn rmsnorm_rows(x: &mut [f32], d: usize, eps: f64) {
     for row in x.chunks_mut(d) {
         let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
@@ -559,8 +609,9 @@ fn act_fake_quant(x: &mut [f32], group: usize, bits: u32) {
     }
 }
 
-/// Orthonormal in-place FWHT over an f32 slice.
-fn fwht_f32(x: &mut [f32]) {
+/// Orthonormal in-place FWHT over an f32 slice (shared with the fast
+/// kernel layer's structured-rotation application).
+pub(crate) fn fwht_f32(x: &mut [f32]) {
     let n = x.len();
     let mut h = 1;
     while h < n {
@@ -623,6 +674,25 @@ fn apply_rope(x: &mut [f32], t: usize, n_heads: usize, dh: usize, cos: &[f32], s
                 x[off + i] = x1 * c - x2 * s;
                 x[off + half + i] = x1 * s + x2 * c;
             }
+        }
+    }
+}
+
+/// Fast-path head rotation: per-head FWHT + signs via a verified
+/// [`R1Desc`] instead of the dense `[dh, dh]` matmul of
+/// [`rotate_heads`]. Same rotation, O(dh log dh) per head.
+fn rotate_heads_desc(
+    x: &mut [f32],
+    t: usize,
+    n_heads: usize,
+    dh: usize,
+    desc: &R1Desc,
+    tmp: &mut Vec<f32>,
+) {
+    for pos in 0..t {
+        for head in 0..n_heads {
+            let off = (pos * n_heads + head) * dh;
+            desc.forward_row(&mut x[off..off + dh], tmp);
         }
     }
 }
@@ -914,16 +984,26 @@ fn forward_quant_impl(
     let pos0 = kv.as_deref().map_or(0, |c| c.len);
     let ForwardScratch { x, xt, h, q, k, v, o, g, u, z, zd, acc, scores, cos, sin, head_tmp } =
         scratch;
+    // Fast mode routes linears through the packed fused kernel and
+    // structured rotations through FWHT descriptors; with it off every
+    // `pk(..)` is `None` and the loop below is the exact reference pass.
+    let fast = p.kernels == KernelMode::Fast;
     embed_into(x, &p.embed, tokens, d);
     rope_tables_into(pos0, t, dh, cfg.rope_base, cos, sin);
     for (l, layer) in p.layers.iter().enumerate() {
         // Heterogeneous plans: transition the residual stream from the
         // previous layer's R1 basis into this layer's (`x ← x R_{l-1}ᵀ R_l`).
         if let Some(tr) = &layer.basis_change {
-            mm(par, x, tr, t, d, d, xt, acc)?;
-            std::mem::swap(x, xt);
+            match &layer.basis_fast {
+                Some(bf) if fast => bf.apply_rows(x, head_tmp),
+                _ => {
+                    mm(par, x, tr, t, d, d, xt, acc)?;
+                    std::mem::swap(x, xt);
+                }
+            }
         }
         let w = |name: &str| layer.dense[name].as_slice();
+        let pk = |name: &str| if fast { layer.packed.get(name) } else { None };
         h.clear();
         h.extend_from_slice(x);
         rmsnorm_rows(h, d, cfg.norm_eps);
@@ -934,13 +1014,21 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::AttnIn, h, d);
         }
-        mm(par, h, w("wq"), t, d, d, q, acc)?;
-        mm(par, h, w("wk"), t, d, d, k, acc)?;
-        mm(par, h, w("wv"), t, d, d, v, acc)?;
+        mm_quant(par, pk("wq"), h, w("wq"), t, d, d, q, acc)?;
+        mm_quant(par, pk("wk"), h, w("wk"), t, d, d, k, acc)?;
+        mm_quant(par, pk("wv"), h, w("wv"), t, d, d, v, acc)?;
         apply_rope(q, t, nh, dh, cos, sin);
         apply_rope(k, t, nh, dh, cos, sin);
-        rotate_heads(q, t, nh, dh, &p.r3, head_tmp);
-        rotate_heads(k, t, nh, dh, &p.r3, head_tmp);
+        match &p.r3_fast {
+            Some(desc) if fast => {
+                rotate_heads_desc(q, t, nh, dh, desc, head_tmp);
+                rotate_heads_desc(k, t, nh, dh, desc, head_tmp);
+            }
+            _ => {
+                rotate_heads(q, t, nh, dh, &p.r3, head_tmp);
+                rotate_heads(k, t, nh, dh, &p.r3, head_tmp);
+            }
+        }
         match kv.as_deref_mut() {
             Some(cache) => {
                 let lk = &mut cache.layers[l];
@@ -957,7 +1045,7 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::OIn, o, d);
         }
-        mm(par, o, w("wo"), t, d, d, zd, acc)?;
+        mm_quant(par, pk("wo"), o, w("wo"), t, d, d, zd, acc)?;
         add_assign(x, zd);
         h.clear();
         h.extend_from_slice(x);
@@ -969,8 +1057,8 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::FfnIn, h, d);
         }
-        mm(par, h, w("wgate"), t, d, cfg.d_ffn, g, acc)?;
-        mm(par, h, w("wup"), t, d, cfg.d_ffn, u, acc)?;
+        mm_quant(par, pk("wgate"), h, w("wgate"), t, d, cfg.d_ffn, g, acc)?;
+        mm_quant(par, pk("wup"), h, w("wup"), t, d, cfg.d_ffn, u, acc)?;
         z.clear();
         z.extend(g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv));
         // Online R4: fast (grouped) Hadamard + signs — the L1 kernel's
@@ -1009,7 +1097,7 @@ fn forward_quant_impl(
         if let Some(tp) = tap.as_mut() {
             tp.record(l, TapSite::DownIn, z, cfg.d_ffn);
         }
-        mm(par, z, w("wdown"), t, cfg.d_ffn, d, zd, acc)?;
+        mm_quant(par, pk("wdown"), z, w("wdown"), t, cfg.d_ffn, d, zd, acc)?;
         add_assign(x, zd);
     }
     rmsnorm_rows(x, d, cfg.norm_eps);

@@ -1,0 +1,856 @@
+//! The packed-domain fast kernel layer (`--kernels fast`).
+//!
+//! The reference forward dequantizes every packed linear into a dense
+//! f32 matrix up front and runs all matmuls with bit-exact f64
+//! accumulation. That is the determinism contract the serving stack is
+//! pinned on — and it pays full dense price for weights that are 2 or 4
+//! bits wide. This module is the opt-in alternative:
+//!
+//! * [`PackedLinear`] keeps the `pack2`/`pack4` byte layout resident and
+//!   [`packed_matmul_into`] consumes it directly, dequantizing one
+//!   `PK_BK × PK_BJ` tile at a time into a stack buffer that stays
+//!   cache-hot while every activation row sweeps it. Inner products run
+//!   in f32 (AVX2+FMA when the `simd` feature is on and the CPU has it;
+//!   a scalar loop otherwise), with per-tile partials widened into an
+//!   f64 accumulator across k-tiles — so the relaxed-order error stays
+//!   bounded by one ≤`PK_BK`-term f32 reduction per tile.
+//! * [`R1Desc`] recognizes the structure of the dense rotation tensors
+//!   (randomized Hadamard, sequency-ordered Walsh, and their
+//!   block-diagonal local forms, the paper's GSR) and applies them in
+//!   O(n log n) via the FWHT plus sign flips / sequency permutations,
+//!   replacing the dense per-head R3 matmul and the dense
+//!   residual-stream basis-change matmul of heterogeneous plans.
+//!
+//! Nothing here runs unless a variant opts in through
+//! [`KernelMode::Fast`]; the reference path stays byte-identical. The
+//! conformance bound the fast path must stay inside is pinned by
+//! `tests/kernels.rs` ([`FAST_LOGIT_TOL`]).
+
+use crate::quant::{pack2, pack4, QuantizedLinear};
+use crate::transform::{walsh_permutation, Mat, R1Kind};
+
+use super::forward::fwht_f32;
+
+// ---------------------------------------------------------------------------
+// Kernel mode
+// ---------------------------------------------------------------------------
+
+/// Which kernel implementation a quantized variant runs its linears and
+/// online rotations through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Bit-exact f64-accumulation dense kernels — the default, and the
+    /// arithmetic every parity guarantee in the repo is stated against.
+    #[default]
+    Reference,
+    /// Packed-domain fused dequant-matmul + FWHT rotations. Relaxes the
+    /// accumulation order (f32 tile partials); logits stay within the
+    /// test-pinned [`FAST_LOGIT_TOL`] of the reference forward.
+    Fast,
+}
+
+impl KernelMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Reference => "reference",
+            KernelMode::Fast => "fast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "reference" => Some(KernelMode::Reference),
+            "fast" => Some(KernelMode::Fast),
+            _ => None,
+        }
+    }
+}
+
+/// Pinned conformance bound for the fast path: per-logit absolute error
+/// versus the f64-reference forward, normalized by `max(1, |logit|)`.
+/// The observed error is ~1e-5 (one f32 tile reduction per k-tile, f64
+/// across tiles); the bound leaves two orders of margin so it fails on
+/// wrong math, not on benign reassociation.
+pub const FAST_LOGIT_TOL: f32 = 1e-3;
+
+// ---------------------------------------------------------------------------
+// Packed linear storage
+// ---------------------------------------------------------------------------
+
+/// Code width of a packed linear.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackedBits {
+    /// 2-bit codes, 4 per byte (`pack2` layout).
+    B2,
+    /// 4-bit codes, 2 per byte (`pack4` layout).
+    B4,
+}
+
+impl PackedBits {
+    pub fn bits(&self) -> u32 {
+        match self {
+            PackedBits::B2 => 2,
+            PackedBits::B4 => 4,
+        }
+    }
+}
+
+/// A group-quantized linear kept in its packed byte form: codes in the
+/// `pack2`/`pack4` layout plus the per-group affine, everything the
+/// fused kernel needs to dequantize tiles on the fly.
+#[derive(Debug, Clone)]
+pub struct PackedLinear {
+    pub bits: PackedBits,
+    /// Input channels.
+    pub c: usize,
+    /// Output channels.
+    pub h: usize,
+    /// Quantization group (consecutive input channels).
+    pub group: usize,
+    /// Packed codes: `[C/4, H]` bytes for 2-bit, `[C/2, H]` for 4-bit.
+    pub data: Vec<u8>,
+    /// Per-group scales, `[C/G, H]`.
+    pub scale: Vec<f32>,
+    /// Per-group zero points, `[C/G, H]`.
+    pub zero: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Pack integer codes (the quantizer's output) into kernel form.
+    /// Returns `None` for unsupported bit widths or geometry the byte
+    /// layouts cannot represent — callers then simply keep the dense
+    /// path for that linear.
+    pub fn from_codes(
+        codes: &[i32],
+        c: usize,
+        h: usize,
+        group: usize,
+        scale: Vec<f32>,
+        zero: Vec<f32>,
+        bits: u32,
+    ) -> Option<PackedLinear> {
+        debug_assert_eq!(codes.len(), c * h);
+        debug_assert_eq!(scale.len(), c / group * h);
+        debug_assert_eq!(zero.len(), c / group * h);
+        let (bits, data) = match bits {
+            2 if c % 4 == 0 => (PackedBits::B2, pack2(codes, c, h)),
+            4 if c % 2 == 0 => (PackedBits::B4, pack4(codes, c, h)),
+            _ => return None,
+        };
+        Some(PackedLinear { bits, c, h, group, data, scale, zero })
+    }
+
+    /// Pack a [`QuantizedLinear`] straight out of the native pipeline.
+    pub fn from_qlinear(q: &QuantizedLinear) -> Option<PackedLinear> {
+        let scale: Vec<f32> = q.scale.iter().map(|&s| s as f32).collect();
+        let zero: Vec<f32> = q.zero.iter().map(|&z| z as f32).collect();
+        PackedLinear::from_codes(&q.codes, q.c, q.h, q.group, scale, zero, q.bits)
+    }
+
+    /// Wrap an already-packed 2-bit artifact blob (the AOT weight
+    /// format) without a round trip through integer codes.
+    pub fn from_packed2(
+        data: &[u8],
+        c: usize,
+        h: usize,
+        group: usize,
+        scale: &[f32],
+        zero: &[f32],
+    ) -> PackedLinear {
+        assert_eq!(data.len(), c / 4 * h);
+        PackedLinear {
+            bits: PackedBits::B2,
+            c,
+            h,
+            group,
+            data: data.to_vec(),
+            scale: scale.to_vec(),
+            zero: zero.to_vec(),
+        }
+    }
+
+    /// Code of input channel `k`, output column `j`.
+    #[inline]
+    fn code(&self, k: usize, j: usize) -> u8 {
+        match self.bits {
+            PackedBits::B2 => (self.data[(k >> 2) * self.h + j] >> (2 * (k & 3))) & 3,
+            PackedBits::B4 => (self.data[(k >> 1) * self.h + j] >> (4 * (k & 1))) & 0xF,
+        }
+    }
+
+    /// Dequantize to a dense `[C, H]` f32 matrix — the baseline the
+    /// fused kernel is benched against, and (for artifact blobs) exactly
+    /// the dense tensor `QuantParams::load` materializes.
+    pub fn dequant_dense(&self) -> Vec<f32> {
+        let mut w = vec![0f32; self.c * self.h];
+        for k in 0..self.c {
+            let grow = k / self.group * self.h;
+            for j in 0..self.h {
+                let code = self.code(k, j) as f32;
+                w[k * self.h + j] = (code - self.zero[grow + j]) * self.scale[grow + j];
+            }
+        }
+        w
+    }
+
+    /// Dequantize the `(kb..ke, jb..je)` tile into `tile`, row-major
+    /// `[ke-kb, je-jb]`. The per-channel byte row and affine row are
+    /// contiguous slices, so the unpack walks memory linearly.
+    fn dequant_tile(&self, kb: usize, ke: usize, jb: usize, je: usize, tile: &mut [f32]) {
+        let bj = je - jb;
+        let h = self.h;
+        for k in kb..ke {
+            let grow = k / self.group * h;
+            let dst = &mut tile[(k - kb) * bj..(k - kb) * bj + bj];
+            let ss = &self.scale[grow + jb..grow + je];
+            let zz = &self.zero[grow + jb..grow + je];
+            match self.bits {
+                PackedBits::B2 => {
+                    let src = &self.data[(k >> 2) * h + jb..(k >> 2) * h + je];
+                    let shift = 2 * (k & 3) as u32;
+                    for (((d, &b), &s), &z) in dst.iter_mut().zip(src).zip(ss).zip(zz) {
+                        *d = (((b >> shift) & 3) as f32 - z) * s;
+                    }
+                }
+                PackedBits::B4 => {
+                    let src = &self.data[(k >> 1) * h + jb..(k >> 1) * h + je];
+                    let shift = 4 * (k & 1) as u32;
+                    for (((d, &b), &s), &z) in dst.iter_mut().zip(src).zip(ss).zip(zz) {
+                        *d = (((b >> shift) & 0xF) as f32 - z) * s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused dequant-matmul
+// ---------------------------------------------------------------------------
+
+/// Tile sizes of the packed kernel (match the reference matmul's so the
+/// cache behavior is comparable; the dequant buffer is 32 KiB of f32).
+const PK_BK: usize = 64;
+const PK_BJ: usize = 128;
+
+/// Is the AVX2+FMA inner loop usable on this build and CPU?
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn simd_enabled() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn simd_enabled() -> bool {
+    false
+}
+
+/// Scalar f32 tile accumulation: `part[j] += Σ_k xr[k] · tile[k, j]`.
+fn accumulate_tile_scalar(xr: &[f32], tile: &[f32], bj: usize, part: &mut [f32]) {
+    for (kk, &xv) in xr.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let trow = &tile[kk * bj..(kk + 1) * bj];
+        for (p, &tv) in part.iter_mut().zip(trow) {
+            *p += xv * tv;
+        }
+    }
+}
+
+/// AVX2+FMA tile accumulation — same reduction as the scalar loop, 8
+/// lanes at a time.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` are available.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn accumulate_tile_avx2(xr: &[f32], tile: &[f32], bj: usize, part: &mut [f32]) {
+    use std::arch::x86_64::*;
+    for (kk, &xv) in xr.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let xvv = _mm256_set1_ps(xv);
+        let trow = tile.as_ptr().add(kk * bj);
+        let mut j = 0;
+        while j + 8 <= bj {
+            let tv = _mm256_loadu_ps(trow.add(j));
+            let pv = _mm256_loadu_ps(part.as_ptr().add(j));
+            _mm256_storeu_ps(part.as_mut_ptr().add(j), _mm256_fmadd_ps(xvv, tv, pv));
+            j += 8;
+        }
+        while j < bj {
+            *part.get_unchecked_mut(j) += xv * *tile.get_unchecked(kk * bj + j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn accumulate_tile(use_simd: bool, xr: &[f32], tile: &[f32], bj: usize, part: &mut [f32]) {
+    if use_simd {
+        // SAFETY: `use_simd` is only true after runtime detection.
+        unsafe { accumulate_tile_avx2(xr, tile, bj, part) }
+    } else {
+        accumulate_tile_scalar(xr, tile, bj, part);
+    }
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn accumulate_tile(_use_simd: bool, xr: &[f32], tile: &[f32], bj: usize, part: &mut [f32]) {
+    accumulate_tile_scalar(xr, tile, bj, part);
+}
+
+/// The one fused kernel both packed entry points run: accumulate
+/// `x[T,C] @ dequant(w)[C, jb0..je0]` into `acc` (packed
+/// `[T, je0-jb0]`, assumed zeroed). Each `(k, j)` tile of `w` is
+/// dequantized once into a stack buffer; every activation row then
+/// reduces against it in f32 and the ≤[`PK_BK`]-term tile partial is
+/// widened into the f64 accumulator. Column partitions reassemble to
+/// the same values by construction — the per-element reduction tree
+/// does not depend on `(jb0, je0)`.
+fn packed_matmul_core(
+    x: &[f32],
+    w: &PackedLinear,
+    t: usize,
+    jb0: usize,
+    je0: usize,
+    acc: &mut [f64],
+) {
+    let (c, wj) = (w.c, je0 - jb0);
+    debug_assert_eq!(x.len(), t * c);
+    debug_assert_eq!(acc.len(), t * wj);
+    let use_simd = simd_enabled();
+    let mut tile = [0f32; PK_BK * PK_BJ];
+    let mut part = [0f32; PK_BJ];
+    for kb in (0..c).step_by(PK_BK) {
+        let ke = (kb + PK_BK).min(c);
+        for jb in (jb0..je0).step_by(PK_BJ) {
+            let je = (jb + PK_BJ).min(je0);
+            let bj = je - jb;
+            w.dequant_tile(kb, ke, jb, je, &mut tile[..(ke - kb) * bj]);
+            for row in 0..t {
+                let xr = &x[row * c + kb..row * c + ke];
+                part[..bj].fill(0.0);
+                accumulate_tile(use_simd, xr, &tile[..(ke - kb) * bj], bj, &mut part[..bj]);
+                let arow = &mut acc[row * wj + (jb - jb0)..row * wj + (je - jb0)];
+                for (a, &p) in arow.iter_mut().zip(&part[..bj]) {
+                    *a += p as f64;
+                }
+            }
+        }
+    }
+}
+
+/// `out[T,H] = x[T,C] @ dequant(w)` through the fused packed kernel.
+/// Buffers follow the `matmul_into` convention (cleared and resized, so
+/// steady-state callers allocate nothing).
+pub fn packed_matmul_into(
+    x: &[f32],
+    w: &PackedLinear,
+    t: usize,
+    out: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+) {
+    acc.clear();
+    acc.resize(t * w.h, 0.0);
+    packed_matmul_core(x, w, t, 0, w.h, acc);
+    out.clear();
+    out.extend(acc.iter().map(|&a| a as f32));
+}
+
+/// Column-restricted packed matmul: `x[T,C] @ dequant(w)[C, jb0..je0]`,
+/// returned packed `[T, je0-jb0]` — the form one decode shard runs.
+pub fn packed_matmul_cols(
+    x: &[f32],
+    w: &PackedLinear,
+    t: usize,
+    jb0: usize,
+    je0: usize,
+) -> Vec<f32> {
+    let mut acc = vec![0f64; t * (je0 - jb0)];
+    packed_matmul_core(x, w, t, jb0, je0, &mut acc);
+    acc.iter().map(|&a| a as f32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fast structured rotations
+// ---------------------------------------------------------------------------
+
+/// A structured-rotation descriptor: the information needed to apply a
+/// dense R1-family rotation (or its transpose) in O(n log n) — FWHT
+/// butterflies plus column signs (randomized Hadamard kinds) or the
+/// sequency permutation (Walsh kinds), per block for the local kinds.
+///
+/// Built by *recognizing* the structure in the dense tensor the model
+/// already carries ([`R1Desc::from_mat`] / [`R1Desc::from_dense_rht`]):
+/// recovery is verified entry-by-entry against the closed form, so a
+/// tensor that is not exactly the claimed structure yields `None` and
+/// the caller keeps the dense matmul. That makes the fast rotation path
+/// impossible to enable on mismatched data.
+#[derive(Debug, Clone)]
+pub struct R1Desc {
+    kind: R1Kind,
+    /// Transform size of one block (= `n` for the global kinds).
+    block: usize,
+    /// Total dimension.
+    n: usize,
+    /// Column signs of one block (Hadamard kinds; empty for Walsh kinds).
+    signs: Vec<f32>,
+    /// `walsh_permutation(block)` (Walsh kinds; empty for Hadamard kinds).
+    perm: Vec<usize>,
+}
+
+/// `(-1)^popcount(i & j)` — the Sylvester Hadamard sign closed form.
+#[inline]
+fn hadamard_sign(i: usize, j: usize) -> f64 {
+    if (i & j).count_ones() % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+impl R1Desc {
+    pub fn kind(&self) -> R1Kind {
+        self.kind
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Recognize the structure of a dense f64 rotation matrix of the
+    /// given `kind` / `block`. Verification is exact: every entry must
+    /// equal the closed-form reconstruction bit for bit (the builders in
+    /// `transform` produce entries of exactly `±1/√block` and exact
+    /// zeros off-block), so `Some` means the fast application computes
+    /// the same rotation.
+    pub fn from_mat(kind: R1Kind, block: usize, m: &Mat) -> Option<R1Desc> {
+        let n = m.rows;
+        if m.cols != n || block == 0 || n % block != 0 || !block.is_power_of_two() {
+            return None;
+        }
+        if !kind.is_local() && block != n {
+            return None;
+        }
+        Self::recover(kind, block, n, |r, c| m[(r, c)])
+    }
+
+    /// [`R1Desc::from_mat`] for the f32 tensors the model carries (the
+    /// dense R3 blob): same exact verification, after casting the f64
+    /// closed form to f32 — which is precisely how those tensors were
+    /// produced.
+    pub fn from_dense_f32(kind: R1Kind, block: usize, r: &[f32], n: usize) -> Option<R1Desc> {
+        if r.len() != n * n || block == 0 || n % block != 0 || !block.is_power_of_two() {
+            return None;
+        }
+        if !kind.is_local() && block != n {
+            return None;
+        }
+        Self::recover_f32(kind, block, n, r)
+    }
+
+    /// Recognize a randomized-Hadamard tensor (`rht(n)` — the R3 shape).
+    pub fn from_dense_rht(r: &[f32], n: usize) -> Option<R1Desc> {
+        Self::from_dense_f32(R1Kind::GH, n, r, n)
+    }
+
+    /// Sign/permutation recovery + exact f64 verification.
+    fn recover(
+        kind: R1Kind,
+        block: usize,
+        n: usize,
+        at: impl Fn(usize, usize) -> f64,
+    ) -> Option<R1Desc> {
+        let scale = 1.0 / (block as f64).sqrt();
+        let (signs, perm) = Self::structure(kind, block, &at, scale)?;
+        // Verify every entry against the closed form.
+        for r in 0..n {
+            for c in 0..n {
+                if at(r, c) != Self::expect(kind, block, &signs, &perm, scale, r, c) {
+                    return None;
+                }
+            }
+        }
+        let signs32 = signs.iter().map(|&s| s as f32).collect();
+        Some(R1Desc { kind, block, n, signs: signs32, perm })
+    }
+
+    /// f32 variant of [`R1Desc::recover`]: the closed form is computed
+    /// in f64 and cast, matching how the dense f32 tensors were built.
+    fn recover_f32(kind: R1Kind, block: usize, n: usize, m: &[f32]) -> Option<R1Desc> {
+        let scale = 1.0 / (block as f64).sqrt();
+        let at = |r: usize, c: usize| m[r * n + c] as f64;
+        let (signs, perm) = Self::structure(kind, block, &at, scale)?;
+        for r in 0..n {
+            for c in 0..n {
+                let e = Self::expect(kind, block, &signs, &perm, scale, r, c) as f32;
+                if m[r * n + c] != e {
+                    return None;
+                }
+            }
+        }
+        let signs32 = signs.iter().map(|&s| s as f32).collect();
+        Some(R1Desc { kind, block, n, signs: signs32, perm })
+    }
+
+    /// Recover the candidate signs / permutation from the matrix data.
+    fn structure(
+        kind: R1Kind,
+        block: usize,
+        at: &impl Fn(usize, usize) -> f64,
+        scale: f64,
+    ) -> Option<(Vec<f64>, Vec<usize>)> {
+        match kind {
+            R1Kind::GH | R1Kind::LH => {
+                // Row 0 of a Hadamard block is all +scale, so entry
+                // (0, c) of the block is `scale · sign(c)`.
+                let mut signs = Vec::with_capacity(block);
+                for c in 0..block {
+                    let v = at(0, c);
+                    if v == scale {
+                        signs.push(1.0);
+                    } else if v == -scale {
+                        signs.push(-1.0);
+                    } else {
+                        return None;
+                    }
+                }
+                // Local kinds replicate one signed block; verification
+                // below checks the replication, nothing to recover here.
+                Some((signs, Vec::new()))
+            }
+            R1Kind::GW | R1Kind::GSR => Some((Vec::new(), walsh_permutation(block))),
+        }
+    }
+
+    /// Closed-form entry `(r, c)` of the structured matrix.
+    fn expect(
+        kind: R1Kind,
+        block: usize,
+        signs: &[f64],
+        perm: &[usize],
+        scale: f64,
+        r: usize,
+        c: usize,
+    ) -> f64 {
+        if r / block != c / block {
+            return 0.0;
+        }
+        let (br, bc) = (r % block, c % block);
+        match kind {
+            R1Kind::GH | R1Kind::LH => hadamard_sign(br, bc) * scale * signs[bc],
+            R1Kind::GW | R1Kind::GSR => hadamard_sign(perm[br], bc) * scale,
+        }
+    }
+
+    /// In-place `row ← row @ R` for one length-`n` row.
+    ///
+    /// Hadamard kinds: `x @ (H·diag(s)) = fwht(x) ⊙ s`. Walsh kinds
+    /// (`W` = `H` rows in sequency order, `H` symmetric):
+    /// `(x @ W)[j] = Σ_k x_k H[p_k, j]`, i.e. FWHT of `x` scattered
+    /// through the permutation. Local kinds apply per block.
+    pub fn forward_row(&self, row: &mut [f32], tmp: &mut Vec<f32>) {
+        debug_assert_eq!(row.len(), self.n);
+        for chunk in row.chunks_mut(self.block) {
+            match self.kind {
+                R1Kind::GH | R1Kind::LH => {
+                    fwht_f32(chunk);
+                    for (v, &s) in chunk.iter_mut().zip(&self.signs) {
+                        *v *= s;
+                    }
+                }
+                R1Kind::GW | R1Kind::GSR => {
+                    tmp.clear();
+                    tmp.resize(self.block, 0.0);
+                    for (k, &p) in self.perm.iter().enumerate() {
+                        tmp[p] = chunk[k];
+                    }
+                    fwht_f32(tmp);
+                    chunk.copy_from_slice(tmp);
+                }
+            }
+        }
+    }
+
+    /// In-place `row ← row @ Rᵀ` for one length-`n` row.
+    ///
+    /// Hadamard kinds: `x @ (H·diag(s))ᵀ = fwht(x ⊙ s)`. Walsh kinds:
+    /// `(x @ Wᵀ)[j] = fwht(x)[p_j]` — a gather after the transform.
+    pub fn inverse_row(&self, row: &mut [f32], tmp: &mut Vec<f32>) {
+        debug_assert_eq!(row.len(), self.n);
+        for chunk in row.chunks_mut(self.block) {
+            match self.kind {
+                R1Kind::GH | R1Kind::LH => {
+                    for (v, &s) in chunk.iter_mut().zip(&self.signs) {
+                        *v *= s;
+                    }
+                    fwht_f32(chunk);
+                }
+                R1Kind::GW | R1Kind::GSR => {
+                    fwht_f32(chunk);
+                    tmp.clear();
+                    tmp.extend(self.perm.iter().map(|&p| chunk[p]));
+                    chunk.copy_from_slice(tmp);
+                }
+            }
+        }
+    }
+
+    /// Apply [`R1Desc::forward_row`] to each row of `[rows, n]`.
+    pub fn forward_rows(&self, x: &mut [f32], tmp: &mut Vec<f32>) {
+        for row in x.chunks_mut(self.n) {
+            self.forward_row(row, tmp);
+        }
+    }
+
+    /// Apply [`R1Desc::inverse_row`] to each row of `[rows, n]`.
+    pub fn inverse_rows(&self, x: &mut [f32], tmp: &mut Vec<f32>) {
+        for row in x.chunks_mut(self.n) {
+            self.inverse_row(row, tmp);
+        }
+    }
+}
+
+/// Fast form of a heterogeneous plan's residual-stream basis change
+/// `x ← x · R_{l-1}ᵀ · R_l`: apply the previous layer's rotation
+/// transposed, then the next layer's forward — two O(n log n) passes
+/// replacing one dense `[d, d]` matmul.
+#[derive(Debug, Clone)]
+pub struct BasisFast {
+    pub prev: R1Desc,
+    pub next: R1Desc,
+}
+
+impl BasisFast {
+    /// Both descriptors, or `None` if either dense factor was not
+    /// recognized (the caller keeps the dense product matmul).
+    pub fn from_mats(
+        prev_kind: R1Kind,
+        prev_block: usize,
+        prev: &Mat,
+        next_kind: R1Kind,
+        next_block: usize,
+        next: &Mat,
+    ) -> Option<BasisFast> {
+        Some(BasisFast {
+            prev: R1Desc::from_mat(prev_kind, prev_block, prev)?,
+            next: R1Desc::from_mat(next_kind, next_block, next)?,
+        })
+    }
+
+    /// In-place basis change over `[rows, n]`.
+    pub fn apply_rows(&self, x: &mut [f32], tmp: &mut Vec<f32>) {
+        self.prev.inverse_rows(x, tmp);
+        self.next.forward_rows(x, tmp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::matmul;
+    use crate::rng::SplitMix64;
+    use crate::transform::build_r1;
+
+    fn rand_x(rng: &mut SplitMix64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    fn rand_packed(
+        rng: &mut SplitMix64,
+        c: usize,
+        h: usize,
+        group: usize,
+        bits: u32,
+    ) -> PackedLinear {
+        let qmax = (1i32 << bits) - 1;
+        let codes: Vec<i32> =
+            (0..c * h).map(|_| rng.next_below(qmax as u64 + 1) as i32).collect();
+        let ng = c / group;
+        let scale: Vec<f32> =
+            (0..ng * h).map(|_| 0.01 + rng.next_f64() as f32 * 0.05).collect();
+        let zero: Vec<f32> =
+            (0..ng * h).map(|_| rng.next_below(qmax as u64 + 1) as f32).collect();
+        PackedLinear::from_codes(&codes, c, h, group, scale, zero, bits).unwrap()
+    }
+
+    /// Per-element bound for a single fused matmul against the f64
+    /// reference: one f32 tile reduction per k-tile.
+    fn assert_close(fast: &[f32], reference: &[f32]) {
+        for (a, b) in fast.iter().zip(reference) {
+            let tol = 1e-4 * b.abs().max(1.0);
+            assert!((a - b).abs() <= tol, "fused kernel diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_dense_reference() {
+        let mut rng = SplitMix64::new(11);
+        let shapes: [(usize, usize, usize, usize, u32); 4] =
+            [(3, 64, 48, 16, 2), (2, 64, 130, 32, 2), (5, 128, 96, 64, 4), (1, 32, 200, 16, 4)];
+        for &(t, c, h, group, bits) in &shapes {
+            let w = rand_packed(&mut rng, c, h, group, bits);
+            let x = rand_x(&mut rng, t * c);
+            let dense = w.dequant_dense();
+            let reference = matmul(&x, &dense, t, c, h);
+            let (mut out, mut acc) = (Vec::new(), Vec::new());
+            packed_matmul_into(&x, &w, t, &mut out, &mut acc);
+            assert_close(&out, &reference);
+        }
+    }
+
+    #[test]
+    fn packed_cols_partition_reassembles() {
+        let mut rng = SplitMix64::new(12);
+        let (t, c, h, group) = (4, 64, 96, 16);
+        let w = rand_packed(&mut rng, c, h, group, 2);
+        let x = rand_x(&mut rng, t * c);
+        let (mut full, mut acc) = (Vec::new(), Vec::new());
+        packed_matmul_into(&x, &w, t, &mut full, &mut acc);
+        for &split in &[1usize, 33, 64, 95] {
+            let left = packed_matmul_cols(&x, &w, t, 0, split);
+            let right = packed_matmul_cols(&x, &w, t, split, h);
+            for row in 0..t {
+                for j in 0..h {
+                    let v = if j < split {
+                        left[row * split + j]
+                    } else {
+                        right[row * (h - split) + (j - split)]
+                    };
+                    let want = full[row * h + j];
+                    assert_eq!(v.to_bits(), want.to_bits(), "split {split} ({row},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_dense_matches_unpacked_affine() {
+        let mut rng = SplitMix64::new(13);
+        for bits in [2u32, 4] {
+            let (c, h, group) = (16usize, 6usize, 8usize);
+            let qmax = (1i32 << bits) - 1;
+            let codes: Vec<i32> =
+                (0..c * h).map(|_| rng.next_below(qmax as u64 + 1) as i32).collect();
+            let scale: Vec<f32> = (0..c / group * h).map(|_| 0.5).collect();
+            let zero: Vec<f32> = (0..c / group * h).map(|_| 1.0).collect();
+            let w = PackedLinear::from_codes(&codes, c, h, group, scale, zero, bits).unwrap();
+            let dense = w.dequant_dense();
+            for k in 0..c {
+                for j in 0..h {
+                    let expect = (codes[k * h + j] as f32 - 1.0) * 0.5;
+                    assert_eq!(dense[k * h + j], expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_codes_rejects_unsupported() {
+        let codes = vec![0i32; 6 * 4];
+        let mk = |bits| {
+            PackedLinear::from_codes(&codes, 6, 4, 2, vec![1.0; 12], vec![0.0; 12], bits)
+        };
+        // 3-bit has no packed layout; 2-bit needs c % 4 == 0.
+        assert!(mk(3).is_none());
+        assert!(mk(2).is_none());
+        assert!(mk(4).is_some());
+    }
+
+    #[test]
+    fn r1_desc_recognizes_all_kinds_and_matches_dense() {
+        let (n, block) = (64usize, 16usize);
+        for kind in R1Kind::ALL {
+            let mut rng = SplitMix64::new(21);
+            let m = build_r1(kind, n, block, &mut rng);
+            let b = if kind.is_local() { block } else { n };
+            let desc = R1Desc::from_mat(kind, b, &m)
+                .unwrap_or_else(|| panic!("{kind} not recognized"));
+            let mut rng2 = SplitMix64::new(22);
+            let x: Vec<f32> = (0..n).map(|_| rng2.next_normal() as f32).collect();
+            // Dense reference in f64.
+            let xd: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let fwd = m.apply_right(&xd);
+            let inv = m.transpose().apply_right(&xd);
+            let mut tmp = Vec::new();
+            let mut got_fwd = x.clone();
+            desc.forward_row(&mut got_fwd, &mut tmp);
+            let mut got_inv = x.clone();
+            desc.inverse_row(&mut got_inv, &mut tmp);
+            for (a, b) in got_fwd.iter().zip(&fwd) {
+                assert!((*a as f64 - b).abs() < 1e-5, "{kind} forward: {a} vs {b}");
+            }
+            for (a, b) in got_inv.iter().zip(&inv) {
+                assert!((*a as f64 - b).abs() < 1e-5, "{kind} inverse: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn r1_desc_rejects_non_structured_matrix() {
+        let mut rng = SplitMix64::new(31);
+        let mut m = build_r1(R1Kind::GH, 16, 16, &mut rng);
+        m[(3, 5)] += 0.25; // break the structure
+        assert!(R1Desc::from_mat(R1Kind::GH, 16, &m).is_none());
+        // Wrong claimed kind must also be rejected: a Walsh matrix is a
+        // row permutation of the Hadamard, not a column-signed one.
+        let w = build_r1(R1Kind::GW, 16, 16, &mut SplitMix64::new(1));
+        assert!(R1Desc::from_mat(R1Kind::GH, 16, &w).is_none());
+    }
+
+    #[test]
+    fn rht_sign_recovery_from_f32() {
+        let n = 16;
+        let mut rng = SplitMix64::new(41);
+        let m = crate::transform::rht(n, &mut rng);
+        let r32: Vec<f32> = m.data.iter().map(|&v| v as f32).collect();
+        let desc = R1Desc::from_dense_rht(&r32, n).expect("rht recognized");
+        let mut rng2 = SplitMix64::new(42);
+        let x: Vec<f32> = (0..n).map(|_| rng2.next_normal() as f32).collect();
+        let xd: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want = m.apply_right(&xd);
+        let mut got = x;
+        let mut tmp = Vec::new();
+        desc.forward_row(&mut got, &mut tmp);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+        // A perturbed tensor is rejected.
+        let mut bad = r32;
+        bad[7] = 0.123;
+        assert!(R1Desc::from_dense_rht(&bad, n).is_none());
+    }
+
+    #[test]
+    fn basis_fast_matches_dense_product() {
+        let n = 64;
+        let prev = build_r1(R1Kind::LH, n, 32, &mut SplitMix64::new(51));
+        let next = build_r1(R1Kind::GSR, n, 16, &mut SplitMix64::new(52));
+        let bf = BasisFast::from_mats(R1Kind::LH, 32, &prev, R1Kind::GSR, 16, &next).unwrap();
+        let product = prev.transpose().matmul(&next);
+        let mut rng = SplitMix64::new(53);
+        let x: Vec<f32> = (0..2 * n).map(|_| rng.next_normal() as f32).collect();
+        let mut got = x.clone();
+        let mut tmp = Vec::new();
+        bf.apply_rows(&mut got, &mut tmp);
+        for row in 0..2 {
+            let xd: Vec<f64> = x[row * n..(row + 1) * n].iter().map(|&v| v as f64).collect();
+            let want = product.apply_right(&xd);
+            for (a, b) in got[row * n..(row + 1) * n].iter().zip(&want) {
+                assert!((*a as f64 - b).abs() < 1e-5, "row {row}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_mode_parse_roundtrip() {
+        for mode in [KernelMode::Reference, KernelMode::Fast] {
+            assert_eq!(KernelMode::parse(mode.as_str()), Some(mode));
+        }
+        assert_eq!(KernelMode::parse("FAST"), Some(KernelMode::Fast));
+        assert_eq!(KernelMode::parse("nope"), None);
+        assert_eq!(KernelMode::default(), KernelMode::Reference);
+    }
+}

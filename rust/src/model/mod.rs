@@ -13,11 +13,16 @@
 
 pub mod config;
 pub mod forward;
+pub mod kernels;
 pub mod weights;
 
 pub use config::{tokens_in_vocab, ModelCfg, ParamSpec, R4Kind};
 pub use forward::{
     forward_quant_tapped, forward_quant_tapped_with, ActivationTap, DecodePar, DenseModel,
     ForwardScratch, KvCache, ShardJob, ShardRunner, TapSite,
+};
+pub use kernels::{
+    packed_matmul_cols, packed_matmul_into, BasisFast, KernelMode, PackedBits, PackedLinear,
+    R1Desc, FAST_LOGIT_TOL,
 };
 pub use weights::{FpParams, LayerR4, QuantParams};

@@ -5,6 +5,7 @@ use std::fs;
 use std::path::Path;
 
 use super::config::{Dtype, ModelCfg, ParamSpec, R4Kind};
+use super::kernels::{BasisFast, KernelMode, PackedLinear, R1Desc};
 use crate::quant::unpack2;
 use crate::rng::SplitMix64;
 
@@ -156,6 +157,15 @@ pub struct QuantParams {
     pub r4_signs: Vec<f32>,
     pub r4_kind: R4Kind,
     pub layers: Vec<QuantLayer>,
+    /// Which kernel implementation the forward runs through. Defaults
+    /// to [`KernelMode::Reference`] (bit-exact f64 accumulation); the
+    /// execution layer flips this to `Fast` on `--kernels fast`.
+    pub kernels: KernelMode,
+    /// Fast-path form of `r3` (FWHT + signs), present when the dense
+    /// tensor was recognized as a randomized Hadamard — exact
+    /// verification happens at construction, see
+    /// [`R1Desc::from_dense_rht`].
+    pub r3_fast: Option<R1Desc>,
 }
 
 /// Per-layer online-R4 override used by heterogeneous rotation plans.
@@ -181,6 +191,13 @@ pub struct QuantLayer {
     pub basis_change: Option<Vec<f32>>,
     /// Per-layer online-R4 override; `None` = use the global fields.
     pub r4: Option<LayerR4>,
+    /// Packed-domain form of each linear (same key set as `dense` when
+    /// populated). Only consulted in [`KernelMode::Fast`]; a missing
+    /// entry falls back to the dense reference matmul.
+    pub packed: BTreeMap<String, PackedLinear>,
+    /// Fast-path form of `basis_change` (two structured O(n log n)
+    /// passes); built alongside it by the quantization pipeline.
+    pub basis_fast: Option<BasisFast>,
 }
 
 impl QuantParams {
@@ -192,6 +209,7 @@ impl QuantParams {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let mut dense = BTreeMap::new();
+            let mut packed_map = BTreeMap::new();
             for name in super::config::LINEARS {
                 let (c, h) = cfg.linear_shape(name);
                 let packed = map[&format!("layers.{l}.{name}_packed")].as_u8();
@@ -209,6 +227,12 @@ impl QuantParams {
                     }
                 }
                 dense.insert(name.to_string(), w);
+                // Keep the artifact's packed representation resident so
+                // the fast kernels can consume it without re-packing.
+                packed_map.insert(
+                    name.to_string(),
+                    PackedLinear::from_packed2(packed, c, h, g, scale, zero),
+                );
             }
             layers.push(QuantLayer {
                 ascale_attn: getf(&format!("layers.{l}.ascale_attn")),
@@ -218,15 +242,21 @@ impl QuantParams {
                 dense,
                 basis_change: None,
                 r4: None,
+                packed: packed_map,
+                basis_fast: None,
             });
         }
+        let r3 = getf("r3");
+        let r3_fast = R1Desc::from_dense_rht(&r3, cfg.head_dim());
         Ok(Self {
             embed: getf("embed"),
             lm_head: getf("lm_head"),
-            r3: getf("r3"),
+            r3,
             r4_signs: getf("r4_signs"),
             r4_kind,
             layers,
+            kernels: KernelMode::default(),
+            r3_fast,
         })
     }
 }

@@ -23,7 +23,7 @@ pub use pipeline::{
     fuse_to_dense_plan, quantize_native, quantize_native_plan, quantize_native_plan_with,
     quantize_native_with, LayerRotations, PlanRotations, RotationPlan, RotationSet, RotationSpec,
 };
-pub use pack::{pack2, unpack2};
+pub use pack::{pack2, pack4, unpack2, unpack4};
 pub use rtn::{fake_quant_sym, group_params, rtn_quantize};
 
 use crate::transform::Mat;

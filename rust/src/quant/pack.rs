@@ -1,7 +1,9 @@
-//! 2-bit code packing — 4 codes per byte, LSB-first along input channels.
+//! 2-/4-bit code packing — LSB-first along input channels.
 //!
-//! Must match `python/compile/kernels/ref.py::pack2` bit-for-bit (the
-//! AOT weight blobs are produced by the Python side and consumed here).
+//! Must match `python/compile/kernels/ref.py::pack2`/`pack4` bit-for-bit
+//! (the AOT weight blobs are produced by the Python side and consumed
+//! here, and the packed-domain kernels in `model::kernels` index these
+//! layouts directly).
 
 /// Pack codes `[C, H]` (values 0..3, row-major) into `[C/4, H]` bytes.
 /// Byte `b` of a column holds channels `4b..4b+4` in bits
@@ -39,6 +41,41 @@ pub fn unpack2(packed: &[u8], c: usize, h: usize) -> Vec<i32> {
     out
 }
 
+/// Pack codes `[C, H]` (values 0..15, row-major) into `[C/2, H]` bytes.
+/// Byte `b` of a column holds channels `2b..2b+2` in bits `[0:4] [4:8]`.
+pub fn pack4(codes: &[i32], c: usize, h: usize) -> Vec<u8> {
+    assert_eq!(codes.len(), c * h);
+    assert_eq!(c % 2, 0, "input channels must be a multiple of 2");
+    let mut out = vec![0u8; c / 2 * h];
+    for cb in 0..c / 2 {
+        for col in 0..h {
+            let mut byte = 0u8;
+            for k in 0..2 {
+                let code = codes[(cb * 2 + k) * h + col];
+                debug_assert!((0..16).contains(&code), "code {code} out of 4-bit range");
+                byte |= ((code as u8) & 0xF) << (4 * k);
+            }
+            out[cb * h + col] = byte;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack4`].
+pub fn unpack4(packed: &[u8], c: usize, h: usize) -> Vec<i32> {
+    assert_eq!(packed.len(), c / 2 * h);
+    let mut out = vec![0i32; c * h];
+    for cb in 0..c / 2 {
+        for col in 0..h {
+            let byte = packed[cb * h + col];
+            for k in 0..2 {
+                out[(cb * 2 + k) * h + col] = ((byte >> (4 * k)) & 0xF) as i32;
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +101,42 @@ mod tests {
     fn compression_ratio() {
         let codes = vec![0i32; 128 * 16];
         assert_eq!(pack2(&codes, 128, 16).len() * 4, codes.len());
+    }
+
+    #[test]
+    fn roundtrip_random_int4() {
+        let mut rng = SplitMix64::new(2);
+        let (c, h) = (64, 24);
+        let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(16) as i32).collect();
+        assert_eq!(unpack4(&pack4(&codes, c, h), c, h), codes);
+    }
+
+    #[test]
+    fn bit_layout_lsb_first_int4() {
+        // Channels (0xA, 0x5) for one column → byte 0b0101_1010 = 0x5A
+        // (channel 0 in the low nibble — same LSB-first rule as pack2).
+        let codes = vec![0xA, 0x5];
+        let packed = pack4(&codes, 2, 1);
+        assert_eq!(packed, vec![0x5A]);
+    }
+
+    #[test]
+    fn compression_ratio_int4() {
+        let codes = vec![0i32; 128 * 16];
+        assert_eq!(pack4(&codes, 128, 16).len() * 2, codes.len());
+    }
+
+    #[test]
+    fn pack4_multi_column_layout() {
+        // Two columns, four channels: byte (cb, col) holds channels
+        // (2cb, 2cb+1) of that column.
+        let codes = vec![
+            1, 2, // channels 0
+            3, 4, // channels 1
+            5, 6, // channels 2
+            7, 8, // channels 3
+        ];
+        let packed = pack4(&codes, 4, 2);
+        assert_eq!(packed, vec![0x31, 0x42, 0x75, 0x86]);
     }
 }

@@ -31,6 +31,7 @@ use super::gptq::{gptq_factor, gptq_quantize_factored, GptqFactor};
 use super::QuantizedLinear;
 use crate::config::Json;
 use crate::model::config::{ModelCfg, R4Kind, LINEARS};
+use crate::model::kernels::{BasisFast, KernelMode, PackedLinear, R1Desc};
 use crate::model::weights::{FpParams, LayerR4, QuantLayer, QuantParams};
 use crate::rng::SplitMix64;
 use crate::transform::{is_pow2, rht, try_block_diag, try_build_r1, try_hadamard, Mat, R1Kind};
@@ -510,6 +511,29 @@ fn unit_layer_scales(cfg: &ModelCfg, dense: BTreeMap<String, Vec<f32>>) -> Quant
         dense,
         basis_change: None,
         r4: None,
+        packed: BTreeMap::new(),
+        basis_fast: None,
+    }
+}
+
+/// Fast-path descriptor for the shared head rotation R3 (`rht(d_head)`
+/// — always a randomized Hadamard, recovered and verified exactly).
+fn r3_fast_of(r3: &Mat) -> Option<R1Desc> {
+    R1Desc::from_mat(R1Kind::GH, r3.rows, r3)
+}
+
+/// Attach the packed-domain form of every quantized linear to its
+/// layer, in the layer-major [`LINEARS`] order `qlinears` was filled
+/// in. The dense tensors stay resident for the reference path; linears
+/// whose bit width has no packed layout are simply skipped.
+fn attach_packed(layers: &mut [QuantLayer], qlinears: &[QuantizedLinear]) {
+    for (l, layer) in layers.iter_mut().enumerate() {
+        for (i, name) in LINEARS.iter().enumerate() {
+            let q = &qlinears[l * LINEARS.len() + i];
+            if let Some(pl) = PackedLinear::from_qlinear(q) {
+                layer.packed.insert(name.to_string(), pl);
+            }
+        }
     }
 }
 
@@ -528,6 +552,8 @@ pub fn fuse_to_dense(fp: &FpParams, cfg: &ModelCfg, rots: &RotationSet) -> Quant
                 unit_layer_scales(cfg, map.iter().map(|(k, m)| (k.clone(), to_f32(m))).collect())
             })
             .collect(),
+        kernels: KernelMode::default(),
+        r3_fast: r3_fast_of(&rots.r3),
     }
 }
 
@@ -553,6 +579,20 @@ fn plan_params(
             .enumerate()
             .map(|(l, (dense, trans))| {
                 let mut ql = unit_layer_scales(cfg, dense);
+                if trans.is_some() {
+                    // Fast form of the basis change: the two structured
+                    // factors applied as transforms instead of their
+                    // dense product. Canonical specs carry the block.
+                    let (prev, next) = (&rots.layers[l - 1], &rots.layers[l]);
+                    ql.basis_fast = BasisFast::from_mats(
+                        prev.spec.r1,
+                        prev.spec.r1_block,
+                        prev.r1.as_ref(),
+                        next.spec.r1,
+                        next.spec.r1_block,
+                        next.r1.as_ref(),
+                    );
+                }
                 ql.basis_change = trans.map(|t| to_f32(&t));
                 ql.r4 = Some(LayerR4 {
                     kind: rots.layers[l].spec.r4,
@@ -561,6 +601,8 @@ fn plan_params(
                 ql
             })
             .collect(),
+        kernels: KernelMode::default(),
+        r3_fast: r3_fast_of(&rots.r3),
     }
 }
 
@@ -679,7 +721,7 @@ pub fn quantize_native_with(
     let identity = if calib.is_none() { Some(identity_factors(cfg)) } else { None };
     let mut sse = 0.0;
     let mut qlinears = Vec::new();
-    let layers = fused_layers
+    let mut layers: Vec<QuantLayer> = fused_layers
         .into_iter()
         .enumerate()
         .map(|(l, map)| {
@@ -696,6 +738,7 @@ pub fn quantize_native_with(
             unit_layer_scales(cfg, dense)
         })
         .collect();
+    attach_packed(&mut layers, &qlinears);
     Ok((
         QuantParams {
             embed: to_f32(&embed),
@@ -704,6 +747,8 @@ pub fn quantize_native_with(
             r4_signs: rots.r4_signs.iter().map(|&v| v as f32).collect(),
             r4_kind: rots.r4_kind,
             layers,
+            kernels: KernelMode::default(),
+            r3_fast: r3_fast_of(&rots.r3),
         },
         sse,
         qlinears,
@@ -747,7 +792,9 @@ pub fn quantize_native_plan_with(
             quantize_layer_map(map, cfg, bits, hess, identity.as_ref(), &mut sse, &mut qlinears)
         })
         .collect();
-    Ok((plan_params(cfg, rots, &embed, &lm_head, dense, transitions), sse, qlinears))
+    let mut qp = plan_params(cfg, rots, &embed, &lm_head, dense, transitions);
+    attach_packed(&mut qp.layers, &qlinears);
+    Ok((qp, sse, qlinears))
 }
 
 #[cfg(test)]

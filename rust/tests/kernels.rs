@@ -1,0 +1,281 @@
+//! Kernel conformance suite for the packed-domain fast path
+//! (`--kernels fast`). Pins, in order:
+//!
+//! * the fused packed dequant-matmul against the dense f64-accumulation
+//!   reference over random shapes, group sizes and both bit widths;
+//! * the FWHT structured-rotation application against dense Walsh
+//!   matmuls, including a bit-exact check at power-of-4 sizes where
+//!   every value is exactly representable;
+//! * model-level conformance: fast logits within [`FAST_LOGIT_TOL`] of
+//!   the reference forward for global-Hadamard, global-Walsh and
+//!   heterogeneous GSR plans at 2 and 4 bits — and the fast logits
+//!   themselves bit-stable across batch composition and thread count;
+//! * the reference mode staying bit-identical with all the fast-path
+//!   data (packed linears, rotation descriptors) attached;
+//! * the `pack4` byte layout against the Python reference vectors
+//!   (`python/compile/kernels/ref.py`).
+
+use std::sync::Arc;
+
+use gsr::exec::{Backend, NativeBackend};
+use gsr::model::forward::matmul;
+use gsr::model::{
+    packed_matmul_into, DenseModel, FpParams, KernelMode, ModelCfg, PackedLinear, R1Desc, R4Kind,
+    FAST_LOGIT_TOL,
+};
+use gsr::quant::{
+    build_plan_rotations, pack4, quantize_native_plan, unpack4, RotationPlan, RotationSpec,
+};
+use gsr::rng::SplitMix64;
+use gsr::transform::{walsh, R1Kind};
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn window(seed: usize, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7 + seed * 13 + 1) % vocab) as i32).collect()
+}
+
+/// The three plan shapes the fast path must serve: a uniform global
+/// Hadamard (sign path), a uniform global Walsh (sequency-permutation
+/// path), and a heterogeneous plan whose layer boundary needs the
+/// structured basis change (GSR blocks into a global Hadamard).
+fn plans(cfg: &ModelCfg) -> Vec<(&'static str, RotationPlan)> {
+    let gh = RotationPlan::uniform(
+        RotationSpec {
+            r1: R1Kind::GH,
+            r1_block: cfg.d_model,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+        },
+        cfg.n_layers,
+        5,
+    );
+    let gw = RotationPlan::uniform(
+        RotationSpec {
+            r1: R1Kind::GW,
+            r1_block: cfg.d_model,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+        },
+        cfg.n_layers,
+        6,
+    );
+    let het = RotationPlan {
+        seed: 7,
+        layers: vec![
+            RotationSpec { r1: R1Kind::GSR, r1_block: 8, r4: R4Kind::GH, r4_block: cfg.d_ffn },
+            RotationSpec {
+                r1: R1Kind::GH,
+                r1_block: cfg.d_model,
+                r4: R4Kind::LH,
+                r4_block: 16,
+            },
+        ],
+    };
+    vec![("global-hadamard", gh), ("global-walsh", gw), ("hetero-gsr", het)]
+}
+
+/// Fused packed matmul vs the dense f64-accumulation reference over
+/// random shapes, groups and both bit widths. The bound here is the
+/// single-matmul bound (one f32 tile reduction per k-tile); the looser
+/// end-to-end [`FAST_LOGIT_TOL`] compounds it across layers.
+#[test]
+fn packed_matmul_random_shapes_match_reference() {
+    for seed in 0..12u64 {
+        let mut rng = SplitMix64::new(0xACC ^ seed.wrapping_mul(0x9E37_79B9));
+        let t = 1 + rng.next_below(5) as usize;
+        let group = 8usize << rng.next_below(3); // 8, 16, 32
+        let c = group * (1 + rng.next_below(5) as usize);
+        let h = 1 + rng.next_below(200) as usize;
+        let bits = if rng.next_below(2) == 0 { 2u32 } else { 4 };
+        let qmax = (1u64 << bits) - 1;
+        let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(qmax + 1) as i32).collect();
+        let ng = c / group;
+        let scale: Vec<f32> = (0..ng * h).map(|_| 0.01 + rng.next_f64() as f32 * 0.05).collect();
+        let zero: Vec<f32> = (0..ng * h).map(|_| rng.next_below(qmax + 1) as f32).collect();
+        let w = PackedLinear::from_codes(&codes, c, h, group, scale, zero, bits)
+            .expect("supported geometry");
+        let x: Vec<f32> = (0..t * c).map(|_| rng.next_normal() as f32).collect();
+        let want = matmul(&x, &w.dequant_dense(), t, c, h);
+        let (mut out, mut acc) = (Vec::new(), Vec::new());
+        packed_matmul_into(&x, &w, t, &mut out, &mut acc);
+        assert_eq!(out.len(), want.len());
+        for (a, b) in out.iter().zip(&want) {
+            let tol = 1e-4 * b.abs().max(1.0);
+            assert!(
+                (a - b).abs() <= tol,
+                "seed {seed} t={t} c={c} h={h} g={group} w{bits}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// FWHT application of a sequency-ordered Walsh rotation vs the dense
+/// matmul: close on random inputs at any power-of-2 size, and — at
+/// power-of-4 sizes, where `1/√n` is a power of two and one-hot inputs
+/// stay exactly representable — bit-identical.
+#[test]
+fn fwht_walsh_parity_and_pow4_bit_exactness() {
+    let mut tmp = Vec::new();
+    for n in [8usize, 32, 128] {
+        let w = walsh(n);
+        let desc = R1Desc::from_mat(R1Kind::GW, n, &w).expect("walsh recognized");
+        let mut rng = SplitMix64::new(0x11A5 + n as u64);
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+        let xd: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want = w.apply_right(&xd);
+        let mut got = x;
+        desc.forward_row(&mut got, &mut tmp);
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() <= 1e-5 * b.abs().max(1.0),
+                "n={n} col {j}: {a} vs {b}"
+            );
+        }
+    }
+    for n in [4usize, 16, 64] {
+        let w = walsh(n);
+        let desc = R1Desc::from_mat(R1Kind::GW, n, &w).expect("walsh recognized");
+        for k in [0usize, 1, n / 2, n - 1] {
+            let mut x = vec![0f32; n];
+            x[k] = 1.0;
+            let xd: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let want: Vec<f32> = w.apply_right(&xd).iter().map(|&v| v as f32).collect();
+            desc.forward_row(&mut x, &mut tmp);
+            for (j, (a, b)) in x.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} e_{k} col {j}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// The end-to-end conformance sweep: for every plan shape and both bit
+/// widths, the fast forward stays within the pinned bound of the
+/// reference forward, every structured representation the plan implies
+/// was actually recognized (so the test cannot silently degrade into
+/// fast==reference-via-fallback), and the fast logits are bit-stable
+/// across batch composition and thread count.
+#[test]
+fn fast_logits_within_pinned_bound_across_plans_bits_batches_threads() {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 17);
+    let s = 12usize;
+    let seqs: Vec<Vec<i32>> = (0..4).map(|i| window(i, s, cfg.vocab)).collect();
+    for (label, plan) in plans(&cfg) {
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        for bits in [2u32, 4] {
+            let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, bits);
+            // The fast representations must be present — a regression
+            // that stops recognizing them would otherwise pass this
+            // test by silently running the dense fallback everywhere.
+            assert!(qp.r3_fast.is_some(), "{label} w{bits}: R3 not recognized");
+            for (l, layer) in qp.layers.iter().enumerate() {
+                assert_eq!(layer.packed.len(), 7, "{label} w{bits} layer {l}: packed linears");
+            }
+            if label == "hetero-gsr" {
+                assert!(
+                    qp.layers[1].basis_fast.is_some(),
+                    "{label} w{bits}: basis change not recognized"
+                );
+            }
+            let reference =
+                Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp.clone(), a_bits: None });
+            let mut qpf = qp;
+            qpf.kernels = KernelMode::Fast;
+            let fast = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qpf, a_bits: None });
+            let fast_serial: Vec<Vec<f32>> = seqs.iter().map(|q| fast.forward(q)).collect();
+            for (i, (got, seq)) in fast_serial.iter().zip(&seqs).enumerate() {
+                let want = reference.forward(seq);
+                for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                    let tol = FAST_LOGIT_TOL * b.abs().max(1.0);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "{label} w{bits} seq {i} logit {j}: fast {a} vs reference {b}"
+                    );
+                }
+            }
+            for threads in [1usize, 3] {
+                for batch in [1usize, 2] {
+                    let backend = NativeBackend::new(Arc::clone(&fast), batch, s, threads);
+                    assert_eq!(backend.name(), "native-quant-fast");
+                    let v = backend.vocab();
+                    for chunk in seqs.chunks(batch) {
+                        let mut tokens = vec![0i32; batch * s];
+                        for (i, w) in chunk.iter().enumerate() {
+                            tokens[i * s..(i + 1) * s].copy_from_slice(w);
+                        }
+                        let out = backend.forward_batch(&tokens).unwrap();
+                        for (i, w) in chunk.iter().enumerate() {
+                            let idx = seqs.iter().position(|x| x == w).unwrap();
+                            let row = &out[i * s * v..(i + 1) * s * v];
+                            for (j, (a, b)) in row.iter().zip(&fast_serial[idx]).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{label} w{bits} b={batch} t={threads} logit {j}: \
+                                     fast mode must be batch/thread-stable"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Attaching the fast-path data (packed linears, R3 descriptor, basis
+/// descriptors) must never perturb the reference path: a reference-mode
+/// model with everything attached is bit-identical to one stripped back
+/// to the pre-kernel-layer parameter set.
+#[test]
+fn reference_mode_bit_identical_with_fast_data_attached() {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 23);
+    for (label, plan) in plans(&cfg) {
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+        let mut stripped = qp.clone();
+        stripped.r3_fast = None;
+        for layer in &mut stripped.layers {
+            layer.packed.clear();
+            layer.basis_fast = None;
+        }
+        assert_eq!(qp.kernels, KernelMode::Reference, "reference must be the default");
+        let with = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None };
+        let without = DenseModel::Quant { cfg: cfg.clone(), params: stripped, a_bits: None };
+        let tokens = window(3, 16, cfg.vocab);
+        let a = with.forward(&tokens);
+        let b = without.forward(&tokens);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} logit {i}: reference path perturbed");
+        }
+    }
+}
+
+/// The `pack4` byte layout, cross-referenced against the vectors pinned
+/// on the Python side (`python/compile/kernels/ref.py`): two codes per
+/// byte, low nibble = even input channel, bytes row-major `[C/2, H]`.
+#[test]
+fn pack4_layout_matches_python_reference_vectors() {
+    assert_eq!(pack4(&[0xA, 0x5], 2, 1), vec![0x5A]);
+    assert_eq!(pack4(&[1, 2, 3, 4, 5, 6, 7, 8], 4, 2), vec![0x31, 0x42, 0x75, 0x86]);
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(0xF0 ^ seed.wrapping_mul(0x9E37_79B9));
+        let c = 2 * (1 + rng.next_below(40) as usize);
+        let h = 1 + rng.next_below(30) as usize;
+        let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(16) as i32).collect();
+        assert_eq!(unpack4(&pack4(&codes, c, h), c, h), codes, "seed {seed}");
+    }
+}

@@ -349,7 +349,9 @@ fn prop_router_in_flight_balanced() {
 #[test]
 fn prop_cached_decode_bit_identical_to_full_forward() {
     use gsr::exec::{Backend, NativeBackend};
-    use gsr::model::{DenseModel, ForwardScratch, FpParams, KvCache, ModelCfg, R4Kind};
+    use gsr::model::{
+        DenseModel, ForwardScratch, FpParams, KernelMode, KvCache, ModelCfg, R4Kind,
+    };
     use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
     use std::sync::Arc;
 
@@ -402,12 +404,25 @@ fn prop_cached_decode_bit_identical_to_full_forward() {
                 },
             ],
         };
-        for (label, plan) in [("global-walsh", gw_plan), ("hetero", het_plan)] {
+        // Each quantized plan runs in both kernel modes: the decode
+        // parity property (cached step ≡ full re-forward, at any thread
+        // count) must hold for the packed fast kernels exactly as it
+        // does for the f64 reference — each mode against itself.
+        for (label, fast_label, plan) in [
+            ("global-walsh", "global-walsh-fast", gw_plan),
+            ("hetero", "hetero-fast", het_plan),
+        ] {
             let rots = build_plan_rotations(&cfg, &plan).unwrap();
             let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+            let mut qp_fast = qp.clone();
+            qp_fast.kernels = KernelMode::Fast;
             models.push((
                 label,
                 Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None }),
+            ));
+            models.push((
+                fast_label,
+                Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp_fast, a_bits: None }),
             ));
         }
         let prompt_len = 1 + rng.next_below(6) as usize;

@@ -394,6 +394,44 @@ fn generate_native_end_to_end_matches_full_reforward_greedy() {
     assert!(metrics.decode_tok_per_s() > 0.0);
 }
 
+/// `--kernels fast` decode parity: on the same quantized model, the
+/// packed fast path emits greedy token sequences identical to the
+/// reference kernels (argmax stability under the pinned logit bound),
+/// for serial decoding and with intra-sequence sharding across pool
+/// workers — and the backend advertises the fast label so metrics can
+/// tell the modes apart.
+#[test]
+fn fast_kernels_greedy_sequences_match_reference() {
+    use gsr::exec::greedy_argmax;
+    use gsr::model::KernelMode;
+    use gsr::quant::quantize_native_plan;
+
+    let cfg = tiny_cfg();
+    let (fp, _) = fp_model(&cfg, 19);
+    let rots = build_plan_rotations(&cfg, &hetero_plan(&cfg, 9)).unwrap();
+    let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+    let mut qpf = qp.clone();
+    qpf.kernels = KernelMode::Fast;
+    let reference = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
+    let fast = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qpf, a_bits: None });
+    let (s, max_new) = (24usize, 8usize);
+    for threads in [1usize, 3] {
+        let backend = NativeBackend::new(Arc::clone(&fast), 2, s, threads);
+        assert_eq!(backend.name(), "native-quant-fast");
+        for case in 0..3usize {
+            let prompt = window(60 + case, 5 + case, cfg.vocab);
+            let (want, _) = greedy_reference(&reference, &prompt, max_new, None);
+            let (mut gen, last) = backend.start_generation(&prompt).unwrap();
+            let mut got = vec![greedy_argmax(&last)];
+            while got.len() < max_new {
+                let logits = backend.decode(&mut gen, *got.last().unwrap()).unwrap();
+                got.push(greedy_argmax(&logits));
+            }
+            assert_eq!(got, want, "case {case} t={threads}: fast greedy diverged");
+        }
+    }
+}
+
 /// Generation admission mirrors scoring admission: unsupported budgets,
 /// empty prompts, bad token ids and unknown variants are refused with
 /// clear errors, counted in `rejected`, and the server keeps serving.

@@ -21,6 +21,15 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Scalar-fallback pass: the fast kernels must build and hold their
+# conformance bound without the `simd` feature (non-x86_64 targets,
+# or any build with --no-default-features).
+echo "== cargo build --release --no-default-features (scalar kernels) =="
+cargo build --release --no-default-features
+
+echo "== cargo test -q --no-default-features (scalar kernels) =="
+cargo test -q --no-default-features
+
 echo "== cargo doc --no-deps (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
