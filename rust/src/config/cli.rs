@@ -59,6 +59,16 @@ impl Args {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key 0.8`-style float option (sampling temperature, top-p).
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// `--seed N`-style u64 option (sampling seeds).
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -164,6 +174,25 @@ mod tests {
         assert!(!a.has_flag("kernels"));
         let b = parse("quantize-native --kernels reference");
         assert_eq!(b.opt("kernels"), Some("reference"));
+    }
+
+    #[test]
+    fn sampling_and_paging_options_parse() {
+        let a = parse(
+            "generate --temperature 0.8 --top-k 40 --top-p 0.95 --seed 7 \
+             --page-size 8 --kv-blocks 64 --prefill-chunk 16",
+        );
+        assert_eq!(a.opt_f64("temperature", 0.0), 0.8);
+        assert_eq!(a.opt_usize("top-k", 0), 40);
+        assert_eq!(a.opt_f64("top-p", 1.0), 0.95);
+        assert_eq!(a.opt_u64("seed", 0), 7);
+        assert_eq!(a.opt_usize("page-size", 16), 8);
+        assert_eq!(a.opt_usize("kv-blocks", 0), 64);
+        assert_eq!(a.opt_usize("prefill-chunk", 32), 16);
+        // Absent or malformed values fall back to the default.
+        let b = parse("generate --temperature warm");
+        assert_eq!(b.opt_f64("temperature", 0.0), 0.0);
+        assert_eq!(b.opt_u64("seed", 42), 42);
     }
 
     #[test]

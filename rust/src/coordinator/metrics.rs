@@ -64,18 +64,38 @@ impl LatencyHistogram {
     }
 }
 
+/// Why a request was refused without execution — one bucket per
+/// admission rule, so load-shedding is diagnosable from the report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Scoring request longer than the backend's `seq`.
+    TooLong,
+    /// A token id (prompt, scoring, or stop) outside the vocab.
+    BadToken,
+    /// Variant not resident, or it cannot serve this request type.
+    UnknownVariant,
+    /// Empty token list / empty prompt / `max_new == 0`.
+    ZeroLength,
+    /// Generation whose peak KV occupancy exceeds the block pool's
+    /// total token inventory — it could never complete, even alone.
+    CachePressure,
+}
+
 /// Aggregate serving metrics.
 ///
 /// Two latency views: `request_latency` is queue-to-reply per request
-/// (what a client feels), `exec_latency` is the backend's forward time
-/// per batch (what the executor pays) — the gap between them is the
-/// batching wait the policy trades for throughput.
+/// (what a client feels), `exec_latency` is the backend's execution
+/// time per call — scoring batches and prefill chunks — (what the
+/// executor pays); the gap between them is the batching wait the
+/// policy trades for throughput.
 ///
 /// Generation adds its own family: `decode_latency` is the backend time
 /// of one *batched decode round* (the per-step number a serving loop
 /// tunes), `generated_tokens` counts emitted tokens, and the cache
 /// gauges track KV occupancy — so decode tok/s is reported directly
-/// instead of being inferred from prefill batch latency.
+/// instead of being inferred from prefill batch latency. The paged
+/// scheduler adds block-pool gauges and preemption/eviction/recompute
+/// counters.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub request_latency: LatencyHistogram,
@@ -86,10 +106,14 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
-    /// Requests refused without execution: longer than the backend's
-    /// seq, out-of-vocab token ids, invalid generation bounds, or an
-    /// unknown variant.
+    /// Requests refused without execution — always the sum of the
+    /// per-reason counters below.
     pub rejected: u64,
+    pub rejected_too_long: u64,
+    pub rejected_bad_token: u64,
+    pub rejected_unknown_variant: u64,
+    pub rejected_zero_length: u64,
+    pub rejected_cache_pressure: u64,
     /// Completed generation requests (also counted in `requests`).
     pub generations: u64,
     /// Generations that failed *after* admission (prefill or decode
@@ -108,6 +132,21 @@ pub struct Metrics {
     pub cache_tokens: u64,
     /// Largest single-round KV-cache occupancy seen (tokens).
     pub cache_tokens_peak: u64,
+    /// Prefill chunks executed by the continuous-batching scheduler.
+    pub prefill_chunks: u64,
+    /// Prompt/recompute tokens absorbed through prefill chunks.
+    pub prefill_tokens: u64,
+    /// Block-pool inventory (blocks), summed over paged variants.
+    pub kv_blocks_total: u64,
+    /// High-water mark of granted blocks across all pools.
+    pub kv_blocks_peak: u64,
+    /// Sequences preempted (blocks reclaimed, recompute-on-resume).
+    pub preemptions: u64,
+    /// Blocks taken back by preemption/eviction (completions excluded).
+    pub evicted_blocks: u64,
+    /// Cached tokens invalidated by preemption — the recompute debt
+    /// paid back through later prefill chunks.
+    pub recomputed_tokens: u64,
 }
 
 impl Metrics {
@@ -124,6 +163,37 @@ impl Metrics {
     pub fn record_request(&mut self, latency: Duration) {
         self.requests += 1;
         self.request_latency.record(latency);
+    }
+
+    /// Account one rejected request under its reason bucket (the
+    /// aggregate `rejected` stays the sum of the buckets).
+    pub fn record_rejection(&mut self, reason: RejectReason) {
+        self.rejected += 1;
+        match reason {
+            RejectReason::TooLong => self.rejected_too_long += 1,
+            RejectReason::BadToken => self.rejected_bad_token += 1,
+            RejectReason::UnknownVariant => self.rejected_unknown_variant += 1,
+            RejectReason::ZeroLength => self.rejected_zero_length += 1,
+            RejectReason::CachePressure => self.rejected_cache_pressure += 1,
+        }
+    }
+
+    /// Account one prefill chunk: `tokens` absorbed in `exec` backend
+    /// time (prefill execution shares the `exec_latency` histogram with
+    /// scoring batches — both are per-call backend time).
+    pub fn record_prefill(&mut self, tokens: u64, exec: Duration) {
+        self.prefill_chunks += 1;
+        self.prefill_tokens += tokens;
+        self.exec_latency.record(exec);
+    }
+
+    /// Account one preemption: a sequence lost `blocks` granted blocks
+    /// and `cached_tokens` cached positions (to be recomputed on
+    /// resume).
+    pub fn record_preemption(&mut self, blocks: u64, cached_tokens: u64) {
+        self.preemptions += 1;
+        self.evicted_blocks += blocks;
+        self.recomputed_tokens += cached_tokens;
     }
 
     /// Account one batched decode round: `seqs` sequences stepped
@@ -166,7 +236,7 @@ impl Metrics {
         let mut out = format!(
             "requests={} rejected={} batches={} mean_batch={:.2} tokens={} \
              throughput={:.0} tok/s req p50={:?} p99={:?} max={:?} \
-             exec p50={:?} max={:?}",
+             exec p50={:?} p99={:?} max={:?}",
             self.requests,
             self.rejected,
             self.batches,
@@ -177,14 +247,26 @@ impl Metrics {
             self.request_latency.quantile(0.99),
             self.request_latency.max(),
             self.exec_latency.quantile(0.5),
+            self.exec_latency.quantile(0.99),
             self.exec_latency.max(),
         );
+        if self.rejected > 0 {
+            out.push_str(&format!(
+                " | rejected: too_long={} bad_token={} unknown_variant={} \
+                 zero_length={} cache_pressure={}",
+                self.rejected_too_long,
+                self.rejected_bad_token,
+                self.rejected_unknown_variant,
+                self.rejected_zero_length,
+                self.rejected_cache_pressure,
+            ));
+        }
         if self.decode_steps > 0 || self.generations > 0 || self.generation_failures > 0 {
             let steps = self.decode_steps.max(1) as f64;
             out.push_str(&format!(
                 " | gen: completed={} failed={} emitted={} decode={:.0} tok/s \
-                 steps={} mean_step_seqs={:.2} step p50={:?} max={:?} \
-                 cache mean={:.0} peak={} tokens",
+                 steps={} mean_step_seqs={:.2} step p50={:?} p99={:?} max={:?} \
+                 cache mean={:.0} peak={} tokens prefill chunks={} tokens={}",
                 self.generations,
                 self.generation_failures,
                 self.generated_tokens,
@@ -192,9 +274,23 @@ impl Metrics {
                 self.decode_steps,
                 self.decode_seqs as f64 / steps,
                 self.decode_latency.quantile(0.5),
+                self.decode_latency.quantile(0.99),
                 self.decode_latency.max(),
                 self.cache_tokens as f64 / steps,
                 self.cache_tokens_peak,
+                self.prefill_chunks,
+                self.prefill_tokens,
+            ));
+        }
+        if self.kv_blocks_total > 0 {
+            out.push_str(&format!(
+                " | paged: pool={} blocks peak={} preemptions={} \
+                 evicted_blocks={} recomputed_tokens={}",
+                self.kv_blocks_total,
+                self.kv_blocks_peak,
+                self.preemptions,
+                self.evicted_blocks,
+                self.recomputed_tokens,
             ));
         }
         out
@@ -261,5 +357,59 @@ mod tests {
         assert!(m.report(Duration::from_millis(40)).contains("gen:"));
         let quiet = Metrics::default();
         assert!(!quiet.report(Duration::from_millis(1)).contains("gen:"));
+    }
+
+    #[test]
+    fn rejection_reasons_sum_to_aggregate() {
+        let mut m = Metrics::default();
+        m.record_rejection(RejectReason::TooLong);
+        m.record_rejection(RejectReason::BadToken);
+        m.record_rejection(RejectReason::BadToken);
+        m.record_rejection(RejectReason::UnknownVariant);
+        m.record_rejection(RejectReason::ZeroLength);
+        m.record_rejection(RejectReason::CachePressure);
+        assert_eq!(m.rejected, 6);
+        assert_eq!(
+            m.rejected_too_long
+                + m.rejected_bad_token
+                + m.rejected_unknown_variant
+                + m.rejected_zero_length
+                + m.rejected_cache_pressure,
+            m.rejected
+        );
+        let report = m.report(Duration::from_millis(1));
+        assert!(report.contains("bad_token=2"), "{report}");
+        assert!(report.contains("cache_pressure=1"), "{report}");
+        assert!(!Metrics::default().report(Duration::from_millis(1)).contains("too_long"));
+    }
+
+    #[test]
+    fn report_surfaces_quantiles_and_paged_counters() {
+        let mut m = Metrics::default();
+        m.record_batch(2, 64, Duration::from_millis(2));
+        m.record_request(Duration::from_millis(3));
+        m.record_decode(2, 20, Duration::from_millis(1));
+        m.record_prefill(16, Duration::from_millis(2));
+        m.record_preemption(2, 24);
+        m.kv_blocks_total = 8;
+        m.kv_blocks_peak = 5;
+        let report = m.report(Duration::from_millis(10));
+        for needle in [
+            "req p50=",
+            "exec p50=",
+            "step p50=",
+            "p99=",
+            "paged: pool=8",
+            "preemptions=1",
+            "evicted_blocks=2",
+            "recomputed_tokens=24",
+            "prefill chunks=1 tokens=16",
+        ] {
+            assert!(report.contains(needle), "missing {needle} in {report}");
+        }
+        assert_eq!(m.prefill_chunks, 1);
+        assert_eq!(m.exec_latency.count(), 2, "prefill shares exec latency");
+        let quiet = Metrics::default().report(Duration::from_millis(1));
+        assert!(!quiet.contains("paged:"), "{quiet}");
     }
 }

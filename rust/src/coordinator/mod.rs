@@ -8,9 +8,12 @@
 //!              or native models on a shared worker pool) ──▶
 //!              response channels
 //!
-//!  generate ──▶ admit ──▶ prefill (KV cache) ──▶ batched decode rounds
-//!              (active sequences of a variant step together; each
-//!               completes individually on max_new / stop) ──▶ reply
+//!  generate ──▶ admit (peak fits the variant's BlockPool) ──▶
+//!              continuous-batching rounds: decode-ready sequences step
+//!              together while one bounded prefill chunk trickles in;
+//!              KV lives in fixed-size blocks granted on demand and
+//!              preempted youngest-first under pressure ──▶ sampled
+//!              picks (per-request seeded stream) ──▶ stream + reply
 //! ```
 //!
 //! The executor is generic over [`crate::exec::BackendSet`]: the PJRT
@@ -19,17 +22,20 @@
 //! multi-threaded engine — can be built anywhere and moved in, and is
 //! the only path that serves heterogeneous searched rotation plans or
 //! incremental generation. Python is never involved on the request
-//! path.
+//! path. Scheduling mechanisms (block pool, round policy, sampler) live
+//! in [`crate::sched`]; the [`server`] executor composes them.
 //!
 //! Determinism: scoring logits are bit-identical to the serial forward
-//! for any batch composition and thread count, and greedy generations
-//! are bit-reproducible — decode logits equal a full re-forward of the
-//! prefix at every step, so batching rounds differently (or not at all)
-//! can never change what a request returns. Partial batches execute
-//! without padding-row compute; malformed requests are rejected
-//! individually at admission (counted in `Metrics::rejected`), never
-//! silently truncated, and can never fail a batch they were packed
-//! with.
+//! for any batch composition and thread count, and generations — greedy
+//! *and* sampled — are bit-reproducible: decode logits equal a full
+//! re-forward of the prefix at every step for any block layout or
+//! prefill chunking, and each request samples from its own seeded
+//! stream (one draw per pick), so batching rounds differently,
+//! preempting, or co-scheduling other traffic can never change what a
+//! request returns. Partial batches execute without padding-row
+//! compute; malformed requests are rejected individually at admission
+//! (counted per reason under `Metrics::rejected`), never silently
+//! truncated, and can never fail a batch they were packed with.
 
 pub mod batcher;
 pub mod metrics;
@@ -37,7 +43,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use metrics::{LatencyHistogram, Metrics};
+pub use metrics::{LatencyHistogram, Metrics, RejectReason};
 pub use router::{RoutePolicy, Router};
 pub use server::{
     Generated, GenerateRequest, GenerateResponse, Request, Response, Server, ServerHandle,

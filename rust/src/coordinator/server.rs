@@ -10,21 +10,43 @@
 //! `[batch, seq]` shape; under-full flushes run as partial batches (no
 //! compute on padding rows). Malformed requests — longer than the
 //! backend's `seq`, out-of-vocab token ids, unknown variants — are
-//! rejected individually at enqueue with a clear error, never silently
-//! truncated and never able to fail a batch they were packed with.
+//! rejected individually at enqueue with a clear error (and a per-reason
+//! rejection counter), never silently truncated and never able to fail
+//! a batch they were packed with.
 //!
-//! ## Generation
+//! ## Generation: paged KV + continuous batching
 //!
-//! [`GenerateRequest`]s run greedy incremental decoding on backends
-//! that support it: the executor prefills the prompt once
-//! (`Backend::start_generation`), then interleaves *batched decode
-//! rounds* — up to `batch` active sequences of a variant step together
-//! per round — with normal queue service. Sequences complete
-//! individually (on `max_new` or a stop token) and reply immediately;
-//! the round simply shrinks. Decode logits are bit-identical to a full
-//! re-forward of the prefix, so a greedy decode is reproducible no
-//! matter how rounds were batched. Shutdown drains scoring queues and
-//! runs every active generation to completion before reporting metrics.
+//! [`GenerateRequest`]s run incremental decoding through the paged
+//! generation contract. Each variant that supports it owns a
+//! [`BlockPool`]; a sequence is admitted when its *peak* occupancy
+//! (`prompt + max_new − 1`) fits the pool's **total** token inventory —
+//! not when that many slots are contiguously free — and starts with
+//! zero granted blocks. Every loop turn runs one *continuous-batching
+//! round* per variant, composed by the deterministic FIFO+budget policy
+//! in [`crate::sched`]:
+//!
+//! * sequences with one pending token step together through
+//!   `Backend::decode_batch` (up to the round budget, admission order);
+//! * at most **one** bounded prefill chunk (the oldest sequence still
+//!   feeding its prompt or recomputing after preemption) rides along
+//!   per round, so long prompts never convoy decodes — new sequences
+//!   join the running round as soon as they are admitted;
+//! * when the pool runs dry, the youngest block-holding sequence of the
+//!   variant is preempted (blocks reclaimed, recompute-on-resume) in
+//!   favor of an older one — the oldest sequence can always take the
+//!   whole pool, so admission implies eventual completion.
+//!
+//! Picks go through the per-request [`Sampler`]: greedy by default,
+//! temperature / top-k / top-p with a private seeded stream otherwise.
+//! Decode logits are bit-identical to a full re-forward of the prefix
+//! for any block layout, chunking, thread count and round composition,
+//! and the sampler consumes exactly one draw per pick — so every
+//! generation (greedy *or* sampled) replays bit-identically under any
+//! co-scheduled load. Emitted tokens also stream to the optional
+//! [`GenerateRequest::stream`] channel at pick time (once — preemption
+//! recomputes caches, never re-picks). Shutdown drains scoring queues
+//! and runs every active generation to completion before reporting
+//! metrics.
 
 use std::path::Path;
 use std::sync::mpsc;
@@ -32,8 +54,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
-use super::metrics::Metrics;
-use crate::exec::{greedy_argmax, Backend, BackendSet, Generation, NativeSet, PjrtSet};
+use super::metrics::{Metrics, RejectReason};
+use crate::exec::{Backend, BackendSet, Generation, NativeSet, PjrtSet};
+use crate::sched::{compose_round, BlockPool, Sampler, SamplingParams, SchedConfig};
 
 /// A scoring request: tokens (≤ seq) for one sequence; the server
 /// returns per-position logits for exactly the positions sent.
@@ -51,10 +74,10 @@ pub struct Response {
     pub logits: Result<Vec<f32>, String>,
 }
 
-/// A greedy-decoding request: prefill `prompt`, then decode up to
-/// `max_new` tokens incrementally (KV-cached, never re-running the
-/// prefix). `prompt.len() + max_new` must fit the backend's `seq` — the
-/// per-sequence cache capacity.
+/// An incremental-decoding request: prefill `prompt` (chunked, paged),
+/// then decode up to `max_new` tokens. Admission requires the peak KV
+/// occupancy `prompt.len() + max_new − 1` to fit the variant's block
+/// pool (its total token inventory) — not to be contiguously free.
 pub struct GenerateRequest {
     /// Variant name ("fp" for the reference model).
     pub variant: String,
@@ -63,8 +86,15 @@ pub struct GenerateRequest {
     /// Maximum tokens to generate (≥ 1).
     pub max_new: usize,
     /// Optional stop token: generation ends *without emitting it* when
-    /// greedy decoding produces this id.
+    /// decoding picks this id.
     pub stop: Option<i32>,
+    /// Sampling configuration ([`SamplingParams::greedy`] for greedy).
+    pub sampling: SamplingParams,
+    /// Optional streaming channel: every emitted token is sent here at
+    /// pick time, exactly once (a dropped receiver never stalls the
+    /// scheduler). The final [`GenerateResponse`] still carries the
+    /// full sequence.
+    pub stream: Option<mpsc::Sender<i32>>,
     /// Reply channel.
     pub reply: mpsc::Sender<GenerateResponse>,
 }
@@ -74,7 +104,7 @@ pub struct GenerateResponse {
     pub result: Result<Generated, String>,
 }
 
-/// A completed greedy generation.
+/// A completed generation.
 #[derive(Debug, Clone)]
 pub struct Generated {
     /// Emitted tokens, in order (stop token excluded).
@@ -90,19 +120,54 @@ enum Job {
 }
 
 /// One in-flight generation owned by the executor.
-struct ActiveGen {
+///
+/// The sequence's *feed stream* is `prompt ++ produced`; `gen.len()`
+/// counts how much of it the KV cache has absorbed. One pending token
+/// means decode-ready; more means prefill (fresh prompt or
+/// recompute-on-resume after preemption — the `Sampler` and `produced`
+/// survive preemption untouched, which is what makes resumed picks
+/// bit-identical).
+struct SeqState {
+    /// Admission id — the FIFO key (monotone per executor).
+    id: u64,
     /// Index into the executor's `queues` (variant identity).
     variant_idx: usize,
-    gen: Generation,
-    prompt_len: usize,
-    /// Token to feed the next decode round (last greedy pick).
-    next_token: i32,
+    prompt: Vec<i32>,
     /// Emitted tokens so far.
     produced: Vec<i32>,
     max_new: usize,
     stop: Option<i32>,
+    sampler: Sampler,
+    gen: Generation,
     reply: mpsc::Sender<GenerateResponse>,
+    stream: Option<mpsc::Sender<i32>>,
     t0: Instant,
+}
+
+impl SeqState {
+    /// Tokens of `prompt ++ produced` the cache has not absorbed yet.
+    fn pending(&self) -> usize {
+        self.prompt.len() + self.produced.len() - self.gen.len()
+    }
+
+    /// Feed-stream token at absolute position `pos`.
+    fn feed_at(&self, pos: usize) -> i32 {
+        if pos < self.prompt.len() {
+            self.prompt[pos]
+        } else {
+            self.produced[pos - self.prompt.len()]
+        }
+    }
+}
+
+/// What one scheduling round decided for a member sequence.
+enum Fate {
+    /// Still running — goes back into the active set.
+    Active,
+    /// Completed this round (blocks already back in the pool).
+    Done,
+    /// Failed this round (blocks already back in the pool).
+    Failed(String),
 }
 
 /// Handle to the running server.
@@ -132,17 +197,26 @@ fn submit_generate_on(tx: &mpsc::Sender<Job>, req: GenerateRequest) -> Result<()
     tx.send(Job::Generate(req, Instant::now())).map_err(|_| "server stopped".to_string())
 }
 
-fn generate_on(
+fn generate_with_on(
     tx: &mpsc::Sender<Job>,
     variant: &str,
     prompt: Vec<i32>,
     max_new: usize,
     stop: Option<i32>,
+    sampling: SamplingParams,
 ) -> Result<Generated, String> {
     let (reply, rx) = mpsc::channel();
     submit_generate_on(
         tx,
-        GenerateRequest { variant: variant.to_string(), prompt, max_new, stop, reply },
+        GenerateRequest {
+            variant: variant.to_string(),
+            prompt,
+            max_new,
+            stop,
+            sampling,
+            stream: None,
+            reply,
+        },
     )?;
     rx.recv().map_err(|_| "no response".to_string())?.result
 }
@@ -171,7 +245,47 @@ impl ServerHandle {
         max_new: usize,
         stop: Option<i32>,
     ) -> Result<Generated, String> {
-        generate_on(&self.tx, variant, prompt, max_new, stop)
+        generate_with_on(&self.tx, variant, prompt, max_new, stop, SamplingParams::greedy())
+    }
+
+    /// Convenience: synchronous generation with explicit sampling.
+    pub fn generate_with(
+        &self,
+        variant: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Option<i32>,
+        sampling: SamplingParams,
+    ) -> Result<Generated, String> {
+        generate_with_on(&self.tx, variant, prompt, max_new, stop, sampling)
+    }
+
+    /// Submit a generation whose tokens stream back as they are picked.
+    /// Returns the token receiver and the final-result receiver; tokens
+    /// arrive exactly once each, in order, ahead of the final reply.
+    pub fn generate_stream(
+        &self,
+        variant: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Option<i32>,
+        sampling: SamplingParams,
+    ) -> Result<(mpsc::Receiver<i32>, mpsc::Receiver<GenerateResponse>), String> {
+        let (stream_tx, stream_rx) = mpsc::channel();
+        let (reply, reply_rx) = mpsc::channel();
+        submit_generate_on(
+            &self.tx,
+            GenerateRequest {
+                variant: variant.to_string(),
+                prompt,
+                max_new,
+                stop,
+                sampling,
+                stream: Some(stream_tx),
+                reply,
+            },
+        )?;
+        Ok((stream_rx, reply_rx))
     }
 }
 
@@ -190,18 +304,43 @@ impl Server {
 
     /// Start the executor over a prebuilt native backend set — serves
     /// fp, quantized and heterogeneous searched-plan variants with no
-    /// PJRT involvement.
+    /// PJRT involvement. Paged generation uses [`SchedConfig::default`];
+    /// see [`Server::start_native_sched`] to configure it.
     pub fn start_native(set: NativeSet, policy: BatchPolicy) -> Result<Self, String> {
+        Self::start_native_sched(set, policy, SchedConfig::default())
+    }
+
+    /// [`Server::start_native`] with an explicit scheduler
+    /// configuration (page size, pool size, prefill chunk).
+    pub fn start_native_sched(
+        set: NativeSet,
+        policy: BatchPolicy,
+        sched: SchedConfig,
+    ) -> Result<Self, String> {
         if set.is_empty() {
             return Err("native backend set is empty".to_string());
         }
-        Self::start_set(move || Ok(set), policy)
+        Self::start_set_sched(move || Ok(set), policy, sched)
     }
 
-    /// Start the executor over any [`BackendSet`]. `build` runs on the
-    /// executor thread, so non-`Send` sets (PJRT) work; its error is
-    /// propagated out of `start_set` via a ready handshake.
+    /// Start the executor over any [`BackendSet`] with the default
+    /// scheduler configuration. `build` runs on the executor thread, so
+    /// non-`Send` sets (PJRT) work; its error is propagated out of
+    /// `start_set` via a ready handshake.
     pub fn start_set<V, F>(build: F, policy: BatchPolicy) -> Result<Self, String>
+    where
+        V: BackendSet + 'static,
+        F: FnOnce() -> Result<V, String> + Send + 'static,
+    {
+        Self::start_set_sched(build, policy, SchedConfig::default())
+    }
+
+    /// [`Server::start_set`] with an explicit scheduler configuration.
+    pub fn start_set_sched<V, F>(
+        build: F,
+        policy: BatchPolicy,
+        sched: SchedConfig,
+    ) -> Result<Self, String>
     where
         V: BackendSet + 'static,
         F: FnOnce() -> Result<V, String> + Send + 'static,
@@ -214,7 +353,7 @@ impl Server {
             }
             Ok(set) => {
                 let _ = ready_tx.send(Ok(()));
-                executor_loop(set, rx, policy);
+                executor_loop(set, rx, policy, sched);
             }
         });
         ready_rx
@@ -251,7 +390,19 @@ impl Server {
         max_new: usize,
         stop: Option<i32>,
     ) -> Result<Generated, String> {
-        generate_on(&self.tx, variant, prompt, max_new, stop)
+        generate_with_on(&self.tx, variant, prompt, max_new, stop, SamplingParams::greedy())
+    }
+
+    /// Convenience: synchronous generation with explicit sampling.
+    pub fn generate_with(
+        &self,
+        variant: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Option<i32>,
+        sampling: SamplingParams,
+    ) -> Result<Generated, String> {
+        generate_with_on(&self.tx, variant, prompt, max_new, stop, sampling)
     }
 
     /// Stop and collect metrics.
@@ -273,11 +424,16 @@ struct VariantQueue {
     name: String,
     seq: usize,
     vocab: usize,
-    /// Effective decode-round width (policy clamped to backend batch).
+    /// Effective round width (policy clamped to backend batch).
     cap: usize,
     /// Probed once: does the backend implement prefill/decode?
     generation: bool,
     backend_label: String,
+    /// Block inventory for paged generation (`None` when the backend
+    /// has no paged decode path — generate requests are then rejected).
+    pool: Option<BlockPool>,
+    /// Max tokens per prefill chunk (from [`SchedConfig`]).
+    prefill_chunk: usize,
     q: DynamicBatcher<(Request, Instant)>,
 }
 
@@ -286,57 +442,77 @@ impl VariantQueue {
     /// Malformed requests are refused individually with a clear error —
     /// never clipped (wrong-but-plausible logits for PPL clients) and
     /// never allowed near a batch they could fail wholesale.
-    fn admit(&self, req: &Request) -> Result<(), String> {
+    fn admit(&self, req: &Request) -> Result<(), (RejectReason, String)> {
         if req.tokens.is_empty() {
-            return Err("scoring request needs at least one token".to_string());
-        }
-        if req.tokens.len() > self.seq {
-            return Err(format!(
-                "request has {} tokens but backend {} serves seq {}; \
-                 split the request instead of truncating",
-                req.tokens.len(),
-                self.backend_label,
-                self.seq
+            return Err((
+                RejectReason::ZeroLength,
+                "scoring request needs at least one token".to_string(),
             ));
         }
-        self.check_tokens(&req.tokens)
+        if req.tokens.len() > self.seq {
+            return Err((
+                RejectReason::TooLong,
+                format!(
+                    "request has {} tokens but backend {} serves seq {}; \
+                     split the request instead of truncating",
+                    req.tokens.len(),
+                    self.backend_label,
+                    self.seq
+                ),
+            ));
+        }
+        self.check_tokens(&req.tokens).map_err(|e| (RejectReason::BadToken, e))
     }
 
-    /// Validate a generation request: backend support, prompt + budget
-    /// versus the per-sequence KV-cache capacity (= backend seq), token
-    /// ranges. Rejections happen before prefill ever runs.
-    fn admit_generate(&self, req: &GenerateRequest) -> Result<(), String> {
-        if !self.generation {
-            return Err(format!(
-                "backend {} does not support incremental decoding; \
-                 use a native variant for generate requests",
-                self.backend_label
+    /// Validate a generation request: backend support, peak occupancy
+    /// versus the block pool's total inventory, token ranges.
+    /// Rejections happen before any block is granted.
+    fn admit_generate(&self, req: &GenerateRequest) -> Result<(), (RejectReason, String)> {
+        if !self.generation || self.pool.is_none() {
+            return Err((
+                RejectReason::UnknownVariant,
+                format!(
+                    "backend {} does not support incremental decoding; \
+                     use a native variant for generate requests",
+                    self.backend_label
+                ),
             ));
         }
         if req.prompt.is_empty() {
-            return Err("generation needs a non-empty prompt".to_string());
+            return Err((
+                RejectReason::ZeroLength,
+                "generation needs a non-empty prompt".to_string(),
+            ));
         }
         if req.max_new == 0 {
-            return Err("generation needs max_new >= 1".to_string());
+            return Err((RejectReason::ZeroLength, "generation needs max_new >= 1".to_string()));
         }
         // Peak cache occupancy is `prompt + max_new - 1`: the final
         // emitted token is returned to the client, never fed back into
-        // the cache — so a request may use every cache slot.
-        if req.prompt.len() + req.max_new > self.seq + 1 {
-            return Err(format!(
-                "prompt of {} tokens + max_new {} needs {} kv cache slots but \
-                 backend {} has {}; shorten the prompt or the budget",
-                req.prompt.len(),
-                req.max_new,
-                req.prompt.len() + req.max_new - 1,
-                self.backend_label,
-                self.seq
+        // the cache. Admission bounds it by the pool's *total* token
+        // inventory — the request need not fit right now (preemption
+        // frees blocks), it must only be completable alone.
+        let peak = req.prompt.len() + req.max_new - 1;
+        let budget = self.pool.as_ref().map_or(0, |p| p.total_tokens());
+        if peak > budget {
+            return Err((
+                RejectReason::CachePressure,
+                format!(
+                    "prompt of {} tokens + max_new {} needs {} kv cache slots but \
+                     backend {}'s block pool holds {}; shorten the prompt or the \
+                     budget, or raise --kv-blocks",
+                    req.prompt.len(),
+                    req.max_new,
+                    peak,
+                    self.backend_label,
+                    budget
+                ),
             ));
         }
-        self.check_tokens(&req.prompt)?;
+        self.check_tokens(&req.prompt).map_err(|e| (RejectReason::BadToken, e))?;
         if let Some(stop) = req.stop {
             self.check_tokens(&[stop])
-                .map_err(|e| format!("stop token invalid: {e}"))?;
+                .map_err(|e| (RejectReason::BadToken, format!("stop token invalid: {e}")))?;
         }
         Ok(())
     }
@@ -346,7 +522,12 @@ impl VariantQueue {
     }
 }
 
-fn executor_loop<V: BackendSet>(set: V, rx: mpsc::Receiver<Job>, policy: BatchPolicy) {
+fn executor_loop<V: BackendSet>(
+    set: V,
+    rx: mpsc::Receiver<Job>,
+    policy: BatchPolicy,
+    sched: SchedConfig,
+) {
     // Per-variant queue, its max_batch clamped to the backend's actual
     // batch capacity so one flush never overflows one forward call.
     let mut queues: Vec<VariantQueue> = Vec::new();
@@ -354,21 +535,49 @@ fn executor_loop<V: BackendSet>(set: V, rx: mpsc::Receiver<Job>, policy: BatchPo
         let mut cap = policy.max_batch.max(1);
         let (mut seq, mut vocab, mut generation) = (0, 0, false);
         let mut backend_label = String::new();
+        let mut geometry: Option<(usize, usize)> = None;
         set.run(&name, &mut |backend| {
             cap = cap.min(backend.batch()).max(1);
             seq = backend.seq();
             vocab = backend.vocab();
             generation = backend.supports_generation();
             backend_label = backend.name().to_string();
+            geometry = backend.kv_block_geometry();
         });
+        // Mint the block pool for paged generation: the configured
+        // count, or auto-sized to match the old contiguous capacity
+        // (`cap` sequences of `seq` tokens each).
+        let pool = match geometry {
+            Some((nl, w)) if generation => {
+                Some(BlockPool::new(nl, w, sched.page_size, sched.pool_blocks(cap, seq)))
+            }
+            _ => None,
+        };
         let q = DynamicBatcher::new(BatchPolicy { max_batch: cap, ..policy });
-        queues.push(VariantQueue { name, seq, vocab, cap, generation, backend_label, q });
+        queues.push(VariantQueue {
+            name,
+            seq,
+            vocab,
+            cap,
+            generation,
+            backend_label,
+            pool,
+            prefill_chunk: sched.prefill_chunk,
+            q,
+        });
     }
     let mut metrics = Metrics::default();
-    let mut active: Vec<ActiveGen> = Vec::new();
+    for vq in &queues {
+        if let Some(pool) = &vq.pool {
+            metrics.kv_blocks_total += pool.total_blocks() as u64;
+        }
+    }
+    let mut active: Vec<SeqState> = Vec::new();
+    let mut next_seq_id: u64 = 0;
     loop {
         // Wait bounded by the nearest batch deadline — or not at all
-        // while generations are active: decode rounds are the idle work.
+        // while generations are active: scheduling rounds are the idle
+        // work.
         let timeout = if active.is_empty() {
             queues
                 .iter()
@@ -384,10 +593,12 @@ fn executor_loop<V: BackendSet>(set: V, rx: mpsc::Receiver<Job>, policy: BatchPo
             Err(mpsc::RecvTimeoutError::Disconnected) => return,
         };
         // Admit the received job plus everything already queued behind
-        // it (non-blocking drain): a burst reaches the batchers in one
-        // loop turn instead of trickling in one job per decode round.
+        // it (non-blocking drain): a burst reaches the batchers — and
+        // the running generation rounds — in one loop turn.
         for job in first.into_iter().chain(std::iter::from_fn(|| rx.try_recv().ok())) {
-            match handle_job(job, &set, &mut queues, &mut active, &mut metrics) {
+            let flow =
+                handle_job(job, &set, &mut queues, &mut active, &mut next_seq_id, &mut metrics);
+            match flow {
                 Flow::Continue => {}
                 Flow::Stop => return,
             }
@@ -398,10 +609,10 @@ fn executor_loop<V: BackendSet>(set: V, rx: mpsc::Receiver<Job>, policy: BatchPo
                 dispatch(&set, &vq.name, vq.q.take_batch(), &mut metrics);
             }
         }
-        // One decode round per loop turn keeps generation throughput
-        // high while queued scoring work still gets serviced between
-        // rounds.
-        decode_round(&set, &queues, &mut active, &mut metrics);
+        // One continuous-batching round per loop turn keeps generation
+        // throughput high while queued scoring work still gets serviced
+        // between rounds.
+        generation_round(&set, &mut queues, &mut active, &mut metrics);
     }
 }
 
@@ -410,13 +621,15 @@ enum Flow {
     Stop,
 }
 
-/// Admit one incoming job: enqueue/reject a score request, prefill or
-/// reject a generate request, or drain-and-stop on shutdown.
+/// Admit one incoming job: enqueue/reject a score request, admit/reject
+/// a generate request into the active set, or drain-and-stop on
+/// shutdown.
 fn handle_job<V: BackendSet>(
     job: Job,
     set: &V,
     queues: &mut [VariantQueue],
-    active: &mut Vec<ActiveGen>,
+    active: &mut Vec<SeqState>,
+    next_seq_id: &mut u64,
     metrics: &mut Metrics,
 ) -> Flow {
     match job {
@@ -424,13 +637,13 @@ fn handle_job<V: BackendSet>(
             match queues.iter_mut().find(|vq| vq.name == req.variant) {
                 Some(vq) => match vq.admit(&req) {
                     Ok(()) => vq.q.push((req, t0)),
-                    Err(e) => {
-                        metrics.rejected += 1;
+                    Err((reason, e)) => {
+                        metrics.record_rejection(reason);
                         let _ = req.reply.send(Response { logits: Err(e) });
                     }
                 },
                 None => {
-                    metrics.rejected += 1;
+                    metrics.record_rejection(RejectReason::UnknownVariant);
                     let _ = req.reply.send(Response {
                         logits: Err(format!("variant {} not resident", req.variant)),
                     });
@@ -439,19 +652,48 @@ fn handle_job<V: BackendSet>(
             Flow::Continue
         }
         Job::Generate(req, t0) => {
-            match queues.iter().position(|vq| vq.name == req.variant) {
-                Some(idx) => match queues[idx].admit_generate(&req) {
-                    Ok(()) => {
-                        let name = queues[idx].name.clone();
-                        start_generation(set, idx, &name, req, t0, active, metrics);
-                    }
-                    Err(e) => {
-                        metrics.rejected += 1;
-                        let _ = req.reply.send(GenerateResponse { result: Err(e) });
-                    }
-                },
+            let Some(idx) = queues.iter().position(|vq| vq.name == req.variant) else {
+                metrics.record_rejection(RejectReason::UnknownVariant);
+                let _ = req.reply.send(GenerateResponse {
+                    result: Err(format!("variant {} not resident", req.variant)),
+                });
+                return Flow::Continue;
+            };
+            if let Err((reason, e)) = queues[idx].admit_generate(&req) {
+                metrics.record_rejection(reason);
+                let _ = req.reply.send(GenerateResponse { result: Err(e) });
+                return Flow::Continue;
+            }
+            // Open the zero-capacity paged generation now; blocks are
+            // granted by the scheduling rounds as the sequence runs.
+            let page = queues[idx].pool.as_ref().map_or(1, |p| p.page_size());
+            let mut res: Option<Result<Generation, String>> = None;
+            set.run(&queues[idx].name, &mut |backend| {
+                res = Some(backend.start_paged_generation(page));
+            });
+            match res {
+                Some(Ok(gen)) => {
+                    *next_seq_id += 1;
+                    active.push(SeqState {
+                        id: *next_seq_id,
+                        variant_idx: idx,
+                        prompt: req.prompt,
+                        produced: Vec::new(),
+                        max_new: req.max_new,
+                        stop: req.stop,
+                        sampler: Sampler::new(&req.sampling),
+                        gen,
+                        reply: req.reply,
+                        stream: req.stream,
+                        t0,
+                    });
+                }
+                Some(Err(e)) => {
+                    metrics.generation_failures += 1;
+                    let _ = req.reply.send(GenerateResponse { result: Err(e) });
+                }
                 None => {
-                    metrics.rejected += 1;
+                    metrics.record_rejection(RejectReason::UnknownVariant);
                     let _ = req.reply.send(GenerateResponse {
                         result: Err(format!("variant {} not resident", req.variant)),
                     });
@@ -468,7 +710,7 @@ fn handle_job<V: BackendSet>(
                 }
             }
             while !active.is_empty() {
-                decode_round(set, queues, active, metrics);
+                generation_round(set, queues, active, metrics);
             }
             let _ = mtx.send(metrics.clone());
             Flow::Stop
@@ -476,161 +718,291 @@ fn handle_job<V: BackendSet>(
     }
 }
 
-/// Prefill one admitted generation and either complete it immediately
-/// (first pick hits `stop`, or `max_new == 1`) or add it to the active
-/// set for batched decode rounds.
-fn start_generation<V: BackendSet>(
-    set: &V,
-    variant_idx: usize,
-    name: &str,
-    req: GenerateRequest,
-    t0: Instant,
-    active: &mut Vec<ActiveGen>,
+/// Grow `members[i]`'s cache to absorb `extra` more tokens: grant free
+/// blocks lowest-id-first; when the pool runs dry, preempt the
+/// *youngest* block-holding member younger than `members[i]`
+/// (recompute-on-resume). Returns `Ok(false)` when capacity cannot be
+/// assured this round (only older members hold the blocks — the
+/// requester defers and retries once they complete or release).
+fn ensure_capacity(
+    backend: &dyn Backend,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    i: usize,
+    extra: usize,
     metrics: &mut Metrics,
+) -> Result<bool, String> {
+    let need = members[i].gen.len() + extra;
+    while members[i].gen.capacity() < need {
+        if let Some(block) = pool.alloc() {
+            backend.grant_kv_block(&mut members[i].gen, block)?;
+            continue;
+        }
+        // Pool dry: members are FIFO-sorted, so the youngest victim is
+        // the highest index past `i` still holding blocks.
+        let Some(j) = (i + 1..members.len()).rev().find(|&j| members[j].gen.capacity() > 0) else {
+            return Ok(false);
+        };
+        let cached = members[j].gen.len() as u64;
+        let blocks = backend.reclaim_kv_blocks(&mut members[j].gen)?;
+        metrics.record_preemption(blocks.len() as u64, cached);
+        for b in blocks {
+            pool.release(b);
+        }
+    }
+    Ok(true)
+}
+
+/// Return every block of `members[i]` to the pool (completion/failure).
+fn reclaim_to_pool(
+    backend: &dyn Backend,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    i: usize,
 ) {
-    let mut res: Option<Result<(Generation, Vec<f32>), String>> = None;
-    set.run(name, &mut |backend| {
-        res = Some(backend.start_generation(&req.prompt));
-    });
-    let (gen, last_logits) = match res {
-        Some(Ok(pair)) => pair,
-        Some(Err(e)) => {
-            metrics.generation_failures += 1;
-            let _ = req.reply.send(GenerateResponse { result: Err(e) });
-            return;
+    if let Ok(blocks) = backend.reclaim_kv_blocks(&mut members[i].gen) {
+        for b in blocks {
+            pool.release(b);
         }
-        None => {
-            metrics.generation_failures += 1;
-            let _ = req.reply.send(GenerateResponse {
-                result: Err(format!("variant {name} not resident")),
-            });
-            return;
-        }
-    };
-    let first = greedy_argmax(&last_logits);
-    let mut ag = ActiveGen {
-        variant_idx,
-        gen,
-        prompt_len: req.prompt.len(),
-        next_token: first,
-        produced: Vec::new(),
-        max_new: req.max_new,
-        stop: req.stop,
-        reply: req.reply,
-        t0,
-    };
-    if ag.stop == Some(first) {
-        finish_generation(ag, metrics);
-        return;
     }
-    ag.produced.push(first);
-    if ag.produced.len() >= ag.max_new {
-        finish_generation(ag, metrics);
-        return;
-    }
-    active.push(ag);
 }
 
-/// Reply with a finished generation and account it.
-fn finish_generation(ag: ActiveGen, metrics: &mut Metrics) {
-    metrics.record_generation(ag.produced.len() as u64, ag.t0.elapsed());
-    let _ = ag.reply.send(GenerateResponse {
-        result: Ok(Generated { tokens: ag.produced, prompt_len: ag.prompt_len }),
-    });
+/// Sample the next token for `s` from `logits` (the last fed
+/// position's). Returns `true` when the sequence is finished — stop
+/// token picked (not emitted) or `max_new` reached. Emitted tokens
+/// stream out exactly once, at pick time.
+fn apply_pick(s: &mut SeqState, logits: &[f32]) -> bool {
+    let tok = s.sampler.pick(logits);
+    if s.stop == Some(tok) {
+        return true;
+    }
+    s.produced.push(tok);
+    if let Some(stream) = &s.stream {
+        let _ = stream.send(tok);
+    }
+    s.produced.len() >= s.max_new
 }
 
-/// One batched decode round: for each variant with active sequences,
-/// step up to `cap` of them together through `Backend::decode_batch`,
-/// then greedily pick each sequence's next token, completing sequences
-/// individually as they hit `max_new` or their stop token.
-fn decode_round<V: BackendSet>(
+/// One continuous-batching round per variant: compose the round
+/// (deterministic FIFO+budget), assure block capacity (preempting
+/// youngest-first under pressure), step the decode group through
+/// `decode_batch`, run at most one prefill chunk, then sample and
+/// complete sequences whose feed caught up.
+fn generation_round<V: BackendSet>(
     set: &V,
-    queues: &[VariantQueue],
-    active: &mut Vec<ActiveGen>,
+    queues: &mut [VariantQueue],
+    active: &mut Vec<SeqState>,
     metrics: &mut Metrics,
 ) {
     if active.is_empty() {
         return;
     }
-    for (qi, vq) in queues.iter().enumerate() {
-        // Pull this round's group from the *front* of `active` (stable
-        // FIFO partition): survivors re-enter at the tail, so when more
-        // sequences are active than fit one round, slots round-robin
-        // fairly instead of favoring the newest arrivals. Selection
-        // order never affects logits — decode is per-sequence
-        // deterministic — only scheduling fairness.
-        let mut group: Vec<ActiveGen> = Vec::new();
-        let mut rest: Vec<ActiveGen> = Vec::with_capacity(active.len());
-        for ag in active.drain(..) {
-            if ag.variant_idx == qi && group.len() < vq.cap {
-                group.push(ag);
+    for qi in 0..queues.len() {
+        let vq = &mut queues[qi];
+        // Extract this variant's sequences and restore admission order
+        // (ids are monotone, so the sort is the FIFO ground truth no
+        // matter how `active` got shuffled).
+        let mut members: Vec<SeqState> = Vec::new();
+        let mut rest: Vec<SeqState> = Vec::with_capacity(active.len());
+        for s in active.drain(..) {
+            if s.variant_idx == qi {
+                members.push(s);
             } else {
-                rest.push(ag);
+                rest.push(s);
             }
         }
         active.append(&mut rest);
-        if group.is_empty() {
+        if members.is_empty() {
             continue;
         }
-        let tokens: Vec<i32> = group.iter().map(|a| a.next_token).collect();
-        let mut res: Option<Result<Vec<Result<Vec<f32>, String>>, String>> = None;
-        let t_exec = Instant::now();
-        set.run(&vq.name, &mut |backend| {
-            let gens: Vec<&mut Generation> = group.iter_mut().map(|a| &mut a.gen).collect();
-            res = Some(backend.decode_batch(gens, &tokens));
-        });
-        let exec_elapsed = t_exec.elapsed();
-        let rows = match res {
-            Some(Ok(rows)) => rows,
-            other => {
-                // Call-level backend error (or vanished variant): fail
-                // the whole round's sequences rather than looping
-                // forever.
-                let e = match other {
-                    Some(Err(e)) => e,
-                    _ => format!("variant {} not resident", vq.name),
-                };
-                for ag in group {
-                    metrics.generation_failures += 1;
-                    let _ = ag.reply.send(GenerateResponse { result: Err(e.clone()) });
-                }
-                continue;
+        members.sort_by_key(|s| s.id);
+        let mut fates: Vec<Fate> = members.iter().map(|_| Fate::Active).collect();
+        let Some(mut pool) = vq.pool.take() else {
+            // Unreachable via admission (generate requires a pool), but
+            // never loop forever on it: fail the stranded sequences.
+            for f in fates.iter_mut() {
+                *f = Fate::Failed(format!("variant {} has no paged kv pool", vq.name));
             }
+            settle_round(members, fates, active, metrics);
+            continue;
         };
-        // Account the round over the sequences that actually stepped.
-        let stepped: Vec<bool> = rows.iter().map(|r| r.is_ok()).collect();
-        let seqs = stepped.iter().filter(|&&ok| ok).count();
-        let cache_tokens: u64 = group
-            .iter()
-            .zip(&stepped)
-            .filter(|(_, &ok)| ok)
-            .map(|(a, _)| a.gen.len() as u64)
-            .sum();
-        if seqs > 0 {
-            metrics.record_decode(seqs, cache_tokens, exec_elapsed);
-        }
-        for (mut ag, row) in group.into_iter().zip(rows) {
-            let logits = match row {
-                Ok(logits) => logits,
-                Err(e) => {
-                    // Per-sequence failure: only this generation ends;
-                    // its round-mates' results stand.
-                    metrics.generation_failures += 1;
-                    let _ = ag.reply.send(GenerateResponse { result: Err(e) });
-                    continue;
+        let plan = {
+            let descs: Vec<crate::sched::SeqDesc> = members
+                .iter()
+                .map(|s| crate::sched::SeqDesc { id: s.id, pending: s.pending() })
+                .collect();
+            compose_round(&descs, vq.cap, vq.prefill_chunk)
+        };
+        let found = set.run(&vq.name, &mut |backend| {
+            run_variant_round(backend, &plan, &mut pool, &mut members, &mut fates, metrics);
+        });
+        if !found {
+            for f in fates.iter_mut() {
+                if matches!(f, Fate::Active) {
+                    *f = Fate::Failed(format!("variant {} not resident", vq.name));
                 }
-            };
-            let tok = greedy_argmax(&logits);
-            if ag.stop == Some(tok) {
-                finish_generation(ag, metrics);
-                continue;
             }
-            ag.produced.push(tok);
-            if ag.produced.len() >= ag.max_new {
-                finish_generation(ag, metrics);
-            } else {
-                ag.next_token = tok;
-                active.push(ag);
+        }
+        metrics.kv_blocks_peak = metrics.kv_blocks_peak.max(pool.peak() as u64);
+        vq.pool = Some(pool);
+        settle_round(members, fates, active, metrics);
+    }
+}
+
+/// Execute one composed round against the backend (single `run`
+/// callback: grants, preemptions, decode batch, prefill chunk, picks).
+fn run_variant_round(
+    backend: &dyn Backend,
+    plan: &crate::sched::RoundPlan,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    fates: &mut [Fate],
+    metrics: &mut Metrics,
+) {
+    // --- Decode group: assure capacity in FIFO order. A member whose
+    // pending changed (preempted by an older peer's grant) drops out of
+    // this round; one that cannot get a block defers to the next.
+    let mut decode_idx: Vec<usize> = Vec::new();
+    for &id in &plan.decode {
+        let Some(i) = members.iter().position(|s| s.id == id) else {
+            continue;
+        };
+        if !matches!(fates[i], Fate::Active) || members[i].pending() != 1 {
+            continue;
+        }
+        match ensure_capacity(backend, pool, members, i, 1, metrics) {
+            Ok(true) => decode_idx.push(i),
+            Ok(false) => {}
+            Err(e) => {
+                reclaim_to_pool(backend, pool, members, i);
+                fates[i] = Fate::Failed(e);
+            }
+        }
+    }
+    // Preemption during later assurance may have grown an earlier
+    // member's pending past 1 — drop it; it prefills next round.
+    decode_idx.retain(|&i| members[i].pending() == 1);
+    if !decode_idx.is_empty() {
+        let mut tokens: Vec<i32> = Vec::with_capacity(decode_idx.len());
+        for &i in &decode_idx {
+            tokens.push(members[i].feed_at(members[i].gen.len()));
+        }
+        let t_exec = Instant::now();
+        let res = {
+            // `iter_mut` hands out disjoint `&mut` rows; `decode_idx`
+            // is ascending, so the filtered order matches `tokens`.
+            let gens: Vec<&mut Generation> = members
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| decode_idx.binary_search(i).is_ok())
+                .map(|(_, s)| &mut s.gen)
+                .collect();
+            backend.decode_batch(gens, &tokens)
+        };
+        let exec_elapsed = t_exec.elapsed();
+        match res {
+            Ok(rows) => {
+                let stepped: Vec<bool> = rows.iter().map(|r| r.is_ok()).collect();
+                let seqs = stepped.iter().filter(|&&ok| ok).count();
+                let cache_tokens: u64 = decode_idx
+                    .iter()
+                    .zip(&stepped)
+                    .filter(|(_, &ok)| ok)
+                    .map(|(&i, _)| members[i].gen.len() as u64)
+                    .sum();
+                if seqs > 0 {
+                    metrics.record_decode(seqs, cache_tokens, exec_elapsed);
+                }
+                for (&i, row) in decode_idx.iter().zip(rows) {
+                    match row {
+                        Ok(logits) => {
+                            if apply_pick(&mut members[i], &logits) {
+                                reclaim_to_pool(backend, pool, members, i);
+                                fates[i] = Fate::Done;
+                            }
+                        }
+                        Err(e) => {
+                            reclaim_to_pool(backend, pool, members, i);
+                            fates[i] = Fate::Failed(e);
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                // Call-level backend error: fail the whole group rather
+                // than looping forever.
+                for &i in &decode_idx {
+                    reclaim_to_pool(backend, pool, members, i);
+                    fates[i] = Fate::Failed(e.clone());
+                }
+            }
+        }
+    }
+    // --- One prefill chunk: the oldest member still feeding. Re-derive
+    // it (the composed target may have been preempted or failed above;
+    // pending also moves), keeping the chunk bound from the plan.
+    let Some((_, chunk_max)) = plan.prefill else {
+        return;
+    };
+    let mut next_prefill = None;
+    for (i, s) in members.iter().enumerate() {
+        if matches!(fates[i], Fate::Active) && s.pending() > 1 {
+            next_prefill = Some(i);
+            break;
+        }
+    }
+    let Some(i) = next_prefill else { return };
+    let chunk_len = members[i].pending().min(chunk_max.max(1));
+    match ensure_capacity(backend, pool, members, i, chunk_len, metrics) {
+        Ok(true) => {}
+        Ok(false) => return,
+        Err(e) => {
+            reclaim_to_pool(backend, pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return;
+        }
+    }
+    let start = members[i].gen.len();
+    let tokens: Vec<i32> = (start..start + chunk_len).map(|p| members[i].feed_at(p)).collect();
+    let t_exec = Instant::now();
+    let res = backend.prefill_chunk(&mut members[i].gen, &tokens);
+    metrics.record_prefill(chunk_len as u64, t_exec.elapsed());
+    match res {
+        Ok(logits) => {
+            // Chunk reached the end of the feed stream → a pick is due
+            // from the last position's logits.
+            if members[i].pending() == 0 && apply_pick(&mut members[i], &logits) {
+                reclaim_to_pool(backend, pool, members, i);
+                fates[i] = Fate::Done;
+            }
+        }
+        Err(e) => {
+            reclaim_to_pool(backend, pool, members, i);
+            fates[i] = Fate::Failed(e);
+        }
+    }
+}
+
+/// Apply round fates: reply to completed/failed sequences, return
+/// survivors to the active set.
+fn settle_round(
+    members: Vec<SeqState>,
+    fates: Vec<Fate>,
+    active: &mut Vec<SeqState>,
+    metrics: &mut Metrics,
+) {
+    for (s, fate) in members.into_iter().zip(fates) {
+        match fate {
+            Fate::Active => active.push(s),
+            Fate::Done => {
+                metrics.record_generation(s.produced.len() as u64, s.t0.elapsed());
+                let _ = s.reply.send(GenerateResponse {
+                    result: Ok(Generated { tokens: s.produced, prompt_len: s.prompt.len() }),
+                });
+            }
+            Fate::Failed(e) => {
+                metrics.generation_failures += 1;
+                let _ = s.reply.send(GenerateResponse { result: Err(e) });
             }
         }
     }
@@ -652,7 +1024,7 @@ fn dispatch<V: BackendSet>(
     });
     if !found {
         for (req, _) in slot.take().into_iter().flatten() {
-            metrics.rejected += 1;
+            metrics.record_rejection(RejectReason::UnknownVariant);
             let _ = req.reply.send(Response {
                 logits: Err(format!("variant {name} not resident")),
             });

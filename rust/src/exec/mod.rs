@@ -42,10 +42,25 @@
 //! greedy decodes are therefore reproducible across every execution
 //! strategy. Backends without the contract return a clear error
 //! (`supports_generation` lets callers probe up front).
+//!
+//! ## Paged generation
+//!
+//! On top of the contiguous contract, backends may implement the
+//! *paged* variant the continuous-batching scheduler drives:
+//! [`Backend::start_paged_generation`] opens a generation over an
+//! empty block-table cache, [`Backend::grant_kv_block`] /
+//! [`Backend::reclaim_kv_blocks`] move fixed-size
+//! [`KvBlock`](crate::model::KvBlock)s between the scheduler's pool and
+//! the sequence, and [`Backend::prefill_chunk`] absorbs bounded prompt
+//! chunks. Decode steps reuse the same [`Backend::decode`] /
+//! [`Backend::decode_batch`] calls — the block layout is invisible to
+//! the math, so paged decode logits are bit-identical to the contiguous
+//! path.
 
 pub mod native;
 pub mod pjrt;
 
+use crate::model::KvBlock;
 use std::any::Any;
 
 pub use native::{ExecPool, NativeBackend, NativeSet};
@@ -116,6 +131,48 @@ pub trait Backend {
         }
         Ok(gens.into_iter().zip(tokens).map(|(g, &t)| self.decode(g, t)).collect())
     }
+
+    /// Model geometry `(n_layers, d_model)` for minting
+    /// [`KvBlock`](crate::model::KvBlock)s this backend's paged caches
+    /// accept; `None` when the backend cannot decode through a block
+    /// table (the paged methods below then return errors).
+    fn kv_block_geometry(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Open a generation over an empty **paged** cache with
+    /// `page`-token blocks and zero capacity — no tokens are absorbed
+    /// and no storage is reserved. The caller grows capacity with
+    /// [`Backend::grant_kv_block`] and feeds the prompt through
+    /// [`Backend::prefill_chunk`], so admission can start on the first
+    /// free block instead of reserving peak occupancy up front.
+    fn start_paged_generation(&self, _page: usize) -> Result<Generation, String> {
+        Err(format!("the {} backend does not support paged decoding", self.name()))
+    }
+
+    /// Extend `gen`'s paged cache by one granted block (capacity grows
+    /// by the block's page size). The default implementation errors —
+    /// and drops the block — so callers must only grant to backends
+    /// whose [`Backend::kv_block_geometry`] is `Some`.
+    fn grant_kv_block(&self, _gen: &mut Generation, _block: KvBlock) -> Result<(), String> {
+        Err(format!("the {} backend does not support paged decoding", self.name()))
+    }
+
+    /// Take every block back from `gen`'s paged cache (completion,
+    /// preemption or eviction); the generation drops to zero length and
+    /// capacity, and its rows are recomputed on resume, never migrated.
+    fn reclaim_kv_blocks(&self, _gen: &mut Generation) -> Result<Vec<KvBlock>, String> {
+        Err(format!("the {} backend does not support paged decoding", self.name()))
+    }
+
+    /// Absorb a bounded prompt/recompute chunk at positions
+    /// `gen.len()..` and return the **last** absorbed position's
+    /// `[vocab]` logits — bit-identical to the same positions of a full
+    /// forward, whatever the chunking. On error the cache is rolled
+    /// back to its pre-call state.
+    fn prefill_chunk(&self, _gen: &mut Generation, _tokens: &[i32]) -> Result<Vec<f32>, String> {
+        Err(format!("the {} backend does not support paged decoding", self.name()))
+    }
 }
 
 /// Opaque per-sequence incremental-generation state (a KV cache plus
@@ -164,6 +221,14 @@ impl Generation {
     /// Record `n` newly cached tokens.
     pub fn advance(&mut self, n: usize) {
         self.len += n;
+    }
+
+    /// Reset the tracked cache occupancy/capacity — backends call this
+    /// when paged storage is granted or reclaimed so the wrapper's
+    /// bookkeeping follows the cache it wraps.
+    pub fn set_occupancy(&mut self, len: usize, capacity: usize) {
+        self.len = len;
+        self.capacity = capacity;
     }
 }
 

@@ -32,7 +32,7 @@ use std::thread::JoinHandle;
 use super::{Backend, BackendSet, Generation};
 use crate::config::cli::resolve_threads;
 use crate::model::{
-    DecodePar, DenseModel, ForwardScratch, KernelMode, KvCache, ShardJob, ShardRunner,
+    DecodePar, DenseModel, ForwardScratch, KernelMode, KvBlock, KvCache, ShardJob, ShardRunner,
 };
 
 type Job = Box<dyn FnOnce(&mut ForwardScratch) + Send + 'static>;
@@ -419,6 +419,65 @@ impl Backend for NativeBackend {
             })
             .collect();
         self.pool.run_scoped(jobs)
+    }
+
+    fn kv_block_geometry(&self) -> Option<(usize, usize)> {
+        let cfg = self.model.cfg();
+        Some((cfg.n_layers, cfg.d_model))
+    }
+
+    /// Open a zero-capacity paged generation. No tokens are absorbed
+    /// and no storage is reserved — the scheduler grants blocks and
+    /// feeds the prompt through [`Backend::prefill_chunk`].
+    fn start_paged_generation(&self, page: usize) -> Result<Generation, String> {
+        let state = NativeGen {
+            model: Arc::clone(&self.model),
+            cache: KvCache::paged(self.model.cfg(), page),
+            scratch: ForwardScratch::new(),
+        };
+        Ok(Generation::new(Box::new(state), 0, 0))
+    }
+
+    fn grant_kv_block(&self, gen: &mut Generation, block: KvBlock) -> Result<(), String> {
+        let state = owned_state(gen, &self.model)?;
+        state.cache.grant(block)?;
+        let (len, cap) = (state.cache.len(), state.cache.capacity());
+        gen.set_occupancy(len, cap);
+        Ok(())
+    }
+
+    fn reclaim_kv_blocks(&self, gen: &mut Generation) -> Result<Vec<KvBlock>, String> {
+        let state = owned_state(gen, &self.model)?;
+        let blocks = state.cache.reclaim_blocks();
+        gen.set_occupancy(0, 0);
+        Ok(blocks)
+    }
+
+    /// Absorb one bounded prompt/recompute chunk, intra-sequence
+    /// parallel like [`Backend::start_generation`]'s prefill. Returns
+    /// the last absorbed position's logits.
+    fn prefill_chunk(&self, gen: &mut Generation, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        let v = self.vocab();
+        if tokens.is_empty() {
+            return Err("prefill chunk needs at least one token".to_string());
+        }
+        self.validate_tokens(tokens)?;
+        let par = self.decode_par();
+        let state = owned_state(gen, &self.model)?;
+        let logits = self.model.forward_cached_par(
+            tokens,
+            &mut state.cache,
+            &mut state.scratch,
+            par.as_ref(),
+        )?;
+        // Multi-token chunks size scratch to the chunk (including a
+        // `chunk × vocab` f64 accumulator); decode needs single-row
+        // buffers only, so drop the chunk-sized allocations.
+        if tokens.len() > 1 {
+            state.scratch = ForwardScratch::new();
+        }
+        gen.advance(tokens.len());
+        Ok(logits[(tokens.len() - 1) * v..].to_vec())
     }
 }
 

@@ -40,6 +40,9 @@
 //!   Hessians captured from the rotated forward, persisted as a
 //!   reusable artifact, consumed by Hessian-calibrated GPTQ and the
 //!   calibration-aware `gsr search` objective.
+//! * [`sched`] — paged-KV serving primitives: the block pool behind the
+//!   paged `KvCache`, the continuous-batching round policy, and the
+//!   deterministic (seeded, replayable) temperature/top-k/top-p sampler.
 //! * [`search`] — the `gsr search` subsystem: a training-free per-layer
 //!   rotation auto-configuration search (candidate grid × proxy
 //!   objectives × parallel planner) producing a [`quant`] `RotationPlan`.
@@ -55,6 +58,7 @@ pub mod model;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod sched;
 pub mod search;
 pub mod transform;
 

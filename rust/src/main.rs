@@ -6,8 +6,10 @@
 //! * `table1|table2|table3` — regenerate the paper's tables.
 //! * `analyze`            — §3.2 sequency variance + Fig. 2 outlier spread.
 //! * `serve`              — start the batching server and run a demo load.
-//! * `generate`           — greedy incremental decoding (KV-cached) on the
-//!                          native backend; reports decode tok/s.
+//! * `generate`           — incremental decoding (paged KV, continuous
+//!                          batching) on the native backend: greedy by
+//!                          default, seeded sampling via `--temperature`;
+//!                          reports decode tok/s and tail latency.
 //! * `gen-corpus`         — write the synthetic corpus (native generator).
 //! * `search`             — training-free per-layer rotation auto-config:
 //!                          emit a rotation plan JSON for `quantize-native`.
@@ -23,6 +25,7 @@ use gsr::data::CorpusGenerator;
 use gsr::eval::tables;
 use gsr::eval::EvalOpts;
 use gsr::runtime::{Artifacts, Engine};
+use gsr::sched::{SamplingParams, SchedConfig};
 
 fn main() {
     let args = Args::from_env();
@@ -72,8 +75,13 @@ fn print_help() {
                                          heterogeneous rotation plan in-process\n\
                  [--variants A,B] [--batch N] [--threads N] [--bits N]\n\
                  [--kernels reference|fast] (native) quantized-kernel mode\n\
-           generate [--requests N]     greedy KV-cached decoding demo load\n\
+                 [--page-size N] [--kv-blocks N] [--prefill-chunk N]\n\
+                                         (native) paged-KV scheduler knobs\n\
+           generate [--requests N]     KV-cached decoding demo load\n\
                  [--prompt-len N] [--max-new N]   (native backend only)\n\
+                 [--temperature T] [--top-k K] [--top-p P] [--seed N]\n\
+                                         seeded sampling (default: greedy)\n\
+                 [--page-size N] [--kv-blocks N] [--prefill-chunk N]\n\
                  [--plan F [--calib F]] [--variants A,B] [--batch N]\n\
                  [--threads N] [--bits N] [--kernels reference|fast]\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
@@ -343,14 +351,43 @@ fn start_native_server(
         set.insert("searched", NativeBackend::with_pool(Arc::new(model), b, s, pool));
         variants.push("searched".to_string());
     }
-    Ok((Server::start_native(set, policy)?, variants))
+    Ok((Server::start_native_sched(set, policy, sched_from_args(args))?, variants))
 }
 
-/// `gsr generate` — greedy incremental decoding through the serving
+/// Paged-KV scheduler knobs for the native serving path: `--page-size`
+/// (tokens per KV block), `--kv-blocks` (pool size per variant, 0 =
+/// auto-size to the backend's contiguous capacity), `--prefill-chunk`
+/// (prompt tokens absorbed per scheduling round).
+fn sched_from_args(args: &Args) -> SchedConfig {
+    let d = SchedConfig::default();
+    SchedConfig {
+        page_size: args.opt_usize("page-size", d.page_size).max(1),
+        kv_blocks: args.opt_usize("kv-blocks", d.kv_blocks),
+        prefill_chunk: args.opt_usize("prefill-chunk", d.prefill_chunk).max(1),
+    }
+}
+
+/// Sampling configuration from `--temperature/--top-k/--top-p/--seed`.
+/// The default is greedy (temperature 0), which consumes no RNG and
+/// ignores the seed.
+fn sampling_from_args(args: &Args) -> SamplingParams {
+    let g = SamplingParams::greedy();
+    SamplingParams {
+        temperature: args.opt_f64("temperature", g.temperature),
+        top_k: args.opt_usize("top-k", g.top_k),
+        top_p: args.opt_f64("top-p", g.top_p),
+        seed: args.opt_u64("seed", g.seed),
+    }
+}
+
+/// `gsr generate` — incremental decoding through the serving
 /// coordinator: prompts drawn from the held-out test split are
-/// prefilled once, then decoded token by token on the KV-cached native
-/// path. All requests are submitted up front so decode rounds batch
-/// across sequences; metrics report decode tok/s and cache occupancy.
+/// chunk-prefilled into paged KV, then decoded token by token on the
+/// native backend — greedy by default, seeded temperature / top-k /
+/// top-p sampling via the CLI. All requests are submitted up front so
+/// the continuous-batching rounds interleave prefill chunks with
+/// decodes; metrics report decode tok/s, tail latency and block-pool
+/// pressure.
 fn cmd_generate(args: &Args) -> Result<(), String> {
     use gsr::coordinator::GenerateRequest;
     use std::sync::mpsc;
@@ -376,23 +413,22 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     if prompt_len == 0 {
         return Err("--prompt-len must be >= 1".to_string());
     }
-    // Peak occupancy is prompt + max_new - 1 (the last token is
-    // returned, never cached) — mirror the server's admission rule.
-    if prompt_len + max_new > arts.seq + 1 {
-        return Err(format!(
-            "--prompt-len {prompt_len} + --max-new {max_new} needs {} kv cache \
-             slots but the backend seq is {}",
-            prompt_len + max_new - 1,
-            arts.seq
-        ));
-    }
+    // Admission happens server-side against the variant's block pool
+    // (peak occupancy must fit its total token inventory, not be
+    // contiguously free) — rejections come back per request.
+    let sampling = sampling_from_args(args);
+    let mode = if sampling.is_greedy() {
+        "greedy".to_string()
+    } else {
+        format!("T={} seed={}", sampling.temperature, sampling.seed)
+    };
     let test = arts.test_split().to_vec();
     if test.len() < prompt_len + 2 {
         return Err("test split too small for the requested prompt length".to_string());
     }
     println!(
         "generating {n_requests} completion(s) over {} variant(s) on the native backend \
-         (prompt {prompt_len} tokens, up to {max_new} new)",
+         (prompt {prompt_len} tokens, up to {max_new} new, {mode})",
         variants.len()
     );
     let t0 = std::time::Instant::now();
@@ -410,6 +446,8 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
             prompt,
             max_new,
             stop: None,
+            sampling: sampling.clone(),
+            stream: None,
             reply,
         })?;
         pending.push((variant, rx));

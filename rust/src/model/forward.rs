@@ -132,7 +132,55 @@ impl ForwardScratch {
 // KV cache (incremental decoding)
 // ---------------------------------------------------------------------------
 
-/// Per-sequence attention state for incremental decoding: one growing
+/// One fixed-size page of KV storage: `page` token rows per layer, for
+/// every layer of the model. Blocks are minted by the scheduler's block
+/// pool (`sched::BlockPool`), granted to a sequence's paged [`KvCache`],
+/// and physically move back to the pool on reclaim — storage ownership
+/// is explicit, never shared.
+pub struct KvBlock {
+    id: u32,
+    /// Per-layer key rows, each buffer `page * width` floats.
+    k: Vec<Vec<f32>>,
+    /// Per-layer value rows, same shape as `k`.
+    v: Vec<Vec<f32>>,
+}
+
+impl KvBlock {
+    /// Zero-filled block holding `page` token rows of width `width` for
+    /// `n_layers` layers.
+    pub fn new(id: u32, n_layers: usize, page: usize, width: usize) -> Self {
+        Self {
+            id,
+            k: (0..n_layers).map(|_| vec![0.0; page * width]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; page * width]).collect(),
+        }
+    }
+
+    /// Pool-assigned identity; allocation order is deterministic
+    /// (lowest free id first), so block-id sequences are replayable.
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+/// Physical KV storage behind a [`KvCache`]: either one contiguous
+/// `[capacity, width]` buffer per layer, or a table of granted
+/// fixed-size [`KvBlock`]s (paged mode).
+enum KvStore {
+    Contig(Vec<LayerKv>),
+    Paged {
+        /// Token rows per block.
+        page: usize,
+        /// Block table, position order: row `p` lives in
+        /// `blocks[p / page]` at offset `p % page`.
+        blocks: Vec<KvBlock>,
+        /// Contiguous gather scratch for attention (keys / values).
+        gather_k: Vec<f32>,
+        gather_v: Vec<f32>,
+    },
+}
+
+/// Per-sequence attention state for incremental decoding: one logical
 /// `[len, d_model]` key and value buffer per layer.
 ///
 /// Cached rows are the exact tensors attention consumes — keys after
@@ -141,14 +189,23 @@ impl ForwardScratch {
 /// to be touched again: all R1/R2 and per-layer R4 rotations are fused
 /// into the weights *upstream* of these tensors, which is what makes a
 /// cached decode path valid for heterogeneous searched plans too.
+///
+/// Storage is either contiguous ([`KvCache::new`], capacity fixed up
+/// front) or paged ([`KvCache::paged`], capacity grows block-by-block
+/// as [`KvBlock`]s are granted). The layout is invisible to the math:
+/// before attention, a paged cache gathers its rows into contiguous
+/// scratch in position order, so the bits consumed — and hence every
+/// decode logit — are identical across layouts.
 pub struct KvCache {
-    layers: Vec<LayerKv>,
+    store: KvStore,
     /// Positions already absorbed (prompt + decoded tokens).
     len: usize,
-    /// Maximum positions this cache may hold.
+    /// Maximum positions this cache may hold (paged: grows with grants).
     capacity: usize,
     /// Row width (`d_model`) — part of the geometry check.
     width: usize,
+    /// Layer count — part of the geometry check.
+    n_layers: usize,
 }
 
 struct LayerKv {
@@ -157,9 +214,9 @@ struct LayerKv {
 }
 
 impl KvCache {
-    /// Empty cache for `cfg`'s geometry holding up to `capacity` tokens
-    /// (buffers are pre-reserved so steady-state decode never
-    /// reallocates).
+    /// Empty contiguous cache for `cfg`'s geometry holding up to
+    /// `capacity` tokens (buffers are pre-reserved so steady-state
+    /// decode never reallocates).
     ///
     /// ```
     /// use gsr::model::{KvCache, ModelCfg};
@@ -174,7 +231,93 @@ impl KvCache {
                 v: Vec::with_capacity(capacity * width),
             })
             .collect();
-        Self { layers, len: 0, capacity, width }
+        Self {
+            store: KvStore::Contig(layers),
+            len: 0,
+            capacity,
+            width,
+            n_layers: cfg.n_layers,
+        }
+    }
+
+    /// Empty paged cache for `cfg`'s geometry with `page`-token blocks.
+    /// Starts with zero capacity: every `page` tokens of headroom must
+    /// be granted via [`KvCache::grant`] before they can be absorbed.
+    pub fn paged(cfg: &ModelCfg, page: usize) -> Self {
+        Self {
+            store: KvStore::Paged {
+                page: page.max(1),
+                blocks: Vec::new(),
+                gather_k: Vec::new(),
+                gather_v: Vec::new(),
+            },
+            len: 0,
+            capacity: 0,
+            width: cfg.d_model,
+            n_layers: cfg.n_layers,
+        }
+    }
+
+    /// Whether this cache reads/writes through a block table.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, KvStore::Paged { .. })
+    }
+
+    /// Token rows per block (`None` for contiguous caches).
+    pub fn page_size(&self) -> Option<usize> {
+        match &self.store {
+            KvStore::Paged { page, .. } => Some(*page),
+            KvStore::Contig(_) => None,
+        }
+    }
+
+    /// Append `block` to the block table, extending capacity by one
+    /// page. Rejects contiguous caches and geometry mismatches (the
+    /// block is returned to the caller inside the error in neither
+    /// case — it is simply dropped — so callers should check geometry
+    /// at pool construction, not per grant).
+    pub fn grant(&mut self, block: KvBlock) -> Result<(), String> {
+        let (w, nl) = (self.width, self.n_layers);
+        match &mut self.store {
+            KvStore::Contig(_) => Err("cannot grant a kv block to a contiguous cache".to_string()),
+            KvStore::Paged { page, blocks, .. } => {
+                let page = *page;
+                if block.k.len() != nl
+                    || block.v.len() != nl
+                    || block.k.iter().chain(block.v.iter()).any(|b| b.len() != page * w)
+                {
+                    return Err(format!(
+                        "kv block geometry does not match cache [{nl} layers x {page} x {w}]"
+                    ));
+                }
+                blocks.push(block);
+                self.capacity += page;
+                Ok(())
+            }
+        }
+    }
+
+    /// Take every granted block back (preempt/evict/complete): the cache
+    /// returns to zero capacity and zero length; cached rows are
+    /// recomputed on resume, never migrated. Contiguous caches return
+    /// an empty vec and are otherwise untouched.
+    pub fn reclaim_blocks(&mut self) -> Vec<KvBlock> {
+        match &mut self.store {
+            KvStore::Contig(_) => Vec::new(),
+            KvStore::Paged { blocks, .. } => {
+                self.len = 0;
+                self.capacity = 0;
+                std::mem::take(blocks)
+            }
+        }
+    }
+
+    /// Ids of the granted blocks, table order (empty for contiguous).
+    pub fn block_ids(&self) -> Vec<u32> {
+        match &self.store {
+            KvStore::Contig(_) => Vec::new(),
+            KvStore::Paged { blocks, .. } => blocks.iter().map(|b| b.id).collect(),
+        }
     }
 
     /// Tokens currently cached — the sequence position decode resumes at.
@@ -196,33 +339,94 @@ impl KvCache {
         self.capacity - self.len
     }
 
-    /// Reset for a new sequence, keeping the allocations.
+    /// Reset for a new sequence, keeping the allocations (contiguous) or
+    /// the granted blocks (paged — rows are positional, so stale data is
+    /// simply overwritten).
     pub fn clear(&mut self) {
-        for layer in &mut self.layers {
-            layer.k.clear();
-            layer.v.clear();
+        if let KvStore::Contig(layers) = &mut self.store {
+            for layer in layers {
+                layer.k.clear();
+                layer.v.clear();
+            }
         }
         self.len = 0;
     }
 
     /// Roll back to `len` cached positions (error-path cleanup: a failed
-    /// chunk must not leave half-appended rows behind).
+    /// chunk must not leave half-appended rows behind). Paged storage is
+    /// positional, so rollback is just the length reset — rows past
+    /// `len` become dead and are overwritten by the next append.
     fn truncate(&mut self, len: usize) {
-        for layer in &mut self.layers {
-            layer.k.truncate(len * self.width);
-            layer.v.truncate(len * self.width);
+        if let KvStore::Contig(layers) = &mut self.store {
+            for layer in layers {
+                layer.k.truncate(len * self.width);
+                layer.v.truncate(len * self.width);
+            }
         }
         self.len = len;
     }
 
+    /// Append layer `l`'s `[t, width]` key/value rows at positions
+    /// `self.len..self.len + t` (`self.len` advances once per forward
+    /// call, after every layer has appended).
+    fn append_layer(&mut self, l: usize, k: &[f32], v: &[f32]) {
+        let w = self.width;
+        match &mut self.store {
+            KvStore::Contig(layers) => {
+                let lk = &mut layers[l];
+                lk.k.extend_from_slice(k);
+                lk.v.extend_from_slice(v);
+            }
+            KvStore::Paged { page, blocks, .. } => {
+                let page = *page;
+                for row in 0..k.len() / w {
+                    let pos = self.len + row;
+                    let (b, off) = (pos / page, pos % page);
+                    blocks[b].k[l][off * w..(off + 1) * w]
+                        .copy_from_slice(&k[row * w..(row + 1) * w]);
+                    blocks[b].v[l][off * w..(off + 1) * w]
+                        .copy_from_slice(&v[row * w..(row + 1) * w]);
+                }
+            }
+        }
+    }
+
+    /// Layer `l`'s first `rows` cached key/value rows as contiguous
+    /// slices — the exact tensors attention consumes. Contiguous caches
+    /// return their buffers directly; paged caches gather block rows
+    /// into scratch in position order, so the values and their order —
+    /// hence attention's f64 accumulation and every resulting bit — are
+    /// independent of the block layout.
+    fn layer_view(&mut self, l: usize, rows: usize) -> (&[f32], &[f32]) {
+        let w = self.width;
+        match &mut self.store {
+            KvStore::Contig(layers) => {
+                let lk = &layers[l];
+                (&lk.k[..rows * w], &lk.v[..rows * w])
+            }
+            KvStore::Paged { page, blocks, gather_k, gather_v } => {
+                let page = *page;
+                gather_k.clear();
+                gather_v.clear();
+                gather_k.reserve(rows * w);
+                gather_v.reserve(rows * w);
+                let mut pos = 0;
+                while pos < rows {
+                    let take = (rows - pos).min(page);
+                    gather_k.extend_from_slice(&blocks[pos / page].k[l][..take * w]);
+                    gather_v.extend_from_slice(&blocks[pos / page].v[l][..take * w]);
+                    pos += take;
+                }
+                (gather_k.as_slice(), gather_v.as_slice())
+            }
+        }
+    }
+
     fn check(&self, cfg: &ModelCfg, t: usize) -> Result<(), String> {
-        if self.layers.len() != cfg.n_layers || self.width != cfg.d_model {
+        if self.n_layers != cfg.n_layers || self.width != cfg.d_model {
             return Err(format!(
                 "kv cache geometry [{} layers x {}] does not match model [{} layers x {}]",
-                self.layers.len(),
-                self.width,
-                cfg.n_layers,
-                cfg.d_model
+                self.n_layers, self.width, cfg.n_layers, cfg.d_model
             ));
         }
         if t == 0 {
@@ -897,10 +1101,9 @@ fn forward_fp_impl(
         apply_rope(k, t, nh, dh, cos, sin);
         match kv.as_deref_mut() {
             Some(cache) => {
-                let lk = &mut cache.layers[l];
-                lk.k.extend_from_slice(k);
-                lk.v.extend_from_slice(v);
-                attention_cached(q, &lk.k, &lk.v, t, pos0, nh, dh, o, scores, par)?;
+                cache.append_layer(l, k, v);
+                let (ck, cv) = cache.layer_view(l, pos0 + t);
+                attention_cached(q, ck, cv, t, pos0, nh, dh, o, scores, par)?;
             }
             None => attention_cached(q, k, v, t, 0, nh, dh, o, scores, par)?,
         }
@@ -1031,10 +1234,9 @@ fn forward_quant_impl(
         }
         match kv.as_deref_mut() {
             Some(cache) => {
-                let lk = &mut cache.layers[l];
-                lk.k.extend_from_slice(k);
-                lk.v.extend_from_slice(v);
-                attention_cached(q, &lk.k, &lk.v, t, pos0, nh, dh, o, scores, par)?;
+                cache.append_layer(l, k, v);
+                let (ck, cv) = cache.layer_view(l, pos0 + t);
+                attention_cached(q, ck, cv, t, pos0, nh, dh, o, scores, par)?;
             }
             None => attention_cached(q, k, v, t, 0, nh, dh, o, scores, par)?,
         }
@@ -1352,6 +1554,99 @@ mod tests {
         cache.clear();
         assert_eq!(cache.len(), 0);
         assert!(model.forward_cached(&[1], &mut cache, &mut scratch).is_ok());
+    }
+
+    /// The block layout must be invisible to the math: a paged cache
+    /// (blocks granted on demand, page smaller than any chunk boundary
+    /// alignment) produces bit-identical prefill and decode logits to
+    /// the contiguous cache.
+    #[test]
+    fn paged_cache_bit_identical_to_contiguous() {
+        let model = kv_test_model();
+        let cfg = model.cfg().clone();
+        let seq: Vec<i32> = (0..11).map(|i| ((i * 17 + 3) % 64) as i32).collect();
+        let mut contig = KvCache::new(&cfg, seq.len());
+        let mut paged = KvCache::paged(&cfg, 4);
+        assert!(paged.is_paged() && !contig.is_paged());
+        assert_eq!(paged.page_size(), Some(4));
+        let mut next_id = 0u32;
+        let mut grant_until = |cache: &mut KvCache, want: usize| {
+            while cache.capacity() < want {
+                cache.grant(KvBlock::new(next_id, cfg.n_layers, 4, cfg.d_model)).unwrap();
+                next_id += 1;
+            }
+        };
+        let (mut s1, mut s2) = (ForwardScratch::new(), ForwardScratch::new());
+        let a = model.forward_cached(&seq[..5], &mut contig, &mut s1).unwrap();
+        grant_until(&mut paged, 5);
+        let b = model.forward_cached(&seq[..5], &mut paged, &mut s2).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "paged prefill diverged");
+        }
+        for step in 5..seq.len() {
+            let a = model.forward_cached(&seq[step..step + 1], &mut contig, &mut s1).unwrap();
+            grant_until(&mut paged, step + 1);
+            let b = model.forward_cached(&seq[step..step + 1], &mut paged, &mut s2).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "paged decode step {step} diverged");
+            }
+        }
+        assert_eq!(paged.block_ids(), vec![0, 1, 2]);
+        let blocks = paged.reclaim_blocks();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!((paged.len(), paged.capacity()), (0, 0));
+        assert!(contig.reclaim_blocks().is_empty(), "contig caches own no blocks");
+    }
+
+    /// Paged-cache boundary behaviour at block edges: failed chunks roll
+    /// back without corrupting rows, overflow past granted capacity is a
+    /// clean error, `clear` keeps the granted blocks and overwrites
+    /// stale rows, and geometry-mismatched grants are rejected.
+    #[test]
+    fn paged_rollback_and_clear_at_block_edges() {
+        let model = kv_test_model();
+        let cfg = model.cfg().clone();
+        let mut cache = KvCache::paged(&cfg, 4);
+        for id in 0..2 {
+            cache.grant(KvBlock::new(id, cfg.n_layers, 4, cfg.d_model)).unwrap();
+        }
+        let mut scratch = ForwardScratch::new();
+        model.forward_cached(&[1, 2, 3, 4], &mut cache, &mut scratch).unwrap();
+        assert_eq!(cache.remaining(), 4);
+        // A failing chunk crossing the block edge must roll back cleanly.
+        let err = model.forward_cached(&[5, 99], &mut cache, &mut scratch).unwrap_err();
+        assert!(err.contains("outside vocab"), "{err}");
+        assert_eq!(cache.len(), 4, "failed chunk must not grow the cache");
+        // Overflow past granted capacity is "kv cache full", not a panic.
+        let err = model.forward_cached(&[1, 1, 1, 1, 1], &mut cache, &mut scratch).unwrap_err();
+        assert!(err.contains("kv cache full"), "{err}");
+        // The next good chunk lands exactly where the failed one would
+        // have — bit-identical to an uninterrupted contiguous run.
+        let reference = {
+            let mut c = KvCache::new(&cfg, 8);
+            let mut s = ForwardScratch::new();
+            model.forward_cached(&[1, 2, 3, 4], &mut c, &mut s).unwrap();
+            model.forward_cached(&[5, 6], &mut c, &mut s).unwrap()
+        };
+        let got = model.forward_cached(&[5, 6], &mut cache, &mut scratch).unwrap();
+        for (x, y) in got.iter().zip(&reference) {
+            assert_eq!(x.to_bits(), y.to_bits(), "post-rollback decode diverged");
+        }
+        // clear keeps blocks and capacity; stale rows are overwritten.
+        cache.clear();
+        assert_eq!((cache.len(), cache.capacity()), (0, 8));
+        model.forward_cached(&[1, 2, 3, 4], &mut cache, &mut scratch).unwrap();
+        let again = model.forward_cached(&[5, 6], &mut cache, &mut scratch).unwrap();
+        for (x, y) in again.iter().zip(&reference) {
+            assert_eq!(x.to_bits(), y.to_bits(), "post-clear reuse diverged");
+        }
+        // Bad grants are rejected: wrong geometry, or a contiguous cache.
+        let err = cache.grant(KvBlock::new(9, cfg.n_layers, 2, cfg.d_model)).unwrap_err();
+        assert!(err.contains("geometry"), "{err}");
+        let mut contig = KvCache::new(&cfg, 4);
+        let err = contig.grant(KvBlock::new(9, cfg.n_layers, 4, cfg.d_model)).unwrap_err();
+        assert!(err.contains("contiguous"), "{err}");
     }
 
     /// Scratch reuse must not change results: a warm scratch that just

@@ -19,7 +19,7 @@ pub mod weights;
 pub use config::{tokens_in_vocab, ModelCfg, ParamSpec, R4Kind};
 pub use forward::{
     forward_quant_tapped, forward_quant_tapped_with, ActivationTap, DecodePar, DenseModel,
-    ForwardScratch, KvCache, ShardJob, ShardRunner, TapSite,
+    ForwardScratch, KvBlock, KvCache, ShardJob, ShardRunner, TapSite,
 };
 pub use kernels::{
     packed_matmul_cols, packed_matmul_into, BasisFast, KernelMode, PackedBits, PackedLinear,

@@ -1,0 +1,127 @@
+//! Paged-KV block pool: a fixed inventory of [`KvBlock`]s granted to
+//! sequences and reclaimed on completion, preemption or eviction.
+//!
+//! Allocation is deterministic — the free list is ordered by block id
+//! and `alloc` always hands out the lowest free id — so two runs that
+//! issue the same alloc/release stream receive identical block-id
+//! sequences. Blocks physically move (by value) between the pool and a
+//! sequence's paged `KvCache`; nothing is shared, so a granted block
+//! can be written by its owner while the pool is untouched.
+
+use crate::model::KvBlock;
+use std::collections::BTreeMap;
+
+/// Inventory of KV blocks for one serving variant.
+pub struct BlockPool {
+    n_layers: usize,
+    width: usize,
+    page: usize,
+    total: usize,
+    /// Free blocks keyed by id — `BTreeMap` iteration order makes the
+    /// lowest-id-first policy (and thus allocation) deterministic.
+    free: BTreeMap<u32, KvBlock>,
+    in_use: usize,
+    peak: usize,
+}
+
+impl BlockPool {
+    /// Mint `total_blocks` zero-filled blocks (ids `0..total_blocks`) of
+    /// `page` token rows each for the given model geometry.
+    pub fn new(n_layers: usize, width: usize, page: usize, total_blocks: usize) -> Self {
+        let page = page.max(1);
+        let free = (0..total_blocks as u32)
+            .map(|id| (id, KvBlock::new(id, n_layers, page, width)))
+            .collect();
+        Self { n_layers, width, page, total: total_blocks, free, in_use: 0, peak: 0 }
+    }
+
+    /// Token rows per block.
+    pub fn page_size(&self) -> usize {
+        self.page
+    }
+
+    /// Total inventory, in blocks.
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    /// Total inventory, in token rows — the admission bound for peak
+    /// sequence occupancy.
+    pub fn total_tokens(&self) -> usize {
+        self.total * self.page
+    }
+
+    /// Blocks currently available.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently granted out.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// High-water mark of granted blocks.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Model geometry the pool's blocks were minted for.
+    pub fn geometry(&self) -> (usize, usize) {
+        (self.n_layers, self.width)
+    }
+
+    /// Grant the lowest-id free block, or `None` when the pool is dry.
+    pub fn alloc(&mut self) -> Option<KvBlock> {
+        let id = *self.free.keys().next()?;
+        let block = self.free.remove(&id)?;
+        self.in_use += 1;
+        self.peak = self.peak.max(self.in_use);
+        Some(block)
+    }
+
+    /// Return a block to the free list.
+    ///
+    /// Panics (debug assertion) on double-free of an id — block ids are
+    /// unique within a pool, so a collision means a block was cloned or
+    /// forged rather than round-tripped.
+    pub fn release(&mut self, block: KvBlock) {
+        let prev = self.free.insert(block.id(), block);
+        debug_assert!(prev.is_none(), "block released twice");
+        self.in_use = self.in_use.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_lowest_id_first_and_conserving() {
+        let mut pool = BlockPool::new(2, 8, 4, 3);
+        assert_eq!((pool.total_blocks(), pool.total_tokens()), (3, 12));
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_eq!((a.id(), b.id()), (0, 1));
+        assert_eq!((pool.free_blocks(), pool.in_use()), (1, 2));
+        pool.release(a);
+        // Lowest id again, even though 0 was released after 1 was taken.
+        let c = pool.alloc().unwrap();
+        assert_eq!(c.id(), 0);
+        let d = pool.alloc().unwrap();
+        assert_eq!(d.id(), 2);
+        assert!(pool.alloc().is_none(), "pool must run dry at total_blocks");
+        pool.release(b);
+        pool.release(c);
+        pool.release(d);
+        assert_eq!((pool.free_blocks(), pool.in_use()), (3, 0));
+        assert_eq!(pool.peak(), 3);
+    }
+
+    #[test]
+    fn empty_pool_allocs_nothing() {
+        let mut pool = BlockPool::new(1, 4, 2, 0);
+        assert!(pool.alloc().is_none());
+        assert_eq!(pool.total_tokens(), 0);
+    }
+}

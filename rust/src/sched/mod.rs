@@ -1,0 +1,83 @@
+//! Paged-KV serving primitives: block pool, continuous-batching round
+//! policy, and deterministic sampling.
+//!
+//! This module holds the *mechanisms* the serving coordinator composes
+//! into a continuous-batching scheduler:
+//!
+//! * [`BlockPool`] — a fixed inventory of `KvBlock`s with a
+//!   deterministic (lowest-free-id) allocator; sequences are admitted
+//!   against the pool's **total** token inventory instead of reserving
+//!   peak occupancy up front, and under pressure the scheduler preempts
+//!   the youngest block-holding sequence (recompute-on-resume) so the
+//!   oldest always makes progress.
+//! * [`compose_round`] / [`SeqDesc`] / [`RoundPlan`] — pure FIFO+budget
+//!   round composition: decode-ready sequences batch together, and at
+//!   most one bounded prefill chunk rides along per round so long
+//!   prompts never convoy decodes.
+//! * [`Sampler`] / [`SamplingParams`] — temperature / top-k / top-p
+//!   sampling over a per-request seeded stream, consuming exactly one
+//!   draw per pick; combined with bit-deterministic decode logits this
+//!   makes every generation replayable regardless of co-scheduled
+//!   traffic.
+//!
+//! Everything here is pure or locally-owned state — no threads, no
+//! channels — which is what keeps the scheduler's decisions replayable
+//! and unit-testable.
+
+pub mod block;
+pub mod policy;
+pub mod sampler;
+
+pub use block::BlockPool;
+pub use policy::{blocks_for, compose_round, RoundPlan, SeqDesc};
+pub use sampler::{Sampler, SamplingParams};
+
+/// Scheduler configuration carried from the CLI into the serving
+/// executor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchedConfig {
+    /// Token rows per KV block.
+    pub page_size: usize,
+    /// Total blocks in each variant's pool (`0` = auto-size: enough
+    /// blocks for `batch` sequences of `seq` tokens each).
+    pub kv_blocks: usize,
+    /// Maximum prompt tokens absorbed per prefill chunk.
+    pub prefill_chunk: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self { page_size: 16, kv_blocks: 0, prefill_chunk: 32 }
+    }
+}
+
+impl SchedConfig {
+    /// Pool size in blocks for a backend with `batch` concurrent
+    /// sequences of up to `seq` tokens: the configured count, or the
+    /// auto-size that matches the old per-sequence contiguous capacity.
+    pub fn pool_blocks(&self, batch: usize, seq: usize) -> usize {
+        if self.kv_blocks > 0 {
+            self.kv_blocks
+        } else {
+            batch.max(1) * blocks_for(seq, self.page_size)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_auto_size_matches_contiguous_capacity() {
+        let cfg = SchedConfig::default();
+        // 4 seqs x 64 tokens at page 16 = 4 blocks per seq.
+        assert_eq!(cfg.pool_blocks(4, 64), 16);
+        // Explicit count wins.
+        let cfg = SchedConfig { kv_blocks: 5, ..SchedConfig::default() };
+        assert_eq!(cfg.pool_blocks(4, 64), 5);
+        // Unaligned seq rounds up.
+        let cfg = SchedConfig { page_size: 16, kv_blocks: 0, prefill_chunk: 32 };
+        assert_eq!(cfg.pool_blocks(1, 17), 2);
+    }
+}

@@ -1,0 +1,120 @@
+//! Continuous-batching round composition: pure, deterministic helpers
+//! the serving executor drives each scheduling turn.
+//!
+//! The scheduler's unit of work is the *pending feed*: a sequence's
+//! token stream is `prompt ++ produced`, and `pending` counts how many
+//! of those tokens the KV cache has not absorbed yet. A sequence with
+//! exactly one pending token is decode-ready (the classic one-token
+//! step); more than one pending means prefill — a fresh admission (the
+//! whole prompt) or a preempted sequence recomputing its cache. When
+//! the last pending token lands, that position's logits yield the next
+//! pick — prefill and decode are one mechanism observed at different
+//! depths.
+//!
+//! Composition is deterministic: inputs are scanned in the caller's
+//! order (admission FIFO), decode members are the first `max_decode`
+//! decode-ready sequences, and at most **one** prefill chunk (the
+//! oldest prefilling sequence, clamped to `prefill_chunk` tokens) runs
+//! per round — long prompts therefore never convoy the decode batch,
+//! they trickle in beside it.
+
+/// One sequence's scheduling-relevant state, in admission-FIFO order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeqDesc {
+    /// Admission id (monotone; ties impossible).
+    pub id: u64,
+    /// Tokens of `prompt ++ produced` not yet absorbed by the cache.
+    pub pending: usize,
+}
+
+/// What one scheduling round executes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundPlan {
+    /// Sequences stepping one decode token, FIFO order.
+    pub decode: Vec<u64>,
+    /// At most one `(id, chunk_len)` prefill chunk.
+    pub prefill: Option<(u64, usize)>,
+}
+
+impl RoundPlan {
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty() && self.prefill.is_none()
+    }
+}
+
+/// Compose one round from `seqs` (admission-FIFO order): the first
+/// `max_decode` decode-ready sequences step together, and the oldest
+/// sequence still prefilling gets one chunk of at most `prefill_chunk`
+/// tokens. Pure and order-preserving — identical inputs always compose
+/// identical rounds.
+pub fn compose_round(seqs: &[SeqDesc], max_decode: usize, prefill_chunk: usize) -> RoundPlan {
+    let mut decode = Vec::new();
+    for s in seqs {
+        if s.pending == 1 && decode.len() < max_decode {
+            decode.push(s.id);
+        }
+    }
+    let prefill = seqs
+        .iter()
+        .find(|s| s.pending > 1)
+        .map(|s| (s.id, s.pending.min(prefill_chunk.max(1))));
+    RoundPlan { decode, prefill }
+}
+
+/// Blocks needed to hold `tokens` rows with `page`-row blocks.
+pub fn blocks_for(tokens: usize, page: usize) -> usize {
+    tokens.div_ceil(page.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(id: u64, pending: usize) -> SeqDesc {
+        SeqDesc { id, pending }
+    }
+
+    #[test]
+    fn decode_is_fifo_and_budgeted() {
+        let seqs = [d(1, 1), d(2, 5), d(3, 1), d(4, 1), d(5, 1)];
+        let plan = compose_round(&seqs, 3, 8);
+        assert_eq!(plan.decode, vec![1, 3, 4], "first max_decode ready seqs, FIFO");
+        assert_eq!(plan.prefill, Some((2, 5)));
+    }
+
+    #[test]
+    fn one_prefill_chunk_per_round_oldest_first() {
+        let seqs = [d(7, 10), d(8, 30), d(9, 1)];
+        let plan = compose_round(&seqs, 4, 4);
+        assert_eq!(plan.decode, vec![9]);
+        assert_eq!(plan.prefill, Some((7, 4)), "oldest prefiller, chunk-clamped");
+        // Chunk never exceeds what's pending.
+        let plan = compose_round(&[d(7, 3)], 4, 4);
+        assert_eq!(plan.prefill, Some((7, 3)));
+    }
+
+    #[test]
+    fn empty_and_idle_inputs() {
+        assert!(compose_round(&[], 4, 8).is_empty());
+        let plan = compose_round(&[d(1, 0)], 4, 8);
+        assert!(plan.is_empty(), "nothing pending composes nothing");
+        // Zero chunk size is clamped to 1 rather than starving prefill.
+        let plan = compose_round(&[d(1, 9)], 4, 0);
+        assert_eq!(plan.prefill, Some((1, 1)));
+    }
+
+    #[test]
+    fn identical_inputs_compose_identical_rounds() {
+        let seqs = [d(3, 1), d(4, 6), d(5, 1)];
+        assert_eq!(compose_round(&seqs, 2, 4), compose_round(&seqs, 2, 4));
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        assert_eq!(blocks_for(0, 4), 0);
+        assert_eq!(blocks_for(1, 4), 1);
+        assert_eq!(blocks_for(4, 4), 1);
+        assert_eq!(blocks_for(5, 4), 2);
+        assert_eq!(blocks_for(9, 0), 9, "degenerate page clamps to 1");
+    }
+}

@@ -1,0 +1,203 @@
+//! Deterministic per-request sampling: temperature / top-k / top-p over
+//! a private seeded [`SplitMix64`] stream.
+//!
+//! Replayability is the design constraint, not a side effect. Decode
+//! logits are bit-identical for any batch composition, thread count and
+//! KV layout (the repo's core invariant), so the only remaining source
+//! of nondeterminism in a generation is the sampler. This one removes
+//! it: candidates are ranked by a total order (logit descending via
+//! `f32::total_cmp`, token id ascending on ties), probabilities are
+//! computed in f64 with a fixed summation order, and **exactly one**
+//! RNG draw is consumed per sampled token — so a request's picks depend
+//! only on `(seed, prefix)` and never on co-scheduled traffic,
+//! preemption, or round composition.
+
+use crate::rng::SplitMix64;
+
+/// Per-request sampling configuration. `temperature <= 0` (the
+/// [`Default`]) means greedy argmax, which consumes no RNG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` (or non-finite) selects greedy.
+    pub temperature: f64,
+    /// Keep only the `top_k` highest-probability tokens (`0` = all).
+    pub top_k: usize,
+    /// Nucleus cut: smallest candidate prefix with cumulative
+    /// probability `>= top_p` (`>= 1` or non-finite = no cut).
+    pub top_p: f64,
+    /// Seed of the request's private RNG stream.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self::greedy()
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding — argmax picks, no RNG consumption.
+    pub fn greedy() -> Self {
+        Self { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    /// Whether these parameters reduce to greedy argmax.
+    pub fn is_greedy(&self) -> bool {
+        !(self.temperature.is_finite() && self.temperature > 0.0)
+    }
+
+    /// Clamp out-of-range values instead of rejecting the request:
+    /// non-finite or non-positive temperature → greedy; `top_p` outside
+    /// `(0, 1)` → no nucleus cut.
+    fn normalized(&self) -> Self {
+        let temperature = if self.is_greedy() { 0.0 } else { self.temperature };
+        let top_p = if self.top_p.is_finite() && self.top_p > 0.0 && self.top_p < 1.0 {
+            self.top_p
+        } else {
+            1.0
+        };
+        Self { temperature, top_k: self.top_k, top_p, seed: self.seed }
+    }
+}
+
+/// A request's sampling state: normalized parameters plus the private
+/// RNG stream. Lives with the sequence across preemption/resume —
+/// recomputing the KV cache replays the same logits, and the stream
+/// position is untouched, so resumed picks are bit-identical.
+pub struct Sampler {
+    params: SamplingParams,
+    rng: SplitMix64,
+}
+
+impl Sampler {
+    pub fn new(params: &SamplingParams) -> Self {
+        let params = params.normalized();
+        let rng = SplitMix64::new(params.seed);
+        Self { params, rng }
+    }
+
+    /// Whether picks are greedy (and therefore RNG-free).
+    pub fn is_greedy(&self) -> bool {
+        self.params.is_greedy()
+    }
+
+    /// Pick the next token from one position's logits. Greedy consumes
+    /// no RNG; every non-greedy pick consumes exactly one draw, however
+    /// the candidate set was truncated.
+    pub fn pick(&mut self, logits: &[f32]) -> i32 {
+        if self.params.is_greedy() || logits.len() < 2 {
+            return crate::exec::greedy_argmax(logits);
+        }
+        // Total candidate order: logit descending, token id ascending.
+        let mut ids: Vec<usize> = (0..logits.len()).collect();
+        ids.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
+        if self.params.top_k > 0 {
+            ids.truncate(self.params.top_k.max(1));
+        }
+        // Softmax over the kept candidates: f64, max-subtracted, summed
+        // in rank order.
+        let m = logits[ids[0]] as f64;
+        let t = self.params.temperature;
+        let weights: Vec<f64> = ids.iter().map(|&i| ((logits[i] as f64 - m) / t).exp()).collect();
+        let mut keep = weights.len();
+        if self.params.top_p < 1.0 {
+            let target = self.params.top_p * weights.iter().sum::<f64>();
+            let mut cum = 0.0;
+            for (i, w) in weights.iter().enumerate() {
+                cum += w;
+                if cum >= target {
+                    keep = i + 1;
+                    break;
+                }
+            }
+        }
+        let total: f64 = weights[..keep].iter().sum();
+        let r = self.rng.next_f64() * total;
+        let mut cum = 0.0;
+        for (&idx, w) in ids[..keep].iter().zip(&weights[..keep]) {
+            cum += w;
+            if r < cum {
+                return idx as i32;
+            }
+        }
+        // Numeric edge (r lands on the total): last kept candidate.
+        ids[keep - 1] as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_matches_argmax_and_consumes_no_rng() {
+        let logits = vec![0.1f32, 2.0, -1.0, 2.0];
+        let mut s = Sampler::new(&SamplingParams::greedy());
+        assert!(s.is_greedy());
+        let before = s.rng.clone().next_u64();
+        assert_eq!(s.pick(&logits), 1, "first max wins");
+        assert_eq!(s.rng.clone().next_u64(), before, "greedy must not touch the stream");
+    }
+
+    #[test]
+    fn invalid_params_degrade_to_safe_values() {
+        let p = SamplingParams { temperature: f64::NAN, top_k: 3, top_p: -2.0, seed: 7 };
+        assert!(p.is_greedy());
+        let mut s = Sampler::new(&p);
+        assert_eq!(s.pick(&[0.0, 5.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn top_k_one_is_argmax_but_still_draws() {
+        let p = SamplingParams { temperature: 0.7, top_k: 1, top_p: 1.0, seed: 3 };
+        let mut s = Sampler::new(&p);
+        for _ in 0..20 {
+            assert_eq!(s.pick(&[0.0, 1.0, 3.0, 2.0]), 2);
+        }
+    }
+
+    #[test]
+    fn replay_is_bit_identical_and_one_draw_per_pick() {
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 0.9, seed: 42 };
+        let logits: Vec<Vec<f32>> = (0..32)
+            .map(|i| (0..16).map(|j| (((i * 31 + j * 17) % 23) as f32) * 0.3 - 2.0).collect())
+            .collect();
+        let run = |p: &SamplingParams| -> Vec<i32> {
+            let mut s = Sampler::new(p);
+            logits.iter().map(|l| s.pick(l)).collect()
+        };
+        assert_eq!(run(&p), run(&p), "same seed must replay identically");
+        // One draw per pick: a sampler that made N picks sits exactly N
+        // draws into its stream.
+        let mut s = Sampler::new(&p);
+        let mut reference = SplitMix64::new(42);
+        for l in &logits {
+            s.pick(l);
+            reference.next_f64();
+        }
+        assert_eq!(s.rng.next_u64(), reference.next_u64(), "stream must advance one draw per pick");
+    }
+
+    #[test]
+    fn nucleus_cut_excludes_tail_tokens() {
+        // One dominant token: tiny top_p can only ever pick it.
+        let p = SamplingParams { temperature: 0.5, top_k: 0, top_p: 0.5, seed: 11 };
+        let mut s = Sampler::new(&p);
+        let logits = vec![10.0f32, 0.0, 0.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(s.pick(&logits), 0);
+        }
+    }
+
+    #[test]
+    fn samples_spread_over_flat_distribution() {
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 5 };
+        let mut s = Sampler::new(&p);
+        let logits = vec![0.0f32; 8];
+        let mut seen = [false; 8];
+        for _ in 0..256 {
+            seen[s.pick(&logits) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "uniform logits should hit every token");
+    }
+}

@@ -1,0 +1,286 @@
+//! Paged-KV property and boundary tests: the block allocator's
+//! conservation/determinism invariants, `KvCache` paged-mode behavior at
+//! block edges (grant, reclaim, clear, failed-chunk rollback), and the
+//! backend's paged generation contract surviving preemption (reclaim +
+//! recompute-on-resume) bit-identically.
+//!
+//! proptest is not available in this offline image, so this file uses
+//! the repo's minimal harness idiom: deterministic SplitMix64-driven
+//! case generation; a failing seed reproduces exactly.
+
+use std::sync::Arc;
+
+use gsr::exec::{greedy_argmax, Backend, Generation, NativeBackend};
+use gsr::model::{DenseModel, ForwardScratch, FpParams, KvBlock, KvCache, ModelCfg};
+use gsr::rng::SplitMix64;
+use gsr::sched::{blocks_for, BlockPool};
+
+/// Run `prop` for `cases` deterministic seeds; panic names the seed.
+fn for_seeds(cases: u64, prop: impl Fn(u64, &mut SplitMix64)) {
+    for seed in 0..cases {
+        let mut rng = SplitMix64::new(0xB10C ^ (seed * 0x9E37_79B9));
+        prop(seed, &mut rng);
+    }
+}
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: logit {i} differs ({a} vs {b})");
+    }
+}
+
+/// No double-allocation, free-list conservation: under a random
+/// alloc/release stream, every outstanding block id is unique and
+/// `free + held == total` at every step.
+#[test]
+fn prop_pool_never_double_allocates_and_conserves_blocks() {
+    for_seeds(16, |seed, rng| {
+        let total = 1 + rng.next_below(12) as usize;
+        let page = 1 + rng.next_below(6) as usize;
+        let mut pool = BlockPool::new(2, 4, page, total);
+        assert_eq!(pool.total_tokens(), total * page);
+        let mut held: Vec<KvBlock> = Vec::new();
+        for step in 0..200 {
+            if rng.next_below(2) == 0 {
+                if let Some(b) = pool.alloc() {
+                    assert!(
+                        held.iter().all(|h| h.id() != b.id()),
+                        "seed {seed} step {step}: id {} granted twice",
+                        b.id()
+                    );
+                    held.push(b);
+                }
+            } else if !held.is_empty() {
+                let i = rng.next_below(held.len() as u64) as usize;
+                pool.release(held.swap_remove(i));
+            }
+            assert_eq!(
+                pool.free_blocks() + held.len(),
+                total,
+                "seed {seed} step {step}: blocks leaked or forged"
+            );
+            assert_eq!(pool.in_use(), held.len(), "seed {seed} step {step}: in_use drifted");
+        }
+    });
+}
+
+/// Deterministic allocation order: `alloc` is a pure function of the
+/// free set — it always returns the lowest free id — so identical
+/// alloc/release streams always receive identical block-id sequences.
+#[test]
+fn prop_pool_allocates_lowest_free_id() {
+    for_seeds(16, |seed, rng| {
+        let total = 2 + rng.next_below(10) as usize;
+        let mut pool = BlockPool::new(1, 2, 2, total);
+        let mut held: Vec<KvBlock> = Vec::new();
+        let mut free_model: Vec<u32> = (0..total as u32).collect();
+        for step in 0..200 {
+            if rng.next_below(2) == 0 {
+                let want = free_model.iter().copied().min();
+                let got = pool.alloc().map(|b| {
+                    let id = b.id();
+                    held.push(b);
+                    id
+                });
+                assert_eq!(got, want, "seed {seed} step {step}: not lowest-free-id");
+                if let Some(id) = got {
+                    free_model.retain(|&f| f != id);
+                }
+            } else if !held.is_empty() {
+                let i = rng.next_below(held.len() as u64) as usize;
+                let b = held.swap_remove(i);
+                free_model.push(b.id());
+                pool.release(b);
+            }
+        }
+    });
+}
+
+/// Grant/reclaim boundary behavior through the public `KvCache` API:
+/// geometry mismatches are refused without changing capacity, reclaim
+/// empties the table, and contiguous caches opt out of both.
+#[test]
+fn paged_cache_grant_reclaim_and_geometry_checks() {
+    let cfg = tiny_cfg();
+    let mut cache = KvCache::paged(&cfg, 4);
+    assert!(cache.is_paged());
+    assert_eq!(cache.page_size(), Some(4));
+    assert_eq!((cache.len(), cache.capacity()), (0, 0));
+    assert!(cache.grant(KvBlock::new(9, 1, 4, 32)).is_err(), "layer mismatch");
+    assert!(cache.grant(KvBlock::new(9, 2, 3, 32)).is_err(), "page mismatch");
+    assert!(cache.grant(KvBlock::new(9, 2, 4, 16)).is_err(), "width mismatch");
+    assert_eq!(cache.capacity(), 0, "failed grants must not change capacity");
+    cache.grant(KvBlock::new(0, 2, 4, 32)).unwrap();
+    cache.grant(KvBlock::new(1, 2, 4, 32)).unwrap();
+    assert_eq!((cache.capacity(), cache.block_ids()), (8, vec![0, 1]));
+    let blocks = cache.reclaim_blocks();
+    assert_eq!(blocks.iter().map(|b| b.id()).collect::<Vec<_>>(), vec![0, 1]);
+    assert_eq!((cache.len(), cache.capacity()), (0, 0));
+    let mut contig = KvCache::new(&cfg, 8);
+    assert!(!contig.is_paged());
+    assert_eq!(contig.page_size(), None);
+    assert!(contig.grant(KvBlock::new(0, 2, 4, 32)).is_err());
+    assert!(contig.reclaim_blocks().is_empty());
+    assert_eq!(contig.capacity(), 8, "a contiguous cache keeps its capacity");
+}
+
+/// Block-edge parity and rollback for every page size: chunked paged
+/// forwards are bit-identical to the full forward however chunks
+/// straddle block edges; zero-capacity and full caches refuse cleanly
+/// with the cache rolled back; `clear` keeps the granted blocks.
+#[test]
+fn paged_forward_parity_and_rollback_at_block_edges() {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 29);
+    let model = DenseModel::Fp { cfg: cfg.clone(), params: fp };
+    let v = cfg.vocab;
+    let tokens: Vec<i32> = (0..13).map(|i| ((i * 7 + 3) % v) as i32).collect();
+    let full = model.forward(&tokens);
+    let last = &full[(tokens.len() - 1) * v..];
+    for page in [1usize, 3, 4, 16] {
+        let mut cache = KvCache::paged(&cfg, page);
+        let mut scratch = ForwardScratch::new();
+        // Zero granted capacity refuses and stays empty.
+        let err = model.forward_cached(&tokens[..2], &mut cache, &mut scratch);
+        assert!(err.is_err(), "page {page}: chunk beyond capacity must fail");
+        assert_eq!(cache.len(), 0, "page {page}: failed chunk must roll back");
+        let n_blocks = blocks_for(tokens.len(), page);
+        for id in 0..n_blocks {
+            cache.grant(KvBlock::new(id as u32, cfg.n_layers, page, cfg.d_model)).unwrap();
+        }
+        // Uneven chunks straddle the block edges on small pages.
+        let mut got = Vec::new();
+        for chunk in tokens.chunks(page.max(2) - 1) {
+            got = model.forward_cached(chunk, &mut cache, &mut scratch).unwrap();
+        }
+        assert_eq!(cache.len(), tokens.len());
+        let got_last = &got[(got.len() / v - 1) * v..];
+        assert_bits(got_last, last, &format!("page {page} chunked"));
+        // A full cache refuses the next token and stays intact.
+        if cache.remaining() == 0 {
+            let e = model.forward_cached(&[1], &mut cache, &mut scratch);
+            assert!(e.is_err(), "page {page}: full cache must refuse");
+            assert_eq!(cache.len(), tokens.len(), "page {page}: refusal must not corrupt");
+        }
+        // clear() keeps granted blocks; a rerun lands on the same bits.
+        cache.clear();
+        assert_eq!((cache.len(), cache.capacity()), (0, n_blocks * page));
+        let again = model.forward_cached(&tokens, &mut cache, &mut scratch).unwrap();
+        let again_last = &again[(again.len() / v - 1) * v..];
+        assert_bits(again_last, last, &format!("page {page} clear+rerun"));
+    }
+}
+
+/// A cache granted exactly one block fills to the block edge, refuses
+/// the token past it, and resumes bit-identically once the next block
+/// is granted — the grant boundary is invisible to the logits.
+#[test]
+fn decode_resumes_across_a_block_edge() {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 37);
+    let model = DenseModel::Fp { cfg: cfg.clone(), params: fp };
+    let v = cfg.vocab;
+    let page = 4;
+    let tokens: Vec<i32> = (0..=page).map(|i| ((i * 5 + 2) % v) as i32).collect();
+    let full = model.forward(&tokens);
+    let mut cache = KvCache::paged(&cfg, page);
+    let mut scratch = ForwardScratch::new();
+    cache.grant(KvBlock::new(0, cfg.n_layers, page, cfg.d_model)).unwrap();
+    model.forward_cached(&tokens[..page], &mut cache, &mut scratch).unwrap();
+    assert_eq!(cache.remaining(), 0, "block edge reached");
+    let e = model.forward_cached(&tokens[page..], &mut cache, &mut scratch);
+    assert!(e.is_err(), "full cache must refuse the next token");
+    assert_eq!(cache.len(), page, "refusal must leave the cache intact");
+    cache.grant(KvBlock::new(1, cfg.n_layers, page, cfg.d_model)).unwrap();
+    let got = model.forward_cached(&tokens[page..], &mut cache, &mut scratch).unwrap();
+    assert_bits(&got, &full[page * v..], "across the block edge");
+}
+
+/// Grow a paged generation's capacity until `tokens` fits, absorbing in
+/// 2-token chunks — the driver loop the scheduler runs, reduced to its
+/// essence for the contract test below.
+fn feed_chunks(
+    backend: &NativeBackend,
+    pool: &mut BlockPool,
+    gen: &mut Generation,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let mut out = Vec::new();
+    for chunk in tokens.chunks(2) {
+        while gen.remaining() < chunk.len() {
+            backend.grant_kv_block(gen, pool.alloc().expect("pool dry")).unwrap();
+        }
+        out = backend.prefill_chunk(gen, chunk).unwrap();
+    }
+    out
+}
+
+/// The backend's paged contract end to end: chunked prefill matches the
+/// contiguous prefill bit-for-bit, reclaim returns every block to the
+/// pool (conservation), and a preempted sequence that recomputes its
+/// prefix resumes on exactly the same logits.
+#[test]
+fn backend_paged_generation_survives_reclaim_and_resume() {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 43);
+    let model = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp });
+    let backend = NativeBackend::new(Arc::clone(&model), 2, 16, 2);
+    let (nl, w) = backend.kv_block_geometry().expect("native backend is paged-capable");
+    let page = 3;
+    let mut pool = BlockPool::new(nl, w, page, blocks_for(16, page));
+    let prompt: Vec<i32> = (0..5).map(|i| ((i * 11 + 1) % cfg.vocab) as i32).collect();
+    // Reference: contiguous generation, greedy picks.
+    let (mut cgen, first) = backend.start_generation(&prompt).unwrap();
+    let mut want = vec![first];
+    for _ in 0..3 {
+        let tok = greedy_argmax(want.last().unwrap());
+        let l = backend.decode(&mut cgen, tok).unwrap();
+        want.push(l);
+    }
+    // Paged: chunked prefill, one decode, then preemption and resume.
+    let mut gen = backend.start_paged_generation(page).unwrap();
+    let got0 = feed_chunks(&backend, &mut pool, &mut gen, &prompt);
+    assert_bits(&got0, &want[0], "chunked prefill logits");
+    let pick0 = greedy_argmax(&got0);
+    if gen.remaining() < 1 {
+        backend.grant_kv_block(&mut gen, pool.alloc().unwrap()).unwrap();
+    }
+    let got1 = backend.decode(&mut gen, pick0).unwrap();
+    assert_bits(&got1, &want[1], "paged decode step");
+    let pick1 = greedy_argmax(&got1);
+    // Preempt: every block moves back to the pool, the generation
+    // drops to zero occupancy.
+    let blocks = backend.reclaim_kv_blocks(&mut gen).unwrap();
+    assert!(!blocks.is_empty(), "an active sequence holds blocks");
+    assert_eq!((gen.len(), gen.capacity()), (0, 0));
+    for b in blocks {
+        pool.release(b);
+    }
+    assert_eq!(pool.in_use(), 0, "reclaim + release must conserve the inventory");
+    // Resume: recompute prompt + produced tokens, then keep decoding —
+    // bit-identical to the uninterrupted contiguous run.
+    let mut stream = prompt.clone();
+    stream.extend([pick0, pick1]);
+    let got2 = feed_chunks(&backend, &mut pool, &mut gen, &stream);
+    assert_bits(&got2, &want[2], "recomputed resume logits");
+    let pick2 = greedy_argmax(&got2);
+    if gen.remaining() < 1 {
+        backend.grant_kv_block(&mut gen, pool.alloc().unwrap()).unwrap();
+    }
+    let got3 = backend.decode(&mut gen, pick2).unwrap();
+    assert_bits(&got3, &want[3], "post-resume decode");
+}

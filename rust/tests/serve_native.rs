@@ -10,6 +10,7 @@ use gsr::coordinator::{BatchPolicy, Server};
 use gsr::exec::{Backend, ExecPool, NativeBackend, NativeSet};
 use gsr::model::{DenseModel, FpParams, ModelCfg, R4Kind};
 use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
+use gsr::sched::{SamplingParams, SchedConfig};
 use gsr::transform::R1Kind;
 
 fn tiny_cfg() -> ModelCfg {
@@ -213,6 +214,11 @@ fn serve_native_rejects_malformed_requests() {
     assert!(server.score("nope", vec![1, 2]).is_err());
     let metrics = server.shutdown();
     assert_eq!(metrics.rejected, 4, "oversized + bad token + empty + unknown variant");
+    assert_eq!(metrics.rejected_too_long, 1);
+    assert_eq!(metrics.rejected_bad_token, 1);
+    assert_eq!(metrics.rejected_zero_length, 1);
+    assert_eq!(metrics.rejected_unknown_variant, 1);
+    assert_eq!(metrics.rejected_cache_pressure, 0);
     assert_eq!(metrics.requests, 1, "only the good request completes");
 }
 
@@ -369,6 +375,8 @@ fn generate_native_end_to_end_matches_full_reforward_greedy() {
                 prompt: case.prompt.clone(),
                 max_new: case.max_new,
                 stop: case.stop,
+                sampling: SamplingParams::greedy(),
+                stream: None,
                 reply,
             })
             .unwrap();
@@ -432,9 +440,11 @@ fn fast_kernels_greedy_sequences_match_reference() {
     }
 }
 
-/// Generation admission mirrors scoring admission: unsupported budgets,
-/// empty prompts, bad token ids and unknown variants are refused with
-/// clear errors, counted in `rejected`, and the server keeps serving.
+/// Generation admission is against the variant's block pool: empty
+/// prompts, zero budgets, bad token ids, unknown variants and budgets
+/// beyond the pool's total token inventory are refused with clear
+/// errors, counted per reason, and the server keeps serving — while a
+/// peak that the old contiguous rule would refuse is now admitted.
 #[test]
 fn generate_rejects_invalid_requests() {
     let cfg = tiny_cfg();
@@ -444,10 +454,13 @@ fn generate_rejects_invalid_requests() {
     set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, s, 2));
     let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
     let server = Server::start_native(set, policy).unwrap();
+    // Default pool: 2 seqs × ceil(10/16) blocks of 16 tokens = 32
+    // tokens total; a peak of 8 + 30 − 1 = 37 can never complete.
     let err = server
-        .generate("fp", window(1, 8, cfg.vocab), 5, None)
-        .expect_err("prompt + budget beyond the cache must be refused");
-    assert!(err.contains("kv cache"), "unhelpful error: {err}");
+        .generate("fp", window(1, 8, cfg.vocab), 30, None)
+        .expect_err("budget beyond the pool's token inventory must be refused");
+    assert!(err.contains("kv cache slots"), "unhelpful error: {err}");
+    assert!(err.contains("--kv-blocks"), "error should point at the knob: {err}");
     assert!(server.generate("fp", vec![], 3, None).is_err(), "empty prompt");
     assert!(server.generate("fp", vec![1, 2], 0, None).is_err(), "zero budget");
     assert!(server.generate("fp", vec![1, 64], 3, None).is_err(), "bad prompt token");
@@ -456,14 +469,158 @@ fn generate_rejects_invalid_requests() {
     // A valid request still succeeds afterwards, and scoring coexists.
     let out = server.generate("fp", window(2, 4, cfg.vocab), 3, None).unwrap();
     assert_eq!(out.tokens.len(), 3);
-    // Exact-fit boundary: peak occupancy is prompt + max_new - 1 = seq,
-    // so a request that uses every cache slot is admitted.
-    let out = server.generate("fp", window(5, 8, cfg.vocab), 3, None).unwrap();
-    assert_eq!(out.tokens.len(), 3, "exact-fit budget must decode fully");
+    // Paged admission outlives the old contiguous rule: peak 8 + 5 − 1
+    // = 12 exceeds the backend's 10-token contiguous cache but fits the
+    // 32-token pool, so the request is admitted and decodes fully.
+    let out = server.generate("fp", window(5, 8, cfg.vocab), 5, None).unwrap();
+    assert_eq!(out.tokens.len(), 5, "beyond-contiguous budget must decode fully");
     assert!(server.score("fp", window(3, s, cfg.vocab)).is_ok());
     let metrics = server.shutdown();
     assert_eq!(metrics.rejected, 6);
+    assert_eq!(metrics.rejected_cache_pressure, 1);
+    assert_eq!(metrics.rejected_zero_length, 2, "empty prompt + zero budget");
+    assert_eq!(metrics.rejected_bad_token, 2, "prompt token + stop token");
+    assert_eq!(metrics.rejected_unknown_variant, 1);
     assert_eq!(metrics.generations, 2);
     assert_eq!(metrics.generation_failures, 0);
-    assert_eq!(metrics.generated_tokens, 6);
+    assert_eq!(metrics.generated_tokens, 8);
+}
+
+/// The paged-admission acceptance case: every sequence's peak exceeds
+/// the old contiguous rule (`prompt + max_new − 1 ≤ seq`, which would
+/// have rejected all of them), their aggregate peak far exceeds the
+/// block pool, and scoring traffic rides the same executor — yet every
+/// sequence completes, preemption recomputes the youngest caches
+/// instead of rejecting or deadlocking, and every completion still
+/// matches the full-re-forward greedy reference token for token.
+#[test]
+fn paged_serving_completes_beyond_contiguous_capacity() {
+    let cfg = tiny_cfg();
+    let (_, fp_m) = fp_model(&cfg, 23);
+    let s = 8;
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 4, s, 2));
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+    let sched = SchedConfig { page_size: 4, kv_blocks: 5, prefill_chunk: 3 };
+    let server = Server::start_native_sched(set, policy, sched).unwrap();
+    // 3 sequences, each peaking at 4 + 8 − 1 = 11 cached tokens (> seq
+    // = 8), with an aggregate peak of 33 against a 20-token pool.
+    let cases: Vec<(Vec<i32>, Vec<i32>)> = (0..3)
+        .map(|i| {
+            let prompt = window(70 + i, 4, cfg.vocab);
+            let (want, _) = greedy_reference(&fp_m, &prompt, 8, None);
+            (prompt, want)
+        })
+        .collect();
+    let mut pending = Vec::new();
+    for (prompt, _) in &cases {
+        let (reply, rx) = std::sync::mpsc::channel();
+        server
+            .submit_generate(gsr::coordinator::GenerateRequest {
+                variant: "fp".to_string(),
+                prompt: prompt.clone(),
+                max_new: 8,
+                stop: None,
+                sampling: SamplingParams::greedy(),
+                stream: None,
+                reply,
+            })
+            .unwrap();
+        pending.push(rx);
+    }
+    // Scoring traffic interleaves with the generation rounds.
+    let score_tokens = window(77, s, cfg.vocab);
+    let want_logits = fp_m.forward(&score_tokens);
+    let logits = server.score("fp", score_tokens).unwrap();
+    assert_bits_eq(&logits, &want_logits, "scoring co-exists with paged generation");
+    for (i, ((_, want), rx)) in cases.iter().zip(pending).enumerate() {
+        let got = rx.recv().unwrap().result.unwrap_or_else(|e| panic!("seq {i}: {e}"));
+        assert_eq!(&got.tokens, want, "seq {i} diverged under paging/preemption");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.generations, 3);
+    assert_eq!(metrics.generation_failures, 0);
+    assert_eq!(metrics.rejected, 0, "paged admission accepts what the pool can complete");
+    assert_eq!(metrics.kv_blocks_total, 5);
+    assert!(metrics.preemptions >= 1, "a contended pool must preempt");
+    assert!(metrics.evicted_blocks >= metrics.preemptions, "a victim holds >= 1 block");
+    assert!(metrics.recomputed_tokens >= 1, "preempted caches recompute on resume");
+    let report = metrics.report(Duration::from_millis(50));
+    let needles =
+        ["paged: pool=", "preemptions=", "evicted_blocks=", "recomputed_tokens=", "step p50="];
+    for needle in needles {
+        assert!(report.contains(needle), "report missing {needle:?}:\n{report}");
+    }
+}
+
+/// Sampled generations are replayable: the same request (prompt, seed,
+/// sampling parameters) returns bit-identical tokens whether it runs
+/// essentially alone or co-scheduled with contending sampled traffic —
+/// the per-request RNG stream never observes round composition.
+#[test]
+fn sampled_generation_replays_bit_identically_under_different_co_load() {
+    let cfg = tiny_cfg();
+    let (_, fp_m) = fp_model(&cfg, 41);
+    let (b, s) = (3, 16);
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), b, s, 2));
+    let policy = BatchPolicy { max_batch: b, max_wait: Duration::from_millis(2) };
+    let sched = SchedConfig { page_size: 4, kv_blocks: 12, prefill_chunk: 3 };
+    let server = Server::start_native_sched(set, policy, sched).unwrap();
+    let prompt = window(80, 5, cfg.vocab);
+    let params = SamplingParams { temperature: 0.9, top_k: 12, top_p: 0.95, seed: 1234 };
+    // Quiet server: the request runs essentially alone.
+    let alone = server.generate_with("fp", prompt.clone(), 8, None, params.clone()).unwrap();
+    assert_eq!(alone.tokens.len(), 8);
+    // Noisy server: co-scheduled sampled generations (different seeds)
+    // contend for decode rounds and pool blocks.
+    let mut noise = Vec::new();
+    for i in 0..4usize {
+        let (reply, rx) = std::sync::mpsc::channel();
+        server
+            .submit_generate(gsr::coordinator::GenerateRequest {
+                variant: "fp".to_string(),
+                prompt: window(90 + i, 4 + i, cfg.vocab),
+                max_new: 6,
+                stop: None,
+                sampling: SamplingParams { seed: 7 + i as u64, ..params.clone() },
+                stream: None,
+                reply,
+            })
+            .unwrap();
+        noise.push(rx);
+    }
+    let busy = server.generate_with("fp", prompt.clone(), 8, None, params.clone()).unwrap();
+    for (i, rx) in noise.into_iter().enumerate() {
+        rx.recv().unwrap().result.unwrap_or_else(|e| panic!("noise {i}: {e}"));
+    }
+    assert_eq!(busy.tokens, alone.tokens, "co-load must never change a seeded sample");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.generations, 6);
+    assert_eq!(metrics.generation_failures, 0);
+}
+
+/// Streaming delivery: every emitted token arrives on the stream
+/// channel at pick time, in order, and the final reply carries the
+/// same sequence — which still matches the greedy reference.
+#[test]
+fn generate_stream_delivers_tokens_in_order() {
+    let cfg = tiny_cfg();
+    let (_, fp_m) = fp_model(&cfg, 17);
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, 16, 2));
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    let server = Server::start_native(set, policy).unwrap();
+    let handle = server.handle();
+    let prompt = window(55, 6, cfg.vocab);
+    let (stream, done) = handle
+        .generate_stream("fp", prompt.clone(), 5, None, SamplingParams::greedy())
+        .unwrap();
+    let out = done.recv().unwrap().result.unwrap();
+    let streamed: Vec<i32> = stream.iter().collect();
+    assert_eq!(streamed, out.tokens, "stream must carry exactly the emitted tokens");
+    let (want, _) = greedy_reference(&fp_m, &prompt, 5, None);
+    assert_eq!(out.tokens, want);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.generations, 1);
 }

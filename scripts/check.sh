@@ -21,6 +21,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Benches are not run in tier-1 (wall-clock noise), but they must keep
+# compiling — they double as integration surface for the public API.
+echo "== cargo bench --no-run =="
+cargo bench --no-run
+
 # Scalar-fallback pass: the fast kernels must build and hold their
 # conformance bound without the `simd` feature (non-x86_64 targets,
 # or any build with --no-default-features).
