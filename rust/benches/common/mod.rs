@@ -7,6 +7,7 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use gsr::config::Json;
 use gsr::model::{ModelCfg, R4Kind};
 use gsr::quant::{RotationPlan, RotationSpec};
 use gsr::transform::R1Kind;
@@ -37,8 +38,22 @@ pub fn bench_hetero_plan(cfg: &ModelCfg) -> RotationPlan {
     RotationPlan { seed: 2025, layers }
 }
 
+/// Per-run timing stats from [`time_stats`]. With the small iteration
+/// counts these benches use, `p99` degenerates to the slowest run —
+/// still the right number to persist for regression diffing.
+pub struct TimedStats {
+    pub median: Duration,
+    pub min: Duration,
+    pub p99: Duration,
+}
+
 /// Time `f` over `iters` runs after `warmup` runs; returns per-run stats.
-pub fn time_it<T>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Duration {
+pub fn time_stats<T>(
+    label: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> TimedStats {
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -51,10 +66,47 @@ pub fn time_it<T>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() 
     samples.sort();
     let median = samples[samples.len() / 2];
     let min = samples[0];
+    let p99_idx = ((samples.len() as f64 * 0.99).ceil() as usize).max(1) - 1;
+    let p99 = samples[p99_idx.min(samples.len() - 1)];
     println!(
         "bench {label:40} median {median:>12?}  min {min:>12?}  ({iters} iters)"
     );
-    median
+    TimedStats { median, min, p99 }
+}
+
+/// Median-only convenience wrapper around [`time_stats`].
+pub fn time_it<T>(label: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> Duration {
+    time_stats(label, warmup, iters, f).median
+}
+
+/// A `Duration` as fractional microseconds, the unit all BENCH_*.json
+/// summaries use for latencies.
+pub fn us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
+/// The model-geometry block embedded in every bench summary so numbers
+/// stay comparable across commits.
+pub fn bench_config_json(cfg: &ModelCfg) -> Json {
+    Json::obj(vec![
+        ("vocab", Json::num(cfg.vocab as f64)),
+        ("d_model", Json::num(cfg.d_model as f64)),
+        ("n_layers", Json::num(cfg.n_layers as f64)),
+        ("n_heads", Json::num(cfg.n_heads as f64)),
+        ("d_ffn", Json::num(cfg.d_ffn as f64)),
+        ("group", Json::num(cfg.group as f64)),
+    ])
+}
+
+/// Persist a machine-readable run summary to `BENCH_<name>.json` in the
+/// working directory. Failures warn instead of panicking so a read-only
+/// checkout still benches.
+pub fn write_bench_json(name: &str, summary: Json) {
+    let path = format!("BENCH_{name}.json");
+    match summary.to_file(Path::new(&path)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("WARNING: could not write {path}: {e}"),
+    }
 }
 
 /// Artifact guard: returns false (and prints a notice) when artifacts

@@ -19,6 +19,7 @@ mod common;
 
 use std::sync::Arc;
 
+use gsr::config::Json;
 use gsr::exec::{greedy_argmax, Backend, NativeBackend};
 use gsr::model::{DenseModel, FpParams};
 use gsr::quant::{build_plan_rotations, quantize_native_plan};
@@ -52,7 +53,7 @@ fn cached_decode(backend: &NativeBackend, prompt: &[i32], new_tokens: usize) -> 
     out
 }
 
-fn bench_model(label: &str, model: Arc<DenseModel>, prompt_len: usize, new_tokens: usize) {
+fn bench_model(label: &str, model: Arc<DenseModel>, prompt_len: usize, new_tokens: usize) -> Json {
     let vocab = model.cfg().vocab;
     let capacity = prompt_len + new_tokens;
     let prompt: Vec<i32> = (0..prompt_len).map(|i| ((i * 7 + 1) % vocab) as i32).collect();
@@ -80,13 +81,13 @@ fn bench_model(label: &str, model: Arc<DenseModel>, prompt_len: usize, new_token
         }
     }
 
-    let reforward = common::time_it(
+    let reforward = common::time_stats(
         &format!("reforward decode {label} p={prompt_len}"),
         1,
         3,
         || reforward_decode(&model, &prompt, new_tokens),
     );
-    let cached = common::time_it(
+    let cached = common::time_stats(
         &format!("cached    decode {label} p={prompt_len}"),
         1,
         3,
@@ -96,10 +97,19 @@ fn bench_model(label: &str, model: Arc<DenseModel>, prompt_len: usize, new_token
     println!(
         "  {label} p={prompt_len} n={new_tokens}: reforward {:.0} tok/s, cached {:.0} tok/s — \
          {:.2}x speedup\n",
-        tok_s(reforward),
-        tok_s(cached),
-        reforward.as_secs_f64() / cached.as_secs_f64().max(1e-12),
+        tok_s(reforward.median),
+        tok_s(cached.median),
+        reforward.median.as_secs_f64() / cached.median.as_secs_f64().max(1e-12),
     );
+    Json::obj(vec![
+        ("variant", Json::str(label.trim())),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("new_tokens", Json::num(new_tokens as f64)),
+        ("reforward_tok_s", Json::num(tok_s(reforward.median))),
+        ("cached_tok_s", Json::num(tok_s(cached.median))),
+        ("cached_p50_us", Json::num(common::us(cached.median))),
+        ("cached_p99_us", Json::num(common::us(cached.p99))),
+    ])
 }
 
 fn main() {
@@ -110,11 +120,18 @@ fn main() {
     let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
     let plan_model = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
     let new_tokens = 32;
+    let mut results = Vec::new();
     // The acceptance sweep: cached decode must win from seq >= 64.
     for prompt_len in [64usize, 96] {
-        bench_model("fp       ", Arc::clone(&fp_model), prompt_len, new_tokens);
+        results.push(bench_model("fp       ", Arc::clone(&fp_model), prompt_len, new_tokens));
     }
     for prompt_len in [64usize, 96] {
-        bench_model("searched ", Arc::clone(&plan_model), prompt_len, new_tokens);
+        results.push(bench_model("searched ", Arc::clone(&plan_model), prompt_len, new_tokens));
     }
+    let summary = Json::obj(vec![
+        ("bench", Json::str("decode_throughput")),
+        ("config", common::bench_config_json(&cfg)),
+        ("results", Json::Arr(results)),
+    ]);
+    common::write_bench_json("decode_throughput", summary);
 }

@@ -16,6 +16,7 @@ mod common;
 
 use std::sync::{mpsc, Arc};
 
+use gsr::config::Json;
 use gsr::coordinator::{BatchPolicy, GenerateRequest, Server};
 use gsr::exec::{greedy_argmax, ExecPool, NativeBackend, NativeSet};
 use gsr::model::{DenseModel, FpParams, ModelCfg};
@@ -100,7 +101,7 @@ fn main() {
     // 12 x (48 + 16 - 1) = 756 at peak: admission accepts everything
     // (each request fits alone) and preemption keeps it live.
     let sched = SchedConfig { page_size: 16, kv_blocks: 24, prefill_chunk: 32 };
-    let server = Server::start_native_sched(set, policy, sched).expect("server start");
+    let server = Server::start_native_sched(set, policy, sched.clone()).expect("server start");
 
     // Decode-parity gate before any timing.
     let (prompt_len, max_new) = (48usize, 16usize);
@@ -114,17 +115,51 @@ fn main() {
     println!("parity: paged greedy == full re-forward on {parity_cases} cases\n");
 
     let mut wave_idx = 0usize;
-    let median = common::time_it("paged serve mixed wave", 1, 3, || {
+    let wave = common::time_stats("paged serve mixed wave", 1, 3, || {
         run_wave(&server, &cfg, wave_idx, prompt_len, max_new, s);
         wave_idx += 1;
     });
+    let median = wave.median;
     let gen_tokens = (GENS_PER_WAVE * max_new) as f64;
+    let gen_tok_s = gen_tokens / median.as_secs_f64().max(1e-12);
     println!(
         "  mixed wave: {GENS_PER_WAVE} generations x {max_new} new + {SCORES_PER_WAVE} scores \
-         in {median:?} — {:.0} generated tok/s under contention\n",
-        gen_tokens / median.as_secs_f64().max(1e-12)
+         in {median:?} — {gen_tok_s:.0} generated tok/s under contention\n"
     );
     let metrics = server.shutdown();
     assert_eq!(metrics.generation_failures, 0, "saturation must not fail sequences");
     println!("{}", metrics.report(median));
+    let summary = Json::obj(vec![
+        ("bench", Json::str("paged_serve")),
+        ("config", common::bench_config_json(&cfg)),
+        (
+            "sched",
+            Json::obj(vec![
+                ("page_size", Json::num(sched.page_size as f64)),
+                ("kv_blocks", Json::num(sched.kv_blocks as f64)),
+                ("prefill_chunk", Json::num(sched.prefill_chunk as f64)),
+                ("max_batch", Json::num(b as f64)),
+                ("seq", Json::num(s as f64)),
+                ("gens_per_wave", Json::num(GENS_PER_WAVE as f64)),
+                ("scores_per_wave", Json::num(SCORES_PER_WAVE as f64)),
+                ("prompt_len", Json::num(prompt_len as f64)),
+                ("max_new", Json::num(max_new as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Json::obj(vec![
+                ("generated_tok_s", Json::num(gen_tok_s)),
+                ("wave_p50_us", Json::num(common::us(wave.median))),
+                ("wave_p99_us", Json::num(common::us(wave.p99))),
+                ("request_p50_us", Json::num(common::us(metrics.request_latency.quantile(0.5)))),
+                ("request_p99_us", Json::num(common::us(metrics.request_latency.quantile(0.99)))),
+                ("requests", Json::num(metrics.request_latency.count() as f64)),
+                ("preemptions", Json::num(metrics.preemptions as f64)),
+                ("evicted_blocks", Json::num(metrics.evicted_blocks as f64)),
+                ("recomputed_tokens", Json::num(metrics.recomputed_tokens as f64)),
+            ]),
+        ),
+    ]);
+    common::write_bench_json("paged_serve", summary);
 }

@@ -13,11 +13,12 @@ mod common;
 
 use std::sync::Arc;
 
+use gsr::config::Json;
 use gsr::exec::{Backend, NativeBackend};
 use gsr::model::{DenseModel, FpParams};
 use gsr::quant::{build_plan_rotations, quantize_native_plan};
 
-fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) {
+fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) -> Json {
     let vocab = model.cfg().vocab;
     let tokens: Vec<i32> = (0..batch * seq).map(|i| ((i * 7 + 1) % vocab) as i32).collect();
 
@@ -33,7 +34,7 @@ fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) {
     }
 
     let n_tokens = (batch * seq) as f64;
-    let serial = common::time_it(&format!("serial  fwd {label} b={batch}"), 1, 3, || {
+    let serial = common::time_stats(&format!("serial  fwd {label} b={batch}"), 1, 3, || {
         let mut last = 0f32;
         for row in 0..batch {
             let out = model.forward(&tokens[row * seq..(row + 1) * seq]);
@@ -41,16 +42,25 @@ fn bench_model(label: &str, model: Arc<DenseModel>, batch: usize, seq: usize) {
         }
         last
     });
-    let batched = common::time_it(&format!("batched fwd {label} b={batch}"), 1, 3, || {
+    let batched = common::time_stats(&format!("batched fwd {label} b={batch}"), 1, 3, || {
         backend.forward_batch(&tokens).unwrap()
     });
     let tok_s = |d: std::time::Duration| n_tokens / d.as_secs_f64().max(1e-12);
     println!(
         "  {label} b={batch}: serial {:.0} tok/s, batched {:.0} tok/s — {:.2}x speedup\n",
-        tok_s(serial),
-        tok_s(batched),
-        serial.as_secs_f64() / batched.as_secs_f64().max(1e-12),
+        tok_s(serial.median),
+        tok_s(batched.median),
+        serial.median.as_secs_f64() / batched.median.as_secs_f64().max(1e-12),
     );
+    Json::obj(vec![
+        ("variant", Json::str(label.trim())),
+        ("batch", Json::num(batch as f64)),
+        ("seq", Json::num(seq as f64)),
+        ("serial_tok_s", Json::num(tok_s(serial.median))),
+        ("batched_tok_s", Json::num(tok_s(batched.median))),
+        ("batched_p50_us", Json::num(common::us(batched.median))),
+        ("batched_p99_us", Json::num(common::us(batched.p99))),
+    ])
 }
 
 fn main() {
@@ -61,10 +71,17 @@ fn main() {
     let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
     let plan_model = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
     let seq = 64;
+    let mut results = Vec::new();
     for batch in [4usize, 8] {
-        bench_model("fp       ", Arc::clone(&fp_model), batch, seq);
+        results.push(bench_model("fp       ", Arc::clone(&fp_model), batch, seq));
     }
     for batch in [4usize, 8] {
-        bench_model("searched ", Arc::clone(&plan_model), batch, seq);
+        results.push(bench_model("searched ", Arc::clone(&plan_model), batch, seq));
     }
+    let summary = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("config", common::bench_config_json(&cfg)),
+        ("results", Json::Arr(results)),
+    ]);
+    common::write_bench_json("serve_throughput", summary);
 }

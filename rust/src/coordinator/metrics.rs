@@ -1,68 +1,19 @@
-//! Serving metrics: latency histogram + throughput counters.
+//! Serving metrics: registry-backed counters/gauges/histograms plus
+//! the aggregate snapshot the shutdown report is rendered from.
+//!
+//! The executor records into [`ServingMetrics`] — cheap atomic handles
+//! registered on an [`obs::Registry`](crate::obs::Registry), so the
+//! same cells feed the Prometheus exposition (`--metrics-addr`), the
+//! JSON snapshot (`--metrics-dump`) and the human-readable [`Metrics`]
+//! report. Every latency family is a fixed-bucket histogram: memory
+//! stays constant under sustained traffic (no raw-sample vectors).
 
+use std::sync::Arc;
 use std::time::Duration;
 
-/// Log₂-bucketed latency histogram (µs granularity, 1µs … ~17min).
-#[derive(Debug, Clone)]
-pub struct LatencyHistogram {
-    buckets: [u64; 30],
-    count: u64,
-    sum_us: u64,
-    max_us: u64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self { buckets: [0; 30], count: 0, sum_us: 0, max_us: 0 }
-    }
-}
-
-impl LatencyHistogram {
-    pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros() as u64;
-        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(29);
-        self.buckets[idx] += 1;
-        self.count += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    pub fn mean(&self) -> Duration {
-        if self.count == 0 {
-            return Duration::ZERO;
-        }
-        Duration::from_micros(self.sum_us / self.count)
-    }
-
-    pub fn max(&self) -> Duration {
-        Duration::from_micros(self.max_us)
-    }
-
-    /// Total recorded time — what throughput rates divide by.
-    pub fn total(&self) -> Duration {
-        Duration::from_micros(self.sum_us)
-    }
-
-    /// Approximate quantile from bucket upper bounds.
-    pub fn quantile(&self, q: f64) -> Duration {
-        if self.count == 0 {
-            return Duration::ZERO;
-        }
-        let target = (q * self.count as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
-            }
-        }
-        self.max()
-    }
-}
+use crate::model::{FastPathStats, KernelMode};
+use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
+pub use crate::obs::LatencyHistogram;
 
 /// Why a request was refused without execution — one bucket per
 /// admission rule, so load-shedding is diagnosable from the report.
@@ -79,6 +30,19 @@ pub enum RejectReason {
     /// Generation whose peak KV occupancy exceeds the block pool's
     /// total token inventory — it could never complete, even alone.
     CachePressure,
+}
+
+impl RejectReason {
+    /// Stable label used in metrics and trace events.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::TooLong => "too_long",
+            RejectReason::BadToken => "bad_token",
+            RejectReason::UnknownVariant => "unknown_variant",
+            RejectReason::ZeroLength => "zero_length",
+            RejectReason::CachePressure => "cache_pressure",
+        }
+    }
 }
 
 /// Aggregate serving metrics.
@@ -102,7 +66,9 @@ pub struct Metrics {
     pub exec_latency: LatencyHistogram,
     /// Per-step backend latency of batched decode rounds.
     pub decode_latency: LatencyHistogram,
-    pub batch_sizes: Vec<usize>,
+    /// Rows across all executed scoring batches (`/ batches` = mean
+    /// batch size; bounded accounting, no per-batch samples kept).
+    pub batch_rows: u64,
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
@@ -147,6 +113,11 @@ pub struct Metrics {
     /// Cached tokens invalidated by preemption — the recompute debt
     /// paid back through later prefill chunks.
     pub recomputed_tokens: u64,
+    /// Variants running the fast kernel path.
+    pub fast_variants: u64,
+    /// Per-linear dense fallbacks across fast-mode variants (structure
+    /// recognition declined; the dense reference matmul runs instead).
+    pub fast_dense_fallbacks: u64,
 }
 
 impl Metrics {
@@ -154,8 +125,8 @@ impl Metrics {
     /// count, and the backend forward latency.
     pub fn record_batch(&mut self, batch_size: usize, tokens: u64, exec: Duration) {
         self.batches += 1;
+        self.batch_rows += batch_size as u64;
         self.tokens += tokens;
-        self.batch_sizes.push(batch_size);
         self.exec_latency.record(exec);
     }
 
@@ -216,10 +187,10 @@ impl Metrics {
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        if self.batches == 0 {
             return 0.0;
         }
-        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        self.batch_rows as f64 / self.batches as f64
     }
 
     /// Decoded sequence-steps per second of backend decode time — the
@@ -293,13 +264,263 @@ impl Metrics {
                 self.recomputed_tokens,
             ));
         }
+        if self.fast_variants > 0 {
+            out.push_str(&format!(" | kernels: fast_variants={}", self.fast_variants));
+            if self.fast_dense_fallbacks > 0 {
+                out.push_str(&format!(
+                    " WARNING dense_fallbacks={} (fast mode is running dense \
+                     per-linear fallbacks; check packed/rotation recognition)",
+                    self.fast_dense_fallbacks,
+                ));
+            }
+        }
         out
+    }
+}
+
+/// Registry-backed recording handles the executor thread writes into.
+///
+/// Every method takes `&self` (atomic cells), the names below form the
+/// Prometheus exposition, and [`ServingMetrics::snapshot`] materializes
+/// the same cells as a [`Metrics`] aggregate for the shutdown report.
+pub struct ServingMetrics {
+    registry: Arc<Registry>,
+    requests: Counter,
+    batches: Counter,
+    batch_rows: Counter,
+    tokens: Counter,
+    rejected_too_long: Counter,
+    rejected_bad_token: Counter,
+    rejected_unknown_variant: Counter,
+    rejected_zero_length: Counter,
+    rejected_cache_pressure: Counter,
+    generations: Counter,
+    generation_failures: Counter,
+    generated_tokens: Counter,
+    decode_steps: Counter,
+    decode_seqs: Counter,
+    cache_tokens: Counter,
+    cache_tokens_peak: Gauge,
+    prefill_chunks: Counter,
+    prefill_tokens: Counter,
+    kv_blocks_total: Gauge,
+    kv_blocks_peak: Gauge,
+    preemptions: Counter,
+    evicted_blocks: Counter,
+    recomputed_tokens: Counter,
+    fast_variants: Gauge,
+    fast_dense_fallbacks: Counter,
+    request_latency: Histogram,
+    exec_latency: Histogram,
+    decode_latency: Histogram,
+}
+
+impl ServingMetrics {
+    /// Register every serving family on `registry` and return the
+    /// recording handles.
+    pub fn new(registry: &Arc<Registry>) -> ServingMetrics {
+        let r = registry;
+        let reject = |reason: &str| {
+            r.counter_with(
+                "gsr_rejected_total",
+                "Requests refused at admission, by reason",
+                &[("reason", reason)],
+            )
+        };
+        ServingMetrics {
+            registry: Arc::clone(registry),
+            requests: r.counter("gsr_requests_total", "Completed requests (scores + generations)"),
+            batches: r.counter("gsr_batches_total", "Scoring batches executed"),
+            batch_rows: r.counter("gsr_batch_rows_total", "Rows across executed scoring batches"),
+            tokens: r.counter("gsr_tokens_total", "Real (unpadded) tokens scored"),
+            rejected_too_long: reject("too_long"),
+            rejected_bad_token: reject("bad_token"),
+            rejected_unknown_variant: reject("unknown_variant"),
+            rejected_zero_length: reject("zero_length"),
+            rejected_cache_pressure: reject("cache_pressure"),
+            generations: r.counter("gsr_generations_total", "Completed generation requests"),
+            generation_failures: r
+                .counter("gsr_generation_failures_total", "Generations failed after admission"),
+            generated_tokens: r
+                .counter("gsr_generated_tokens_total", "Tokens emitted to generation clients"),
+            decode_steps: r.counter("gsr_decode_steps_total", "Batched decode rounds executed"),
+            decode_seqs: r
+                .counter("gsr_decode_seqs_total", "Sequence-steps across decode rounds"),
+            cache_tokens: r
+                .counter("gsr_cache_tokens_total", "Sum of per-round KV occupancy (tokens)"),
+            cache_tokens_peak: r
+                .gauge("gsr_cache_tokens_peak", "Largest single-round KV occupancy (tokens)"),
+            prefill_chunks: r.counter("gsr_prefill_chunks_total", "Prefill chunks executed"),
+            prefill_tokens: r
+                .counter("gsr_prefill_tokens_total", "Tokens absorbed through prefill chunks"),
+            kv_blocks_total: r.gauge("gsr_kv_blocks", "Block-pool inventory across variants"),
+            kv_blocks_peak: r
+                .gauge("gsr_kv_blocks_peak", "High-water mark of granted KV blocks"),
+            preemptions: r.counter("gsr_preemptions_total", "Sequences preempted"),
+            evicted_blocks: r
+                .counter("gsr_evicted_blocks_total", "Blocks reclaimed by preemption"),
+            recomputed_tokens: r
+                .counter("gsr_recomputed_tokens_total", "Cached tokens invalidated by preemption"),
+            fast_variants: r
+                .gauge("gsr_fast_variants", "Variants running the fast kernel path"),
+            fast_dense_fallbacks: r.counter(
+                "gsr_dense_fallbacks",
+                "Per-linear dense fallbacks across fast-mode variants",
+            ),
+            request_latency: r
+                .histogram("gsr_request_latency_us", "Queue-to-reply latency per request (us)"),
+            exec_latency: r.histogram(
+                "gsr_exec_latency_us",
+                "Backend execution latency per call: scoring batches and prefill chunks (us)",
+            ),
+            decode_latency: r
+                .histogram("gsr_decode_latency_us", "Backend latency per batched decode round (us)"),
+        }
+    }
+
+    /// The registry these handles live on (for exposition/dumping).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// See [`Metrics::record_batch`].
+    pub fn record_batch(&self, batch_size: usize, tokens: u64, exec: Duration) {
+        self.batches.inc();
+        self.batch_rows.add(batch_size as u64);
+        self.tokens.add(tokens);
+        self.exec_latency.record(exec);
+    }
+
+    /// See [`Metrics::record_request`].
+    pub fn record_request(&self, latency: Duration) {
+        self.requests.inc();
+        self.request_latency.record(latency);
+    }
+
+    /// See [`Metrics::record_rejection`].
+    pub fn record_rejection(&self, reason: RejectReason) {
+        match reason {
+            RejectReason::TooLong => self.rejected_too_long.inc(),
+            RejectReason::BadToken => self.rejected_bad_token.inc(),
+            RejectReason::UnknownVariant => self.rejected_unknown_variant.inc(),
+            RejectReason::ZeroLength => self.rejected_zero_length.inc(),
+            RejectReason::CachePressure => self.rejected_cache_pressure.inc(),
+        }
+    }
+
+    /// See [`Metrics::record_prefill`].
+    pub fn record_prefill(&self, tokens: u64, exec: Duration) {
+        self.prefill_chunks.inc();
+        self.prefill_tokens.add(tokens);
+        self.exec_latency.record(exec);
+    }
+
+    /// See [`Metrics::record_preemption`].
+    pub fn record_preemption(&self, blocks: u64, cached_tokens: u64) {
+        self.preemptions.inc();
+        self.evicted_blocks.add(blocks);
+        self.recomputed_tokens.add(cached_tokens);
+    }
+
+    /// See [`Metrics::record_decode`].
+    pub fn record_decode(&self, seqs: usize, cache_tokens: u64, exec: Duration) {
+        self.decode_steps.inc();
+        self.decode_seqs.add(seqs as u64);
+        self.cache_tokens.add(cache_tokens);
+        self.cache_tokens_peak.set_max(cache_tokens);
+        self.decode_latency.record(exec);
+    }
+
+    /// See [`Metrics::record_generation`].
+    pub fn record_generation(&self, emitted: u64, latency: Duration) {
+        self.generations.inc();
+        self.generated_tokens.add(emitted);
+        self.record_request(latency);
+    }
+
+    /// Account one generation that failed after admission.
+    pub fn record_generation_failure(&self) {
+        self.generation_failures.inc();
+    }
+
+    /// Add a variant's block-pool inventory to the paged gauge.
+    pub fn add_kv_blocks_total(&self, blocks: u64) {
+        self.kv_blocks_total.add(blocks);
+    }
+
+    /// Raise the granted-blocks high-water mark.
+    pub fn bump_kv_blocks_peak(&self, peak: u64) {
+        self.kv_blocks_peak.set_max(peak);
+    }
+
+    /// Record a variant's kernel-path selection: in fast mode the
+    /// per-linear dense fallbacks are exported under a labeled counter
+    /// (`gsr_dense_fallbacks_by_variant{variant=...,mode=...}`) and
+    /// aggregated for the report's fast-mode warning.
+    pub fn record_kernel_path(&self, variant: &str, stats: &FastPathStats) {
+        let mode = stats.mode.as_str();
+        self.registry
+            .counter_with(
+                "gsr_dense_fallbacks_by_variant",
+                "Per-linear dense fallbacks on the fast kernel path, by variant",
+                &[("variant", variant), ("mode", mode)],
+            )
+            .add(stats.dense_fallbacks as u64);
+        if stats.mode == KernelMode::Fast {
+            self.fast_variants.add(1);
+            self.fast_dense_fallbacks.add(stats.dense_fallbacks as u64);
+        }
+    }
+
+    /// Materialize every cell as a plain [`Metrics`] aggregate.
+    pub fn snapshot(&self) -> Metrics {
+        let rejected_too_long = self.rejected_too_long.get();
+        let rejected_bad_token = self.rejected_bad_token.get();
+        let rejected_unknown_variant = self.rejected_unknown_variant.get();
+        let rejected_zero_length = self.rejected_zero_length.get();
+        let rejected_cache_pressure = self.rejected_cache_pressure.get();
+        Metrics {
+            request_latency: self.request_latency.snapshot(),
+            exec_latency: self.exec_latency.snapshot(),
+            decode_latency: self.decode_latency.snapshot(),
+            batch_rows: self.batch_rows.get(),
+            requests: self.requests.get(),
+            batches: self.batches.get(),
+            tokens: self.tokens.get(),
+            rejected: rejected_too_long
+                + rejected_bad_token
+                + rejected_unknown_variant
+                + rejected_zero_length
+                + rejected_cache_pressure,
+            rejected_too_long,
+            rejected_bad_token,
+            rejected_unknown_variant,
+            rejected_zero_length,
+            rejected_cache_pressure,
+            generations: self.generations.get(),
+            generation_failures: self.generation_failures.get(),
+            generated_tokens: self.generated_tokens.get(),
+            decode_steps: self.decode_steps.get(),
+            decode_seqs: self.decode_seqs.get(),
+            cache_tokens: self.cache_tokens.get(),
+            cache_tokens_peak: self.cache_tokens_peak.get(),
+            prefill_chunks: self.prefill_chunks.get(),
+            prefill_tokens: self.prefill_tokens.get(),
+            kv_blocks_total: self.kv_blocks_total.get(),
+            kv_blocks_peak: self.kv_blocks_peak.get(),
+            preemptions: self.preemptions.get(),
+            evicted_blocks: self.evicted_blocks.get(),
+            recomputed_tokens: self.recomputed_tokens.get(),
+            fast_variants: self.fast_variants.get(),
+            fast_dense_fallbacks: self.fast_dense_fallbacks.get(),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn histogram_quantiles_monotone() {
@@ -326,6 +547,7 @@ mod tests {
         assert_eq!(m.requests, 6);
         assert_eq!(m.tokens, 768);
         assert_eq!(m.batches, 2);
+        assert_eq!(m.batch_rows, 6);
         assert_eq!(m.exec_latency.count(), 2);
         assert_eq!(m.request_latency.count(), 6);
     }
@@ -411,5 +633,66 @@ mod tests {
         assert_eq!(m.exec_latency.count(), 2, "prefill shares exec latency");
         let quiet = Metrics::default().report(Duration::from_millis(1));
         assert!(!quiet.contains("paged:"), "{quiet}");
+    }
+
+    #[test]
+    fn serving_metrics_snapshot_matches_plain_recording() {
+        let registry = Arc::new(Registry::new());
+        let s = ServingMetrics::new(&registry);
+        s.record_batch(4, 512, Duration::from_millis(3));
+        s.record_request(Duration::from_millis(4));
+        s.record_rejection(RejectReason::BadToken);
+        s.record_prefill(16, Duration::from_millis(2));
+        s.record_preemption(2, 24);
+        s.record_decode(3, 30, Duration::from_millis(10));
+        s.record_generation(5, Duration::from_millis(25));
+        s.record_generation_failure();
+        s.add_kv_blocks_total(8);
+        s.bump_kv_blocks_peak(5);
+        let m = s.snapshot();
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batch_rows, 4);
+        assert_eq!(m.tokens, 512);
+        assert_eq!(m.requests, 2, "score reply + finished generation");
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.rejected_bad_token, 1);
+        assert_eq!(m.prefill_chunks, 1);
+        assert_eq!(m.prefill_tokens, 16);
+        assert_eq!(m.preemptions, 1);
+        assert_eq!(m.evicted_blocks, 2);
+        assert_eq!(m.recomputed_tokens, 24);
+        assert_eq!(m.decode_steps, 1);
+        assert_eq!(m.decode_seqs, 3);
+        assert_eq!(m.cache_tokens_peak, 30);
+        assert_eq!(m.generations, 1);
+        assert_eq!(m.generation_failures, 1);
+        assert_eq!(m.generated_tokens, 5);
+        assert_eq!(m.kv_blocks_total, 8);
+        assert_eq!(m.kv_blocks_peak, 5);
+        assert_eq!(m.exec_latency.count(), 2, "batch + prefill share exec latency");
+        // The same cells feed the Prometheus exposition.
+        let text = registry.expose_prometheus();
+        for family in [
+            "# TYPE gsr_requests_total counter",
+            "# TYPE gsr_request_latency_us histogram",
+            "gsr_rejected_total{reason=\"bad_token\"} 1",
+            "gsr_kv_blocks 8",
+        ] {
+            assert!(text.contains(family), "missing {family} in exposition");
+        }
+    }
+
+    #[test]
+    fn fast_fallback_warning_in_report() {
+        let mut m = Metrics::default();
+        m.fast_variants = 1;
+        let clean = m.report(Duration::from_millis(1));
+        assert!(clean.contains("kernels: fast_variants=1"), "{clean}");
+        assert!(!clean.contains("WARNING"), "{clean}");
+        m.fast_dense_fallbacks = 3;
+        let warn = m.report(Duration::from_millis(1));
+        assert!(warn.contains("WARNING dense_fallbacks=3"), "{warn}");
+        let quiet = Metrics::default().report(Duration::from_millis(1));
+        assert!(!quiet.contains("kernels:"), "{quiet}");
     }
 }

@@ -43,7 +43,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use metrics::{LatencyHistogram, Metrics, RejectReason};
+pub use metrics::{LatencyHistogram, Metrics, RejectReason, ServingMetrics};
 pub use router::{RoutePolicy, Router};
 pub use server::{
     Generated, GenerateRequest, GenerateResponse, Request, Response, Server, ServerHandle,

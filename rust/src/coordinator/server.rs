@@ -47,6 +47,17 @@
 //! recomputes caches, never re-picks). Shutdown drains scoring queues
 //! and runs every active generation to completion before reporting
 //! metrics.
+//!
+//! ## Observability
+//!
+//! The executor records into an [`Obs`](crate::obs::Obs) bundle when
+//! started through the `_obs` constructors: registry-backed counters,
+//! gauges and fixed-bucket latency histograms (Prometheus-exposable)
+//! plus typed flight-recorder events for every admission, rejection,
+//! prefill chunk, decode round, preemption/resume pair, block grant
+//! and batch execution. The default constructors wire a private
+//! bundle, so instrumentation left in the hot paths costs one relaxed
+//! atomic load per event while tracing is disabled.
 
 use std::path::Path;
 use std::sync::mpsc;
@@ -54,9 +65,19 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
-use super::metrics::{Metrics, RejectReason};
+use super::metrics::{Metrics, RejectReason, ServingMetrics};
 use crate::exec::{Backend, BackendSet, Generation, NativeSet, PjrtSet};
+use crate::obs::{Obs, RequestKind, TraceEvent, TraceHandle};
 use crate::sched::{compose_round, BlockPool, Sampler, SamplingParams, SchedConfig};
+
+/// The executor's recording bundle: registry-backed metric handles
+/// plus this thread's flight-recorder ring. Every method is `&self`
+/// (atomic cells / per-shard ring), so it threads through the round
+/// helpers without borrow gymnastics.
+struct Telemetry {
+    m: ServingMetrics,
+    tr: TraceHandle,
+}
 
 /// A scoring request: tokens (≤ seq) for one sequence; the server
 /// returns per-position logits for exactly the positions sent.
@@ -132,6 +153,10 @@ struct SeqState {
     id: u64,
     /// Index into the executor's `queues` (variant identity).
     variant_idx: usize,
+    /// Set while the sequence's blocks are reclaimed (preemption);
+    /// cleared — emitting the paired resume trace event — at its next
+    /// successful capacity grant.
+    preempted: bool,
     prompt: Vec<i32>,
     /// Emitted tokens so far.
     produced: Vec<i32>,
@@ -317,10 +342,24 @@ impl Server {
         policy: BatchPolicy,
         sched: SchedConfig,
     ) -> Result<Self, String> {
+        Self::start_native_obs(set, policy, sched, &Obs::new())
+    }
+
+    /// [`Server::start_native_sched`] recording into the given
+    /// observability bundle: metric families register on
+    /// `obs.registry` (Prometheus-exposable, snapshot-dumpable) and
+    /// trace events land in `obs.recorder` — a relaxed-load no-op
+    /// unless the recorder was enabled.
+    pub fn start_native_obs(
+        set: NativeSet,
+        policy: BatchPolicy,
+        sched: SchedConfig,
+        obs: &Obs,
+    ) -> Result<Self, String> {
         if set.is_empty() {
             return Err("native backend set is empty".to_string());
         }
-        Self::start_set_sched(move || Ok(set), policy, sched)
+        Self::start_set_obs(move || Ok(set), policy, sched, obs)
     }
 
     /// Start the executor over any [`BackendSet`] with the default
@@ -345,6 +384,22 @@ impl Server {
         V: BackendSet + 'static,
         F: FnOnce() -> Result<V, String> + Send + 'static,
     {
+        Self::start_set_obs(build, policy, sched, &Obs::new())
+    }
+
+    /// [`Server::start_set_sched`] recording into the given
+    /// observability bundle (see [`Server::start_native_obs`]).
+    pub fn start_set_obs<V, F>(
+        build: F,
+        policy: BatchPolicy,
+        sched: SchedConfig,
+        obs: &Obs,
+    ) -> Result<Self, String>
+    where
+        V: BackendSet + 'static,
+        F: FnOnce() -> Result<V, String> + Send + 'static,
+    {
+        let obs = obs.clone();
         let (tx, rx) = mpsc::channel::<Job>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let handle = std::thread::spawn(move || match build() {
@@ -353,7 +408,7 @@ impl Server {
             }
             Ok(set) => {
                 let _ = ready_tx.send(Ok(()));
-                executor_loop(set, rx, policy, sched);
+                executor_loop(set, rx, policy, sched, &obs);
             }
         });
         ready_rx
@@ -434,7 +489,8 @@ struct VariantQueue {
     pool: Option<BlockPool>,
     /// Max tokens per prefill chunk (from [`SchedConfig`]).
     prefill_chunk: usize,
-    q: DynamicBatcher<(Request, Instant)>,
+    /// Queued score requests with submit time and trace-span id.
+    q: DynamicBatcher<(Request, Instant, u64)>,
 }
 
 impl VariantQueue {
@@ -527,7 +583,12 @@ fn executor_loop<V: BackendSet>(
     rx: mpsc::Receiver<Job>,
     policy: BatchPolicy,
     sched: SchedConfig,
+    obs: &Obs,
 ) {
+    let tel = Telemetry {
+        m: ServingMetrics::new(&obs.registry),
+        tr: obs.recorder.handle("executor"),
+    };
     // Per-variant queue, its max_batch clamped to the backend's actual
     // batch capacity so one flush never overflows one forward call.
     let mut queues: Vec<VariantQueue> = Vec::new();
@@ -536,6 +597,7 @@ fn executor_loop<V: BackendSet>(
         let (mut seq, mut vocab, mut generation) = (0, 0, false);
         let mut backend_label = String::new();
         let mut geometry: Option<(usize, usize)> = None;
+        let mut kernel_stats = None;
         set.run(&name, &mut |backend| {
             cap = cap.min(backend.batch()).max(1);
             seq = backend.seq();
@@ -543,7 +605,20 @@ fn executor_loop<V: BackendSet>(
             generation = backend.supports_generation();
             backend_label = backend.name().to_string();
             geometry = backend.kv_block_geometry();
+            kernel_stats = backend.kernel_stats();
         });
+        // Kernel-path telemetry is a static property of the resident
+        // model — probed once, exported per variant, and aggregated
+        // into the report's fast-mode dense-fallback warning.
+        if let Some(stats) = kernel_stats {
+            tel.m.record_kernel_path(&name, &stats);
+            tel.tr.record(TraceEvent::KernelPath {
+                variant: name.clone(),
+                mode: stats.mode.as_str(),
+                packed: stats.packed_linears,
+                dense_fallbacks: stats.dense_fallbacks,
+            });
+        }
         // Mint the block pool for paged generation: the configured
         // count, or auto-sized to match the old contiguous capacity
         // (`cap` sequences of `seq` tokens each).
@@ -566,10 +641,9 @@ fn executor_loop<V: BackendSet>(
             q,
         });
     }
-    let mut metrics = Metrics::default();
     for vq in &queues {
         if let Some(pool) = &vq.pool {
-            metrics.kv_blocks_total += pool.total_blocks() as u64;
+            tel.m.add_kv_blocks_total(pool.total_blocks() as u64);
         }
     }
     let mut active: Vec<SeqState> = Vec::new();
@@ -596,8 +670,7 @@ fn executor_loop<V: BackendSet>(
         // it (non-blocking drain): a burst reaches the batchers — and
         // the running generation rounds — in one loop turn.
         for job in first.into_iter().chain(std::iter::from_fn(|| rx.try_recv().ok())) {
-            let flow =
-                handle_job(job, &set, &mut queues, &mut active, &mut next_seq_id, &mut metrics);
+            let flow = handle_job(job, &set, &mut queues, &mut active, &mut next_seq_id, &tel);
             match flow {
                 Flow::Continue => {}
                 Flow::Stop => return,
@@ -606,13 +679,13 @@ fn executor_loop<V: BackendSet>(
         let now = Instant::now();
         for vq in queues.iter_mut() {
             while vq.q.ready(now) {
-                dispatch(&set, &vq.name, vq.q.take_batch(), &mut metrics);
+                dispatch(&set, &vq.name, vq.q.take_batch(), &tel);
             }
         }
         // One continuous-batching round per loop turn keeps generation
         // throughput high while queued scoring work still gets serviced
         // between rounds.
-        generation_round(&set, &mut queues, &mut active, &mut metrics);
+        generation_round(&set, &mut queues, &mut active, &tel);
     }
 }
 
@@ -630,20 +703,39 @@ fn handle_job<V: BackendSet>(
     queues: &mut [VariantQueue],
     active: &mut Vec<SeqState>,
     next_seq_id: &mut u64,
-    metrics: &mut Metrics,
+    tel: &Telemetry,
 ) -> Flow {
+    let reject_trace = |variant: &str, reason: &'static str| {
+        if tel.tr.enabled() {
+            tel.tr.record(TraceEvent::RequestRejected { variant: variant.to_string(), reason });
+        }
+    };
     match job {
         Job::Score(req, t0) => {
             match queues.iter_mut().find(|vq| vq.name == req.variant) {
                 Some(vq) => match vq.admit(&req) {
-                    Ok(()) => vq.q.push((req, t0)),
+                    Ok(()) => {
+                        *next_seq_id += 1;
+                        let id = *next_seq_id;
+                        if tel.tr.enabled() {
+                            tel.tr.record(TraceEvent::RequestAdmitted {
+                                id,
+                                variant: req.variant.clone(),
+                                kind: RequestKind::Score,
+                                tokens: req.tokens.len(),
+                            });
+                        }
+                        vq.q.push((req, t0, id));
+                    }
                     Err((reason, e)) => {
-                        metrics.record_rejection(reason);
+                        tel.m.record_rejection(reason);
+                        reject_trace(&req.variant, reason.as_str());
                         let _ = req.reply.send(Response { logits: Err(e) });
                     }
                 },
                 None => {
-                    metrics.record_rejection(RejectReason::UnknownVariant);
+                    tel.m.record_rejection(RejectReason::UnknownVariant);
+                    reject_trace(&req.variant, RejectReason::UnknownVariant.as_str());
                     let _ = req.reply.send(Response {
                         logits: Err(format!("variant {} not resident", req.variant)),
                     });
@@ -653,14 +745,16 @@ fn handle_job<V: BackendSet>(
         }
         Job::Generate(req, t0) => {
             let Some(idx) = queues.iter().position(|vq| vq.name == req.variant) else {
-                metrics.record_rejection(RejectReason::UnknownVariant);
+                tel.m.record_rejection(RejectReason::UnknownVariant);
+                reject_trace(&req.variant, RejectReason::UnknownVariant.as_str());
                 let _ = req.reply.send(GenerateResponse {
                     result: Err(format!("variant {} not resident", req.variant)),
                 });
                 return Flow::Continue;
             };
             if let Err((reason, e)) = queues[idx].admit_generate(&req) {
-                metrics.record_rejection(reason);
+                tel.m.record_rejection(reason);
+                reject_trace(&req.variant, reason.as_str());
                 let _ = req.reply.send(GenerateResponse { result: Err(e) });
                 return Flow::Continue;
             }
@@ -674,9 +768,19 @@ fn handle_job<V: BackendSet>(
             match res {
                 Some(Ok(gen)) => {
                     *next_seq_id += 1;
+                    let id = *next_seq_id;
+                    if tel.tr.enabled() {
+                        tel.tr.record(TraceEvent::RequestAdmitted {
+                            id,
+                            variant: req.variant.clone(),
+                            kind: RequestKind::Generate,
+                            tokens: req.prompt.len(),
+                        });
+                    }
                     active.push(SeqState {
-                        id: *next_seq_id,
+                        id,
                         variant_idx: idx,
+                        preempted: false,
                         prompt: req.prompt,
                         produced: Vec::new(),
                         max_new: req.max_new,
@@ -689,11 +793,13 @@ fn handle_job<V: BackendSet>(
                     });
                 }
                 Some(Err(e)) => {
-                    metrics.generation_failures += 1;
+                    tel.m.record_generation_failure();
+                    reject_trace(&req.variant, "generation_start_failed");
                     let _ = req.reply.send(GenerateResponse { result: Err(e) });
                 }
                 None => {
-                    metrics.record_rejection(RejectReason::UnknownVariant);
+                    tel.m.record_rejection(RejectReason::UnknownVariant);
+                    reject_trace(&req.variant, RejectReason::UnknownVariant.as_str());
                     let _ = req.reply.send(GenerateResponse {
                         result: Err(format!("variant {} not resident", req.variant)),
                     });
@@ -706,13 +812,13 @@ fn handle_job<V: BackendSet>(
             // then active generations to completion.
             for vq in queues.iter_mut() {
                 while !vq.q.is_empty() {
-                    dispatch(set, &vq.name, vq.q.take_batch(), metrics);
+                    dispatch(set, &vq.name, vq.q.take_batch(), tel);
                 }
             }
             while !active.is_empty() {
-                generation_round(set, queues, active, metrics);
+                generation_round(set, queues, active, tel);
             }
-            let _ = mtx.send(metrics.clone());
+            let _ = mtx.send(tel.m.snapshot());
             Flow::Stop
         }
     }
@@ -730,25 +836,39 @@ fn ensure_capacity(
     members: &mut [SeqState],
     i: usize,
     extra: usize,
-    metrics: &mut Metrics,
+    tel: &Telemetry,
 ) -> Result<bool, String> {
     let need = members[i].gen.len() + extra;
+    let mut granted = 0usize;
     while members[i].gen.capacity() < need {
         if let Some(block) = pool.alloc() {
             backend.grant_kv_block(&mut members[i].gen, block)?;
+            granted += 1;
             continue;
         }
         // Pool dry: members are FIFO-sorted, so the youngest victim is
         // the highest index past `i` still holding blocks.
         let Some(j) = (i + 1..members.len()).rev().find(|&j| members[j].gen.capacity() > 0) else {
+            if granted > 0 {
+                tel.tr.record(TraceEvent::BlocksGranted { id: members[i].id, blocks: granted });
+            }
             return Ok(false);
         };
-        let cached = members[j].gen.len() as u64;
+        let cached = members[j].gen.len();
         let blocks = backend.reclaim_kv_blocks(&mut members[j].gen)?;
-        metrics.record_preemption(blocks.len() as u64, cached);
+        tel.m.record_preemption(blocks.len() as u64, cached as u64);
+        members[j].preempted = true;
+        tel.tr.record(TraceEvent::Preempted { id: members[j].id, blocks: blocks.len(), cached });
         for b in blocks {
             pool.release(b);
         }
+    }
+    if granted > 0 {
+        tel.tr.record(TraceEvent::BlocksGranted { id: members[i].id, blocks: granted });
+    }
+    if members[i].preempted {
+        members[i].preempted = false;
+        tel.tr.record(TraceEvent::Resumed { id: members[i].id });
     }
     Ok(true)
 }
@@ -792,7 +912,7 @@ fn generation_round<V: BackendSet>(
     set: &V,
     queues: &mut [VariantQueue],
     active: &mut Vec<SeqState>,
-    metrics: &mut Metrics,
+    tel: &Telemetry,
 ) {
     if active.is_empty() {
         return;
@@ -823,7 +943,7 @@ fn generation_round<V: BackendSet>(
             for f in fates.iter_mut() {
                 *f = Fate::Failed(format!("variant {} has no paged kv pool", vq.name));
             }
-            settle_round(members, fates, active, metrics);
+            settle_round(members, fates, active, tel);
             continue;
         };
         let plan = {
@@ -834,7 +954,7 @@ fn generation_round<V: BackendSet>(
             compose_round(&descs, vq.cap, vq.prefill_chunk)
         };
         let found = set.run(&vq.name, &mut |backend| {
-            run_variant_round(backend, &plan, &mut pool, &mut members, &mut fates, metrics);
+            run_variant_round(backend, &vq.name, &plan, &mut pool, &mut members, &mut fates, tel);
         });
         if !found {
             for f in fates.iter_mut() {
@@ -843,9 +963,9 @@ fn generation_round<V: BackendSet>(
                 }
             }
         }
-        metrics.kv_blocks_peak = metrics.kv_blocks_peak.max(pool.peak() as u64);
+        tel.m.bump_kv_blocks_peak(pool.peak() as u64);
         vq.pool = Some(pool);
-        settle_round(members, fates, active, metrics);
+        settle_round(members, fates, active, tel);
     }
 }
 
@@ -853,11 +973,12 @@ fn generation_round<V: BackendSet>(
 /// callback: grants, preemptions, decode batch, prefill chunk, picks).
 fn run_variant_round(
     backend: &dyn Backend,
+    variant: &str,
     plan: &crate::sched::RoundPlan,
     pool: &mut BlockPool,
     members: &mut [SeqState],
     fates: &mut [Fate],
-    metrics: &mut Metrics,
+    tel: &Telemetry,
 ) {
     // --- Decode group: assure capacity in FIFO order. A member whose
     // pending changed (preempted by an older peer's grant) drops out of
@@ -870,7 +991,7 @@ fn run_variant_round(
         if !matches!(fates[i], Fate::Active) || members[i].pending() != 1 {
             continue;
         }
-        match ensure_capacity(backend, pool, members, i, 1, metrics) {
+        match ensure_capacity(backend, pool, members, i, 1, tel) {
             Ok(true) => decode_idx.push(i),
             Ok(false) => {}
             Err(e) => {
@@ -911,7 +1032,14 @@ fn run_variant_round(
                     .map(|(&i, _)| members[i].gen.len() as u64)
                     .sum();
                 if seqs > 0 {
-                    metrics.record_decode(seqs, cache_tokens, exec_elapsed);
+                    tel.m.record_decode(seqs, cache_tokens, exec_elapsed);
+                    if tel.tr.enabled() {
+                        tel.tr.record(TraceEvent::DecodeRound {
+                            variant: variant.to_string(),
+                            seqs,
+                            dur_us: exec_elapsed.as_micros() as u64,
+                        });
+                    }
                 }
                 for (&i, row) in decode_idx.iter().zip(rows) {
                     match row {
@@ -953,7 +1081,7 @@ fn run_variant_round(
     }
     let Some(i) = next_prefill else { return };
     let chunk_len = members[i].pending().min(chunk_max.max(1));
-    match ensure_capacity(backend, pool, members, i, chunk_len, metrics) {
+    match ensure_capacity(backend, pool, members, i, chunk_len, tel) {
         Ok(true) => {}
         Ok(false) => return,
         Err(e) => {
@@ -966,7 +1094,14 @@ fn run_variant_round(
     let tokens: Vec<i32> = (start..start + chunk_len).map(|p| members[i].feed_at(p)).collect();
     let t_exec = Instant::now();
     let res = backend.prefill_chunk(&mut members[i].gen, &tokens);
-    metrics.record_prefill(chunk_len as u64, t_exec.elapsed());
+    let exec_elapsed = t_exec.elapsed();
+    tel.m.record_prefill(chunk_len as u64, exec_elapsed);
+    tel.tr.record(TraceEvent::PrefillChunk {
+        id: members[i].id,
+        tokens: chunk_len,
+        cached: members[i].gen.len(),
+        dur_us: exec_elapsed.as_micros() as u64,
+    });
     match res {
         Ok(logits) => {
             // Chunk reached the end of the feed stream → a pick is due
@@ -989,19 +1124,24 @@ fn settle_round(
     members: Vec<SeqState>,
     fates: Vec<Fate>,
     active: &mut Vec<SeqState>,
-    metrics: &mut Metrics,
+    tel: &Telemetry,
 ) {
     for (s, fate) in members.into_iter().zip(fates) {
         match fate {
             Fate::Active => active.push(s),
             Fate::Done => {
-                metrics.record_generation(s.produced.len() as u64, s.t0.elapsed());
+                tel.m.record_generation(s.produced.len() as u64, s.t0.elapsed());
+                tel.tr
+                    .record(TraceEvent::RequestCompleted { id: s.id, produced: s.produced.len() });
                 let _ = s.reply.send(GenerateResponse {
                     result: Ok(Generated { tokens: s.produced, prompt_len: s.prompt.len() }),
                 });
             }
             Fate::Failed(e) => {
-                metrics.generation_failures += 1;
+                tel.m.record_generation_failure();
+                if tel.tr.enabled() {
+                    tel.tr.record(TraceEvent::RequestFailed { id: s.id, error: e.clone() });
+                }
                 let _ = s.reply.send(GenerateResponse { result: Err(e) });
             }
         }
@@ -1013,18 +1153,24 @@ fn settle_round(
 fn dispatch<V: BackendSet>(
     set: &V,
     name: &str,
-    batch: Vec<(Request, Instant)>,
-    metrics: &mut Metrics,
+    batch: Vec<(Request, Instant, u64)>,
+    tel: &Telemetry,
 ) {
     let mut slot = Some(batch);
     let found = set.run(name, &mut |backend| {
         if let Some(batch) = slot.take() {
-            run_batch(backend, batch, metrics);
+            run_batch(backend, name, batch, tel);
         }
     });
     if !found {
-        for (req, _) in slot.take().into_iter().flatten() {
-            metrics.record_rejection(RejectReason::UnknownVariant);
+        for (req, _, id) in slot.take().into_iter().flatten() {
+            tel.m.record_rejection(RejectReason::UnknownVariant);
+            if tel.tr.enabled() {
+                tel.tr.record(TraceEvent::RequestFailed {
+                    id,
+                    error: format!("variant {name} not resident"),
+                });
+            }
             let _ = req.reply.send(Response {
                 logits: Err(format!("variant {name} not resident")),
             });
@@ -1032,7 +1178,12 @@ fn dispatch<V: BackendSet>(
     }
 }
 
-fn run_batch(backend: &dyn Backend, batch: Vec<(Request, Instant)>, metrics: &mut Metrics) {
+fn run_batch(
+    backend: &dyn Backend,
+    variant: &str,
+    batch: Vec<(Request, Instant, u64)>,
+    tel: &Telemetry,
+) {
     if batch.is_empty() {
         return;
     }
@@ -1045,7 +1196,7 @@ fn run_batch(backend: &dyn Backend, batch: Vec<(Request, Instant)>, metrics: &mu
     let rows = batch.len();
     let mut tokens = vec![0i32; rows * s];
     let mut lens = Vec::with_capacity(rows);
-    for (i, (req, _)) in batch.iter().enumerate() {
+    for (i, (req, _, _)) in batch.iter().enumerate() {
         tokens[i * s..i * s + req.tokens.len()].copy_from_slice(&req.tokens);
         lens.push(req.tokens.len());
     }
@@ -1053,13 +1204,29 @@ fn run_batch(backend: &dyn Backend, batch: Vec<(Request, Instant)>, metrics: &mu
     let result = backend.forward_batch(&tokens);
     let exec_elapsed = t_exec.elapsed();
     let n_tokens: u64 = lens.iter().sum::<usize>() as u64;
-    for (i, (req, t0)) in batch.into_iter().enumerate() {
+    if tel.tr.enabled() {
+        tel.tr.record(TraceEvent::BatchExec {
+            variant: variant.to_string(),
+            rows,
+            tokens: n_tokens as usize,
+            dur_us: exec_elapsed.as_micros() as u64,
+        });
+    }
+    for (i, (req, t0, id)) in batch.into_iter().enumerate() {
         let logits = match &result {
             Ok(all) => Ok(all[i * s * v..(i * s + lens[i]) * v].to_vec()),
             Err(e) => Err(e.clone()),
         };
         let _ = req.reply.send(Response { logits });
-        metrics.record_request(t0.elapsed());
+        tel.m.record_request(t0.elapsed());
+        match &result {
+            Ok(_) => tel.tr.record(TraceEvent::RequestCompleted { id, produced: lens[i] }),
+            Err(e) => {
+                if tel.tr.enabled() {
+                    tel.tr.record(TraceEvent::RequestFailed { id, error: e.clone() });
+                }
+            }
+        }
     }
-    metrics.record_batch(rows, n_tokens, exec_elapsed);
+    tel.m.record_batch(rows, n_tokens, exec_elapsed);
 }

@@ -173,6 +173,16 @@ pub trait Backend {
     fn prefill_chunk(&self, _gen: &mut Generation, _tokens: &[i32]) -> Result<Vec<f32>, String> {
         Err(format!("the {} backend does not support paged decoding", self.name()))
     }
+
+    /// Kernel-path selection stats for this backend's resident model
+    /// ([`FastPathStats`](crate::model::FastPathStats)): which
+    /// structures the fast path consumes directly and how many dense
+    /// fallbacks it takes. `None` when the backend has no kernel-mode
+    /// notion (fp models, PJRT graphs). Probed once at executor start
+    /// for the kernel-path telemetry.
+    fn kernel_stats(&self) -> Option<crate::model::FastPathStats> {
+        None
+    }
 }
 
 /// Opaque per-sequence incremental-generation state (a KV cache plus

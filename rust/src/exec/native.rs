@@ -426,6 +426,13 @@ impl Backend for NativeBackend {
         Some((cfg.n_layers, cfg.d_model))
     }
 
+    fn kernel_stats(&self) -> Option<crate::model::FastPathStats> {
+        match &*self.model {
+            DenseModel::Quant { params, .. } => Some(params.fast_path_stats()),
+            DenseModel::Fp { .. } => None,
+        }
+    }
+
     /// Open a zero-capacity paged generation. No tokens are absorbed
     /// and no storage is reserved — the scheduler grants blocks and
     /// feeds the prompt through [`Backend::prefill_chunk`].

@@ -43,6 +43,10 @@
 //! * [`sched`] — paged-KV serving primitives: the block pool behind the
 //!   paged `KvCache`, the continuous-batching round policy, and the
 //!   deterministic (seeded, replayable) temperature/top-k/top-p sampler.
+//! * [`obs`] — observability: the metrics registry (counters / gauges /
+//!   fixed-bucket histograms, Prometheus exposition, JSON snapshots)
+//!   and the flight recorder (typed per-thread event rings exported as
+//!   Chrome trace JSON or JSONL via `--trace`).
 //! * [`search`] — the `gsr search` subsystem: a training-free per-layer
 //!   rotation auto-configuration search (candidate grid × proxy
 //!   objectives × parallel planner) producing a [`quant`] `RotationPlan`.
@@ -55,6 +59,7 @@ pub mod data;
 pub mod eval;
 pub mod exec;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod rng;
 pub mod runtime;

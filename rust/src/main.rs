@@ -16,14 +16,23 @@
 //! * `calibrate`          — stream corpus activations through the fused
 //!                          forward and write a reusable Hessian artifact
 //!                          for `--calib` on quantize-native and search.
+//! * `trace`              — summarize an exported flight-recorder trace
+//!                          (`--trace` output from serve/generate/search).
+//!
+//! Observability: `--trace FILE` records a flight-recorder trace
+//! (Chrome trace-event JSON for Perfetto, or JSONL), `--metrics-addr`
+//! serves the Prometheus text exposition while the command runs, and
+//! `--metrics-dump FILE` writes a JSON metrics snapshot at exit.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use gsr::config::cli::Args;
 use gsr::coordinator::{BatchPolicy, Server};
 use gsr::data::CorpusGenerator;
 use gsr::eval::tables;
 use gsr::eval::EvalOpts;
+use gsr::obs::{MetricsServer, Obs, TraceEvent};
 use gsr::runtime::{Artifacts, Engine};
 use gsr::sched::{SamplingParams, SchedConfig};
 
@@ -42,6 +51,7 @@ fn main() {
         "quantize-native" => cmd_quantize_native(&args),
         "search" => cmd_search(&args),
         "calibrate" => cmd_calibrate(&args),
+        "trace" => cmd_trace(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -77,6 +87,7 @@ fn print_help() {
                  [--kernels reference|fast] (native) quantized-kernel mode\n\
                  [--page-size N] [--kv-blocks N] [--prefill-chunk N]\n\
                                          (native) paged-KV scheduler knobs\n\
+                 [--synthetic [--seq N]] artifact-free fp demo (native)\n\
            generate [--requests N]     KV-cached decoding demo load\n\
                  [--prompt-len N] [--max-new N]   (native backend only)\n\
                  [--temperature T] [--top-k K] [--top-p P] [--seed N]\n\
@@ -84,6 +95,7 @@ fn print_help() {
                  [--page-size N] [--kv-blocks N] [--prefill-chunk N]\n\
                  [--plan F [--calib F]] [--variants A,B] [--batch N]\n\
                  [--threads N] [--bits N] [--kernels reference|fast]\n\
+                 [--synthetic [--seq N]] artifact-free fp demo\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
            quantize-native [--r1 K --r4 K --seed N]\n\
                                        pure-Rust W2 quantization (no Python)\n\
@@ -94,12 +106,22 @@ fn print_help() {
            search [--out F] [--calib F] training-free per-layer rotation search\n\
            calibrate [--out F]         stream corpus activations -> Hessian\n\
                                        artifact for --calib (reusable)\n\
+           trace FILE                  summarize an exported trace (--trace\n\
+                                       output, Chrome JSON or JSONL)\n\
          \n\
          COMMON OPTIONS:\n\
            --artifacts DIR   artifact directory (default: artifacts)\n\
            --windows N       PPL windows per variant (default 24)\n\
            --tasks N         zero-shot instances per family (default 12)\n\
            --markdown        render tables as markdown\n\
+         \n\
+         OBSERVABILITY (serve, generate, quantize-native, search):\n\
+           --trace FILE      record a flight-recorder trace; `.jsonl` writes\n\
+                             JSONL, anything else Chrome trace-event JSON\n\
+                             (load in Perfetto / chrome://tracing)\n\
+           --metrics-addr A  serve the Prometheus text exposition on A\n\
+                             (e.g. 127.0.0.1:9184) while the command runs\n\
+           --metrics-dump F  write a JSON metrics snapshot at exit\n\
          \n\
          SEARCH OPTIONS:\n\
            --out FILE        plan output path (default rotation_plan.json)\n\
@@ -134,6 +156,73 @@ fn opts_from(args: &Args) -> EvalOpts {
 
 fn artifacts_dir(args: &Args) -> String {
     args.opt_or("artifacts", "artifacts").to_string()
+}
+
+/// Observability wiring resolved from `--trace`, `--metrics-addr` and
+/// `--metrics-dump`: the bundle the server/quantizer records into, the
+/// optional Prometheus exposition server (alive until dropped), and
+/// the output paths written by [`ObsWiring::finish`] after shutdown.
+struct ObsWiring {
+    obs: Obs,
+    http: Option<MetricsServer>,
+    trace_path: Option<String>,
+    dump_path: Option<String>,
+}
+
+fn obs_from_args(args: &Args) -> Result<ObsWiring, String> {
+    let obs = Obs::new();
+    let trace_path = args.opt("trace").map(String::from);
+    if trace_path.is_some() {
+        obs.recorder.enable();
+    }
+    let http = match args.opt("metrics-addr") {
+        Some(addr) => {
+            let server = MetricsServer::serve(addr, Arc::clone(&obs.registry))?;
+            println!("metrics: Prometheus exposition on http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
+    Ok(ObsWiring {
+        obs,
+        http,
+        trace_path,
+        dump_path: args.opt("metrics-dump").map(String::from),
+    })
+}
+
+impl ObsWiring {
+    /// Write the requested outputs — after server shutdown, so the
+    /// executor's final events and counts are included — then stop the
+    /// exposition server.
+    fn finish(self) -> Result<(), String> {
+        if let Some(p) = &self.trace_path {
+            self.obs.recorder.write(Path::new(p))?;
+            let events: usize =
+                self.obs.recorder.snapshot().iter().map(|(_, _, r)| r.len()).sum();
+            let dropped = self.obs.recorder.dropped_total();
+            println!("trace: wrote {events} event(s) to {p} ({dropped} dropped)");
+            println!("       inspect with `gsr trace {p}` or load in Perfetto");
+        }
+        if let Some(p) = &self.dump_path {
+            self.obs.registry.write_snapshot(Path::new(p))?;
+            println!("metrics: wrote snapshot to {p}");
+        }
+        drop(self.http);
+        Ok(())
+    }
+}
+
+/// `gsr trace FILE` — summarize an exported flight-recorder trace.
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("file"))
+        .ok_or("usage: gsr trace FILE (Chrome trace-event JSON or JSONL)")?;
+    print!("{}", gsr::obs::trace::inspect(Path::new(path))?);
+    Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), String> {
@@ -209,57 +298,83 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    let dir = artifacts_dir(args);
-    let arts = Artifacts::load(Path::new(&dir))?;
-    let backend = args.opt_or("backend", "pjrt").to_string();
-    let policy = BatchPolicy {
-        max_batch: args.opt_usize("batch", arts.batch.max(1)).max(1),
-        ..BatchPolicy::default()
-    };
-    let (server, variants) = match backend.as_str() {
-        "pjrt" => {
-            if args.opt("plan").is_some() || args.opt("calib").is_some() {
-                return Err(
-                    "--plan/--calib need `--backend native`: the PJRT graphs cannot \
-                     serve searched rotation plans"
-                        .to_string(),
-                );
-            }
-            if args.opt("kernels").is_some() {
-                return Err(
-                    "--kernels needs `--backend native`: kernel-mode selection only \
-                     applies to the native execution path"
-                        .to_string(),
-                );
-            }
-            let variants: Vec<String> = match args.opt("variants") {
-                Some(list) => list.split(',').map(String::from).collect(),
-                None => {
-                    let mut v = vec!["fp".to_string()];
-                    if let Some(m) = arts.variant("quarot_w2a16_gsr_r4gh") {
-                        v.push(m.name.clone());
-                    }
-                    v
-                }
-            };
-            (Server::start(Path::new(&dir), &variants, policy)?, variants)
+    let wiring = obs_from_args(args)?;
+    let (server, variants, seq, test) = if args.has_flag("synthetic") {
+        if args.opt_or("backend", "native") != "native" {
+            return Err("--synthetic serves on the native backend only".to_string());
         }
-        "native" => start_native_server(args, &arts, policy)?,
-        other => return Err(format!("unknown --backend {other:?} (pjrt|native)")),
+        let seq = args.opt_usize("seq", 32).max(2);
+        let policy = BatchPolicy {
+            max_batch: args.opt_usize("batch", 4).max(1),
+            ..BatchPolicy::default()
+        };
+        let (server, corpus) = synthetic_server(args, policy, seq, &wiring.obs)?;
+        if corpus.len() < seq + 2 {
+            return Err(format!("--seq {seq} exceeds the synthetic corpus"));
+        }
+        (server, vec!["fp".to_string()], seq, corpus)
+    } else {
+        let dir = artifacts_dir(args);
+        let arts = Artifacts::load(Path::new(&dir))?;
+        let backend = args.opt_or("backend", "pjrt").to_string();
+        let policy = BatchPolicy {
+            max_batch: args.opt_usize("batch", arts.batch.max(1)).max(1),
+            ..BatchPolicy::default()
+        };
+        let (server, variants) = match backend.as_str() {
+            "pjrt" => {
+                if args.opt("plan").is_some() || args.opt("calib").is_some() {
+                    return Err(
+                        "--plan/--calib need `--backend native`: the PJRT graphs cannot \
+                         serve searched rotation plans"
+                            .to_string(),
+                    );
+                }
+                if args.opt("kernels").is_some() {
+                    return Err(
+                        "--kernels needs `--backend native`: kernel-mode selection only \
+                         applies to the native execution path"
+                            .to_string(),
+                    );
+                }
+                let variants: Vec<String> = match args.opt("variants") {
+                    Some(list) => list.split(',').map(String::from).collect(),
+                    None => {
+                        let mut v = vec!["fp".to_string()];
+                        if let Some(m) = arts.variant("quarot_w2a16_gsr_r4gh") {
+                            v.push(m.name.clone());
+                        }
+                        v
+                    }
+                };
+                let pjrt_dir = Path::new(&dir).to_path_buf();
+                let names = variants.clone();
+                let server = Server::start_set_obs(
+                    move || gsr::exec::PjrtSet::load(&pjrt_dir, &names),
+                    policy,
+                    SchedConfig::default(),
+                    &wiring.obs,
+                )?;
+                (server, variants)
+            }
+            "native" => start_native_server(args, &arts, policy, &wiring.obs)?,
+            other => return Err(format!("unknown --backend {other:?} (pjrt|native)")),
+        };
+        println!("serving {} variant(s) on the {backend} backend: {variants:?}", variants.len());
+        let seq = arts.seq;
+        let test = arts.test_split().to_vec();
+        if test.len() < seq + 2 {
+            return Err(format!(
+                "test split of {} bytes is too small for the serving demo load \
+                 (need at least seq + 2 = {})",
+                test.len(),
+                seq + 2
+            ));
+        }
+        (server, variants, seq, test)
     };
-    println!("serving {} variant(s) on the {backend} backend: {variants:?}", variants.len());
     // Demo load: score random corpus windows round-robin over variants.
-    let n_requests = args.opt_usize("requests", 32);
-    let seq = arts.seq;
-    let test = arts.test_split().to_vec();
-    if test.len() < seq + 2 {
-        return Err(format!(
-            "test split of {} bytes is too small for the serving demo load \
-             (need at least seq + 2 = {})",
-            test.len(),
-            seq + 2
-        ));
-    }
+    let n_requests = args.opt_usize("requests", if args.has_flag("synthetic") { 16 } else { 32 });
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         let variant = &variants[i % variants.len()];
@@ -273,7 +388,41 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let wall = t0.elapsed();
     let metrics = server.shutdown();
     println!("{}", metrics.report(wall));
-    Ok(())
+    wiring.finish()
+}
+
+/// Artifact-free serving: the structured synthetic checkpoint `gsr
+/// search --synthetic` uses, served fp-only on the native backend
+/// against a freshly generated corpus — the CI/smoke path for the
+/// observability outputs (`--trace`, `--metrics-addr`,
+/// `--metrics-dump`) with no PJRT or artifact dependency.
+fn synthetic_server(
+    args: &Args,
+    policy: BatchPolicy,
+    seq: usize,
+    obs: &Obs,
+) -> Result<(Server, Vec<u8>), String> {
+    use gsr::exec::{NativeBackend, NativeSet};
+    use gsr::model::{DenseModel, FpParams, ModelCfg};
+
+    if args.opt("plan").is_some() || args.opt("variants").is_some() {
+        return Err(
+            "--synthetic serves the fp synthetic checkpoint only (no --plan/--variants)"
+                .to_string(),
+        );
+    }
+    let cfg = ModelCfg::default();
+    let seed = args.opt_usize("seed", 2025) as u64;
+    let fp = FpParams::synthetic(&cfg, seed);
+    let model = DenseModel::Fp { cfg: cfg.clone(), params: fp };
+    let mut set = NativeSet::new();
+    set.insert(
+        "fp",
+        NativeBackend::new(Arc::new(model), policy.max_batch, seq, args.opt_threads()),
+    );
+    let corpus = CorpusGenerator::new(gsr::data::SEED_CORPUS).generate(1 << 14);
+    let server = Server::start_native_obs(set, policy, sched_from_args(args), obs)?;
+    Ok((server, corpus))
 }
 
 /// Build and start the native serving path: fp plus any artifact
@@ -285,12 +434,12 @@ fn start_native_server(
     args: &Args,
     arts: &Artifacts,
     policy: BatchPolicy,
+    obs: &Obs,
 ) -> Result<(Server, Vec<String>), String> {
     use gsr::calib::HessianSet;
     use gsr::exec::{ExecPool, NativeBackend, NativeSet};
     use gsr::model::{DenseModel, FpParams, QuantParams};
     use gsr::quant::{build_plan_rotations, quantize_native_plan_with, RotationPlan};
-    use std::sync::Arc;
 
     let (b, s) = (policy.max_batch, arts.seq);
     let kernels = kernel_mode_from_args(args)?;
@@ -351,7 +500,7 @@ fn start_native_server(
         set.insert("searched", NativeBackend::with_pool(Arc::new(model), b, s, pool));
         variants.push("searched".to_string());
     }
-    Ok((Server::start_native_sched(set, policy, sched_from_args(args))?, variants))
+    Ok((Server::start_native_obs(set, policy, sched_from_args(args), obs)?, variants))
 }
 
 /// Paged-KV scheduler knobs for the native serving path: `--page-size`
@@ -392,8 +541,6 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     use gsr::coordinator::GenerateRequest;
     use std::sync::mpsc;
 
-    let dir = artifacts_dir(args);
-    let arts = Artifacts::load(Path::new(&dir))?;
     let backend = args.opt_or("backend", "native");
     if backend != "native" {
         return Err(format!(
@@ -401,14 +548,28 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
              an incremental decode path"
         ));
     }
-    let policy = BatchPolicy {
-        max_batch: args.opt_usize("batch", arts.batch.max(1)).max(1),
-        ..BatchPolicy::default()
+    let wiring = obs_from_args(args)?;
+    let (server, variants, seq, test) = if args.has_flag("synthetic") {
+        let seq = args.opt_usize("seq", 32).max(2);
+        let policy = BatchPolicy {
+            max_batch: args.opt_usize("batch", 4).max(1),
+            ..BatchPolicy::default()
+        };
+        let (server, corpus) = synthetic_server(args, policy, seq, &wiring.obs)?;
+        (server, vec!["fp".to_string()], seq, corpus)
+    } else {
+        let dir = artifacts_dir(args);
+        let arts = Artifacts::load(Path::new(&dir))?;
+        let policy = BatchPolicy {
+            max_batch: args.opt_usize("batch", arts.batch.max(1)).max(1),
+            ..BatchPolicy::default()
+        };
+        let (server, variants) = start_native_server(args, &arts, policy, &wiring.obs)?;
+        (server, variants, arts.seq, arts.test_split().to_vec())
     };
-    let (server, variants) = start_native_server(args, &arts, policy)?;
     let n_requests = args.opt_usize("requests", 8);
-    let prompt_len = args.opt_usize("prompt-len", (arts.seq / 2).max(1));
-    let default_new = (arts.seq + 1).saturating_sub(prompt_len).clamp(1, 32);
+    let prompt_len = args.opt_usize("prompt-len", (seq / 2).max(1));
+    let default_new = (seq + 1).saturating_sub(prompt_len).clamp(1, 32);
     let max_new = args.opt_usize("max-new", default_new).max(1);
     if prompt_len == 0 {
         return Err("--prompt-len must be >= 1".to_string());
@@ -422,7 +583,6 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     } else {
         format!("T={} seed={}", sampling.temperature, sampling.seed)
     };
-    let test = arts.test_split().to_vec();
     if test.len() < prompt_len + 2 {
         return Err("test split too small for the requested prompt length".to_string());
     }
@@ -466,7 +626,7 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let wall = t0.elapsed();
     let metrics = server.shutdown();
     println!("{}", metrics.report(wall));
-    Ok(())
+    wiring.finish()
 }
 
 /// Byte-vocab tokens as readable text (non-printable bytes → '·').
@@ -522,8 +682,9 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
     use gsr::eval::EvalOpts;
     use gsr::exec::NativeBackend;
     use gsr::model::{DenseModel, FpParams};
-    use gsr::quant::{build_plan_rotations, quantize_native_plan_with};
+    use gsr::quant::{build_plan_rotations, quantize_native_plan_telemetry};
 
+    let wiring = obs_from_args(args)?;
     let arts = Artifacts::load(Path::new(&artifacts_dir(args)))?;
     let fp = FpParams::load(&arts.fp_weights_path(), &arts.cfg)?;
     let bits = args.opt_usize("bits", 2) as u32;
@@ -548,11 +709,36 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
         rots.distinct
     );
     let t0 = std::time::Instant::now();
-    let (mut qp, sse, _) =
-        quantize_native_plan_with(&fp, &arts.cfg, &rots, bits, calib.as_ref())?;
+    let (mut qp, sse, _q, layers) =
+        quantize_native_plan_telemetry(&fp, &arts.cfg, &rots, bits, calib.as_ref())?;
     qp.kernels = kernel_mode_from_args(args)?;
     println!("quantized {} linears in {:?}; weight SSE {sse:.2}",
         arts.cfg.n_layers * 7, t0.elapsed());
+    // Per-layer rotation telemetry: proxy MSE + chosen spec for every
+    // layer, recorded into the flight recorder (and printed with
+    // `--verbose`) so quantization quality is inspectable offline.
+    if wiring.obs.recorder.is_enabled() {
+        let h = wiring.obs.recorder.handle("quantize");
+        for t in &layers {
+            h.record(TraceEvent::QuantLayer {
+                layer: t.layer,
+                spec: t.spec.label(),
+                mse: t.mse(),
+            });
+        }
+    }
+    if args.has_flag("verbose") {
+        for t in &layers {
+            println!(
+                "  layer {:>2}  {:24}  mse {:.4e}  |w|max {:.3}  rms {:.4}",
+                t.layer,
+                t.spec.label(),
+                t.mse(),
+                t.max_abs_weight,
+                t.rms_weight
+            );
+        }
+    }
     let model = DenseModel::Quant { cfg: arts.cfg.clone(), params: qp, a_bits: None };
     let native = NativeBackend::new(
         std::sync::Arc::new(model),
@@ -567,7 +753,7 @@ fn cmd_quantize_native(args: &Args) -> Result<(), String> {
         tables::calib_label(calib.as_ref()),
         ev.ppl
     );
-    Ok(())
+    wiring.finish()
 }
 
 fn cmd_calibrate(args: &Args) -> Result<(), String> {
@@ -655,6 +841,7 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     use gsr::search::{search_plan_calibrated, CalibWeights, GridCfg, SearchCfg};
     use gsr::transform::R1Kind;
 
+    let wiring = obs_from_args(args)?;
     let seed = args.opt_usize("seed", 2025) as u64;
     let (cfg, fp) = if args.has_flag("synthetic") {
         // Demo/CI path: a structured synthetic checkpoint, no artifacts.
@@ -703,6 +890,19 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     };
     let t0 = std::time::Instant::now();
     let outcome = search_plan_calibrated(&fp, &cfg, &scfg, calib.as_ref())?;
+    // Per-layer search telemetry: winning spec + proxy MSE against the
+    // fixed-GSR baseline, one event per layer.
+    if wiring.obs.recorder.is_enabled() {
+        let h = wiring.obs.recorder.handle("search");
+        for l in &outcome.layers {
+            h.record(TraceEvent::SearchLayer {
+                layer: l.layer,
+                spec: l.best.spec.label(),
+                mse: l.best.quant_mse,
+                baseline_mse: l.baseline.quant_mse,
+            });
+        }
+    }
     let table = tables::search_table(&outcome);
     if args.has_flag("markdown") {
         println!("{}", table.render_markdown());
@@ -724,7 +924,7 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     outcome.plan.save(Path::new(out))?;
     println!("wrote plan to {out}: {}", tables::plan_summary(&outcome.plan));
     println!("next: gsr quantize-native --plan {out}");
-    Ok(())
+    wiring.finish()
 }
 
 fn cmd_gen_corpus(args: &Args) -> Result<(), String> {

@@ -25,4 +25,4 @@ pub use kernels::{
     packed_matmul_cols, packed_matmul_into, BasisFast, KernelMode, PackedBits, PackedLinear,
     R1Desc, FAST_LOGIT_TOL,
 };
-pub use weights::{FpParams, LayerR4, QuantParams};
+pub use weights::{FastPathStats, FpParams, LayerR4, QuantParams};

@@ -200,7 +200,65 @@ pub struct QuantLayer {
     pub basis_fast: Option<BasisFast>,
 }
 
+/// Static kernel-path selection summary for one quantized variant:
+/// which structures the fast path can consume directly and how many
+/// per-linear dense fallbacks it would take. A pure function of the
+/// loaded `QuantParams` (recognition happens at construction), so it
+/// can be probed once at executor start and exported as telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FastPathStats {
+    /// The kernel mode the variant runs under.
+    pub mode: KernelMode,
+    /// Linears with a resident packed-domain form (fused fast matmul).
+    pub packed_linears: usize,
+    /// Residual-stream basis changes with a recognized structured
+    /// (FWHT-based) fast form.
+    pub fast_basis_changes: usize,
+    /// Dense fallbacks the fast path takes: linears without a packed
+    /// form, basis changes without a structured form, and an
+    /// unrecognized R3 rotation. Only consulted in fast mode, but
+    /// counted unconditionally.
+    pub dense_fallbacks: usize,
+    /// Whether the global R3 rotation was recognized (FWHT + signs).
+    pub r3_fast: bool,
+}
+
 impl QuantParams {
+    /// Count the fast-path coverage of this variant's resident
+    /// structures — see [`FastPathStats`].
+    pub fn fast_path_stats(&self) -> FastPathStats {
+        let mut packed_linears = 0;
+        let mut fast_basis_changes = 0;
+        let mut dense_fallbacks = 0;
+        for layer in &self.layers {
+            for name in super::config::LINEARS {
+                if layer.packed.contains_key(name) {
+                    packed_linears += 1;
+                } else {
+                    dense_fallbacks += 1;
+                }
+            }
+            if layer.basis_change.is_some() {
+                if layer.basis_fast.is_some() {
+                    fast_basis_changes += 1;
+                } else {
+                    dense_fallbacks += 1;
+                }
+            }
+        }
+        let r3_fast = self.r3_fast.is_some();
+        if !r3_fast {
+            dense_fallbacks += 1;
+        }
+        FastPathStats {
+            mode: self.kernels,
+            packed_linears,
+            fast_basis_changes,
+            dense_fallbacks,
+            r3_fast,
+        }
+    }
+
     pub fn load(path: &Path, cfg: &ModelCfg, r4_kind: R4Kind) -> Result<Self, String> {
         let bytes = fs::read(path).map_err(|e| format!("{path:?}: {e}"))?;
         let spec = cfg.quant_param_spec(r4_kind);

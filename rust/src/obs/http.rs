@@ -1,0 +1,102 @@
+//! Minimal Prometheus scrape endpoint on `std::net::TcpListener`.
+//!
+//! One background thread accepts connections and answers every request
+//! with the registry's current text exposition — no routing, no HTTP
+//! parsing beyond draining the request head, no external dependencies.
+//! Shutdown is cooperative: `Drop` sets a stop flag and wakes the
+//! accept loop with a self-connection.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::Registry;
+
+/// A running metrics endpoint; scrape it with
+/// `curl http://<addr>/metrics` (any path answers the same).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`, port 0 picks a free port)
+    /// and serve `registry`'s Prometheus exposition until dropped.
+    pub fn serve(addr: &str, registry: Arc<Registry>) -> Result<MetricsServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_bg = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("gsr-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_bg.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let _ = answer(stream, &registry);
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn metrics thread: {e}"))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+fn answer(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    // Drain (best-effort) the request head so the client can write it
+    // fully, then reply unconditionally with the exposition.
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut buf = [0u8; 4096];
+    let _ = stream.read(&mut buf);
+    let body = registry.expose_prometheus();
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_exposition_and_shuts_down() {
+        let registry = Arc::new(Registry::new());
+        registry.counter("gsr_requests_total", "requests served").add(5);
+        let srv = MetricsServer::serve("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+        let mut conn = TcpStream::connect(srv.addr()).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut text = String::new();
+        conn.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(text.contains("# TYPE gsr_requests_total counter"), "{text}");
+        assert!(text.contains("gsr_requests_total 5"), "{text}");
+        drop(srv); // must not hang
+    }
+}

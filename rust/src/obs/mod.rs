@@ -1,0 +1,41 @@
+//! Observability: metrics registry + flight recorder.
+//!
+//! Two halves, one [`Obs`] bundle threaded through the serving stack:
+//!
+//! * [`registry`] — named counters/gauges/fixed-bucket histograms with
+//!   label support, Prometheus text exposition (served over HTTP by
+//!   [`http::MetricsServer`] behind `--metrics-addr`) and JSON
+//!   snapshots (`--metrics-dump`). The coordinator's human-readable
+//!   report is built from the same cells, so both views always agree.
+//! * [`trace`] — the flight recorder: per-thread bounded ring buffers
+//!   of typed events (admission, prefill chunks, decode rounds,
+//!   preemption/resume, block grants, kernel-path selection, per-layer
+//!   quantize/search telemetry), off by default and costing one relaxed
+//!   atomic load when disabled. `--trace <path>` exports Chrome
+//!   trace-event JSON (Perfetto-loadable) or JSONL; `gsr trace <file>`
+//!   summarizes an export.
+
+pub mod http;
+pub mod registry;
+pub mod trace;
+
+use std::sync::Arc;
+
+pub use http::MetricsServer;
+pub use registry::{Counter, Gauge, Histogram, LatencyHistogram, Registry};
+pub use trace::{FlightRecorder, RequestKind, TraceEvent, TraceHandle, TraceRecord};
+
+/// The observability bundle handed to servers and pipelines: a metrics
+/// registry plus a flight recorder. Cloning shares both halves.
+#[derive(Clone, Default)]
+pub struct Obs {
+    pub registry: Arc<Registry>,
+    pub recorder: Arc<FlightRecorder>,
+}
+
+impl Obs {
+    /// A fresh registry and a disabled recorder.
+    pub fn new() -> Obs {
+        Obs::default()
+    }
+}

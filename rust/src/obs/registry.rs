@@ -1,0 +1,534 @@
+//! Metrics registry: named counters, gauges and fixed-bucket histograms
+//! with label support, Prometheus text exposition and JSON snapshots.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`'d
+//! atomic cells acquired once at registration; the hot path is a single
+//! relaxed atomic op with no lock. The registry's `Mutex` is touched
+//! only when a handle is created and when the registry is exposed or
+//! snapshotted — never per sample.
+//!
+//! Histograms use fixed log2 microsecond buckets (bounded memory under
+//! sustained traffic, unlike raw-sample vectors): bucket `i` covers
+//! `[2^i, 2^(i+1))` µs, and a quantile estimate returns the bucket's
+//! upper bound, so `estimate / exact ∈ [1, 2]` — pinned by a unit test
+//! against exact quantiles below.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::Json;
+
+/// Number of log2 µs histogram buckets: bucket `i` holds samples in
+/// `[2^i, 2^(i+1))` µs, and the last bucket absorbs everything from
+/// 2^29 µs (≈ 9 minutes) up.
+pub const HIST_BUCKETS: usize = 30;
+
+fn bucket_index(us: u64) -> usize {
+    (63 - us.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Upper bound (µs) of histogram bucket `i`.
+pub fn bucket_bound_us(i: usize) -> u64 {
+    1u64 << (i + 1)
+}
+
+/// A monotonically increasing counter handle (relaxed atomic add).
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge handle: a settable value (also supports monotone-max and
+/// add for resource totals assembled from parts).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is larger (peak tracking).
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared histogram cell: fixed log2-µs buckets plus count/sum/max.
+#[derive(Debug, Default)]
+struct HistCell {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// A fixed-bucket latency histogram handle (relaxed atomics; bounded
+/// memory regardless of sample count).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram(Arc<HistCell>);
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let c = &self.0;
+        c.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum_us.fetch_add(us, Ordering::Relaxed);
+        c.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Materialize a plain (non-atomic) snapshot for reporting.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let c = &self.0;
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(c.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        LatencyHistogram {
+            buckets,
+            count: c.count.load(Ordering::Relaxed),
+            sum_us: c.sum_us.load(Ordering::Relaxed),
+            max_us: c.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain fixed-bucket latency histogram: the snapshot form of
+/// [`Histogram`], and the type the serving report computes quantiles
+/// from. Memory is constant (30 buckets) no matter how many samples
+/// are recorded.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean recorded latency (zero when empty).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_us / self.count)
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Sum of all recorded latencies.
+    pub fn total(&self) -> Duration {
+        Duration::from_micros(self.sum_us)
+    }
+
+    /// Quantile estimate: the upper bound of the bucket containing the
+    /// `q`-quantile sample. Log2 buckets bound the overestimate to at
+    /// most 2× the exact order statistic (and never undershoot it).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Duration::from_micros(bucket_bound_us(i));
+            }
+        }
+        self.max()
+    }
+
+    /// Per-bucket counts (for exposition and tests).
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+}
+
+/// Metric kind, as exposed in the Prometheus `# TYPE` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Cell {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+type LabelSet = Vec<(String, String)>;
+
+struct Family {
+    help: String,
+    kind: Kind,
+    cells: BTreeMap<LabelSet, Cell>,
+}
+
+/// A named-metric registry. Registration returns cheap cloneable
+/// handles; re-registering the same name + labels returns a handle to
+/// the same underlying cell, so instrumentation sites never need to
+/// coordinate. Registering an existing name with a different kind is a
+/// programming error and panics.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register (or look up) an unlabeled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Register (or look up) a counter cell with the given labels.
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.cell(name, help, Kind::Counter, labels) {
+            Cell::Counter(c) => c,
+            _ => unreachable!("kind checked in cell()"),
+        }
+    }
+
+    /// Register (or look up) an unlabeled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Register (or look up) a gauge cell with the given labels.
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.cell(name, help, Kind::Gauge, labels) {
+            Cell::Gauge(g) => g,
+            _ => unreachable!("kind checked in cell()"),
+        }
+    }
+
+    /// Register (or look up) an unlabeled histogram.
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        self.histogram_with(name, help, &[])
+    }
+
+    /// Register (or look up) a histogram cell with the given labels.
+    pub fn histogram_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Histogram {
+        match self.cell(name, help, Kind::Histogram, labels) {
+            Cell::Histogram(h) => h,
+            _ => unreachable!("kind checked in cell()"),
+        }
+    }
+
+    fn cell(&self, name: &str, help: &str, kind: Kind, labels: &[(&str, &str)]) -> Cell {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        for (k, _) in labels {
+            assert!(valid_name(k), "invalid label name {k:?}");
+        }
+        let mut key: LabelSet =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        key.sort();
+        let mut families = self.families.lock().unwrap();
+        let fam = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            cells: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name:?} registered as {} and {}",
+            fam.kind.as_str(),
+            kind.as_str()
+        );
+        let cell = fam.cells.entry(key).or_insert_with(|| match kind {
+            Kind::Counter => Cell::Counter(Counter::default()),
+            Kind::Gauge => Cell::Gauge(Gauge::default()),
+            Kind::Histogram => Cell::Histogram(Histogram::default()),
+        });
+        match cell {
+            Cell::Counter(c) => Cell::Counter(c.clone()),
+            Cell::Gauge(g) => Cell::Gauge(g.clone()),
+            Cell::Histogram(h) => Cell::Histogram(h.clone()),
+        }
+    }
+
+    /// Render the whole registry in the Prometheus text exposition
+    /// format (`text/plain; version=0.0.4`): `# HELP` / `# TYPE` per
+    /// family, cumulative `_bucket{le=...}` + `_sum` + `_count` for
+    /// histograms (sums in microseconds, matching the `_us` suffix of
+    /// the family names).
+    pub fn expose_prometheus(&self) -> String {
+        let families = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in families.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.as_str()));
+            for (labels, cell) in fam.cells.iter() {
+                match cell {
+                    Cell::Counter(c) => {
+                        out.push_str(&format!("{name}{} {}\n", render_labels(labels, None), c.get()))
+                    }
+                    Cell::Gauge(g) => {
+                        out.push_str(&format!("{name}{} {}\n", render_labels(labels, None), g.get()))
+                    }
+                    Cell::Histogram(h) => {
+                        let snap = h.snapshot();
+                        let mut cum = 0u64;
+                        for (i, &b) in snap.buckets().iter().enumerate() {
+                            cum += b;
+                            let le = bucket_bound_us(i).to_string();
+                            out.push_str(&format!(
+                                "{name}_bucket{} {cum}\n",
+                                render_labels(labels, Some(&le))
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_bucket{} {}\n",
+                            render_labels(labels, Some("+Inf")),
+                            snap.count()
+                        ));
+                        out.push_str(&format!(
+                            "{name}_sum{} {}\n",
+                            render_labels(labels, None),
+                            snap.total().as_micros()
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{} {}\n",
+                            render_labels(labels, None),
+                            snap.count()
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Snapshot every metric as JSON (for `--metrics-dump`).
+    pub fn snapshot_json(&self) -> Json {
+        let families = self.families.lock().unwrap();
+        let mut root = BTreeMap::new();
+        for (name, fam) in families.iter() {
+            let mut values = Vec::new();
+            for (labels, cell) in fam.cells.iter() {
+                let mut entry = BTreeMap::new();
+                let mut lbl = BTreeMap::new();
+                for (k, v) in labels {
+                    lbl.insert(k.clone(), Json::str(v));
+                }
+                entry.insert("labels".to_string(), Json::Obj(lbl));
+                match cell {
+                    Cell::Counter(c) => {
+                        entry.insert("value".to_string(), Json::num(c.get() as f64));
+                    }
+                    Cell::Gauge(g) => {
+                        entry.insert("value".to_string(), Json::num(g.get() as f64));
+                    }
+                    Cell::Histogram(h) => {
+                        let snap = h.snapshot();
+                        entry.insert("count".to_string(), Json::num(snap.count() as f64));
+                        entry.insert(
+                            "sum_us".to_string(),
+                            Json::num(snap.total().as_micros() as f64),
+                        );
+                        entry.insert(
+                            "max_us".to_string(),
+                            Json::num(snap.max().as_micros() as f64),
+                        );
+                        let b: Vec<f64> = snap.buckets().iter().map(|&x| x as f64).collect();
+                        entry.insert("buckets".to_string(), Json::arr_f64(&b));
+                    }
+                }
+                values.push(Json::Obj(entry));
+            }
+            root.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("type", Json::str(fam.kind.as_str())),
+                    ("help", Json::str(&fam.help)),
+                    ("values", Json::Arr(values)),
+                ]),
+            );
+        }
+        Json::Obj(root)
+    }
+
+    /// Write the JSON snapshot to `path`.
+    pub fn write_snapshot(&self, path: &Path) -> Result<(), String> {
+        self.snapshot_json().to_file(path)
+    }
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.bytes().next().map(|b| b.is_ascii_alphabetic() || b == b'_').unwrap_or(false)
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_')
+}
+
+fn render_labels(labels: &LabelSet, le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("gsr_requests_total", "requests");
+        c.inc();
+        c.add(2);
+        // Re-registration returns a handle to the same cell.
+        assert_eq!(r.counter("gsr_requests_total", "requests").get(), 3);
+        let g = r.gauge("gsr_kv_blocks", "pool size");
+        g.set(5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5);
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn labeled_cells_are_distinct() {
+        let r = Registry::new();
+        let a = r.counter_with("gsr_rejected_total", "rejections", &[("reason", "too_long")]);
+        let b = r.counter_with("gsr_rejected_total", "rejections", &[("reason", "bad_token")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 1);
+        assert_eq!(b.get(), 2);
+        let text = r.expose_prometheus();
+        assert!(text.contains("gsr_rejected_total{reason=\"too_long\"} 1"));
+        assert!(text.contains("gsr_rejected_total{reason=\"bad_token\"} 2"));
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("gsr_x", "x");
+        r.gauge("gsr_x", "x");
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("gsr_lat_us", "latency");
+        h.record_us(1); // bucket 0 (le=2)
+        h.record_us(3); // bucket 1 (le=4)
+        h.record_us(3);
+        let text = r.expose_prometheus();
+        assert!(text.contains("# TYPE gsr_lat_us histogram"));
+        assert!(text.contains("gsr_lat_us_bucket{le=\"2\"} 1"));
+        assert!(text.contains("gsr_lat_us_bucket{le=\"4\"} 3"));
+        assert!(text.contains("gsr_lat_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("gsr_lat_us_sum 7"));
+        assert!(text.contains("gsr_lat_us_count 3"));
+    }
+
+    #[test]
+    fn quantile_estimate_within_2x_of_exact() {
+        // The satellite contract: log2 buckets never undershoot the
+        // exact order statistic and overshoot by at most 2x.
+        let mut h = LatencyHistogram::default();
+        let mut exact: Vec<u64> = Vec::new();
+        let mut x = 9u64;
+        for _ in 0..10_000 {
+            // Deterministic pseudo-random spread across several decades.
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let us = 1 + (x >> 33) % 1_000_000;
+            exact.push(us);
+            h.record(Duration::from_micros(us));
+        }
+        exact.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let target = ((q * exact.len() as f64).ceil() as usize).clamp(1, exact.len());
+            let exact_q = exact[target - 1];
+            let est = h.quantile(q).as_micros() as u64;
+            assert!(est >= exact_q, "q={q}: estimate {est} under exact {exact_q}");
+            assert!(est <= 2 * exact_q, "q={q}: estimate {est} above 2x exact {exact_q}");
+        }
+    }
+
+    #[test]
+    fn snapshot_json_parses_back() {
+        let r = Registry::new();
+        r.counter("gsr_a_total", "a").add(7);
+        r.histogram("gsr_b_us", "b").record_us(100);
+        let text = r.snapshot_json().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.at("gsr_a_total").unwrap().at("type").unwrap().as_str(), Some("counter"));
+        let vals = back.at("gsr_b_us").unwrap().at("values").unwrap().as_arr().unwrap();
+        assert_eq!(vals[0].at("count").unwrap().as_usize(), Some(1));
+    }
+}

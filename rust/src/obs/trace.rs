@@ -1,0 +1,580 @@
+//! Flight recorder: lock-light per-thread ring buffers of typed
+//! serving/quantization events, exportable as Chrome trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`) or JSONL.
+//!
+//! Recording is off by default. A [`TraceHandle`] checks one relaxed
+//! `AtomicBool` and returns before constructing anything when tracing
+//! is disabled, so instrumentation left in hot paths costs a load and
+//! a branch. When enabled, each handle appends to its own bounded ring
+//! (registered per thread/component); at capacity the oldest record is
+//! dropped and counted, never blocking the recording thread on export.
+//!
+//! Timestamps are microseconds from the recorder's epoch, taken from a
+//! single monotonic [`Instant`], so records within one shard are
+//! non-decreasing in time.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::Json;
+
+/// Default per-shard ring capacity (records kept per thread).
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// What kind of request a span belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Full-sequence scoring (`serve`).
+    Score,
+    /// Incremental generation (`generate`).
+    Generate,
+}
+
+impl RequestKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RequestKind::Score => "score",
+            RequestKind::Generate => "generate",
+        }
+    }
+}
+
+/// A typed flight-recorder event. Request-scoped events carry the
+/// executor-assigned request id so spans can be stitched back together.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request passed admission and entered its variant queue.
+    RequestAdmitted { id: u64, variant: String, kind: RequestKind, tokens: usize },
+    /// A request failed admission (labeled by the rejection reason).
+    RequestRejected { variant: String, reason: &'static str },
+    /// A request replied successfully; closes its span.
+    RequestCompleted { id: u64, produced: usize },
+    /// A request replied with an error; closes its span.
+    RequestFailed { id: u64, error: String },
+    /// One chunked-prefill step absorbed `tokens` prompt tokens.
+    PrefillChunk { id: u64, tokens: usize, cached: usize, dur_us: u64 },
+    /// One continuous-batching decode round stepped `seqs` sequences.
+    DecodeRound { variant: String, seqs: usize, dur_us: u64 },
+    /// One scoring batch executed on the backend.
+    BatchExec { variant: String, rows: usize, tokens: usize, dur_us: u64 },
+    /// KV blocks granted to a sequence from the pool.
+    BlocksGranted { id: u64, blocks: usize },
+    /// A sequence was preempted: blocks evicted, cached tokens lost.
+    Preempted { id: u64, blocks: usize, cached: usize },
+    /// A previously preempted sequence started recomputing.
+    Resumed { id: u64 },
+    /// Kernel-path selection for a variant at executor start.
+    KernelPath { variant: String, mode: &'static str, packed: usize, dense_fallbacks: usize },
+    /// One layer quantized: chosen rotation spec and proxy error.
+    QuantLayer { layer: usize, spec: String, mse: f64 },
+    /// One layer searched: winning spec vs the fixed-GSR baseline.
+    SearchLayer { layer: usize, spec: String, mse: f64, baseline_mse: f64 },
+}
+
+impl TraceEvent {
+    /// Short event name (Chrome trace `name`, JSONL `event` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::RequestAdmitted { .. } => "request_admitted",
+            TraceEvent::RequestRejected { .. } => "request_rejected",
+            TraceEvent::RequestCompleted { .. } => "request_completed",
+            TraceEvent::RequestFailed { .. } => "request_failed",
+            TraceEvent::PrefillChunk { .. } => "prefill_chunk",
+            TraceEvent::DecodeRound { .. } => "decode_round",
+            TraceEvent::BatchExec { .. } => "batch_exec",
+            TraceEvent::BlocksGranted { .. } => "blocks_granted",
+            TraceEvent::Preempted { .. } => "preempted",
+            TraceEvent::Resumed { .. } => "resumed",
+            TraceEvent::KernelPath { .. } => "kernel_path",
+            TraceEvent::QuantLayer { .. } => "quant_layer",
+            TraceEvent::SearchLayer { .. } => "search_layer",
+        }
+    }
+
+    /// Request id for request-scoped events (span stitching).
+    pub fn request_id(&self) -> Option<u64> {
+        match self {
+            TraceEvent::RequestAdmitted { id, .. }
+            | TraceEvent::RequestCompleted { id, .. }
+            | TraceEvent::RequestFailed { id, .. }
+            | TraceEvent::PrefillChunk { id, .. }
+            | TraceEvent::BlocksGranted { id, .. }
+            | TraceEvent::Preempted { id, .. }
+            | TraceEvent::Resumed { id } => Some(*id),
+            _ => None,
+        }
+    }
+
+    fn args(&self) -> Vec<(&'static str, Json)> {
+        let n = |v: usize| Json::num(v as f64);
+        let id = |v: u64| Json::num(v as f64);
+        match self {
+            TraceEvent::RequestAdmitted { id: i, variant, kind, tokens } => vec![
+                ("id", id(*i)),
+                ("variant", Json::str(variant)),
+                ("kind", Json::str(kind.as_str())),
+                ("tokens", n(*tokens)),
+            ],
+            TraceEvent::RequestRejected { variant, reason } => {
+                vec![("variant", Json::str(variant)), ("reason", Json::str(reason))]
+            }
+            TraceEvent::RequestCompleted { id: i, produced } => {
+                vec![("id", id(*i)), ("produced", n(*produced))]
+            }
+            TraceEvent::RequestFailed { id: i, error } => {
+                vec![("id", id(*i)), ("error", Json::str(error))]
+            }
+            TraceEvent::PrefillChunk { id: i, tokens, cached, dur_us } => vec![
+                ("id", id(*i)),
+                ("tokens", n(*tokens)),
+                ("cached", n(*cached)),
+                ("dur_us", id(*dur_us)),
+            ],
+            TraceEvent::DecodeRound { variant, seqs, dur_us } => vec![
+                ("variant", Json::str(variant)),
+                ("seqs", n(*seqs)),
+                ("dur_us", id(*dur_us)),
+            ],
+            TraceEvent::BatchExec { variant, rows, tokens, dur_us } => vec![
+                ("variant", Json::str(variant)),
+                ("rows", n(*rows)),
+                ("tokens", n(*tokens)),
+                ("dur_us", id(*dur_us)),
+            ],
+            TraceEvent::BlocksGranted { id: i, blocks } => {
+                vec![("id", id(*i)), ("blocks", n(*blocks))]
+            }
+            TraceEvent::Preempted { id: i, blocks, cached } => {
+                vec![("id", id(*i)), ("blocks", n(*blocks)), ("cached", n(*cached))]
+            }
+            TraceEvent::Resumed { id: i } => vec![("id", id(*i))],
+            TraceEvent::KernelPath { variant, mode, packed, dense_fallbacks } => vec![
+                ("variant", Json::str(variant)),
+                ("mode", Json::str(mode)),
+                ("packed", n(*packed)),
+                ("dense_fallbacks", n(*dense_fallbacks)),
+            ],
+            TraceEvent::QuantLayer { layer, spec, mse } => {
+                vec![("layer", n(*layer)), ("spec", Json::str(spec)), ("mse", Json::num(*mse))]
+            }
+            TraceEvent::SearchLayer { layer, spec, mse, baseline_mse } => vec![
+                ("layer", n(*layer)),
+                ("spec", Json::str(spec)),
+                ("mse", Json::num(*mse)),
+                ("baseline_mse", Json::num(*baseline_mse)),
+            ],
+        }
+    }
+}
+
+/// A timestamped record: microseconds from the recorder epoch plus the
+/// typed event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub ts_us: u64,
+    pub event: TraceEvent,
+}
+
+#[derive(Debug)]
+struct Shard {
+    label: String,
+    dropped: AtomicU64,
+    records: Mutex<VecDeque<TraceRecord>>,
+}
+
+/// The flight recorder: an enable flag, a monotonic epoch, and one
+/// bounded ring buffer per registered handle.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    epoch: Instant,
+    capacity: usize,
+    shards: Mutex<Vec<Arc<Shard>>>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    /// A disabled recorder with the default per-shard capacity.
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    /// A disabled recorder keeping at most `capacity` records per shard.
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            shards: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Register a new per-thread/per-component ring and return its
+    /// recording handle. `label` names the track in exported traces.
+    pub fn handle(self: &Arc<Self>, label: &str) -> TraceHandle {
+        let shard = Arc::new(Shard {
+            label: label.to_string(),
+            dropped: AtomicU64::new(0),
+            records: Mutex::new(VecDeque::new()),
+        });
+        self.shards.lock().unwrap().push(Arc::clone(&shard));
+        TraceHandle { recorder: Arc::clone(self), shard }
+    }
+
+    /// All recorded events, one `(label, dropped, records)` triple per
+    /// shard in registration order.
+    pub fn snapshot(&self) -> Vec<(String, u64, Vec<TraceRecord>)> {
+        let shards = self.shards.lock().unwrap();
+        shards
+            .iter()
+            .map(|s| {
+                let records = s.records.lock().unwrap().iter().cloned().collect();
+                (s.label.clone(), s.dropped.load(Ordering::Relaxed), records)
+            })
+            .collect()
+    }
+
+    /// Total records dropped to ring-capacity pressure across shards.
+    pub fn dropped_total(&self) -> u64 {
+        self.shards.lock().unwrap().iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Export as a Chrome trace-event JSON object (`traceEvents`
+    /// array), loadable in Perfetto or `chrome://tracing`. Request
+    /// spans become async begin/end pairs keyed by request id; timed
+    /// events (`prefill_chunk`, `decode_round`, `batch_exec`) become
+    /// complete (`"X"`) slices; the rest become instants.
+    pub fn export_chrome(&self) -> Json {
+        let mut events = Vec::new();
+        for (tid, (label, _dropped, records)) in self.snapshot().into_iter().enumerate() {
+            let tid = tid + 1;
+            events.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("name", Json::str("thread_name")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(&label))])),
+            ]));
+            for r in records {
+                events.push(chrome_event(tid, &r));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+
+    /// Export as JSONL: one JSON object per record with `ts_us`,
+    /// `thread`, `event` and the event's fields inlined.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (label, _dropped, records) in self.snapshot() {
+            for r in records {
+                let mut obj = BTreeMap::new();
+                obj.insert("ts_us".to_string(), Json::num(r.ts_us as f64));
+                obj.insert("thread".to_string(), Json::str(&label));
+                obj.insert("event".to_string(), Json::str(r.event.name()));
+                for (k, v) in r.event.args() {
+                    obj.insert(k.to_string(), v);
+                }
+                out.push_str(&Json::Obj(obj).to_string_compact());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Write the trace to `path`: `.jsonl` selects JSONL, anything
+    /// else the Chrome trace-event JSON.
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+            std::fs::write(path, self.export_jsonl()).map_err(|e| format!("{path:?}: {e}"))
+        } else {
+            self.export_chrome().to_file(path)
+        }
+    }
+}
+
+fn chrome_event(tid: usize, r: &TraceRecord) -> Json {
+    let ts = r.ts_us as f64;
+    let args: BTreeMap<String, Json> =
+        r.event.args().into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    let base = |ph: &str, name: &str| {
+        vec![
+            ("ph", Json::str(ph)),
+            ("name", Json::str(name)),
+            ("cat", Json::str("gsr")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::Obj(args.clone())),
+        ]
+    };
+    match &r.event {
+        TraceEvent::RequestAdmitted { id, .. } => {
+            let mut e = base("b", "request");
+            e.push(("ts", Json::num(ts)));
+            e.push(("id", Json::str(&id.to_string())));
+            Json::obj(e)
+        }
+        TraceEvent::RequestCompleted { id, .. } | TraceEvent::RequestFailed { id, .. } => {
+            let mut e = base("e", "request");
+            e.push(("ts", Json::num(ts)));
+            e.push(("id", Json::str(&id.to_string())));
+            Json::obj(e)
+        }
+        TraceEvent::PrefillChunk { dur_us, .. }
+        | TraceEvent::DecodeRound { dur_us, .. }
+        | TraceEvent::BatchExec { dur_us, .. } => {
+            let mut e = base("X", r.event.name());
+            e.push(("ts", Json::num(r.ts_us.saturating_sub(*dur_us) as f64)));
+            e.push(("dur", Json::num(*dur_us as f64)));
+            Json::obj(e)
+        }
+        _ => {
+            let mut e = base("i", r.event.name());
+            e.push(("ts", Json::num(ts)));
+            e.push(("s", Json::str("t")));
+            Json::obj(e)
+        }
+    }
+}
+
+/// A cheap cloneable recording handle bound to one ring buffer.
+#[derive(Debug, Clone)]
+pub struct TraceHandle {
+    recorder: Arc<FlightRecorder>,
+    shard: Arc<Shard>,
+}
+
+impl TraceHandle {
+    /// Append an event (no-op unless the recorder is enabled).
+    pub fn record(&self, event: TraceEvent) {
+        if !self.recorder.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let ts_us = self.recorder.epoch.elapsed().as_micros() as u64;
+        let mut ring = self.shard.records.lock().unwrap();
+        if ring.len() >= self.recorder.capacity {
+            ring.pop_front();
+            self.shard.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(TraceRecord { ts_us, event });
+    }
+
+    /// Whether recording is currently enabled (lets callers skip
+    /// argument construction for expensive events).
+    pub fn enabled(&self) -> bool {
+        self.recorder.is_enabled()
+    }
+}
+
+/// Summarize a trace file (Chrome JSON or JSONL) for `gsr trace`:
+/// event counts by name, span balance, threads and time range.
+pub fn inspect(path: &Path) -> Result<String, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+    let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
+    let mut opened: BTreeMap<String, i64> = BTreeMap::new();
+    let mut threads: BTreeMap<String, usize> = BTreeMap::new();
+    let mut total = 0usize;
+    let mut ts_min = f64::INFINITY;
+    let mut ts_max = f64::NEG_INFINITY;
+    let mut seen_ts = false;
+    let trimmed = text.trim_start();
+    let chrome = trimmed.starts_with('{');
+    if chrome {
+        let root = Json::parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        let events = root.at("traceEvents")?.as_arr().ok_or("traceEvents is not an array")?;
+        let mut names: BTreeMap<u64, String> = BTreeMap::new();
+        for e in events {
+            let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+            if ph == "M" {
+                if let (Some(tid), Some(name)) = (
+                    e.get("tid").and_then(|t| t.as_f64()),
+                    e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()),
+                ) {
+                    names.insert(tid as u64, name.to_string());
+                }
+                continue;
+            }
+            total += 1;
+            let name = e.get("name").and_then(|n| n.as_str()).unwrap_or("?").to_string();
+            *by_name.entry(name).or_default() += 1;
+            if let Some(tid) = e.get("tid").and_then(|t| t.as_f64()) {
+                let tid = tid as u64;
+                let label = names.get(&tid).cloned().unwrap_or_else(|| format!("tid {tid}"));
+                *threads.entry(label).or_default() += 1;
+            }
+            if let Some(ts) = e.get("ts").and_then(|t| t.as_f64()) {
+                seen_ts = true;
+                ts_min = ts_min.min(ts);
+                ts_max = ts_max.max(ts);
+            }
+            if ph == "b" || ph == "e" {
+                let id = e.get("id").and_then(|i| i.as_str()).unwrap_or("?").to_string();
+                *opened.entry(id).or_default() += if ph == "b" { 1 } else { -1 };
+            }
+        }
+    } else {
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let e = Json::parse(line).map_err(|err| format!("{path:?}: {err}"))?;
+            total += 1;
+            let name = e.get("event").and_then(|n| n.as_str()).unwrap_or("?").to_string();
+            *by_name.entry(name.clone()).or_default() += 1;
+            if let Some(t) = e.get("thread").and_then(|t| t.as_str()) {
+                *threads.entry(t.to_string()).or_default() += 1;
+            }
+            if let Some(ts) = e.get("ts_us").and_then(|t| t.as_f64()) {
+                seen_ts = true;
+                ts_min = ts_min.min(ts);
+                ts_max = ts_max.max(ts);
+            }
+            if let Some(id) = e.get("id").and_then(|i| i.as_f64()) {
+                let key = (id as u64).to_string();
+                match name.as_str() {
+                    "request_admitted" => *opened.entry(key).or_default() += 1,
+                    "request_completed" | "request_failed" => *opened.entry(key).or_default() -= 1,
+                    _ => {}
+                }
+            }
+        }
+    }
+    let unclosed = opened.values().filter(|&&n| n != 0).count();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} trace: {total} events, {} threads",
+        if chrome { "chrome" } else { "jsonl" },
+        threads.len()
+    ));
+    if seen_ts {
+        out.push_str(&format!(", span {:.1} ms", (ts_max - ts_min) / 1000.0));
+    }
+    out.push('\n');
+    for (t, n) in &threads {
+        out.push_str(&format!("  thread {t}: {n} events\n"));
+    }
+    for (name, n) in &by_name {
+        out.push_str(&format!("  {name}: {n}\n"));
+    }
+    out.push_str(&format!("  request spans: {} tracked, {unclosed} unclosed\n", opened.len()));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Arc::new(FlightRecorder::new());
+        let h = rec.handle("t");
+        h.record(TraceEvent::Resumed { id: 1 });
+        assert!(rec.snapshot()[0].2.is_empty());
+        assert!(!h.enabled());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let rec = Arc::new(FlightRecorder::with_capacity(4));
+        rec.enable();
+        let h = rec.handle("t");
+        for i in 0..10 {
+            h.record(TraceEvent::Resumed { id: i });
+        }
+        let (_, dropped, records) = &rec.snapshot()[0];
+        assert_eq!(records.len(), 4);
+        assert_eq!(*dropped, 6);
+        // Oldest dropped first: the survivors are the last four.
+        assert_eq!(records[0].event, TraceEvent::Resumed { id: 6 });
+    }
+
+    #[test]
+    fn timestamps_are_monotone_per_shard() {
+        let rec = Arc::new(FlightRecorder::new());
+        rec.enable();
+        let h = rec.handle("t");
+        for i in 0..100 {
+            h.record(TraceEvent::Resumed { id: i });
+        }
+        let records = &rec.snapshot()[0].2;
+        for w in records.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+    }
+
+    #[test]
+    fn chrome_export_pairs_spans_and_parses() {
+        let rec = Arc::new(FlightRecorder::new());
+        rec.enable();
+        let h = rec.handle("executor");
+        h.record(TraceEvent::RequestAdmitted {
+            id: 1,
+            variant: "fp".into(),
+            kind: RequestKind::Generate,
+            tokens: 4,
+        });
+        h.record(TraceEvent::PrefillChunk { id: 1, tokens: 4, cached: 0, dur_us: 120 });
+        h.record(TraceEvent::DecodeRound { variant: "fp".into(), seqs: 1, dur_us: 80 });
+        h.record(TraceEvent::RequestCompleted { id: 1, produced: 3 });
+        let text = rec.export_chrome().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        let events = back.at("traceEvents").unwrap().as_arr().unwrap();
+        let phs: Vec<&str> =
+            events.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert_eq!(phs, vec!["M", "b", "X", "X", "e"]);
+        // The begin/end pair shares the request id.
+        let b = &events[1];
+        let e = &events[4];
+        assert_eq!(b.get("id").unwrap().as_str(), Some("1"));
+        assert_eq!(e.get("id").unwrap().as_str(), Some("1"));
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_inspect_summarizes() {
+        let rec = Arc::new(FlightRecorder::new());
+        rec.enable();
+        let h = rec.handle("executor");
+        h.record(TraceEvent::RequestAdmitted {
+            id: 7,
+            variant: "fp".into(),
+            kind: RequestKind::Score,
+            tokens: 8,
+        });
+        h.record(TraceEvent::RequestCompleted { id: 7, produced: 0 });
+        let jsonl = rec.export_jsonl();
+        assert_eq!(jsonl.lines().count(), 2);
+        for line in jsonl.lines() {
+            let e = Json::parse(line).unwrap();
+            assert!(e.get("ts_us").is_some());
+            assert_eq!(e.at("thread").unwrap().as_str(), Some("executor"));
+        }
+        let dir = std::env::temp_dir().join("gsr_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        rec.write(&p).unwrap();
+        let summary = inspect(&p).unwrap();
+        assert!(summary.contains("request_admitted: 1"), "{summary}");
+        assert!(summary.contains("0 unclosed"), "{summary}");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -776,6 +776,51 @@ pub fn quantize_native_plan_with(
     bits: u32,
     calib: Option<&crate::calib::HessianSet>,
 ) -> Result<(QuantParams, f64, Vec<QuantizedLinear>), String> {
+    let (qp, sse, qlinears, _) = quantize_native_plan_telemetry(fp, cfg, rots, bits, calib)?;
+    Ok((qp, sse, qlinears))
+}
+
+/// Per-layer quantization telemetry: the chosen rotation configuration,
+/// the layer's proxy quantization error, and outlier statistics of the
+/// fused (γ-absorbed, rotated) weights the quantizer actually saw — the
+/// paper's per-layer error claim, directly observable per layer.
+#[derive(Debug, Clone)]
+pub struct LayerQuantTelemetry {
+    pub layer: usize,
+    /// The rotation configuration the plan assigned to this layer.
+    pub spec: RotationSpec,
+    /// Sum of squared dequantization error across the layer's linears.
+    pub sse: f64,
+    /// Weight count across the layer's linears.
+    pub weights: usize,
+    /// Largest `|w|` across the layer's fused weights (outlier gauge).
+    pub max_abs_weight: f64,
+    /// RMS of the layer's fused weights (`max_abs / rms` spikes when
+    /// massive channels survive the rotation).
+    pub rms_weight: f64,
+}
+
+impl LayerQuantTelemetry {
+    /// Mean squared dequantization error per weight.
+    pub fn mse(&self) -> f64 {
+        if self.weights == 0 {
+            0.0
+        } else {
+            self.sse / self.weights as f64
+        }
+    }
+}
+
+/// [`quantize_native_plan_with`] plus per-layer telemetry (proxy
+/// MSE, chosen [`RotationSpec`], weight-outlier stats) recorded while
+/// quantizing — one entry per layer, in layer order.
+pub fn quantize_native_plan_telemetry(
+    fp: &FpParams,
+    cfg: &ModelCfg,
+    rots: &PlanRotations,
+    bits: u32,
+    calib: Option<&crate::calib::HessianSet>,
+) -> Result<(QuantParams, f64, Vec<QuantizedLinear>, Vec<LayerQuantTelemetry>), String> {
     if let Some(set) = calib {
         set.check_model(cfg)?;
         set.check_checkpoint(fp)?;
@@ -784,17 +829,39 @@ pub fn quantize_native_plan_with(
     let identity = if calib.is_none() { Some(identity_factors(cfg)) } else { None };
     let mut sse = 0.0;
     let mut qlinears = Vec::new();
+    let mut telemetry = Vec::with_capacity(fused_layers.len());
     let dense: Vec<BTreeMap<String, Vec<f32>>> = fused_layers
         .iter()
         .enumerate()
         .map(|(l, map)| {
+            let before = sse;
             let hess = calib.map(|set| (&set.layers[l], set.tokens));
-            quantize_layer_map(map, cfg, bits, hess, identity.as_ref(), &mut sse, &mut qlinears)
+            let d =
+                quantize_layer_map(map, cfg, bits, hess, identity.as_ref(), &mut sse, &mut qlinears);
+            let mut weights = 0usize;
+            let mut max_abs = 0f64;
+            let mut sumsq = 0f64;
+            for m in map.values() {
+                weights += m.data.len();
+                for &w in &m.data {
+                    max_abs = max_abs.max(w.abs());
+                    sumsq += w * w;
+                }
+            }
+            telemetry.push(LayerQuantTelemetry {
+                layer: l,
+                spec: rots.layers[l].spec,
+                sse: sse - before,
+                weights,
+                max_abs_weight: max_abs,
+                rms_weight: if weights == 0 { 0.0 } else { (sumsq / weights as f64).sqrt() },
+            });
+            d
         })
         .collect();
     let mut qp = plan_params(cfg, rots, &embed, &lm_head, dense, transitions);
     attach_packed(&mut qp.layers, &qlinears);
-    Ok((qp, sse, qlinears))
+    Ok((qp, sse, qlinears, telemetry))
 }
 
 #[cfg(test)]

@@ -1,0 +1,373 @@
+//! End-to-end observability tests: the flight recorder capturing a
+//! mixed generate+score load with preemption and exporting a
+//! well-formed Chrome trace, the Prometheus exposition of the serving
+//! metric families, and per-layer quantization telemetry reproducing
+//! the paper's sequency-vs-Hadamard claim on a synthetic checkpoint.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gsr::config::Json;
+use gsr::coordinator::{BatchPolicy, Server};
+use gsr::exec::{NativeBackend, NativeSet};
+use gsr::model::{weights::FpLayer, DenseModel, FpParams, ModelCfg, R4Kind};
+use gsr::obs::{Obs, RequestKind, TraceEvent};
+use gsr::quant::{
+    build_plan_rotations, quantize_native_plan_telemetry, LayerQuantTelemetry, RotationPlan,
+    RotationSpec,
+};
+use gsr::rng::SplitMix64;
+use gsr::sched::{SamplingParams, SchedConfig};
+use gsr::transform::R1Kind;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn window(seed: usize, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7 + seed * 13 + 1) % vocab) as i32).collect()
+}
+
+fn fp_model(cfg: &ModelCfg, seed: u64) -> Arc<DenseModel> {
+    let fp = FpParams::synthetic(cfg, seed);
+    Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp })
+}
+
+/// Mixed generate+score load on a deliberately starved block pool (the
+/// `paged_serving_completes_beyond_contiguous_capacity` recipe) with
+/// the flight recorder on: the event stream must be well-formed —
+/// per-shard monotone timestamps, every admitted request's span closed,
+/// prefill and decode activity per generation, and at least one
+/// preemption paired with its resume — and the Chrome export must
+/// round-trip through a JSON parser with balanced async spans.
+#[test]
+fn trace_captures_mixed_load_with_preemption_and_exports() {
+    let cfg = tiny_cfg();
+    let fp_m = fp_model(&cfg, 23);
+    let s = 8;
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 4, s, 2));
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+    let sched = SchedConfig { page_size: 4, kv_blocks: 5, prefill_chunk: 3 };
+    let obs = Obs::new();
+    obs.recorder.enable();
+    let server = Server::start_native_obs(set, policy, sched, &obs).unwrap();
+    // 3 sequences each peak at 4 + 8 − 1 = 11 cached tokens against a
+    // 20-token pool: the aggregate peak of 33 forces preemption.
+    let mut pending = Vec::new();
+    for i in 0..3 {
+        let (reply, rx) = std::sync::mpsc::channel();
+        server
+            .submit_generate(gsr::coordinator::GenerateRequest {
+                variant: "fp".to_string(),
+                prompt: window(70 + i, 4, cfg.vocab),
+                max_new: 8,
+                stop: None,
+                sampling: SamplingParams::greedy(),
+                stream: None,
+                reply,
+            })
+            .unwrap();
+        pending.push(rx);
+    }
+    // Scoring traffic interleaves with the generation rounds.
+    server.score("fp", window(77, s, cfg.vocab)).unwrap();
+    for (i, rx) in pending.into_iter().enumerate() {
+        rx.recv().unwrap().result.unwrap_or_else(|e| panic!("seq {i}: {e}"));
+    }
+    let metrics = server.shutdown();
+    assert!(metrics.preemptions >= 1, "a contended pool must preempt");
+    assert_eq!(obs.recorder.dropped_total(), 0, "load must fit the default rings");
+
+    // Per-shard timestamps are non-decreasing.
+    let shards = obs.recorder.snapshot();
+    for (label, _, records) in &shards {
+        for w in records.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us, "shard {label}: timestamps regressed");
+        }
+    }
+    let events: Vec<&TraceEvent> =
+        shards.iter().flat_map(|(_, _, r)| r.iter().map(|rec| &rec.event)).collect();
+    let mut admitted = Vec::new();
+    let mut generate_ids = Vec::new();
+    let mut closed = Vec::new();
+    let mut preempted = Vec::new();
+    let mut resumed = Vec::new();
+    let (mut prefills, mut decodes, mut batches) = (0, 0, 0);
+    for e in &events {
+        match e {
+            TraceEvent::RequestAdmitted { id, kind, .. } => {
+                admitted.push(*id);
+                if *kind == RequestKind::Generate {
+                    generate_ids.push(*id);
+                }
+            }
+            TraceEvent::RequestRejected { variant, reason } => {
+                panic!("unexpected rejection of {variant}: {reason}")
+            }
+            TraceEvent::RequestCompleted { id, .. } => closed.push(*id),
+            TraceEvent::RequestFailed { id, error } => panic!("request {id} failed: {error}"),
+            TraceEvent::PrefillChunk { .. } => prefills += 1,
+            TraceEvent::DecodeRound { .. } => decodes += 1,
+            TraceEvent::BatchExec { .. } => batches += 1,
+            TraceEvent::Preempted { id, blocks, .. } => {
+                assert!(*blocks >= 1, "a preemption victim holds blocks");
+                preempted.push(*id);
+            }
+            TraceEvent::Resumed { id } => resumed.push(*id),
+            _ => {}
+        }
+    }
+    assert_eq!(admitted.len(), 4, "3 generations + 1 score admitted");
+    assert_eq!(generate_ids.len(), 3);
+    for id in &admitted {
+        assert!(closed.contains(id), "request {id} admitted but never closed");
+    }
+    for id in &generate_ids {
+        let n = events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::PrefillChunk { id: p, .. } if p == id))
+            .count();
+        assert!(n >= 1, "generation {id} has no prefill chunks");
+    }
+    assert!(prefills >= 3 && decodes >= 1 && batches >= 1, "all stages must appear");
+    // fp variants have no kernel-mode notion, so no selection event
+    // (the quantized case is covered by the Prometheus test below).
+    let kernel_paths =
+        events.iter().filter(|e| matches!(e, TraceEvent::KernelPath { .. })).count();
+    assert_eq!(kernel_paths, 0);
+    assert!(!preempted.is_empty(), "metrics saw a preemption, the trace must too");
+    for id in &preempted {
+        assert!(resumed.contains(id), "preempted sequence {id} never resumed");
+    }
+
+    // Chrome export round-trips: parseable, balanced b/e spans, thread
+    // metadata and complete slices present; `gsr trace` agrees.
+    let dir = std::env::temp_dir().join("gsr_obs_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    obs.recorder.write(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let root = Json::parse(&text).unwrap();
+    let chrome = root.at("traceEvents").unwrap().as_arr().unwrap();
+    let ph_count = |ph: &str| {
+        chrome.iter().filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph)).count()
+    };
+    assert_eq!(ph_count("b"), 4, "one span open per admitted request");
+    assert_eq!(ph_count("e"), 4, "every span closed");
+    assert!(ph_count("M") >= 1, "thread metadata present");
+    assert!(ph_count("X") >= 4, "prefill/decode/batch become complete slices");
+    let summary = gsr::obs::trace::inspect(&path).unwrap();
+    assert!(summary.contains("0 unclosed"), "{summary}");
+    assert!(summary.contains("preempted"), "{summary}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// The recorder off (the default) leaves the event stream empty for
+/// the same served load — instrumentation must not record or allocate
+/// shards' worth of events when disabled.
+#[test]
+fn disabled_recorder_stays_empty_under_load() {
+    let cfg = tiny_cfg();
+    let fp_m = fp_model(&cfg, 29);
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, 12, 2));
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    let obs = Obs::new();
+    let server = Server::start_native_obs(set, policy, SchedConfig::default(), &obs).unwrap();
+    for i in 0..3 {
+        server.score("fp", window(i, 12, cfg.vocab)).unwrap();
+    }
+    server.shutdown();
+    let total: usize = obs.recorder.snapshot().iter().map(|(_, _, r)| r.len()).sum();
+    assert_eq!(total, 0, "disabled recorder must not retain events");
+}
+
+/// Prometheus exposition golden test: after a served load over fp +
+/// a fast-mode quantized variant, every serving family renders with
+/// `# HELP` / `# TYPE` headers, counters carry the exact request
+/// counts, histograms expose cumulative buckets with a `+Inf` bound,
+/// the kernel-path selection lands in the labeled fallback counter
+/// and the trace, and the JSON snapshot parses back.
+#[test]
+fn prometheus_exposition_contains_serving_families() {
+    use gsr::model::KernelMode;
+    use gsr::quant::quantize_native_plan;
+
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 31);
+    let fp_m = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() });
+    let plan = RotationPlan::uniform(
+        RotationSpec { r1: R1Kind::GSR, r1_block: cfg.group, r4: R4Kind::GH, r4_block: cfg.d_ffn },
+        cfg.n_layers,
+        7,
+    );
+    let rots = build_plan_rotations(&cfg, &plan).unwrap();
+    let (mut qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+    qp.kernels = KernelMode::Fast;
+    let q_m = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, 12, 2));
+    set.insert("q", NativeBackend::new(Arc::clone(&q_m), 2, 12, 2));
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    let obs = Obs::new();
+    obs.recorder.enable();
+    let server = Server::start_native_obs(set, policy, SchedConfig::default(), &obs).unwrap();
+    for i in 0..3 {
+        server.score("fp", window(i, 12, cfg.vocab)).unwrap();
+    }
+    assert!(server.score("nope", vec![1, 2]).is_err());
+    server.shutdown();
+    let text = obs.registry.expose_prometheus();
+    for family in [
+        "gsr_requests_total",
+        "gsr_batches_total",
+        "gsr_batch_rows_total",
+        "gsr_tokens_total",
+        "gsr_rejected_total",
+        "gsr_generations_total",
+        "gsr_preemptions_total",
+        "gsr_kv_blocks",
+        "gsr_dense_fallbacks",
+        "gsr_request_latency_us",
+        "gsr_exec_latency_us",
+        "gsr_decode_latency_us",
+    ] {
+        assert!(text.contains(&format!("# HELP {family} ")), "missing HELP for {family}");
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing TYPE for {family}");
+    }
+    assert!(text.contains("gsr_requests_total 3"), "{text}");
+    assert!(text.contains("gsr_batch_rows_total 3"), "{text}");
+    assert!(
+        text.contains("gsr_rejected_total{reason=\"unknown_variant\"} 1"),
+        "labeled rejection cell missing:\n{text}"
+    );
+    assert!(text.contains("gsr_request_latency_us_count 3"), "{text}");
+    assert!(text.contains("gsr_request_latency_us_bucket{le=\"+Inf\"} 3"), "{text}");
+    assert!(text.contains("gsr_fast_variants 1"), "{text}");
+    // Labels render sorted; the fast-mode variant gets a labeled cell.
+    assert!(
+        text.contains("gsr_dense_fallbacks_by_variant{mode=\"fast\",variant=\"q\"}"),
+        "kernel-path cell missing:\n{text}"
+    );
+    // The selection also lands in the trace, with its fallback count.
+    let kernel_events: Vec<String> = obs
+        .recorder
+        .snapshot()
+        .iter()
+        .flat_map(|(_, _, r)| r.iter())
+        .filter_map(|rec| match &rec.event {
+            TraceEvent::KernelPath { variant, mode, .. } => Some(format!("{variant}/{mode}")),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(kernel_events, vec!["q/fast".to_string()], "one selection per quant variant");
+    // The JSON snapshot is the same cells and parses back.
+    let snap = obs.registry.snapshot_json().to_string_pretty();
+    let back = Json::parse(&snap).unwrap();
+    let requests = back.at("gsr_requests_total").unwrap();
+    let value = requests.at("values").unwrap().as_arr().unwrap()[0]
+        .at("value")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert_eq!(value as u64, 3);
+}
+
+/// The same deterministic weights as the quantizer's internal
+/// outlier test: unit-variance rows scaled by `1/sqrt(C)` with γ
+/// outliers injected into every layer's norm weights.
+fn outlier_fp(cfg: &ModelCfg, seed: u64) -> FpParams {
+    let mut rng = SplitMix64::new(seed);
+    let mut dense = |c: usize, h: usize| -> Vec<f32> {
+        (0..c * h).map(|_| (rng.next_normal() / (c as f64).sqrt()) as f32).collect()
+    };
+    let layers = (0..cfg.n_layers)
+        .map(|_| {
+            let mut ln1: Vec<f32> = (0..cfg.d_model).map(|i| 1.0 + 0.1 * (i % 5) as f32).collect();
+            let mut ln2: Vec<f32> =
+                (0..cfg.d_model).map(|i| 1.0 + 0.05 * (i % 7) as f32).collect();
+            // Outlier γ rows (the massive-channel substitution).
+            ln1[3] = 9.0;
+            ln1[17] = 12.0;
+            ln2[8] = 10.0;
+            FpLayer {
+                ln1,
+                ln2,
+                wq: dense(cfg.d_model, cfg.d_model),
+                wk: dense(cfg.d_model, cfg.d_model),
+                wv: dense(cfg.d_model, cfg.d_model),
+                wo: dense(cfg.d_model, cfg.d_model),
+                wgate: dense(cfg.d_model, cfg.d_ffn),
+                wup: dense(cfg.d_model, cfg.d_ffn),
+                wdown: dense(cfg.d_ffn, cfg.d_model),
+            }
+        })
+        .collect();
+    FpParams {
+        embed: dense(cfg.vocab, cfg.d_model),
+        lm_head: dense(cfg.d_model, cfg.vocab),
+        ln_f: vec![1.0; cfg.d_model],
+        layers,
+    }
+}
+
+fn telemetry_of(cfg: &ModelCfg, fp: &FpParams, spec: RotationSpec) -> Vec<LayerQuantTelemetry> {
+    let plan = RotationPlan::uniform(spec, cfg.n_layers, 13);
+    let rots = build_plan_rotations(cfg, &plan).unwrap();
+    let (_, _, _, layers) = quantize_native_plan_telemetry(fp, cfg, &rots, 2, None).unwrap();
+    layers
+}
+
+/// The paper's claim through the telemetry channel: on outlier-γ
+/// weights, a uniform sequency-Walsh (GSR) plan reports per-layer
+/// proxy error no worse than the global standard-Hadamard plan — for
+/// every layer, with each layer's chosen spec recorded faithfully.
+#[test]
+fn per_layer_telemetry_shows_gsr_error_at_most_hadamard() {
+    let cfg = tiny_cfg();
+    let fp = outlier_fp(&cfg, 11);
+    let gsr = telemetry_of(
+        &cfg,
+        &fp,
+        RotationSpec { r1: R1Kind::GSR, r1_block: cfg.group, r4: R4Kind::GH, r4_block: cfg.d_ffn },
+    );
+    let gh = telemetry_of(
+        &cfg,
+        &fp,
+        RotationSpec {
+            r1: R1Kind::GH,
+            r1_block: cfg.d_model,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+        },
+    );
+    assert_eq!(gsr.len(), cfg.n_layers, "one telemetry entry per layer");
+    assert_eq!(gh.len(), cfg.n_layers);
+    for (a, b) in gsr.iter().zip(&gh) {
+        assert_eq!(a.layer, b.layer);
+        assert!(a.spec.label().contains("GSR"), "recorded spec: {}", a.spec.label());
+        assert!(b.spec.label().contains("GH"), "recorded spec: {}", b.spec.label());
+        assert!(a.weights == b.weights && a.weights > 0);
+        assert!(
+            a.sse <= b.sse,
+            "layer {}: GSR sse {:.2} must not exceed GH sse {:.2}",
+            a.layer,
+            a.sse,
+            b.sse
+        );
+        assert!(a.mse() > 0.0 && a.max_abs_weight > 0.0 && a.rms_weight > 0.0);
+    }
+    let total_gsr: f64 = gsr.iter().map(|t| t.sse).sum();
+    let total_gh: f64 = gh.iter().map(|t| t.sse).sum();
+    assert!(total_gsr < total_gh, "aggregate: GSR {total_gsr:.2} vs GH {total_gh:.2}");
+}

@@ -154,11 +154,9 @@ fn serve_native_end_to_end_with_concurrent_clients() {
     assert_eq!(metrics.rejected, 0);
     assert_eq!(metrics.tokens, n_tokens);
     assert_eq!(
-        metrics.batch_sizes.iter().sum::<usize>() as u64,
-        total,
-        "batch sizes must account for every request exactly once"
+        metrics.batch_rows, total,
+        "batch rows must account for every request exactly once"
     );
-    assert_eq!(metrics.batches as usize, metrics.batch_sizes.len());
     assert!(metrics.batches >= 1 && metrics.batches <= total);
     assert_eq!(metrics.request_latency.count(), total);
     assert_eq!(metrics.exec_latency.count(), metrics.batches);

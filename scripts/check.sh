@@ -21,6 +21,32 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Observability smoke: a tiny synthetic generate run must produce a
+# loadable Chrome trace and a metrics snapshot containing the serving
+# families, and `gsr trace` must accept its own output.
+echo "== observability smoke (--trace / --metrics-dump) =="
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+./target/release/gsr generate --synthetic --seq 32 --requests 2 --max-new 4 \
+  --threads 2 --trace "$OBS_TMP/trace.json" --metrics-dump "$OBS_TMP/metrics.json" \
+  >/dev/null
+./target/release/gsr trace "$OBS_TMP/trace.json" | grep -q "0 unclosed"
+if command -v python3 >/dev/null 2>&1; then
+  python3 - "$OBS_TMP/trace.json" "$OBS_TMP/metrics.json" <<'PY'
+import json, sys
+trace = json.load(open(sys.argv[1]))
+events = trace["traceEvents"] if isinstance(trace, dict) else trace
+assert any(e.get("ph") == "b" for e in events), "no request spans in trace"
+metrics = json.load(open(sys.argv[2]))
+for family in ("gsr_requests_total", "gsr_generations_total", "gsr_request_latency_us"):
+    assert family in metrics, f"missing metric family {family}"
+print("observability smoke OK")
+PY
+else
+  grep -q "gsr_requests_total" "$OBS_TMP/metrics.json"
+  echo "observability smoke OK (python3 unavailable — grep only)"
+fi
+
 # Benches are not run in tier-1 (wall-clock noise), but they must keep
 # compiling — they double as integration surface for the public API.
 echo "== cargo bench --no-run =="
