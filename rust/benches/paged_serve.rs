@@ -100,7 +100,7 @@ fn main() {
     // 24 blocks x 16 tokens = 384 pool tokens against a wave demanding
     // 12 x (48 + 16 - 1) = 756 at peak: admission accepts everything
     // (each request fits alone) and preemption keeps it live.
-    let sched = SchedConfig { page_size: 16, kv_blocks: 24, prefill_chunk: 32 };
+    let sched = SchedConfig { page_size: 16, kv_blocks: 24, prefill_chunk: 32, speculate: None };
     let server = Server::start_native_sched(set, policy, sched.clone()).expect("server start");
 
     // Decode-parity gate before any timing.

@@ -1,0 +1,220 @@
+//! Self-speculative decoding throughput: a W2 draft of the same
+//! checkpoint proposes k greedy tokens per round and the fp target
+//! verifies them in one cached forward (`k + 1` logit rows), so each
+//! accepted draft saves a full target decode step.
+//!
+//! Parity is asserted before any timing — greedy *and* seeded-sampling
+//! generations through the speculative executor must equal the
+//! non-speculative target decode token for token (and the greedy ones
+//! must equal a full re-forward of the growing prefix). The tok/s
+//! numbers below are for bit-reproducible speculation, never for
+//! drifted outputs.
+//!
+//! No artifacts needed: runs on the synthetic checkpoint.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::{mpsc, Arc};
+
+use gsr::config::Json;
+use gsr::coordinator::{BatchPolicy, GenerateRequest, Server};
+use gsr::exec::{greedy_argmax, ExecPool, NativeBackend, NativeSet};
+use gsr::model::{DenseModel, FpParams, ModelCfg};
+use gsr::quant::{build_plan_rotations, quantize_native_plan};
+use gsr::sched::{SamplingParams, SchedConfig, SpecConfig};
+
+/// Generations per timed wave (half greedy, half sampled).
+const GENS_PER_WAVE: usize = 8;
+/// Draft tokens proposed per speculative round.
+const SPEC_K: usize = 4;
+
+/// Greedy decode by full re-forward of the growing prefix — the
+/// reference semantics both serving paths must reproduce exactly.
+fn reforward_greedy(model: &DenseModel, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let v = model.cfg().vocab;
+    let mut seq = prompt.to_vec();
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let logits = model.forward(&seq);
+        let tok = greedy_argmax(&logits[(seq.len() - 1) * v..]);
+        out.push(tok);
+        seq.push(tok);
+    }
+    out
+}
+
+fn prompt_for(i: usize, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|j| ((j * 11 + i * 29 + 3) % vocab) as i32).collect()
+}
+
+fn sampling_for(i: usize) -> SamplingParams {
+    if i % 2 == 0 {
+        SamplingParams::greedy()
+    } else {
+        SamplingParams { temperature: 0.8, top_k: 32, top_p: 0.95, seed: i as u64 }
+    }
+}
+
+/// Build the two-variant set — fp target plus a W2 quantized draft of
+/// the same checkpoint — and start a server over it.
+fn start_server(
+    cfg: &ModelCfg,
+    fp: &FpParams,
+    batch: usize,
+    seq: usize,
+    sched: SchedConfig,
+) -> Server {
+    let rots = build_plan_rotations(cfg, &common::bench_hetero_plan(cfg)).unwrap();
+    let (qp, _, _) = quantize_native_plan(fp, cfg, &rots, 2);
+    let pool = Arc::new(ExecPool::new(0));
+    let mut set = NativeSet::new();
+    let fp_model = DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() };
+    let q2_model = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None };
+    set.insert("fp", NativeBackend::with_pool(Arc::new(fp_model), batch, seq, Arc::clone(&pool)));
+    set.insert("q2", NativeBackend::with_pool(Arc::new(q2_model), batch, seq, pool));
+    let policy = BatchPolicy { max_batch: batch, ..BatchPolicy::default() };
+    Server::start_native_sched(set, policy, sched).expect("server start")
+}
+
+/// One timed wave: submit every generation up front (continuous
+/// batching keeps the rounds full), drain every reply, return the
+/// emitted sequences.
+fn run_wave(
+    server: &Server,
+    cfg: &ModelCfg,
+    wave_idx: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> Vec<Vec<i32>> {
+    let mut pending = Vec::new();
+    for i in 0..GENS_PER_WAVE {
+        let (reply, rx) = mpsc::channel();
+        server
+            .submit_generate(GenerateRequest {
+                variant: "fp".to_string(),
+                prompt: prompt_for(wave_idx * 64 + i, prompt_len, cfg.vocab),
+                max_new,
+                stop: None,
+                sampling: sampling_for(i),
+                stream: None,
+                reply,
+            })
+            .expect("submit generate");
+        pending.push(rx);
+    }
+    pending
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply").result.expect("generation").tokens)
+        .collect()
+}
+
+fn main() {
+    let cfg = common::bench_model_cfg();
+    let fp = FpParams::synthetic(&cfg, 7);
+    let model = DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() };
+    let (batch, seq) = (4usize, 96usize);
+    let sched = SchedConfig { page_size: 16, kv_blocks: 48, prefill_chunk: 32, speculate: None };
+    let spec_sched = SchedConfig {
+        speculate: Some(SpecConfig { draft: "q2".to_string(), k: SPEC_K }),
+        ..sched.clone()
+    };
+    let baseline = start_server(&cfg, &fp, batch, seq, sched.clone());
+    let spec = start_server(&cfg, &fp, batch, seq, spec_sched);
+    let (prompt_len, max_new) = (48usize, 24usize);
+
+    // Parity gate before any timing: speculative output must equal the
+    // non-speculative target decode token for token, greedy and
+    // sampled alike — and greedy must equal the full re-forward.
+    let parity_cases = 6;
+    for i in 0..parity_cases {
+        let prompt = prompt_for(i, prompt_len, cfg.vocab);
+        let sampling = sampling_for(i);
+        let want = baseline
+            .generate_with("fp", prompt.clone(), max_new, None, sampling.clone())
+            .expect("baseline generation");
+        let got = spec
+            .generate_with("fp", prompt.clone(), max_new, None, sampling)
+            .expect("speculative generation");
+        assert_eq!(
+            got.tokens, want.tokens,
+            "speculative decode diverged from non-speculative (case {i})"
+        );
+        if i % 2 == 0 {
+            let reforward = reforward_greedy(&model, &prompt, max_new);
+            assert_eq!(got.tokens, reforward, "greedy diverged from re-forward (case {i})");
+        }
+    }
+    println!(
+        "parity: speculative == non-speculative on {parity_cases} cases (greedy + sampled)\n"
+    );
+
+    // Timed waves — identical traffic through both servers.
+    let mut wi = 0usize;
+    let base_wave = common::time_stats("baseline decode wave", 1, 3, || {
+        run_wave(&baseline, &cfg, wi, prompt_len, max_new);
+        wi += 1;
+    });
+    let mut wi = 0usize;
+    let spec_wave = common::time_stats("speculative decode wave", 1, 3, || {
+        run_wave(&spec, &cfg, wi, prompt_len, max_new);
+        wi += 1;
+    });
+    let wave_tokens = (GENS_PER_WAVE * max_new) as f64;
+    let base_tok_s = wave_tokens / base_wave.median.as_secs_f64().max(1e-12);
+    let spec_tok_s = wave_tokens / spec_wave.median.as_secs_f64().max(1e-12);
+
+    let base_metrics = baseline.shutdown();
+    let spec_metrics = spec.shutdown();
+    assert_eq!(spec_metrics.generation_failures, 0, "speculation must not fail sequences");
+    assert!(spec_metrics.spec_rounds > 0, "speculative server ran no draft/verify rounds");
+    let acceptance = spec_metrics.draft_acceptance();
+    println!(
+        "\n  wave of {GENS_PER_WAVE} x {max_new} tokens: baseline {base_tok_s:.0} tok/s, \
+         speculative {spec_tok_s:.0} tok/s ({:.2}x); draft acceptance {:.1}% \
+         ({} accepted / {} drafted over {} rounds)\n",
+        spec_tok_s / base_tok_s.max(1e-12),
+        100.0 * acceptance,
+        spec_metrics.accepted_draft_tokens,
+        spec_metrics.drafted_tokens,
+        spec_metrics.spec_rounds,
+    );
+    println!("{}", spec_metrics.report(spec_wave.median));
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("spec_decode")),
+        ("config", common::bench_config_json(&cfg)),
+        (
+            "sched",
+            Json::obj(vec![
+                ("page_size", Json::num(sched.page_size as f64)),
+                ("kv_blocks", Json::num(sched.kv_blocks as f64)),
+                ("prefill_chunk", Json::num(sched.prefill_chunk as f64)),
+                ("spec_k", Json::num(SPEC_K as f64)),
+                ("max_batch", Json::num(batch as f64)),
+                ("gens_per_wave", Json::num(GENS_PER_WAVE as f64)),
+                ("prompt_len", Json::num(prompt_len as f64)),
+                ("max_new", Json::num(max_new as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Json::obj(vec![
+                ("baseline_tok_s", Json::num(base_tok_s)),
+                ("speculative_tok_s", Json::num(spec_tok_s)),
+                ("speedup", Json::num(spec_tok_s / base_tok_s.max(1e-12))),
+                ("draft_acceptance", Json::num(acceptance)),
+                ("spec_rounds", Json::num(spec_metrics.spec_rounds as f64)),
+                ("drafted_tokens", Json::num(spec_metrics.drafted_tokens as f64)),
+                ("accepted_draft_tokens", Json::num(spec_metrics.accepted_draft_tokens as f64)),
+                ("rejected_draft_tokens", Json::num(spec_metrics.rejected_draft_tokens as f64)),
+                ("decode_emitted", Json::num(spec_metrics.decode_emitted as f64)),
+                ("decode_tok_per_s", Json::num(spec_metrics.decode_tok_per_s())),
+                ("baseline_decode_tok_per_s", Json::num(base_metrics.decode_tok_per_s())),
+                ("wave_p50_us", Json::num(common::us(spec_wave.median))),
+                ("wave_p99_us", Json::num(common::us(spec_wave.p99))),
+            ]),
+        ),
+    ]);
+    common::write_bench_json("spec_decode", summary);
+}

@@ -59,13 +59,19 @@ impl RejectReason {
 /// gauges track KV occupancy — so decode tok/s is reported directly
 /// instead of being inferred from prefill batch latency. The paged
 /// scheduler adds block-pool gauges and preemption/eviction/recompute
-/// counters.
+/// counters, and speculative decoding its draft/accept/reject token
+/// counters plus the draft/verify latency split.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub request_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
     /// Per-step backend latency of batched decode rounds.
     pub decode_latency: LatencyHistogram,
+    /// Backend time of draft-variant forwards in speculative rounds
+    /// (draft catch-up chunks are accounted as prefill instead).
+    pub draft_latency: LatencyHistogram,
+    /// Backend time of target verify forwards in speculative rounds.
+    pub verify_latency: LatencyHistogram,
     /// Rows across all executed scoring batches (`/ batches` = mean
     /// batch size; bounded accounting, no per-batch samples kept).
     pub batch_rows: u64,
@@ -90,9 +96,22 @@ pub struct Metrics {
     pub generated_tokens: u64,
     /// Batched decode rounds executed.
     pub decode_steps: u64,
-    /// Sequence-steps across all decode rounds (= tokens decoded,
-    /// including a final stop token that is not emitted).
+    /// Sequence-steps across all decode rounds, including steps whose
+    /// pick was a stop token and therefore emitted nothing.
     pub decode_seqs: u64,
+    /// Tokens *emitted* by decode rounds and speculative verify rounds
+    /// — the numerator of [`Metrics::decode_tok_per_s`]. Unlike
+    /// `decode_seqs`, stop picks and rejected drafts never count here.
+    pub decode_emitted: u64,
+    /// Speculative draft/verify rounds executed.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across speculative rounds.
+    pub drafted_tokens: u64,
+    /// Drafted tokens the target verified and accepted (emitted).
+    pub accepted_draft_tokens: u64,
+    /// Drafted tokens the target rejected — compute spent drafting them
+    /// is wasted, and they are *never* counted as generated output.
+    pub rejected_draft_tokens: u64,
     /// Sum over decode rounds of the round's total KV-cache occupancy
     /// (tokens); `/ decode_steps` = mean cached tokens per round.
     pub cache_tokens: u64,
@@ -168,14 +187,38 @@ impl Metrics {
     }
 
     /// Account one batched decode round: `seqs` sequences stepped
-    /// together, holding `cache_tokens` total cached tokens afterwards,
-    /// in `exec` backend time.
-    pub fn record_decode(&mut self, seqs: usize, cache_tokens: u64, exec: Duration) {
+    /// together, `emitted` of their picks appended to client output
+    /// (stop picks excluded), holding `cache_tokens` total cached
+    /// tokens afterwards, in `exec` backend time.
+    pub fn record_decode(&mut self, seqs: usize, emitted: u64, cache_tokens: u64, exec: Duration) {
         self.decode_steps += 1;
         self.decode_seqs += seqs as u64;
+        self.decode_emitted += emitted;
         self.cache_tokens += cache_tokens;
         self.cache_tokens_peak = self.cache_tokens_peak.max(cache_tokens);
         self.decode_latency.record(exec);
+    }
+
+    /// Account one speculative draft/verify round: `drafted` tokens
+    /// proposed in `draft` backend time, `accepted` of them kept by the
+    /// target's verify forward (`verify` backend time), and `emitted`
+    /// tokens appended to client output (accepted drafts plus the
+    /// target's own pick, minus any stop pick).
+    pub fn record_spec_round(
+        &mut self,
+        drafted: u64,
+        accepted: u64,
+        emitted: u64,
+        draft: Duration,
+        verify: Duration,
+    ) {
+        self.spec_rounds += 1;
+        self.drafted_tokens += drafted;
+        self.accepted_draft_tokens += accepted;
+        self.rejected_draft_tokens += drafted - accepted;
+        self.decode_emitted += emitted;
+        self.draft_latency.record(draft);
+        self.verify_latency.record(verify);
     }
 
     /// Account one completed generation: `emitted` tokens delivered to
@@ -193,14 +236,30 @@ impl Metrics {
         self.batch_rows as f64 / self.batches as f64
     }
 
-    /// Decoded sequence-steps per second of backend decode time — the
-    /// serving-side decode throughput (0 when nothing was generated).
+    /// Emitted tokens per second of backend decode-side time — the
+    /// serving decode throughput (0 when nothing was generated). The
+    /// numerator counts only tokens delivered to clients; the
+    /// denominator includes plain decode rounds plus speculative draft
+    /// and verify forwards, so drafted-then-rejected tokens can only
+    /// *lower* this number, never inflate it.
     pub fn decode_tok_per_s(&self) -> f64 {
-        let secs = self.decode_latency.total().as_secs_f64();
+        let spent = self.decode_latency.total()
+            + self.draft_latency.total()
+            + self.verify_latency.total();
+        let secs = spent.as_secs_f64();
         if secs <= 0.0 {
             return 0.0;
         }
-        self.decode_seqs as f64 / secs
+        self.decode_emitted as f64 / secs
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 when no
+    /// speculative rounds ran).
+    pub fn draft_acceptance(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_draft_tokens as f64 / self.drafted_tokens as f64
     }
 
     pub fn report(&self, wall: Duration) -> String {
@@ -253,6 +312,19 @@ impl Metrics {
                 self.prefill_tokens,
             ));
         }
+        if self.spec_rounds > 0 {
+            out.push_str(&format!(
+                " | spec: rounds={} drafted={} accepted={} rejected={} \
+                 acceptance={:.1}% draft p50={:?} verify p50={:?}",
+                self.spec_rounds,
+                self.drafted_tokens,
+                self.accepted_draft_tokens,
+                self.rejected_draft_tokens,
+                100.0 * self.draft_acceptance(),
+                self.draft_latency.quantile(0.5),
+                self.verify_latency.quantile(0.5),
+            ));
+        }
         if self.kv_blocks_total > 0 {
             out.push_str(&format!(
                 " | paged: pool={} blocks peak={} preemptions={} \
@@ -299,6 +371,11 @@ pub struct ServingMetrics {
     generated_tokens: Counter,
     decode_steps: Counter,
     decode_seqs: Counter,
+    decode_emitted: Counter,
+    spec_rounds: Counter,
+    spec_drafted: Counter,
+    spec_accepted: Counter,
+    spec_rejected: Counter,
     cache_tokens: Counter,
     cache_tokens_peak: Gauge,
     prefill_chunks: Counter,
@@ -313,6 +390,9 @@ pub struct ServingMetrics {
     request_latency: Histogram,
     exec_latency: Histogram,
     decode_latency: Histogram,
+    draft_latency: Histogram,
+    verify_latency: Histogram,
+    spec_acceptance_pct: Histogram,
 }
 
 impl ServingMetrics {
@@ -346,6 +426,18 @@ impl ServingMetrics {
             decode_steps: r.counter("gsr_decode_steps_total", "Batched decode rounds executed"),
             decode_seqs: r
                 .counter("gsr_decode_seqs_total", "Sequence-steps across decode rounds"),
+            decode_emitted: r.counter(
+                "gsr_decode_emitted_total",
+                "Tokens emitted by decode and speculative verify rounds",
+            ),
+            spec_rounds: r
+                .counter("gsr_spec_rounds_total", "Speculative draft/verify rounds executed"),
+            spec_drafted: r
+                .counter("gsr_spec_drafted_total", "Draft tokens proposed by the draft variant"),
+            spec_accepted: r
+                .counter("gsr_spec_accepted_total", "Drafted tokens accepted by target verify"),
+            spec_rejected: r
+                .counter("gsr_spec_rejected_total", "Drafted tokens rejected by target verify"),
             cache_tokens: r
                 .counter("gsr_cache_tokens_total", "Sum of per-round KV occupancy (tokens)"),
             cache_tokens_peak: r
@@ -375,6 +467,18 @@ impl ServingMetrics {
             ),
             decode_latency: r
                 .histogram("gsr_decode_latency_us", "Backend latency per batched decode round (us)"),
+            draft_latency: r.histogram(
+                "gsr_draft_latency_us",
+                "Draft-variant forward latency per speculative round (us)",
+            ),
+            verify_latency: r.histogram(
+                "gsr_verify_latency_us",
+                "Target verify forward latency per speculative round (us)",
+            ),
+            spec_acceptance_pct: r.histogram(
+                "gsr_spec_acceptance_pct",
+                "Per-round draft acceptance rate (percent of drafted tokens kept)",
+            ),
         }
     }
 
@@ -423,12 +527,35 @@ impl ServingMetrics {
     }
 
     /// See [`Metrics::record_decode`].
-    pub fn record_decode(&self, seqs: usize, cache_tokens: u64, exec: Duration) {
+    pub fn record_decode(&self, seqs: usize, emitted: u64, cache_tokens: u64, exec: Duration) {
         self.decode_steps.inc();
         self.decode_seqs.add(seqs as u64);
+        self.decode_emitted.add(emitted);
         self.cache_tokens.add(cache_tokens);
         self.cache_tokens_peak.set_max(cache_tokens);
         self.decode_latency.record(exec);
+    }
+
+    /// See [`Metrics::record_spec_round`]; additionally records the
+    /// round's acceptance percentage into `gsr_spec_acceptance_pct`.
+    pub fn record_spec_round(
+        &self,
+        drafted: u64,
+        accepted: u64,
+        emitted: u64,
+        draft: Duration,
+        verify: Duration,
+    ) {
+        self.spec_rounds.inc();
+        self.spec_drafted.add(drafted);
+        self.spec_accepted.add(accepted);
+        self.spec_rejected.add(drafted - accepted);
+        self.decode_emitted.add(emitted);
+        self.draft_latency.record(draft);
+        self.verify_latency.record(verify);
+        if drafted > 0 {
+            self.spec_acceptance_pct.record_us(100 * accepted / drafted);
+        }
     }
 
     /// See [`Metrics::record_generation`].
@@ -483,6 +610,8 @@ impl ServingMetrics {
             request_latency: self.request_latency.snapshot(),
             exec_latency: self.exec_latency.snapshot(),
             decode_latency: self.decode_latency.snapshot(),
+            draft_latency: self.draft_latency.snapshot(),
+            verify_latency: self.verify_latency.snapshot(),
             batch_rows: self.batch_rows.get(),
             requests: self.requests.get(),
             batches: self.batches.get(),
@@ -502,6 +631,11 @@ impl ServingMetrics {
             generated_tokens: self.generated_tokens.get(),
             decode_steps: self.decode_steps.get(),
             decode_seqs: self.decode_seqs.get(),
+            decode_emitted: self.decode_emitted.get(),
+            spec_rounds: self.spec_rounds.get(),
+            drafted_tokens: self.spec_drafted.get(),
+            accepted_draft_tokens: self.spec_accepted.get(),
+            rejected_draft_tokens: self.spec_rejected.get(),
             cache_tokens: self.cache_tokens.get(),
             cache_tokens_peak: self.cache_tokens_peak.get(),
             prefill_chunks: self.prefill_chunks.get(),
@@ -563,22 +697,49 @@ mod tests {
     fn decode_metrics_accumulate() {
         let mut m = Metrics::default();
         assert_eq!(m.decode_tok_per_s(), 0.0, "no decode yet");
-        m.record_decode(3, 30, Duration::from_millis(10));
-        m.record_decode(2, 24, Duration::from_millis(10));
+        m.record_decode(3, 3, 30, Duration::from_millis(10));
+        // One of the two picks was a stop token: 2 seq-steps, 1 emitted.
+        m.record_decode(2, 1, 24, Duration::from_millis(10));
         m.record_generation(4, Duration::from_millis(25));
         m.record_generation(1, Duration::from_millis(30));
         assert_eq!(m.decode_steps, 2);
         assert_eq!(m.decode_seqs, 5);
+        assert_eq!(m.decode_emitted, 4, "stop pick emits nothing");
         assert_eq!(m.cache_tokens, 54);
         assert_eq!(m.cache_tokens_peak, 30);
         assert_eq!(m.generations, 2);
         assert_eq!(m.generated_tokens, 5);
         assert_eq!(m.requests, 2, "generations count as requests");
-        // 5 sequence-steps over 20ms of decode time = 250 tok/s.
-        assert!((m.decode_tok_per_s() - 250.0).abs() < 1.0);
+        // 4 *emitted* tokens over 20ms of decode time = 200 tok/s — the
+        // non-emitting stop step no longer inflates throughput.
+        assert!((m.decode_tok_per_s() - 200.0).abs() < 1.0);
         assert!(m.report(Duration::from_millis(40)).contains("gen:"));
         let quiet = Metrics::default();
         assert!(!quiet.report(Duration::from_millis(1)).contains("gen:"));
+    }
+
+    #[test]
+    fn spec_metrics_accumulate_and_report() {
+        let mut m = Metrics::default();
+        // Round 1: 4 drafted, 4 accepted, bonus pick => 5 emitted.
+        m.record_spec_round(4, 4, 5, Duration::from_millis(5), Duration::from_millis(10));
+        // Round 2: 4 drafted, 1 accepted, correction pick => 2 emitted.
+        m.record_spec_round(4, 1, 2, Duration::from_millis(5), Duration::from_millis(20));
+        assert_eq!(m.spec_rounds, 2);
+        assert_eq!(m.drafted_tokens, 8);
+        assert_eq!(m.accepted_draft_tokens, 5);
+        assert_eq!(m.rejected_draft_tokens, 3);
+        assert_eq!(m.decode_emitted, 7);
+        assert!((m.draft_acceptance() - 5.0 / 8.0).abs() < 1e-12);
+        // Throughput charges draft + verify time: 7 tokens over 40ms.
+        assert!((m.decode_tok_per_s() - 175.0).abs() < 1.0);
+        let report = m.report(Duration::from_millis(50));
+        for needle in ["spec: rounds=2", "drafted=8", "accepted=5", "rejected=3", "acceptance=62.5%"]
+        {
+            assert!(report.contains(needle), "missing {needle} in {report}");
+        }
+        let quiet = Metrics::default().report(Duration::from_millis(1));
+        assert!(!quiet.contains("spec:"), "{quiet}");
     }
 
     #[test]
@@ -610,7 +771,7 @@ mod tests {
         let mut m = Metrics::default();
         m.record_batch(2, 64, Duration::from_millis(2));
         m.record_request(Duration::from_millis(3));
-        m.record_decode(2, 20, Duration::from_millis(1));
+        m.record_decode(2, 2, 20, Duration::from_millis(1));
         m.record_prefill(16, Duration::from_millis(2));
         m.record_preemption(2, 24);
         m.kv_blocks_total = 8;
@@ -644,7 +805,8 @@ mod tests {
         s.record_rejection(RejectReason::BadToken);
         s.record_prefill(16, Duration::from_millis(2));
         s.record_preemption(2, 24);
-        s.record_decode(3, 30, Duration::from_millis(10));
+        s.record_decode(3, 3, 30, Duration::from_millis(10));
+        s.record_spec_round(4, 2, 3, Duration::from_millis(2), Duration::from_millis(6));
         s.record_generation(5, Duration::from_millis(25));
         s.record_generation_failure();
         s.add_kv_blocks_total(8);
@@ -663,6 +825,13 @@ mod tests {
         assert_eq!(m.recomputed_tokens, 24);
         assert_eq!(m.decode_steps, 1);
         assert_eq!(m.decode_seqs, 3);
+        assert_eq!(m.decode_emitted, 6, "3 decode picks + 3 spec emissions");
+        assert_eq!(m.spec_rounds, 1);
+        assert_eq!(m.drafted_tokens, 4);
+        assert_eq!(m.accepted_draft_tokens, 2);
+        assert_eq!(m.rejected_draft_tokens, 2);
+        assert_eq!(m.draft_latency.count(), 1);
+        assert_eq!(m.verify_latency.count(), 1);
         assert_eq!(m.cache_tokens_peak, 30);
         assert_eq!(m.generations, 1);
         assert_eq!(m.generation_failures, 1);
@@ -677,6 +846,9 @@ mod tests {
             "# TYPE gsr_request_latency_us histogram",
             "gsr_rejected_total{reason=\"bad_token\"} 1",
             "gsr_kv_blocks 8",
+            "gsr_spec_drafted_total 4",
+            "gsr_spec_rejected_total 2",
+            "# TYPE gsr_spec_acceptance_pct histogram",
         ] {
             assert!(text.contains(family), "missing {family} in exposition");
         }

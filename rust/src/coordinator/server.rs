@@ -48,6 +48,25 @@
 //! and runs every active generation to completion before reporting
 //! metrics.
 //!
+//! ## Speculative decoding
+//!
+//! With [`SchedConfig::speculate`] set, a cheap resident variant (the
+//! *draft*, typically a 2-bit quantization of the same checkpoint)
+//! proposes up to `k` greedy tokens per round and the request's target
+//! variant verifies them in one [`Backend::verify_draft`] forward —
+//! `k + 1` logit rows for the price of one cached pass. Acceptance
+//! replays the request's own [`Sampler`] against those rows, consuming
+//! exactly one draw per emitted token in stream order, so greedy *and*
+//! sampled speculative generations are token-for-token identical to
+//! non-speculative decode; speculation changes how many forwards run,
+//! never what is emitted. The first mismatching row's pick *is* the
+//! correction token; positions past it roll back bit-exactly and their
+//! tail blocks return to the pool. Both KV caches draw blocks from the
+//! target variant's pool (the draft's geometry is validated at executor
+//! start), admission counts both caches' peak demand, and preemption
+//! reclaims both. Requests *targeting* the draft variant itself decode
+//! plainly.
+//!
 //! ## Observability
 //!
 //! The executor records into an [`Obs`](crate::obs::Obs) bundle when
@@ -66,7 +85,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::{Metrics, RejectReason, ServingMetrics};
-use crate::exec::{Backend, BackendSet, Generation, NativeSet, PjrtSet};
+use crate::exec::{greedy_argmax, Backend, BackendSet, Generation, NativeSet, PjrtSet};
 use crate::obs::{Obs, RequestKind, TraceEvent, TraceHandle};
 use crate::sched::{compose_round, BlockPool, Sampler, SamplingParams, SchedConfig};
 
@@ -164,6 +183,12 @@ struct SeqState {
     stop: Option<i32>,
     sampler: Sampler,
     gen: Generation,
+    /// Draft-variant KV cache for speculative decoding — `None` when
+    /// speculation is off or the request targets the draft variant
+    /// itself (it then decodes plainly). Invariant between rounds: the
+    /// draft has absorbed at most `prompt.len() + produced.len() - 1`
+    /// feed tokens (never the pending one).
+    draft: Option<Generation>,
     reply: mpsc::Sender<GenerateResponse>,
     stream: Option<mpsc::Sender<i32>>,
     t0: Instant,
@@ -173,6 +198,16 @@ impl SeqState {
     /// Tokens of `prompt ++ produced` the cache has not absorbed yet.
     fn pending(&self) -> usize {
         self.prompt.len() + self.produced.len() - self.gen.len()
+    }
+
+    /// Feed tokens absorbed by the draft cache (0 without one).
+    fn draft_len(&self) -> usize {
+        self.draft.as_ref().map_or(0, |g| g.len())
+    }
+
+    /// Block-granted capacity of the draft cache (0 without one).
+    fn draft_capacity(&self) -> usize {
+        self.draft.as_ref().map_or(0, |g| g.capacity())
     }
 
     /// Feed-stream token at absolute position `pos`.
@@ -489,6 +524,10 @@ struct VariantQueue {
     pool: Option<BlockPool>,
     /// Max tokens per prefill chunk (from [`SchedConfig`]).
     prefill_chunk: usize,
+    /// `Some(k)` when generations on this queue run speculative
+    /// draft/verify rounds (speculation resolved and this queue is not
+    /// the draft itself) — admission then counts both caches' peak.
+    spec_k: Option<usize>,
     /// Queued score requests with submit time and trace-span id.
     q: DynamicBatcher<(Request, Instant, u64)>,
 }
@@ -565,6 +604,31 @@ impl VariantQueue {
                 ),
             ));
         }
+        // Speculating doubles the cache footprint: the target's peak is
+        // unchanged (verify never absorbs past `prompt + max_new − 1` —
+        // the draft length is capped by the emission budget), but the
+        // draft cache trails one token behind it, and both draw blocks
+        // from this variant's pool. Block granularity makes the two
+        // peaks round up independently.
+        if let Some(k) = self.spec_k {
+            let page = self.pool.as_ref().map_or(1, |p| p.page_size());
+            let total = self.pool.as_ref().map_or(0, |p| p.total_blocks());
+            let target_blocks = crate::sched::blocks_for(peak, page);
+            let draft_blocks = crate::sched::blocks_for(peak.saturating_sub(1), page);
+            if target_blocks + draft_blocks > total {
+                return Err((
+                    RejectReason::CachePressure,
+                    format!(
+                        "speculative generation (k={k}) needs {} kv blocks at peak \
+                         ({target_blocks} target + {draft_blocks} draft) but backend {}'s \
+                         block pool holds {total}; shorten the prompt or the budget, \
+                         raise --kv-blocks, or drop --speculate",
+                        target_blocks + draft_blocks,
+                        self.backend_label,
+                    ),
+                ));
+            }
+        }
         self.check_tokens(&req.prompt).map_err(|e| (RejectReason::BadToken, e))?;
         if let Some(stop) = req.stop {
             self.check_tokens(&[stop])
@@ -638,12 +702,25 @@ fn executor_loop<V: BackendSet>(
             backend_label,
             pool,
             prefill_chunk: sched.prefill_chunk,
+            spec_k: None,
             q,
         });
     }
     for vq in &queues {
         if let Some(pool) = &vq.pool {
             tel.m.add_kv_blocks_total(pool.total_blocks() as u64);
+        }
+    }
+    // Resolve speculation once against the resident set. A failed
+    // resolution is kept, not swallowed: every generate request is then
+    // rejected with the resolution error, so a typo'd draft name can
+    // never silently serve non-speculative rounds.
+    let spec = resolve_spec(&sched, &queues);
+    if let Ok(Some(sp)) = &spec {
+        for (qi, vq) in queues.iter_mut().enumerate() {
+            if qi != sp.draft_qi && vq.pool.is_some() {
+                vq.spec_k = Some(sp.k);
+            }
         }
     }
     let mut active: Vec<SeqState> = Vec::new();
@@ -670,7 +747,8 @@ fn executor_loop<V: BackendSet>(
         // it (non-blocking drain): a burst reaches the batchers — and
         // the running generation rounds — in one loop turn.
         for job in first.into_iter().chain(std::iter::from_fn(|| rx.try_recv().ok())) {
-            let flow = handle_job(job, &set, &mut queues, &mut active, &mut next_seq_id, &tel);
+            let flow =
+                handle_job(job, &set, &mut queues, &mut active, &mut next_seq_id, &spec, &tel);
             match flow {
                 Flow::Continue => {}
                 Flow::Stop => return,
@@ -685,8 +763,60 @@ fn executor_loop<V: BackendSet>(
         // One continuous-batching round per loop turn keeps generation
         // throughput high while queued scoring work still gets serviced
         // between rounds.
-        generation_round(&set, &mut queues, &mut active, &tel);
+        generation_round(&set, &mut queues, &mut active, spec_of(&spec), &tel);
     }
+}
+
+/// Speculation resolved against the resident set at executor start.
+#[derive(Debug, Clone, Copy)]
+struct SpecResolved {
+    /// Index of the draft variant's queue in the executor's `queues`.
+    draft_qi: usize,
+    /// Draft tokens proposed per draft/verify round.
+    k: usize,
+}
+
+/// The round-time view of the resolution: `None` both when speculation
+/// is off and when it failed to resolve (no sequence was admitted).
+fn spec_of(spec: &Result<Option<SpecResolved>, String>) -> Option<SpecResolved> {
+    spec.as_ref().ok().copied().flatten()
+}
+
+/// Resolve `--speculate` against the probed queues: the draft variant
+/// must be resident with a paged generation path, and its KV geometry
+/// must match every pooled variant's — draft caches are granted blocks
+/// from the *target* variant's pool, so the shapes have to line up.
+fn resolve_spec(
+    sched: &SchedConfig,
+    queues: &[VariantQueue],
+) -> Result<Option<SpecResolved>, String> {
+    let Some(cfg) = &sched.speculate else {
+        return Ok(None);
+    };
+    let Some(draft_qi) = queues.iter().position(|vq| vq.name == cfg.draft) else {
+        return Err(format!("--speculate: draft variant {} is not resident", cfg.draft));
+    };
+    let Some(dpool) = &queues[draft_qi].pool else {
+        return Err(format!(
+            "--speculate: draft variant {} does not support paged generation",
+            cfg.draft
+        ));
+    };
+    for vq in queues {
+        if let Some(pool) = &vq.pool {
+            if pool.geometry() != dpool.geometry() {
+                return Err(format!(
+                    "--speculate: draft variant {} kv geometry {:?} does not match \
+                     variant {} geometry {:?}; draft and target must share the model shape",
+                    cfg.draft,
+                    dpool.geometry(),
+                    vq.name,
+                    pool.geometry(),
+                ));
+            }
+        }
+    }
+    Ok(Some(SpecResolved { draft_qi, k: cfg.k }))
 }
 
 enum Flow {
@@ -703,6 +833,7 @@ fn handle_job<V: BackendSet>(
     queues: &mut [VariantQueue],
     active: &mut Vec<SeqState>,
     next_seq_id: &mut u64,
+    spec: &Result<Option<SpecResolved>, String>,
     tel: &Telemetry,
 ) -> Flow {
     let reject_trace = |variant: &str, reason: &'static str| {
@@ -752,6 +883,15 @@ fn handle_job<V: BackendSet>(
                 });
                 return Flow::Continue;
             };
+            // Speculation that failed to resolve refuses every generate
+            // loudly: silently serving non-speculative rounds would make
+            // a typo'd --speculate indistinguishable from a working one.
+            if let Err(e) = spec {
+                tel.m.record_rejection(RejectReason::UnknownVariant);
+                reject_trace(&req.variant, RejectReason::UnknownVariant.as_str());
+                let _ = req.reply.send(GenerateResponse { result: Err(e.clone()) });
+                return Flow::Continue;
+            }
             if let Err((reason, e)) = queues[idx].admit_generate(&req) {
                 tel.m.record_rejection(reason);
                 reject_trace(&req.variant, reason.as_str());
@@ -761,6 +901,37 @@ fn handle_job<V: BackendSet>(
             // Open the zero-capacity paged generation now; blocks are
             // granted by the scheduling rounds as the sequence runs.
             let page = queues[idx].pool.as_ref().map_or(1, |p| p.page_size());
+            // A speculative target also opens its draft-variant cache —
+            // same page size, blocks granted from the target's pool.
+            let mut draft: Option<Generation> = None;
+            if let Ok(Some(sp)) = spec {
+                if sp.draft_qi != idx {
+                    let mut dres: Option<Result<Generation, String>> = None;
+                    set.run(&queues[sp.draft_qi].name, &mut |backend| {
+                        dres = Some(backend.start_paged_generation(page));
+                    });
+                    match dres {
+                        Some(Ok(g)) => draft = Some(g),
+                        Some(Err(e)) => {
+                            tel.m.record_generation_failure();
+                            reject_trace(&req.variant, "generation_start_failed");
+                            let _ = req.reply.send(GenerateResponse { result: Err(e) });
+                            return Flow::Continue;
+                        }
+                        None => {
+                            tel.m.record_rejection(RejectReason::UnknownVariant);
+                            reject_trace(&req.variant, RejectReason::UnknownVariant.as_str());
+                            let _ = req.reply.send(GenerateResponse {
+                                result: Err(format!(
+                                    "draft variant {} not resident",
+                                    queues[sp.draft_qi].name
+                                )),
+                            });
+                            return Flow::Continue;
+                        }
+                    }
+                }
+            }
             let mut res: Option<Result<Generation, String>> = None;
             set.run(&queues[idx].name, &mut |backend| {
                 res = Some(backend.start_paged_generation(page));
@@ -787,6 +958,7 @@ fn handle_job<V: BackendSet>(
                         stop: req.stop,
                         sampler: Sampler::new(&req.sampling),
                         gen,
+                        draft,
                         reply: req.reply,
                         stream: req.stream,
                         t0,
@@ -816,12 +988,46 @@ fn handle_job<V: BackendSet>(
                 }
             }
             while !active.is_empty() {
-                generation_round(set, queues, active, tel);
+                generation_round(set, queues, active, spec_of(spec), tel);
             }
             let _ = mtx.send(tel.m.snapshot());
             Flow::Stop
         }
     }
+}
+
+/// Preempt the youngest block-holding member past `i` — reclaiming its
+/// target *and* draft caches, so a victim never strands draft blocks —
+/// and return the blocks to the pool. `Ok(false)` when no member past
+/// `i` holds blocks (only older peers do — the requester must defer).
+fn preempt_youngest(
+    backend: &dyn Backend,
+    draft_backend: Option<&dyn Backend>,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    i: usize,
+    tel: &Telemetry,
+) -> Result<bool, String> {
+    // Members are FIFO-sorted, so the youngest victim is the highest
+    // index past `i` still holding blocks in either cache.
+    let Some(j) = (i + 1..members.len())
+        .rev()
+        .find(|&j| members[j].gen.capacity() > 0 || members[j].draft_capacity() > 0)
+    else {
+        return Ok(false);
+    };
+    let cached = members[j].gen.len() + members[j].draft_len();
+    let mut blocks = backend.reclaim_kv_blocks(&mut members[j].gen)?;
+    if let (Some(db), Some(dgen)) = (draft_backend, members[j].draft.as_mut()) {
+        blocks.extend(db.reclaim_kv_blocks(dgen)?);
+    }
+    tel.m.record_preemption(blocks.len() as u64, cached as u64);
+    members[j].preempted = true;
+    tel.tr.record(TraceEvent::Preempted { id: members[j].id, blocks: blocks.len(), cached });
+    for b in blocks {
+        pool.release(b);
+    }
+    Ok(true)
 }
 
 /// Grow `members[i]`'s cache to absorb `extra` more tokens: grant free
@@ -832,6 +1038,7 @@ fn handle_job<V: BackendSet>(
 /// requester defers and retries once they complete or release).
 fn ensure_capacity(
     backend: &dyn Backend,
+    draft_backend: Option<&dyn Backend>,
     pool: &mut BlockPool,
     members: &mut [SeqState],
     i: usize,
@@ -846,21 +1053,11 @@ fn ensure_capacity(
             granted += 1;
             continue;
         }
-        // Pool dry: members are FIFO-sorted, so the youngest victim is
-        // the highest index past `i` still holding blocks.
-        let Some(j) = (i + 1..members.len()).rev().find(|&j| members[j].gen.capacity() > 0) else {
+        if !preempt_youngest(backend, draft_backend, pool, members, i, tel)? {
             if granted > 0 {
                 tel.tr.record(TraceEvent::BlocksGranted { id: members[i].id, blocks: granted });
             }
             return Ok(false);
-        };
-        let cached = members[j].gen.len();
-        let blocks = backend.reclaim_kv_blocks(&mut members[j].gen)?;
-        tel.m.record_preemption(blocks.len() as u64, cached as u64);
-        members[j].preempted = true;
-        tel.tr.record(TraceEvent::Preempted { id: members[j].id, blocks: blocks.len(), cached });
-        for b in blocks {
-            pool.release(b);
         }
     }
     if granted > 0 {
@@ -873,9 +1070,46 @@ fn ensure_capacity(
     Ok(true)
 }
 
-/// Return every block of `members[i]` to the pool (completion/failure).
+/// [`ensure_capacity`] for the *draft* cache of a speculative member:
+/// same pool, same youngest-first preemption, blocks granted through
+/// the draft backend so the geometry check runs against the right
+/// cache.
+fn ensure_draft_capacity(
+    backend: &dyn Backend,
+    draft_backend: &dyn Backend,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    i: usize,
+    extra: usize,
+    tel: &Telemetry,
+) -> Result<bool, String> {
+    let need = members[i].draft_len() + extra;
+    let mut granted = 0usize;
+    while members[i].draft_capacity() < need {
+        if let Some(block) = pool.alloc() {
+            let dgen = members[i].draft.as_mut().expect("speculative member has a draft cache");
+            draft_backend.grant_kv_block(dgen, block)?;
+            granted += 1;
+            continue;
+        }
+        if !preempt_youngest(backend, Some(draft_backend), pool, members, i, tel)? {
+            if granted > 0 {
+                tel.tr.record(TraceEvent::BlocksGranted { id: members[i].id, blocks: granted });
+            }
+            return Ok(false);
+        }
+    }
+    if granted > 0 {
+        tel.tr.record(TraceEvent::BlocksGranted { id: members[i].id, blocks: granted });
+    }
+    Ok(true)
+}
+
+/// Return every block of `members[i]` to the pool (completion/failure)
+/// — the draft cache included, when the member has one.
 fn reclaim_to_pool(
     backend: &dyn Backend,
+    draft_backend: Option<&dyn Backend>,
     pool: &mut BlockPool,
     members: &mut [SeqState],
     i: usize,
@@ -883,6 +1117,13 @@ fn reclaim_to_pool(
     if let Ok(blocks) = backend.reclaim_kv_blocks(&mut members[i].gen) {
         for b in blocks {
             pool.release(b);
+        }
+    }
+    if let (Some(db), Some(dgen)) = (draft_backend, members[i].draft.as_mut()) {
+        if let Ok(blocks) = db.reclaim_kv_blocks(dgen) {
+            for b in blocks {
+                pool.release(b);
+            }
         }
     }
 }
@@ -912,12 +1153,19 @@ fn generation_round<V: BackendSet>(
     set: &V,
     queues: &mut [VariantQueue],
     active: &mut Vec<SeqState>,
+    spec: Option<SpecResolved>,
     tel: &Telemetry,
 ) {
     if active.is_empty() {
         return;
     }
     for qi in 0..queues.len() {
+        // Rounds on every queue but the draft's own run speculatively:
+        // resolve the draft queue's name before borrowing this one.
+        let spec_draft: Option<(String, usize)> = match spec {
+            Some(sp) if sp.draft_qi != qi => Some((queues[sp.draft_qi].name.clone(), sp.k)),
+            _ => None,
+        };
         let vq = &mut queues[qi];
         // Extract this variant's sequences and restore admission order
         // (ids are monotone, so the sort is the FIFO ground truth no
@@ -953,9 +1201,43 @@ fn generation_round<V: BackendSet>(
                 .collect();
             compose_round(&descs, vq.cap, vq.prefill_chunk)
         };
-        let found = set.run(&vq.name, &mut |backend| {
-            run_variant_round(backend, &vq.name, &plan, &mut pool, &mut members, &mut fates, tel);
-        });
+        let prefill_chunk = vq.prefill_chunk;
+        let found = match &spec_draft {
+            None => set.run(&vq.name, &mut |backend| {
+                run_variant_round(
+                    backend,
+                    None,
+                    &vq.name,
+                    &plan,
+                    &mut pool,
+                    &mut members,
+                    &mut fates,
+                    prefill_chunk,
+                    tel,
+                );
+            }),
+            Some((draft_name, k)) => {
+                // Nested lookups hand the round both backends at once;
+                // `run` takes `&self`, so the borrows compose.
+                let mut draft_found = false;
+                let target_found = set.run(&vq.name, &mut |backend| {
+                    draft_found = set.run(draft_name, &mut |draft| {
+                        run_variant_round(
+                            backend,
+                            Some((draft, *k)),
+                            &vq.name,
+                            &plan,
+                            &mut pool,
+                            &mut members,
+                            &mut fates,
+                            prefill_chunk,
+                            tel,
+                        );
+                    });
+                });
+                target_found && draft_found
+            }
+        };
         if !found {
             for f in fates.iter_mut() {
                 if matches!(f, Fate::Active) {
@@ -970,16 +1252,23 @@ fn generation_round<V: BackendSet>(
 }
 
 /// Execute one composed round against the backend (single `run`
-/// callback: grants, preemptions, decode batch, prefill chunk, picks).
+/// callback: grants, preemptions, decode batch or speculative
+/// draft/verify steps, prefill chunk, picks). `spec` carries the draft
+/// backend and per-round draft length when this variant's rounds
+/// speculate.
+#[allow(clippy::too_many_arguments)]
 fn run_variant_round(
     backend: &dyn Backend,
+    spec: Option<(&dyn Backend, usize)>,
     variant: &str,
     plan: &crate::sched::RoundPlan,
     pool: &mut BlockPool,
     members: &mut [SeqState],
     fates: &mut [Fate],
+    prefill_chunk: usize,
     tel: &Telemetry,
 ) {
+    let draft_backend = spec.map(|(b, _)| b);
     // --- Decode group: assure capacity in FIFO order. A member whose
     // pending changed (preempted by an older peer's grant) drops out of
     // this round; one that cannot get a block defers to the next.
@@ -991,11 +1280,20 @@ fn run_variant_round(
         if !matches!(fates[i], Fate::Active) || members[i].pending() != 1 {
             continue;
         }
-        match ensure_capacity(backend, pool, members, i, 1, tel) {
+        // Speculative members run their own draft/verify step; a member
+        // with one token left decodes plainly instead (a draft round
+        // cannot beat a single forward).
+        if let Some((db, k)) = spec {
+            if members[i].draft.is_some() && members[i].produced.len() + 1 < members[i].max_new {
+                spec_step(backend, db, k, pool, members, i, fates, prefill_chunk, tel);
+                continue;
+            }
+        }
+        match ensure_capacity(backend, draft_backend, pool, members, i, 1, tel) {
             Ok(true) => decode_idx.push(i),
             Ok(false) => {}
             Err(e) => {
-                reclaim_to_pool(backend, pool, members, i);
+                reclaim_to_pool(backend, draft_backend, pool, members, i);
                 fates[i] = Fate::Failed(e);
             }
         }
@@ -1031,8 +1329,26 @@ fn run_variant_round(
                     .filter(|(_, &ok)| ok)
                     .map(|(&i, _)| members[i].gen.len() as u64)
                     .sum();
+                let mut emitted = 0u64;
+                for (&i, row) in decode_idx.iter().zip(rows) {
+                    match row {
+                        Ok(logits) => {
+                            let before = members[i].produced.len();
+                            let done = apply_pick(&mut members[i], &logits);
+                            emitted += (members[i].produced.len() - before) as u64;
+                            if done {
+                                reclaim_to_pool(backend, draft_backend, pool, members, i);
+                                fates[i] = Fate::Done;
+                            }
+                        }
+                        Err(e) => {
+                            reclaim_to_pool(backend, draft_backend, pool, members, i);
+                            fates[i] = Fate::Failed(e);
+                        }
+                    }
+                }
                 if seqs > 0 {
-                    tel.m.record_decode(seqs, cache_tokens, exec_elapsed);
+                    tel.m.record_decode(seqs, emitted, cache_tokens, exec_elapsed);
                     if tel.tr.enabled() {
                         tel.tr.record(TraceEvent::DecodeRound {
                             variant: variant.to_string(),
@@ -1041,26 +1357,12 @@ fn run_variant_round(
                         });
                     }
                 }
-                for (&i, row) in decode_idx.iter().zip(rows) {
-                    match row {
-                        Ok(logits) => {
-                            if apply_pick(&mut members[i], &logits) {
-                                reclaim_to_pool(backend, pool, members, i);
-                                fates[i] = Fate::Done;
-                            }
-                        }
-                        Err(e) => {
-                            reclaim_to_pool(backend, pool, members, i);
-                            fates[i] = Fate::Failed(e);
-                        }
-                    }
-                }
             }
             Err(e) => {
                 // Call-level backend error: fail the whole group rather
                 // than looping forever.
                 for &i in &decode_idx {
-                    reclaim_to_pool(backend, pool, members, i);
+                    reclaim_to_pool(backend, draft_backend, pool, members, i);
                     fates[i] = Fate::Failed(e.clone());
                 }
             }
@@ -1081,11 +1383,11 @@ fn run_variant_round(
     }
     let Some(i) = next_prefill else { return };
     let chunk_len = members[i].pending().min(chunk_max.max(1));
-    match ensure_capacity(backend, pool, members, i, chunk_len, tel) {
+    match ensure_capacity(backend, draft_backend, pool, members, i, chunk_len, tel) {
         Ok(true) => {}
         Ok(false) => return,
         Err(e) => {
-            reclaim_to_pool(backend, pool, members, i);
+            reclaim_to_pool(backend, draft_backend, pool, members, i);
             fates[i] = Fate::Failed(e);
             return;
         }
@@ -1107,12 +1409,253 @@ fn run_variant_round(
             // Chunk reached the end of the feed stream → a pick is due
             // from the last position's logits.
             if members[i].pending() == 0 && apply_pick(&mut members[i], &logits) {
-                reclaim_to_pool(backend, pool, members, i);
+                reclaim_to_pool(backend, draft_backend, pool, members, i);
                 fates[i] = Fate::Done;
+                return;
             }
         }
         Err(e) => {
-            reclaim_to_pool(backend, pool, members, i);
+            reclaim_to_pool(backend, draft_backend, pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return;
+        }
+    }
+    // A speculative member rides a draft catch-up chunk along with its
+    // target prefill, so the draft cache is warm (one behind the feed)
+    // by the time the sequence turns decode-ready.
+    if let Some(db) = draft_backend {
+        if members[i].draft.is_some() {
+            draft_catchup(backend, db, pool, members, i, fates, chunk_max, tel);
+        }
+    }
+}
+
+/// Absorb up to `chunk_max` feed tokens into `members[i]`'s draft
+/// cache, stopping one short of the feed end — the pending token is
+/// only ever fed by a draft *decode*, mirroring the target's own
+/// prefill discipline. Returns `false` when the chunk could not run
+/// this round (capacity deferral or failure — fates already set).
+#[allow(clippy::too_many_arguments)]
+fn draft_catchup(
+    backend: &dyn Backend,
+    draft_backend: &dyn Backend,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    i: usize,
+    fates: &mut [Fate],
+    chunk_max: usize,
+    tel: &Telemetry,
+) -> bool {
+    let feed_len = members[i].prompt.len() + members[i].produced.len();
+    let start = members[i].draft_len();
+    let lag = feed_len.saturating_sub(start);
+    debug_assert!(lag >= 1, "draft cache may never absorb the pending feed token");
+    if lag <= 1 {
+        return true;
+    }
+    let chunk_len = (lag - 1).min(chunk_max.max(1));
+    match ensure_draft_capacity(backend, draft_backend, pool, members, i, chunk_len, tel) {
+        Ok(true) => {}
+        Ok(false) => return false,
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return false;
+        }
+    }
+    let tokens: Vec<i32> = (start..start + chunk_len).map(|p| members[i].feed_at(p)).collect();
+    let t_exec = Instant::now();
+    let dgen = members[i].draft.as_mut().expect("speculative member has a draft cache");
+    let res = draft_backend.prefill_chunk(dgen, &tokens);
+    let exec_elapsed = t_exec.elapsed();
+    tel.m.record_prefill(chunk_len as u64, exec_elapsed);
+    tel.tr.record(TraceEvent::PrefillChunk {
+        id: members[i].id,
+        tokens: chunk_len,
+        cached: members[i].draft_len(),
+        dur_us: exec_elapsed.as_micros() as u64,
+    });
+    match res {
+        Ok(_) => true,
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+            fates[i] = Fate::Failed(e);
+            false
+        }
+    }
+}
+
+/// One speculative draft/verify step for decode-ready member `i`.
+///
+/// The draft variant proposes up to `k` greedy tokens beyond the
+/// pending one; the target absorbs the pending token plus every draft
+/// in a single [`Backend::verify_draft`] forward (`k_eff + 1` logit
+/// rows) and the member's own sampler replays its picks against those
+/// rows — exactly one draw per emitted token, in stream order, so the
+/// emitted sequence is token-for-token identical to plain decode. The
+/// first mismatching row's pick *is* the correction token; positions
+/// past the last kept token roll back bit-exactly in both caches and
+/// freed tail blocks return to the pool.
+#[allow(clippy::too_many_arguments)]
+fn spec_step(
+    backend: &dyn Backend,
+    draft_backend: &dyn Backend,
+    k: usize,
+    pool: &mut BlockPool,
+    members: &mut [SeqState],
+    i: usize,
+    fates: &mut [Fate],
+    prefill_chunk: usize,
+    tel: &Telemetry,
+) {
+    // Catch the draft cache up to one-behind the feed stream (bounded
+    // chunk per round; recompute-on-resume after preemption lands here
+    // too). Still behind afterwards → draft again next round.
+    if !draft_catchup(backend, draft_backend, pool, members, i, fates, prefill_chunk, tel) {
+        return;
+    }
+    let feed_len = members[i].prompt.len() + members[i].produced.len();
+    if members[i].draft_len() + 1 < feed_len {
+        return;
+    }
+    // Never draft past the emission budget: the round emits at most
+    // `k_eff` accepted drafts plus one pick, so the verify forward
+    // never absorbs beyond the plain-decode peak occupancy.
+    let remaining = members[i].max_new - members[i].produced.len();
+    let k_eff = k.min(remaining - 1);
+    debug_assert!(k_eff >= 1, "caller guarantees a spec member has at least 2 tokens to go");
+    // Assure BOTH caches before any forward runs: a capacity deferral
+    // must leave no half-drafted state behind.
+    match ensure_capacity(backend, Some(draft_backend), pool, members, i, k_eff + 1, tel) {
+        Ok(true) => {}
+        Ok(false) => return,
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return;
+        }
+    }
+    match ensure_draft_capacity(backend, draft_backend, pool, members, i, k_eff, tel) {
+        Ok(true) => {}
+        Ok(false) => return,
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return;
+        }
+    }
+    // Draft k_eff tokens greedily off the draft cache, feeding the
+    // pending token first, then each proposal back in.
+    let base = members[i].gen.len();
+    let t_draft = Instant::now();
+    let mut drafted: Vec<i32> = Vec::with_capacity(k_eff);
+    let mut feed = members[i].feed_at(base);
+    for _ in 0..k_eff {
+        let dgen = members[i].draft.as_mut().expect("speculative member has a draft cache");
+        match draft_backend.decode(dgen, feed) {
+            Ok(logits) => {
+                let d = greedy_argmax(&logits);
+                drafted.push(d);
+                feed = d;
+            }
+            Err(e) => {
+                reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+                fates[i] = Fate::Failed(e);
+                return;
+            }
+        }
+    }
+    let draft_elapsed = t_draft.elapsed();
+    // Verify: one target forward absorbs the pending token plus every
+    // draft and returns one logit row per absorbed position.
+    let mut verify_tokens = Vec::with_capacity(k_eff + 1);
+    verify_tokens.push(members[i].feed_at(base));
+    verify_tokens.extend_from_slice(&drafted);
+    let t_verify = Instant::now();
+    let rows = match backend.verify_draft(&mut members[i].gen, &verify_tokens) {
+        Ok(rows) => rows,
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return;
+        }
+    };
+    let verify_elapsed = t_verify.elapsed();
+    let vocab = rows.len() / verify_tokens.len();
+    // Acceptance: replay the member's own sampler row by row. Row `j`
+    // holds the target's distribution after absorbing `verify_tokens[j]`
+    // — exactly what plain decode would have sampled from — and its
+    // pick is compared against the next drafted token. A mismatch
+    // emits the pick itself and stops; surviving all `k_eff` rows
+    // earns a bonus pick from the final row.
+    let before = members[i].produced.len();
+    let mut accepted = 0usize;
+    let mut finished = false;
+    for (j, row) in rows.chunks_exact(vocab).enumerate() {
+        let emitted_before = members[i].produced.len();
+        let done = apply_pick(&mut members[i], row);
+        let pick = members[i].produced.get(emitted_before).copied();
+        let matched = j < k_eff && pick == Some(drafted[j]);
+        if matched {
+            accepted += 1;
+        }
+        if done {
+            finished = true;
+            break;
+        }
+        if !matched {
+            break;
+        }
+    }
+    let emitted = members[i].produced.len() - before;
+    tel.m.record_spec_round(
+        k_eff as u64,
+        accepted as u64,
+        emitted as u64,
+        draft_elapsed,
+        verify_elapsed,
+    );
+    if tel.tr.enabled() {
+        tel.tr.record(TraceEvent::SpecRound {
+            id: members[i].id,
+            drafted: k_eff,
+            accepted,
+            emitted,
+            draft_us: draft_elapsed.as_micros() as u64,
+            verify_us: verify_elapsed.as_micros() as u64,
+        });
+    }
+    if finished {
+        reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+        fates[i] = Fate::Done;
+        return;
+    }
+    // Roll both caches back to the last kept position and release the
+    // freed tail blocks; the round's final pick becomes the pending
+    // token the next round absorbs.
+    let keep = base + 1 + accepted;
+    match backend.rollback_generation(&mut members[i].gen, keep) {
+        Ok(freed) => {
+            for b in freed {
+                pool.release(b);
+            }
+        }
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
+            fates[i] = Fate::Failed(e);
+            return;
+        }
+    }
+    let draft_keep = members[i].draft_len().min(keep);
+    let dgen = members[i].draft.as_mut().expect("speculative member has a draft cache");
+    match draft_backend.rollback_generation(dgen, draft_keep) {
+        Ok(freed) => {
+            for b in freed {
+                pool.release(b);
+            }
+        }
+        Err(e) => {
+            reclaim_to_pool(backend, Some(draft_backend), pool, members, i);
             fates[i] = Fate::Failed(e);
         }
     }

@@ -56,6 +56,17 @@
 //! [`Backend::decode_batch`] calls — the block layout is invisible to
 //! the math, so paged decode logits are bit-identical to the contiguous
 //! path.
+//!
+//! ## Speculative decoding
+//!
+//! [`Backend::verify_draft`] absorbs the pending token plus `k` drafted
+//! tokens in one cached forward and returns one `[vocab]` logit row per
+//! position, each bit-identical to the corresponding one-token decode;
+//! [`Backend::rollback_generation`] truncates the cache back to the
+//! last accepted position (returning wholly-dead paged tail blocks for
+//! the scheduler's pool). Together they let a cheap quantized draft
+//! variant propose tokens the target variant verifies in one batched
+//! step, with output provably identical to non-speculative decode.
 
 pub mod native;
 pub mod pjrt;
@@ -172,6 +183,37 @@ pub trait Backend {
     /// back to its pre-call state.
     fn prefill_chunk(&self, _gen: &mut Generation, _tokens: &[i32]) -> Result<Vec<f32>, String> {
         Err(format!("the {} backend does not support paged decoding", self.name()))
+    }
+
+    /// Speculative verification step: absorb `tokens` — the pending
+    /// (picked-but-unfed) token followed by the drafted continuation —
+    /// in **one** cached forward and return row-major
+    /// `[tokens.len(), vocab]` logits, one row per absorbed position.
+    /// Row `i` is bit-identical to the logits a one-token
+    /// [`Backend::decode`] of `tokens[i]` at that position would
+    /// return, so the caller can replay the exact non-speculative
+    /// sampling decision against each row. The generation advances by
+    /// `tokens.len()`; after deciding how many draft tokens survive,
+    /// the caller discards the rejected suffix with
+    /// [`Backend::rollback_generation`]. On error the cache is rolled
+    /// back to its pre-call state.
+    fn verify_draft(&self, _gen: &mut Generation, _tokens: &[i32]) -> Result<Vec<f32>, String> {
+        Err(format!("the {} backend does not support speculative decoding", self.name()))
+    }
+
+    /// Roll `gen`'s cache back to `len` absorbed tokens, discarding
+    /// every row past that point (the rejected draft tokens of a
+    /// [`Backend::verify_draft`] round). Rollback is exact: subsequent
+    /// decode logits are bit-identical to never having absorbed the
+    /// discarded rows. For paged caches, granted tail blocks left with
+    /// no live rows are returned so the scheduler can release them to
+    /// its pool; contiguous caches return an empty vec.
+    fn rollback_generation(
+        &self,
+        _gen: &mut Generation,
+        _len: usize,
+    ) -> Result<Vec<KvBlock>, String> {
+        Err(format!("the {} backend does not support speculative decoding", self.name()))
     }
 
     /// Kernel-path selection stats for this backend's resident model

@@ -486,6 +486,49 @@ impl Backend for NativeBackend {
         gen.advance(tokens.len());
         Ok(logits[(tokens.len() - 1) * v..].to_vec())
     }
+
+    /// Speculative verify: absorb the pending token plus the drafted
+    /// continuation in one cached forward and return **every** absorbed
+    /// position's logits (row-major `[tokens.len(), vocab]`), each row
+    /// bit-identical to a one-token [`Backend::decode`] at the same
+    /// position — so acceptance decisions replay the non-speculative
+    /// sampling decision exactly.
+    fn verify_draft(&self, gen: &mut Generation, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        if tokens.is_empty() {
+            return Err("verify_draft needs at least one token".to_string());
+        }
+        self.validate_tokens(tokens)?;
+        let par = self.decode_par();
+        let state = owned_state(gen, &self.model)?;
+        let logits = self.model.forward_cached_par(
+            tokens,
+            &mut state.cache,
+            &mut state.scratch,
+            par.as_ref(),
+        )?;
+        // Multi-token verifies size scratch to the verify batch
+        // (including a `k × vocab` f64 accumulator); steady-state decode
+        // needs single-row buffers only, so drop the batch-sized
+        // allocations.
+        if tokens.len() > 1 {
+            state.scratch = ForwardScratch::new();
+        }
+        gen.advance(tokens.len());
+        Ok(logits)
+    }
+
+    fn rollback_generation(
+        &self,
+        gen: &mut Generation,
+        len: usize,
+    ) -> Result<Vec<KvBlock>, String> {
+        let state = owned_state(gen, &self.model)?;
+        state.cache.rollback(len)?;
+        let freed = state.cache.release_tail_blocks();
+        let (len, cap) = (state.cache.len(), state.cache.capacity());
+        gen.set_occupancy(len, cap);
+        Ok(freed)
+    }
 }
 
 /// Named native backends, typically sharing one [`ExecPool`].
@@ -738,6 +781,53 @@ mod tests {
         assert!(rows[1].as_ref().unwrap_err().contains("different backend"));
         assert_eq!((good1.len(), foreign.len(), good2.len()), (4, 1, 3));
         assert!(backend.decode(&mut good1, 1).is_ok(), "survivors keep decoding");
+    }
+
+    /// The speculative contract on a contiguous cache: `verify_draft`'s
+    /// rows are bit-identical to sequential one-token decodes of the
+    /// same tokens, and after `rollback_generation` a resumed decode is
+    /// bit-identical to never having absorbed the rejected suffix.
+    #[test]
+    fn verify_draft_rows_match_decode_and_rollback_is_exact() {
+        let model = tiny_model();
+        let vocab = 64usize;
+        let prompt: Vec<i32> = (0..5).map(|i| ((i * 11 + 2) % 64) as i32).collect();
+        let draft: Vec<i32> = vec![9, 21, 33, 45];
+        for threads in [1, 3] {
+            let backend = NativeBackend::new(Arc::clone(&model), 2, 16, threads);
+            // Reference: sequential decodes of the same tokens.
+            let (mut refgen, _) = backend.start_generation(&prompt).unwrap();
+            let want: Vec<Vec<f32>> =
+                draft.iter().map(|&t| backend.decode(&mut refgen, t).unwrap()).collect();
+            // One verify forward returns the same rows, bit for bit.
+            let (mut gen, _) = backend.start_generation(&prompt).unwrap();
+            let rows = backend.verify_draft(&mut gen, &draft).unwrap();
+            assert_eq!(rows.len(), draft.len() * vocab);
+            assert_eq!(gen.len(), prompt.len() + draft.len());
+            for (i, want_row) in want.iter().enumerate() {
+                for (a, b) in rows[i * vocab..(i + 1) * vocab].iter().zip(want_row) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "verify row {i} diverges (t={threads})");
+                }
+            }
+            // Roll back past the first two tokens; a decode of a
+            // *different* continuation matches a fresh generation that
+            // never drafted.
+            let keep = prompt.len() + 2;
+            let freed = backend.rollback_generation(&mut gen, keep).unwrap();
+            assert!(freed.is_empty(), "contiguous rollback frees no blocks");
+            assert_eq!(gen.len(), keep);
+            let got = backend.decode(&mut gen, 50).unwrap();
+            let mut clean_prefix = prompt.clone();
+            clean_prefix.extend(&draft[..2]);
+            let (mut clean, _) = backend.start_generation(&clean_prefix).unwrap();
+            let want = backend.decode(&mut clean, 50).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "post-rollback decode diverges");
+            }
+            // Rolling forward is refused; the state stays usable.
+            assert!(backend.rollback_generation(&mut gen, 100).is_err());
+            assert!(backend.decode(&mut gen, 1).is_ok());
+        }
     }
 
     /// Generation misuse errors cleanly: empty/oversized prompts, bad

@@ -34,7 +34,7 @@ use gsr::eval::tables;
 use gsr::eval::EvalOpts;
 use gsr::obs::{MetricsServer, Obs, TraceEvent};
 use gsr::runtime::{Artifacts, Engine};
-use gsr::sched::{SamplingParams, SchedConfig};
+use gsr::sched::{SamplingParams, SchedConfig, SpecConfig};
 
 fn main() {
     let args = Args::from_env();
@@ -93,9 +93,16 @@ fn print_help() {
                  [--temperature T] [--top-k K] [--top-p P] [--seed N]\n\
                                          seeded sampling (default: greedy)\n\
                  [--page-size N] [--kv-blocks N] [--prefill-chunk N]\n\
+                 [--speculate DRAFT[:k]] self-speculative decoding: resident\n\
+                                         variant DRAFT proposes k tokens per\n\
+                                         round (default 4), verified by the\n\
+                                         target — output is token-for-token\n\
+                                         identical to non-speculative decode\n\
                  [--plan F [--calib F]] [--variants A,B] [--batch N]\n\
                  [--threads N] [--bits N] [--kernels reference|fast]\n\
-                 [--synthetic [--seq N]] artifact-free fp demo\n\
+                 [--synthetic [--seq N]] artifact-free fp demo; with\n\
+                                         --speculate, the draft variant is\n\
+                                         quantized in-process (default W2)\n\
            gen-corpus [--bytes N]      write the synthetic corpus\n\
            quantize-native [--r1 K --r4 K --seed N]\n\
                                        pure-Rust W2 quantization (no Python)\n\
@@ -392,18 +399,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 }
 
 /// Artifact-free serving: the structured synthetic checkpoint `gsr
-/// search --synthetic` uses, served fp-only on the native backend
-/// against a freshly generated corpus — the CI/smoke path for the
-/// observability outputs (`--trace`, `--metrics-addr`,
-/// `--metrics-dump`) with no PJRT or artifact dependency.
+/// search --synthetic` uses, served on the native backend against a
+/// freshly generated corpus — the CI/smoke path for the observability
+/// outputs (`--trace`, `--metrics-addr`, `--metrics-dump`) with no
+/// PJRT or artifact dependency. With `--speculate DRAFT[:k]` the named
+/// draft variant is quantized in-process from the same checkpoint
+/// (default W2), so the self-speculative decode path runs with no
+/// artifacts either.
 fn synthetic_server(
     args: &Args,
     policy: BatchPolicy,
     seq: usize,
     obs: &Obs,
 ) -> Result<(Server, Vec<u8>), String> {
-    use gsr::exec::{NativeBackend, NativeSet};
+    use gsr::exec::{ExecPool, NativeBackend, NativeSet};
     use gsr::model::{DenseModel, FpParams, ModelCfg};
+    use gsr::quant::{build_plan_rotations, quantize_native_plan_with};
 
     if args.opt("plan").is_some() || args.opt("variants").is_some() {
         return Err(
@@ -411,17 +422,33 @@ fn synthetic_server(
                 .to_string(),
         );
     }
+    let sched = sched_from_args(args)?;
     let cfg = ModelCfg::default();
     let seed = args.opt_usize("seed", 2025) as u64;
     let fp = FpParams::synthetic(&cfg, seed);
-    let model = DenseModel::Fp { cfg: cfg.clone(), params: fp };
+    let pool = Arc::new(ExecPool::new(args.opt_threads()));
     let mut set = NativeSet::new();
-    set.insert(
-        "fp",
-        NativeBackend::new(Arc::new(model), policy.max_batch, seq, args.opt_threads()),
-    );
+    if let Some(spec) = &sched.speculate {
+        let plan = plan_from_args(args, &cfg)?;
+        let rots = build_plan_rotations(&cfg, &plan)?;
+        let bits = args.opt_usize("bits", 2) as u32;
+        let (mut qp, sse, _) = quantize_native_plan_with(&fp, &cfg, &rots, bits, None)?;
+        qp.kernels = kernel_mode_from_args(args)?;
+        println!(
+            "quantized W{bits} draft variant {:?} in-process for --speculate \
+             (weight SSE {sse:.2})",
+            spec.draft
+        );
+        let model = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None };
+        set.insert(
+            &spec.draft,
+            NativeBackend::with_pool(Arc::new(model), policy.max_batch, seq, Arc::clone(&pool)),
+        );
+    }
+    let model = DenseModel::Fp { cfg: cfg.clone(), params: fp };
+    set.insert("fp", NativeBackend::with_pool(Arc::new(model), policy.max_batch, seq, pool));
     let corpus = CorpusGenerator::new(gsr::data::SEED_CORPUS).generate(1 << 14);
-    let server = Server::start_native_obs(set, policy, sched_from_args(args), obs)?;
+    let server = Server::start_native_obs(set, policy, sched, obs)?;
     Ok((server, corpus))
 }
 
@@ -500,20 +527,27 @@ fn start_native_server(
         set.insert("searched", NativeBackend::with_pool(Arc::new(model), b, s, pool));
         variants.push("searched".to_string());
     }
-    Ok((Server::start_native_obs(set, policy, sched_from_args(args), obs)?, variants))
+    Ok((Server::start_native_obs(set, policy, sched_from_args(args)?, obs)?, variants))
 }
 
 /// Paged-KV scheduler knobs for the native serving path: `--page-size`
 /// (tokens per KV block), `--kv-blocks` (pool size per variant, 0 =
 /// auto-size to the backend's contiguous capacity), `--prefill-chunk`
-/// (prompt tokens absorbed per scheduling round).
-fn sched_from_args(args: &Args) -> SchedConfig {
+/// (prompt tokens absorbed per scheduling round), `--speculate
+/// DRAFT[:k]` (self-speculative decoding: the named resident variant
+/// drafts k tokens per round, verified bit-exactly by the target).
+fn sched_from_args(args: &Args) -> Result<SchedConfig, String> {
     let d = SchedConfig::default();
-    SchedConfig {
+    let speculate = match args.opt("speculate") {
+        Some(s) => Some(SpecConfig::parse(s)?),
+        None => None,
+    };
+    Ok(SchedConfig {
         page_size: args.opt_usize("page-size", d.page_size).max(1),
         kv_blocks: args.opt_usize("kv-blocks", d.kv_blocks),
         prefill_chunk: args.opt_usize("prefill-chunk", d.prefill_chunk).max(1),
-    }
+        speculate,
+    })
 }
 
 /// Sampling configuration from `--temperature/--top-k/--top-p/--seed`.

@@ -352,6 +352,50 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Roll back to `len` cached positions, discarding every row past
+    /// that point. This is the speculative-decoding rollback: after a
+    /// verify forward absorbed k drafted tokens, the cache truncates to
+    /// the last *accepted* position and decode resumes as if the
+    /// rejected tokens were never fed — rows are positional, so the
+    /// discarded entries are overwritten by the next append and the
+    /// resulting logits are bit-identical to never having drafted.
+    ///
+    /// Rolling "back" past the current length is refused (it would
+    /// silently fabricate cache rows). Capacity is untouched; paged
+    /// callers release surplus tail blocks separately via
+    /// [`KvCache::release_tail_blocks`].
+    pub fn rollback(&mut self, len: usize) -> Result<(), String> {
+        if len > self.len {
+            return Err(format!(
+                "kv rollback target {len} exceeds cached length {}",
+                self.len
+            ));
+        }
+        self.truncate(len);
+        Ok(())
+    }
+
+    /// Return the granted tail blocks that hold no live rows — every
+    /// block wholly past `ceil(len / page)` — shrinking capacity
+    /// accordingly, so a rolled-back sequence hands its surplus pages
+    /// straight back to the block pool instead of squatting on them.
+    /// Contiguous caches (and caches whose last block is partially
+    /// live) return an empty vec.
+    pub fn release_tail_blocks(&mut self) -> Vec<KvBlock> {
+        match &mut self.store {
+            KvStore::Contig(_) => Vec::new(),
+            KvStore::Paged { page, blocks, .. } => {
+                let live = self.len.div_ceil(*page);
+                if live >= blocks.len() {
+                    return Vec::new();
+                }
+                let freed = blocks.split_off(live);
+                self.capacity = blocks.len() * *page;
+                freed
+            }
+        }
+    }
+
     /// Roll back to `len` cached positions (error-path cleanup: a failed
     /// chunk must not leave half-appended rows behind). Paged storage is
     /// positional, so rollback is just the length reset — rows past

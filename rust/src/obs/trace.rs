@@ -66,6 +66,11 @@ pub enum TraceEvent {
     Preempted { id: u64, blocks: usize, cached: usize },
     /// A previously preempted sequence started recomputing.
     Resumed { id: u64 },
+    /// One speculative draft/verify round: `drafted` tokens proposed by
+    /// the draft variant, `accepted` of them kept after target
+    /// verification, `emitted` tokens appended to the output (accepted
+    /// drafts plus the target's own pick).
+    SpecRound { id: u64, drafted: usize, accepted: usize, emitted: usize, draft_us: u64, verify_us: u64 },
     /// Kernel-path selection for a variant at executor start.
     KernelPath { variant: String, mode: &'static str, packed: usize, dense_fallbacks: usize },
     /// One layer quantized: chosen rotation spec and proxy error.
@@ -88,6 +93,7 @@ impl TraceEvent {
             TraceEvent::BlocksGranted { .. } => "blocks_granted",
             TraceEvent::Preempted { .. } => "preempted",
             TraceEvent::Resumed { .. } => "resumed",
+            TraceEvent::SpecRound { .. } => "spec_round",
             TraceEvent::KernelPath { .. } => "kernel_path",
             TraceEvent::QuantLayer { .. } => "quant_layer",
             TraceEvent::SearchLayer { .. } => "search_layer",
@@ -103,7 +109,8 @@ impl TraceEvent {
             | TraceEvent::PrefillChunk { id, .. }
             | TraceEvent::BlocksGranted { id, .. }
             | TraceEvent::Preempted { id, .. }
-            | TraceEvent::Resumed { id } => Some(*id),
+            | TraceEvent::Resumed { id }
+            | TraceEvent::SpecRound { id, .. } => Some(*id),
             _ => None,
         }
     }
@@ -151,6 +158,16 @@ impl TraceEvent {
                 vec![("id", id(*i)), ("blocks", n(*blocks)), ("cached", n(*cached))]
             }
             TraceEvent::Resumed { id: i } => vec![("id", id(*i))],
+            TraceEvent::SpecRound { id: i, drafted, accepted, emitted, draft_us, verify_us } => {
+                vec![
+                    ("id", id(*i)),
+                    ("drafted", n(*drafted)),
+                    ("accepted", n(*accepted)),
+                    ("emitted", n(*emitted)),
+                    ("draft_us", id(*draft_us)),
+                    ("verify_us", id(*verify_us)),
+                ]
+            }
             TraceEvent::KernelPath { variant, mode, packed, dense_fallbacks } => vec![
                 ("variant", Json::str(variant)),
                 ("mode", Json::str(mode)),
@@ -262,8 +279,9 @@ impl FlightRecorder {
     /// Export as a Chrome trace-event JSON object (`traceEvents`
     /// array), loadable in Perfetto or `chrome://tracing`. Request
     /// spans become async begin/end pairs keyed by request id; timed
-    /// events (`prefill_chunk`, `decode_round`, `batch_exec`) become
-    /// complete (`"X"`) slices; the rest become instants.
+    /// events (`prefill_chunk`, `decode_round`, `batch_exec`,
+    /// `spec_round`) become complete (`"X"`) slices; the rest become
+    /// instants.
     pub fn export_chrome(&self) -> Json {
         let mut events = Vec::new();
         for (tid, (label, _dropped, records)) in self.snapshot().into_iter().enumerate() {
@@ -349,6 +367,13 @@ fn chrome_event(tid: usize, r: &TraceRecord) -> Json {
             let mut e = base("X", r.event.name());
             e.push(("ts", Json::num(r.ts_us.saturating_sub(*dur_us) as f64)));
             e.push(("dur", Json::num(*dur_us as f64)));
+            Json::obj(e)
+        }
+        TraceEvent::SpecRound { draft_us, verify_us, .. } => {
+            let dur = draft_us + verify_us;
+            let mut e = base("X", r.event.name());
+            e.push(("ts", Json::num(r.ts_us.saturating_sub(dur) as f64)));
+            e.push(("dur", Json::num(dur as f64)));
             Json::obj(e)
         }
         _ => {

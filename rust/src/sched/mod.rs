@@ -32,6 +32,43 @@ pub use block::BlockPool;
 pub use policy::{blocks_for, compose_round, RoundPlan, SeqDesc};
 pub use sampler::{Sampler, SamplingParams};
 
+/// Self-speculative decoding configuration: a cheap resident variant
+/// drafts `k` tokens per round and the request's target variant
+/// verifies them in one batched forward. Acceptance replays the
+/// target's own sampling decision against the verify logits, so output
+/// is token-for-token identical to non-speculative decode — speculation
+/// only changes *when* forwards run, never what is emitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Resident variant that proposes draft tokens (greedy argmax).
+    pub draft: String,
+    /// Draft tokens proposed per draft/verify round.
+    pub k: usize,
+}
+
+impl SpecConfig {
+    /// Parse the CLI form `DRAFT[:k]` (default k = 4). Rejects empty
+    /// names and `k == 0` — a zero-token draft round cannot progress.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let (draft, k) = match spec.rsplit_once(':') {
+            Some((name, k)) => {
+                let k = k
+                    .parse::<usize>()
+                    .map_err(|_| format!("--speculate: bad draft length {k:?} in {spec:?}"))?;
+                (name, k)
+            }
+            None => (spec, 4),
+        };
+        if draft.is_empty() {
+            return Err("--speculate needs a draft variant name (DRAFT[:k])".to_string());
+        }
+        if k == 0 {
+            return Err("--speculate: draft length k must be at least 1".to_string());
+        }
+        Ok(Self { draft: draft.to_string(), k })
+    }
+}
+
 /// Scheduler configuration carried from the CLI into the serving
 /// executor.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -43,11 +80,13 @@ pub struct SchedConfig {
     pub kv_blocks: usize,
     /// Maximum prompt tokens absorbed per prefill chunk.
     pub prefill_chunk: usize,
+    /// Speculative decoding (`None` = plain one-token decode rounds).
+    pub speculate: Option<SpecConfig>,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        Self { page_size: 16, kv_blocks: 0, prefill_chunk: 32 }
+        Self { page_size: 16, kv_blocks: 0, prefill_chunk: 32, speculate: None }
     }
 }
 
@@ -77,7 +116,20 @@ mod tests {
         let cfg = SchedConfig { kv_blocks: 5, ..SchedConfig::default() };
         assert_eq!(cfg.pool_blocks(4, 64), 5);
         // Unaligned seq rounds up.
-        let cfg = SchedConfig { page_size: 16, kv_blocks: 0, prefill_chunk: 32 };
+        let cfg = SchedConfig { page_size: 16, ..SchedConfig::default() };
         assert_eq!(cfg.pool_blocks(1, 17), 2);
+    }
+
+    #[test]
+    fn spec_config_parses_draft_and_k() {
+        assert_eq!(SpecConfig::parse("q2").unwrap(), SpecConfig { draft: "q2".into(), k: 4 });
+        assert_eq!(
+            SpecConfig::parse("searched:6").unwrap(),
+            SpecConfig { draft: "searched".into(), k: 6 }
+        );
+        assert!(SpecConfig::parse("").is_err(), "empty spec");
+        assert!(SpecConfig::parse(":3").is_err(), "missing draft name");
+        assert!(SpecConfig::parse("q2:0").is_err(), "zero draft length");
+        assert!(SpecConfig::parse("q2:x").is_err(), "non-numeric draft length");
     }
 }

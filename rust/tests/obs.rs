@@ -57,7 +57,7 @@ fn trace_captures_mixed_load_with_preemption_and_exports() {
     let mut set = NativeSet::new();
     set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 4, s, 2));
     let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
-    let sched = SchedConfig { page_size: 4, kv_blocks: 5, prefill_chunk: 3 };
+    let sched = SchedConfig { page_size: 4, kv_blocks: 5, prefill_chunk: 3, speculate: None };
     let obs = Obs::new();
     obs.recorder.enable();
     let server = Server::start_native_obs(set, policy, sched, &obs).unwrap();

@@ -229,6 +229,125 @@ fn feed_chunks(
     out
 }
 
+/// The speculative verify/rollback contract at block edges: a
+/// `verify_draft` batch whose absorbed positions straddle a block
+/// boundary returns one bit-exact logit row per position (equal to the
+/// plain decode chain wherever the fed tokens agree), `rollback_generation`
+/// to the last accepted position frees exactly the tail blocks past it
+/// (returned to the pool, conservation intact), and the resumed decode
+/// is bit-identical to a generation that never drafted.
+#[test]
+fn prop_verify_rollback_across_block_edges_is_bit_exact() {
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 53);
+    let model = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp });
+    let backend = NativeBackend::new(Arc::clone(&model), 2, 24, 2);
+    let (nl, w) = backend.kv_block_geometry().expect("native backend is paged-capable");
+    let v = cfg.vocab;
+    let page = 4;
+    let mut rolled_past_an_edge = 0usize;
+    for_seeds(8, |seed, rng| {
+        let plen = 5 + rng.next_below(4) as usize; // prompt 5..=8
+        let k = 2 + rng.next_below(3) as usize; // drafts 2..=4 per round
+        let accepted = rng.next_below(k as u64 + 1) as usize; // 0..=k
+        let mut pool = BlockPool::new(nl, w, page, blocks_for(24, page));
+        let prompt: Vec<i32> = (0..plen).map(|i| ((i * 11 + seed as usize) % v) as i32).collect();
+
+        // Reference chain: plain decode, never drafting. `toks[0]` is
+        // the pick off the prefill logits (the pending token);
+        // `ref_logits[j]` for j >= 1 is the row after absorbing
+        // `toks[j - 1]`.
+        let mut ref_gen = backend.start_paged_generation(page).unwrap();
+        let last = feed_chunks(&backend, &mut pool, &mut ref_gen, &prompt);
+        let mut toks = vec![greedy_argmax(&last)];
+        let mut ref_logits = vec![last];
+        for _ in 0..k + 2 {
+            if ref_gen.remaining() < 1 {
+                backend.grant_kv_block(&mut ref_gen, pool.alloc().unwrap()).unwrap();
+            }
+            let l = backend.decode(&mut ref_gen, *toks.last().unwrap()).unwrap();
+            toks.push(greedy_argmax(&l));
+            ref_logits.push(l);
+        }
+        for b in backend.reclaim_kv_blocks(&mut ref_gen).unwrap() {
+            pool.release(b);
+        }
+        assert_eq!(pool.in_use(), 0, "seed {seed}: reference blocks leaked");
+
+        // Speculative path: same prompt, then one verify batch feeding
+        // the pending token plus k drafts — the first `accepted` of
+        // them correct, the rest deliberately wrong.
+        let mut gen = backend.start_paged_generation(page).unwrap();
+        feed_chunks(&backend, &mut pool, &mut gen, &prompt);
+        let base = gen.len();
+        assert_eq!(base, plen);
+        let mut verify = vec![toks[0]];
+        for j in 0..k {
+            let t = toks[j + 1];
+            verify.push(if j < accepted { t } else { (t + 1) % v as i32 });
+        }
+        while gen.remaining() < verify.len() {
+            backend.grant_kv_block(&mut gen, pool.alloc().unwrap()).unwrap();
+        }
+        let rows = backend.verify_draft(&mut gen, &verify).unwrap();
+        assert_eq!(rows.len(), verify.len() * v, "seed {seed}: one row per absorbed position");
+        assert_eq!(gen.len(), base + k + 1, "seed {seed}: verify absorbs every fed token");
+        // Rows where the fed prefix matches the reference chain must be
+        // bit-identical to the plain decode logits.
+        for j in 0..=accepted.min(k) {
+            assert_bits(
+                &rows[j * v..(j + 1) * v],
+                &ref_logits[j + 1],
+                &format!("seed {seed}: verify row {j}"),
+            );
+        }
+
+        // Roll back to the last kept position: pending pick + accepted
+        // drafts. Exactly the tail blocks past it come back.
+        let keep = base + 1 + accepted;
+        let past_end = gen.len() + 1;
+        assert!(
+            backend.rollback_generation(&mut gen, past_end).is_err(),
+            "seed {seed}: rollback beyond occupancy must refuse"
+        );
+        let freed = backend.rollback_generation(&mut gen, keep).unwrap();
+        let want_freed = blocks_for(base + k + 1, page) - blocks_for(keep, page);
+        assert_eq!(freed.len(), want_freed, "seed {seed}: tail blocks past keep are freed");
+        rolled_past_an_edge += usize::from(want_freed > 0);
+        assert_eq!(gen.len(), keep, "seed {seed}: rollback lands on keep");
+        assert_eq!(
+            gen.capacity(),
+            blocks_for(keep, page) * page,
+            "seed {seed}: capacity shrinks with the freed blocks"
+        );
+        for b in freed {
+            pool.release(b);
+        }
+        assert_eq!(
+            pool.in_use() * page,
+            gen.capacity(),
+            "seed {seed}: pool inventory conserved through rollback"
+        );
+
+        // Resume decoding from the correction pick: bit-identical to
+        // the chain that never drafted.
+        if gen.remaining() < 1 {
+            backend.grant_kv_block(&mut gen, pool.alloc().unwrap()).unwrap();
+        }
+        let l = backend.decode(&mut gen, toks[accepted + 1]).unwrap();
+        assert_bits(
+            &l,
+            &ref_logits[accepted + 2],
+            &format!("seed {seed}: post-rollback decode"),
+        );
+        assert_eq!(gen.len(), keep + 1);
+    });
+    assert!(
+        rolled_past_an_edge >= 1,
+        "the seed sweep must include a rollback that crosses a block edge"
+    );
+}
+
 /// The backend's paged contract end to end: chunked prefill matches the
 /// contiguous prefill bit-for-bit, reclaim returns every block to the
 /// pool (conservation), and a preempted sequence that recomputes its

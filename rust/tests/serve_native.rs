@@ -10,7 +10,7 @@ use gsr::coordinator::{BatchPolicy, Server};
 use gsr::exec::{Backend, ExecPool, NativeBackend, NativeSet};
 use gsr::model::{DenseModel, FpParams, ModelCfg, R4Kind};
 use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
-use gsr::sched::{SamplingParams, SchedConfig};
+use gsr::sched::{SamplingParams, SchedConfig, SpecConfig};
 use gsr::transform::R1Kind;
 
 fn tiny_cfg() -> ModelCfg {
@@ -499,7 +499,7 @@ fn paged_serving_completes_beyond_contiguous_capacity() {
     let mut set = NativeSet::new();
     set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 4, s, 2));
     let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
-    let sched = SchedConfig { page_size: 4, kv_blocks: 5, prefill_chunk: 3 };
+    let sched = SchedConfig { page_size: 4, kv_blocks: 5, prefill_chunk: 3, speculate: None };
     let server = Server::start_native_sched(set, policy, sched).unwrap();
     // 3 sequences, each peaking at 4 + 8 − 1 = 11 cached tokens (> seq
     // = 8), with an aggregate peak of 33 against a 20-token pool.
@@ -563,7 +563,7 @@ fn sampled_generation_replays_bit_identically_under_different_co_load() {
     let mut set = NativeSet::new();
     set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), b, s, 2));
     let policy = BatchPolicy { max_batch: b, max_wait: Duration::from_millis(2) };
-    let sched = SchedConfig { page_size: 4, kv_blocks: 12, prefill_chunk: 3 };
+    let sched = SchedConfig { page_size: 4, kv_blocks: 12, prefill_chunk: 3, speculate: None };
     let server = Server::start_native_sched(set, policy, sched).unwrap();
     let prompt = window(80, 5, cfg.vocab);
     let params = SamplingParams { temperature: 0.9, top_k: 12, top_p: 0.95, seed: 1234 };
@@ -596,6 +596,173 @@ fn sampled_generation_replays_bit_identically_under_different_co_load() {
     let metrics = server.shutdown();
     assert_eq!(metrics.generations, 6);
     assert_eq!(metrics.generation_failures, 0);
+}
+
+/// Two-variant set for the speculative tests: the fp target plus a W2
+/// searched-plan draft of the same checkpoint, sharing one exec pool.
+fn spec_set(fp_m: &Arc<DenseModel>, plan_m: &Arc<DenseModel>, b: usize, s: usize) -> NativeSet {
+    let pool = Arc::new(ExecPool::new(2));
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::with_pool(Arc::clone(fp_m), b, s, Arc::clone(&pool)));
+    set.insert("q2", NativeBackend::with_pool(Arc::clone(plan_m), b, s, pool));
+    set
+}
+
+/// The speculative acceptance property: with a W2 draft verifying
+/// through the fp target, greedy *and* seeded-sampled generations —
+/// including an early-stop case — are token-for-token identical to the
+/// same requests on a non-speculative server, and requests targeting
+/// the draft variant itself still decode plainly. Speculation changes
+/// how many forwards run, never what is emitted.
+#[test]
+fn speculative_generation_matches_non_speculative_token_for_token() {
+    let cfg = tiny_cfg();
+    let (fp, fp_m) = fp_model(&cfg, 29);
+    let plan_m = searched_model(&cfg, &fp, 11);
+    let (b, s) = (3, 24);
+    let sched = SchedConfig { page_size: 4, kv_blocks: 24, prefill_chunk: 3, speculate: None };
+    let spec_sched = SchedConfig {
+        speculate: Some(SpecConfig { draft: "q2".to_string(), k: 3 }),
+        ..sched.clone()
+    };
+    let policy = || BatchPolicy { max_batch: b, max_wait: Duration::from_millis(2) };
+    let baseline =
+        Server::start_native_sched(spec_set(&fp_m, &plan_m, b, s), policy(), sched).unwrap();
+    let spec =
+        Server::start_native_sched(spec_set(&fp_m, &plan_m, b, s), policy(), spec_sched).unwrap();
+
+    // Mixed traffic: greedy, two sampled seeds, a stop-token case, and
+    // a request targeting the draft variant itself.
+    let sampled = |seed: u64| SamplingParams { temperature: 0.9, top_k: 12, top_p: 0.95, seed };
+    let stop = {
+        let prompt = window(103, 5, cfg.vocab);
+        let (no_stop, _) = greedy_reference(&fp_m, &prompt, 8, None);
+        let j = (1..no_stop.len()).find(|&j| !no_stop[..j].contains(&no_stop[j])).unwrap_or(0);
+        (prompt, Some(no_stop[j]))
+    };
+    let cases: Vec<(&str, Vec<i32>, usize, Option<i32>, SamplingParams)> = vec![
+        ("fp", window(100, 5, cfg.vocab), 8, None, SamplingParams::greedy()),
+        ("fp", window(101, 4, cfg.vocab), 8, None, sampled(7)),
+        ("fp", window(102, 6, cfg.vocab), 6, None, sampled(91)),
+        ("fp", stop.0, 8, stop.1, SamplingParams::greedy()),
+        ("q2", window(104, 5, cfg.vocab), 6, None, sampled(3)),
+    ];
+    for (i, (variant, prompt, max_new, stop, sampling)) in cases.iter().enumerate() {
+        let want = baseline
+            .generate_with(variant, prompt.clone(), *max_new, *stop, sampling.clone())
+            .unwrap_or_else(|e| panic!("baseline case {i}: {e}"));
+        let got = spec
+            .generate_with(variant, prompt.clone(), *max_new, *stop, sampling.clone())
+            .unwrap_or_else(|e| panic!("speculative case {i}: {e}"));
+        assert_eq!(
+            got.tokens, want.tokens,
+            "case {i} ({variant}): speculative decode changed the output"
+        );
+    }
+    let base_metrics = baseline.shutdown();
+    let metrics = spec.shutdown();
+    assert_eq!(metrics.generations, cases.len() as u64);
+    assert_eq!(metrics.generation_failures, 0);
+    assert_eq!(metrics.generated_tokens, base_metrics.generated_tokens);
+    assert!(metrics.spec_rounds >= 1, "fp-target requests must run draft/verify rounds");
+    assert!(metrics.drafted_tokens >= metrics.accepted_draft_tokens);
+    assert_eq!(
+        metrics.rejected_draft_tokens,
+        metrics.drafted_tokens - metrics.accepted_draft_tokens,
+        "every drafted token is accepted or rejected, exactly once"
+    );
+    assert!(
+        metrics.decode_emitted <= metrics.generated_tokens,
+        "emitted accounting: decode emissions never exceed completed-generation tokens"
+    );
+    assert!(metrics.decode_tok_per_s() > 0.0);
+    let report = metrics.report(Duration::from_millis(50));
+    for needle in ["spec: rounds=", "acceptance=", "draft p50="] {
+        assert!(report.contains(needle), "report missing {needle:?}:\n{report}");
+    }
+    assert_eq!(base_metrics.spec_rounds, 0);
+    assert!(!base_metrics.report(Duration::from_millis(50)).contains("spec:"));
+}
+
+/// Speculation under block-pool pressure: concurrent speculative
+/// sequences whose aggregate (target + draft) peak far exceeds the pool
+/// force preemption of both caches — yet every sequence completes,
+/// matching the greedy reference token for token.
+#[test]
+fn speculative_decoding_survives_preemption_of_both_caches() {
+    let cfg = tiny_cfg();
+    let (fp, fp_m) = fp_model(&cfg, 37);
+    let plan_m = searched_model(&cfg, &fp, 19);
+    // Peak per sequence: target ceil(11/4) + draft ceil(10/4) = 6
+    // blocks; three sequences demand 18 against a 7-block pool.
+    let sched = SchedConfig {
+        page_size: 4,
+        kv_blocks: 7,
+        prefill_chunk: 3,
+        speculate: Some(SpecConfig { draft: "q2".to_string(), k: 3 }),
+    };
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+    let server =
+        Server::start_native_sched(spec_set(&fp_m, &plan_m, 4, 16), policy, sched).unwrap();
+    let cases: Vec<(Vec<i32>, Vec<i32>)> = (0..3)
+        .map(|i| {
+            let prompt = window(110 + i, 4, cfg.vocab);
+            let (want, _) = greedy_reference(&fp_m, &prompt, 8, None);
+            (prompt, want)
+        })
+        .collect();
+    let mut pending = Vec::new();
+    for (prompt, _) in &cases {
+        let (reply, rx) = std::sync::mpsc::channel();
+        server
+            .submit_generate(gsr::coordinator::GenerateRequest {
+                variant: "fp".to_string(),
+                prompt: prompt.clone(),
+                max_new: 8,
+                stop: None,
+                sampling: SamplingParams::greedy(),
+                stream: None,
+                reply,
+            })
+            .unwrap();
+        pending.push(rx);
+    }
+    for (i, ((_, want), rx)) in cases.iter().zip(pending).enumerate() {
+        let got = rx.recv().unwrap().result.unwrap_or_else(|e| panic!("seq {i}: {e}"));
+        assert_eq!(&got.tokens, want, "seq {i} diverged under speculative preemption");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.generations, 3);
+    assert_eq!(metrics.generation_failures, 0);
+    assert_eq!(metrics.rejected, 0, "each sequence fits the pool alone, so all admit");
+    assert!(metrics.preemptions >= 1, "a contended pool must preempt");
+    assert!(metrics.spec_rounds >= 1, "speculation must still run under pressure");
+}
+
+/// A `--speculate` that fails to resolve (draft variant not resident)
+/// refuses every generation loudly instead of silently serving
+/// non-speculative rounds; scoring is unaffected.
+#[test]
+fn speculate_unresolved_draft_rejects_generations_loudly() {
+    let cfg = tiny_cfg();
+    let (_, fp_m) = fp_model(&cfg, 43);
+    let mut set = NativeSet::new();
+    set.insert("fp", NativeBackend::new(Arc::clone(&fp_m), 2, 16, 2));
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    let sched = SchedConfig {
+        speculate: Some(SpecConfig { draft: "nope".to_string(), k: 2 }),
+        ..SchedConfig::default()
+    };
+    let server = Server::start_native_sched(set, policy, sched).unwrap();
+    let err = server
+        .generate("fp", window(1, 4, cfg.vocab), 3, None)
+        .expect_err("unresolved speculation must refuse generations");
+    assert!(err.contains("not resident"), "unhelpful error: {err}");
+    assert!(err.contains("nope"), "error should name the draft variant: {err}");
+    assert!(server.score("fp", window(2, 8, cfg.vocab)).is_ok(), "scoring is unaffected");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.generations, 0);
+    assert_eq!(metrics.rejected_unknown_variant, 1);
 }
 
 /// Streaming delivery: every emitted token arrives on the stream

@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Diff fresh BENCH_*.json runs against the committed baselines.
+
+Workflow:
+
+    cd rust && cargo bench --bench decode_throughput --bench paged_serve ...
+    python3 scripts/bench_diff.py            # per-metric deltas vs baselines
+    python3 scripts/bench_diff.py --update   # adopt the fresh runs as baselines
+
+Benches write `BENCH_<name>.json` into the directory they run from
+(`rust/` under `cargo bench`); the committed baselines live in
+`rust/benches/baselines/`. The differ pairs rows of `results` arrays by
+their identity keys (variant/prompt_len/batch/...), walks every numeric
+leaf, and prints old -> new with the relative delta. Direction-aware
+marking: throughput-like metrics (tok_s, tok_per_s, speedup,
+acceptance) regress when they drop; latency-like metrics (_us, _p50,
+_p99) regress when they rise; counters are informational.
+
+stdlib only — no third-party imports.
+"""
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+# Keys that identify a results row rather than measure it.
+IDENTITY_KEYS = ("variant", "prompt_len", "new_tokens", "batch", "seq")
+
+HIGHER_IS_BETTER = ("tok_s", "tok_per_s", "speedup", "acceptance")
+LOWER_IS_BETTER = ("_us", "_p50", "_p99", "latency")
+
+
+def direction(metric):
+    """+1 if higher is better, -1 if lower is better, 0 if neutral."""
+    for suffix in HIGHER_IS_BETTER:
+        if metric.endswith(suffix):
+            return 1
+    for pat in LOWER_IS_BETTER:
+        if pat in metric:
+            return -1
+    return 0
+
+
+def row_identity(row):
+    return tuple((k, row[k]) for k in IDENTITY_KEYS if k in row)
+
+
+def numeric_leaves(node, prefix=""):
+    """Flatten nested dicts to (dotted-path, number) pairs."""
+    out = []
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.extend(numeric_leaves(v, f"{prefix}{k}." if prefix else f"{k}."))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out.append((prefix.rstrip("."), float(node)))
+    return out
+
+
+def fmt_num(x):
+    return f"{x:.3f}".rstrip("0").rstrip(".") if x != int(x) else f"{int(x)}"
+
+
+def diff_metrics(label, base, fresh, rows):
+    """Append per-metric delta rows for one paired scope."""
+    base_leaves = dict(numeric_leaves(base))
+    fresh_leaves = dict(numeric_leaves(fresh))
+    for metric in sorted(set(base_leaves) | set(fresh_leaves)):
+        if metric in IDENTITY_KEYS:
+            continue
+        old = base_leaves.get(metric)
+        new = fresh_leaves.get(metric)
+        if old is None or new is None:
+            rows.append((label, metric, old, new, None, "  (metric added)" if old is None else "  (metric dropped)"))
+            continue
+        delta = (new - old) / old if old else 0.0
+        mark = ""
+        d = direction(metric)
+        if d and abs(delta) >= 0.02:
+            better = (delta > 0) == (d > 0)
+            mark = "  improved" if better else "  REGRESSED"
+        rows.append((label, metric, old, new, delta, mark))
+
+
+def pair_results(base_doc, fresh_doc):
+    """Yield (scope-label, baseline-node, fresh-node) pairs to diff."""
+    base_res = base_doc.get("results")
+    fresh_res = fresh_doc.get("results")
+    if isinstance(base_res, dict) and isinstance(fresh_res, dict):
+        yield "results", base_res, fresh_res
+        return
+    base_rows = base_res if isinstance(base_res, list) else []
+    fresh_by_id = {
+        row_identity(r): r for r in (fresh_res if isinstance(fresh_res, list) else [])
+    }
+    for row in base_rows:
+        ident = row_identity(row)
+        label = " ".join(f"{k}={v}" for k, v in ident) or "results[]"
+        fresh_row = fresh_by_id.pop(ident, None)
+        if fresh_row is None:
+            print(f"    MISSING in fresh run: {label}")
+            continue
+        yield label, row, fresh_row
+    for ident in fresh_by_id:
+        print(f"    new row (no baseline): {' '.join(f'{k}={v}' for k, v in ident)}")
+
+
+def diff_bench(base_path, fresh_path):
+    base_doc = json.loads(base_path.read_text())
+    fresh_doc = json.loads(fresh_path.read_text())
+    rows = []
+    for label, base, fresh in pair_results(base_doc, fresh_doc):
+        diff_metrics(label, base, fresh, rows)
+    regressions = 0
+    for label, metric, old, new, delta, mark in rows:
+        old_s = fmt_num(old) if old is not None else "-"
+        new_s = fmt_num(new) if new is not None else "-"
+        delta_s = f"{delta:+.1%}" if delta is not None else "     "
+        print(f"    {label:<34} {metric:<26} {old_s:>12} -> {new_s:>12}  {delta_s:>8}{mark}")
+        regressions += mark.strip() == "REGRESSED"
+    return regressions
+
+
+def main():
+    repo = Path(__file__).resolve().parent.parent
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", type=Path, default=repo / "rust", help="directory with fresh BENCH_*.json runs")
+    ap.add_argument("--baseline", type=Path, default=repo / "rust" / "benches" / "baselines", help="directory with committed baselines")
+    ap.add_argument("--update", action="store_true", help="copy fresh runs over the committed baselines")
+    ap.add_argument("--fail-on-regression", action="store_true", help="exit 1 if any direction-aware metric regressed >= 2%%")
+    args = ap.parse_args()
+
+    baselines = sorted(args.baseline.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {args.baseline}", file=sys.stderr)
+        return 2
+
+    regressions = 0
+    compared = 0
+    for base_path in baselines:
+        fresh_path = args.fresh / base_path.name
+        print(f"\n{base_path.name}")
+        if not fresh_path.exists():
+            print(f"    no fresh run (expected {fresh_path}) — run the matching `cargo bench`")
+            continue
+        if args.update:
+            shutil.copyfile(fresh_path, base_path)
+            print(f"    baseline updated from {fresh_path}")
+            continue
+        regressions += diff_bench(base_path, fresh_path)
+        compared += 1
+
+    if not args.update:
+        print(f"\ncompared {compared}/{len(baselines)} benches; {regressions} regressed metric(s)")
+        if args.fail_on_regression and regressions:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,32 @@ else
   echo "observability smoke OK (python3 unavailable — grep only)"
 fi
 
+# Speculative-decoding smoke: the same tiny synthetic run with and
+# without --speculate must emit identical completions (greedy and
+# seeded sampling), and the speculative run must actually report
+# draft/verify rounds. Full token-for-token parity is covered by the
+# serve_native e2e tests; this guards the CLI wiring end to end.
+echo "== speculative decoding smoke (--speculate) =="
+spec_smoke() { # spec_smoke <outfile> <extra args...>
+  local out="$1"; shift
+  ./target/release/gsr generate --synthetic --seq 32 --requests 3 --max-new 6 \
+    --threads 2 "$@" > "$out"
+  grep -E '^first completion|^\[' "$out" > "$out.tokens"
+}
+for mode in "greedy" "sampled"; do
+  SAMPLING=()
+  [ "$mode" = sampled ] && SAMPLING=(--temperature 0.8 --top-k 32 --seed 11)
+  spec_smoke "$OBS_TMP/base_$mode.txt" "${SAMPLING[@]}"
+  spec_smoke "$OBS_TMP/spec_$mode.txt" --speculate w2:3 "${SAMPLING[@]}"
+  diff "$OBS_TMP/base_$mode.txt.tokens" "$OBS_TMP/spec_$mode.txt.tokens" \
+    || { echo "speculative $mode output diverged from non-speculative"; exit 1; }
+  grep -q "spec: rounds=" "$OBS_TMP/spec_$mode.txt" \
+    || { echo "speculative $mode run reported no draft/verify rounds"; exit 1; }
+  grep -q "spec: rounds=" "$OBS_TMP/base_$mode.txt" \
+    && { echo "non-speculative $mode run unexpectedly speculated"; exit 1; }
+  echo "speculative smoke OK ($mode)"
+done
+
 # Benches are not run in tier-1 (wall-clock noise), but they must keep
 # compiling — they double as integration surface for the public API.
 echo "== cargo bench --no-run =="
