@@ -34,7 +34,8 @@ pub fn bench_model_cfg() -> ModelCfg {
 pub fn bench_hetero_plan(cfg: &ModelCfg) -> RotationPlan {
     let base = RotationSpec::baseline(cfg);
     let mut layers = vec![base; cfg.n_layers];
-    layers[1] = RotationSpec { r1: R1Kind::LH, r1_block: 32, r4: R4Kind::LH, r4_block: 64 };
+    layers[1] =
+        RotationSpec { r1: R1Kind::LH, r1_block: 32, r4: R4Kind::LH, r4_block: 64, r1_angles: 0 };
     RotationPlan { seed: 2025, layers }
 }
 

@@ -132,12 +132,13 @@ mod tests {
     #[test]
     fn search_subcommand_grammar() {
         let a = parse(
-            "search --blocks 32,64,128 --r1 GSR,LH --r4 GH --budget 12 \
-             --threads 3 --out plan.json --synthetic",
+            "search --blocks 32,64,128 --r1 GSR,GIV,BFLY --r4 GH --budget 12 \
+             --threads 3 --proxy full --out plan.json --synthetic",
         );
         assert_eq!(a.subcommand, "search");
         assert_eq!(a.opt("blocks"), Some("32,64,128"));
-        assert_eq!(a.opt("r1"), Some("GSR,LH"));
+        assert_eq!(a.opt("r1"), Some("GSR,GIV,BFLY"));
+        assert_eq!(a.opt("proxy"), Some("full"));
         assert_eq!(a.opt("r4"), Some("GH"));
         assert_eq!(a.opt_usize("budget", 0), 12);
         assert_eq!(a.opt_threads(), 3);

@@ -134,8 +134,10 @@ fn print_help() {
            --out FILE        plan output path (default rotation_plan.json)\n\
            --bits N          proxy quantizer weight bits (default 2)\n\
            --blocks LIST     R1 block sizes, e.g. 32,64,128,256\n\
-           --r1 LIST         R1 kinds, e.g. GH,GW,LH,GSR\n\
+           --r1 LIST         R1 kinds, e.g. GH,GW,LH,GSR,GIV,BFLY\n\
            --r4 LIST         R4 kinds, e.g. GH,LH\n\
+           --proxy KIND      diag (default) or full: full-Hessian\n\
+                             tr(ΔWᵀ·RᵀHR·ΔW) objective, requires --calib\n\
            --budget N        max candidates per layer (0 = whole grid)\n\
            --threads N       worker threads (default: available cores)\n\
            --seed N          rotation-build seed (default 2025)\n\
@@ -698,7 +700,7 @@ fn plan_from_args(args: &Args, cfg: &gsr::model::ModelCfg) -> Result<gsr::quant:
     if let Some(plan_path) = args.opt("plan") {
         return RotationPlan::load(Path::new(plan_path));
     }
-    let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR)")?;
+    let r1 = R1Kind::parse(args.opt_or("r1", "GSR")).ok_or("bad --r1 (GH|GW|LH|GSR|GIV|BFLY)")?;
     let r4 = R4Kind::parse(args.opt_or("r4", "GH")).ok_or("bad --r4 (GH|LH)")?;
     let seed = args.opt_usize("seed", 2025) as u64;
     let spec = RotationSpec {
@@ -706,6 +708,7 @@ fn plan_from_args(args: &Args, cfg: &gsr::model::ModelCfg) -> Result<gsr::quant:
         r1_block: cfg.group,
         r4,
         r4_block: if r4 == R4Kind::GH { cfg.d_ffn } else { cfg.group },
+        r1_angles: gsr::transform::default_angles(r1, cfg.group),
     }
     .canonical(cfg);
     Ok(RotationPlan::uniform(spec, cfg.n_layers, seed))
@@ -872,7 +875,7 @@ fn parse_list_usize(s: &str) -> Result<Vec<usize>, String> {
 fn cmd_search(args: &Args) -> Result<(), String> {
     use gsr::calib::HessianSet;
     use gsr::model::{FpParams, ModelCfg, R4Kind};
-    use gsr::search::{search_plan_calibrated, CalibWeights, GridCfg, SearchCfg};
+    use gsr::search::{search_plan_calibrated, CalibWeights, GridCfg, ProxyKind, SearchCfg};
     use gsr::transform::R1Kind;
 
     let wiring = obs_from_args(args)?;
@@ -902,20 +905,32 @@ fn cmd_search(args: &Args) -> Result<(), String> {
             .map(|k| R4Kind::parse(k.trim()).ok_or_else(|| format!("bad r4 kind {k:?}")))
             .collect::<Result<_, _>>()?;
     }
+    let proxy_str = args.opt_or("proxy", "diag");
+    let proxy = ProxyKind::parse(proxy_str)
+        .ok_or_else(|| format!("bad --proxy {proxy_str:?} (diag|full)"))?;
+    if proxy == ProxyKind::Full && args.opt("calib").is_none() {
+        return Err("--proxy full needs --calib: the full-Hessian quadratic \
+                    form tr(ΔWᵀ·RᵀHR·ΔW) has no uncalibrated fallback"
+            .into());
+    }
     let scfg = SearchCfg {
         grid,
         bits: args.opt_usize("bits", 2) as u32,
         budget: args.opt_usize("budget", 0),
         threads: args.opt_threads(),
         seed,
+        proxy,
     };
     let calib = match args.opt("calib") {
         Some(path) => {
             let set = HessianSet::load(Path::new(path))?;
             let weights = CalibWeights::from_hessian_set(&set, &cfg)?;
             println!(
-                "calibration-aware objective: diag(H) weighting from {path} \
-                 ({} activation rows)",
+                "calibration-aware objective: {} from {path} ({} activation rows)",
+                match proxy {
+                    ProxyKind::Diag => "diag(H) weighting",
+                    ProxyKind::Full => "full RᵀHR quadratic form",
+                },
                 weights.tokens
             );
             Some(weights)
@@ -943,7 +958,11 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     } else {
         println!("{}", table.render());
     }
-    let objective = if calib.is_some() { "diag(H)-weighted group-RTN" } else { "group-RTN" };
+    let objective = match (proxy, calib.is_some()) {
+        (ProxyKind::Full, _) => "full-Hessian tr(ΔWᵀ·RᵀHR·ΔW)",
+        (ProxyKind::Diag, true) => "diag(H)-weighted group-RTN",
+        (ProxyKind::Diag, false) => "group-RTN",
+    };
     println!(
         "searched {} layers in {:?} on {} threads: mean {objective} MSE {:.4e} \
          vs fixed-GSR {:.4e} ({} layer(s) strictly improved)",

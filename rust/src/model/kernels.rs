@@ -522,6 +522,12 @@ impl R1Desc {
                 Some((signs, Vec::new()))
             }
             R1Kind::GW | R1Kind::GSR => Some((Vec::new(), walsh_permutation(block))),
+            // Parametric (angle-carrying) kinds have no sign/perm
+            // structure an FWHT can exploit — refuse recognition so the
+            // serving path takes the dense fallback (counted in
+            // `FastPathStats::dense_fallbacks`), never a silent
+            // mis-structured transform.
+            R1Kind::GIV | R1Kind::BFLY => None,
         }
     }
 
@@ -542,6 +548,9 @@ impl R1Desc {
         match kind {
             R1Kind::GH | R1Kind::LH => hadamard_sign(br, bc) * scale * signs[bc],
             R1Kind::GW | R1Kind::GSR => hadamard_sign(perm[br], bc) * scale,
+            // `structure()` never recovers these, so no R1Desc with a
+            // parametric kind can exist to be verified.
+            R1Kind::GIV | R1Kind::BFLY => unreachable!("parametric kinds are never structured"),
         }
     }
 
@@ -570,6 +579,9 @@ impl R1Desc {
                     fwht_f32(tmp);
                     chunk.copy_from_slice(tmp);
                 }
+                R1Kind::GIV | R1Kind::BFLY => {
+                    unreachable!("parametric kinds are never structured")
+                }
             }
         }
     }
@@ -593,6 +605,9 @@ impl R1Desc {
                     tmp.clear();
                     tmp.extend(self.perm.iter().map(|&p| chunk[p]));
                     chunk.copy_from_slice(tmp);
+                }
+                R1Kind::GIV | R1Kind::BFLY => {
+                    unreachable!("parametric kinds are never structured")
                 }
             }
         }

@@ -19,10 +19,10 @@ pub mod rtn;
 
 pub use gptq::{gptq_factor, gptq_quantize, gptq_quantize_factored, GptqFactor};
 pub use pipeline::{
-    build_plan_rotations, build_rotations, fuse_rotations, fuse_rotations_plan, fuse_to_dense,
-    fuse_to_dense_plan, quantize_native, quantize_native_plan, quantize_native_plan_telemetry,
-    quantize_native_plan_with, quantize_native_with, LayerQuantTelemetry, LayerRotations,
-    PlanRotations, RotationPlan, RotationSet, RotationSpec,
+    build_plan_rotations, build_rotations, build_spec_r1, fuse_rotations, fuse_rotations_plan,
+    fuse_to_dense, fuse_to_dense_plan, quantize_native, quantize_native_plan,
+    quantize_native_plan_telemetry, quantize_native_plan_with, quantize_native_with,
+    LayerQuantTelemetry, LayerRotations, PlanRotations, RotationPlan, RotationSet, RotationSpec,
 };
 pub use pack::{pack2, pack4, unpack2, unpack4};
 pub use rtn::{fake_quant_sym, group_params, rtn_quantize};

@@ -34,7 +34,10 @@ use crate::model::config::{ModelCfg, R4Kind, LINEARS};
 use crate::model::kernels::{BasisFast, KernelMode, PackedLinear, R1Desc};
 use crate::model::weights::{FpParams, LayerR4, QuantLayer, QuantParams};
 use crate::rng::SplitMix64;
-use crate::transform::{is_pow2, rht, try_block_diag, try_build_r1, try_hadamard, Mat, R1Kind};
+use crate::transform::{
+    is_pow2, mask_angles, rht, try_block_diag, try_build_parametric, try_build_r1, try_hadamard,
+    Mat, R1Kind,
+};
 
 // ---------------------------------------------------------------------------
 // Rotation specs and plans
@@ -50,17 +53,30 @@ pub struct RotationSpec {
     pub r4: R4Kind,
     /// Online-R4 block: `d_ffn` for GH, the local block size for LH.
     pub r4_block: usize,
+    /// Packed per-stage angle codes for parametric R1 kinds (GIV/BFLY):
+    /// byte `s` is stage `s`'s 8-bit angle (`θ = code · 2π/256`).
+    /// Always 0 (canonicalized) for non-parametric kinds, so every
+    /// pre-existing spec compares, hashes, and fingerprints unchanged.
+    pub r1_angles: u64,
 }
 
 impl RotationSpec {
     /// The paper's fixed configuration (GSR @ quant group, global R4)
     /// — the baseline every searched plan is measured against.
     pub fn baseline(cfg: &ModelCfg) -> Self {
-        Self { r1: R1Kind::GSR, r1_block: cfg.group, r4: R4Kind::GH, r4_block: cfg.d_ffn }
+        Self {
+            r1: R1Kind::GSR,
+            r1_block: cfg.group,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+            r1_angles: 0,
+        }
     }
 
     /// Canonical form used as the build/dedup key: global R1 kinds pin
-    /// `r1_block = d_model`, GH R4 pins `r4_block = d_ffn`.
+    /// `r1_block = d_model`, GH R4 pins `r4_block = d_ffn`, and the
+    /// angle word is masked to the live stages (zero when the kind
+    /// carries no angles).
     pub fn canonical(mut self, cfg: &ModelCfg) -> Self {
         if !self.r1.is_local() {
             self.r1_block = cfg.d_model;
@@ -68,6 +84,11 @@ impl RotationSpec {
         if self.r4 == R4Kind::GH {
             self.r4_block = cfg.d_ffn;
         }
+        self.r1_angles = if self.r1.is_parametric() {
+            mask_angles(self.r1, self.r1_block, self.r1_angles)
+        } else {
+            0
+        };
         self
     }
 
@@ -82,6 +103,12 @@ impl RotationSpec {
                 return Err(format!(
                     "R1 block {} must divide d_model {}",
                     self.r1_block, cfg.d_model
+                ));
+            }
+            if self.r1.is_parametric() && self.r1_block < 2 {
+                return Err(format!(
+                    "parametric R1 {} needs block >= 2, got {}",
+                    self.r1, self.r1_block
                 ));
             }
         } else if !is_pow2(cfg.d_model) {
@@ -106,8 +133,12 @@ impl RotationSpec {
     }
 
     /// Short human label, e.g. `GSR/64+r4GH` (used by the eval tables).
+    /// Parametric kinds append the packed angle word in hex, e.g.
+    /// `GIV/64:2020202020202020+r4GH`.
     pub fn label(&self) -> String {
-        let r1 = if self.r1.is_local() {
+        let r1 = if self.r1.is_parametric() {
+            format!("{}/{}:{:x}", self.r1, self.r1_block, self.r1_angles)
+        } else if self.r1.is_local() {
             format!("{}/{}", self.r1, self.r1_block)
         } else {
             self.r1.to_string()
@@ -170,6 +201,13 @@ impl RotationPlan {
                 | ((spec.r1_block as u64) << 8)
                 | ((spec.r4_block as u64) << 36);
             acc = SplitMix64::new(acc ^ fields).next_u64();
+            // Chained only when nonzero so every pre-existing
+            // (angle-free) plan keeps its historical fingerprint —
+            // calibration artifacts captured before the parametric
+            // kinds existed stay consumable.
+            if spec.r1_angles != 0 {
+                acc = SplitMix64::new(acc ^ spec.r1_angles ^ 0x6773_725F_616E_676C).next_u64();
+            }
         }
         acc
     }
@@ -193,6 +231,8 @@ impl RotationPlan {
                                 ("r1_block", Json::num(s.r1_block as f64)),
                                 ("r4", Json::str(s.r4.as_str())),
                                 ("r4_block", Json::num(s.r4_block as f64)),
+                                // Full u64 like the seed: decimal string.
+                                ("r1_angles", Json::str(&s.r1_angles.to_string())),
                             ])
                         })
                         .collect(),
@@ -217,13 +257,24 @@ impl RotationPlan {
             .ok_or("plan layers must be an array")?
             .iter()
             .map(|l| -> Result<RotationSpec, String> {
+                // Absent in plans written before the parametric kinds
+                // existed — default to 0 (no angles).
+                let r1_angles = match l.at("r1_angles") {
+                    Err(_) => 0,
+                    Ok(Json::Str(s)) => s
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad r1_angles {s:?} (want a decimal u64)"))?,
+                    Ok(v) => v.as_usize().ok_or("r1_angles must be a number or decimal string")?
+                        as u64,
+                };
                 Ok(RotationSpec {
                     r1: R1Kind::parse(l.at("r1")?.as_str().ok_or("r1")?)
-                        .ok_or("bad r1 kind (GH|GW|LH|GSR)")?,
+                        .ok_or("bad r1 kind (GH|GW|LH|GSR|GIV|BFLY)")?,
                     r1_block: l.at("r1_block")?.as_usize().ok_or("r1_block")?,
                     r4: R4Kind::parse(l.at("r4")?.as_str().ok_or("r4")?)
                         .ok_or("bad r4 kind (GH|LH)")?,
                     r4_block: l.at("r4_block")?.as_usize().ok_or("r4_block")?,
+                    r1_angles,
                 })
             })
             .collect::<Result<Vec<_>, String>>()?;
@@ -347,6 +398,21 @@ pub fn r4_seed(spec: &RotationSpec, seed: u64) -> u64 {
     keyed_seed(0x5234 | ((spec.r4 as u64) << 16) | ((spec.r4_block as u64) << 24), seed)
 }
 
+/// Build one canonical spec's **R1** matrix exactly as the quantization
+/// pipeline will: parametric kinds (GIV/BFLY) are pure functions of
+/// `(kind, block, r1_angles)` — no RNG, so a plan reloaded from disk
+/// rebuilds bit-identically from the spec alone — while the legacy
+/// kinds draw from the [`r1_seed`]-keyed stream. Public because the
+/// search objective must score candidates with these exact matrices.
+pub fn build_spec_r1(cfg: &ModelCfg, key: &RotationSpec, seed: u64) -> Result<Mat, String> {
+    if key.r1.is_parametric() {
+        try_build_parametric(key.r1, cfg.d_model, key.r1_block, key.r1_angles)
+    } else {
+        let mut rng = SplitMix64::new(r1_seed(key, seed));
+        try_build_r1(key.r1, cfg.d_model, key.r1_block, &mut rng)
+    }
+}
+
 /// Build all rotation matrices for `plan`, deduplicating identical
 /// canonical specs so each distinct configuration is constructed once.
 pub fn build_plan_rotations(cfg: &ModelCfg, plan: &RotationPlan) -> Result<PlanRotations, String> {
@@ -362,8 +428,7 @@ pub fn build_plan_rotations(cfg: &ModelCfg, plan: &RotationPlan) -> Result<PlanR
             layers.push(hit.clone());
             continue;
         }
-        let mut r1_rng = SplitMix64::new(r1_seed(&key, plan.seed));
-        let r1 = try_build_r1(key.r1, cfg.d_model, key.r1_block, &mut r1_rng)?;
+        let r1 = build_spec_r1(cfg, &key, plan.seed)?;
         let mut r4_rng = SplitMix64::new(r4_seed(&key, plan.seed));
         let (r4, signs) = build_r4(cfg, key.r4, key.r4_block, &mut r4_rng)?;
         let built = LayerRotations {
@@ -912,8 +977,42 @@ mod tests {
         RotationPlan {
             seed,
             layers: vec![
-                RotationSpec { r1: R1Kind::GSR, r1_block: 8, r4: R4Kind::GH, r4_block: 64 },
-                RotationSpec { r1: R1Kind::GH, r1_block: 32, r4: R4Kind::LH, r4_block: 16 },
+                RotationSpec {
+                    r1: R1Kind::GSR,
+                    r1_block: 8,
+                    r4: R4Kind::GH,
+                    r4_block: 64,
+                    r1_angles: 0,
+                },
+                RotationSpec {
+                    r1: R1Kind::GH,
+                    r1_block: 32,
+                    r4: R4Kind::LH,
+                    r4_block: 16,
+                    r1_angles: 0,
+                },
+            ],
+        }
+    }
+
+    fn parametric_plan(seed: u64) -> RotationPlan {
+        RotationPlan {
+            seed,
+            layers: vec![
+                RotationSpec {
+                    r1: R1Kind::GIV,
+                    r1_block: 16,
+                    r4: R4Kind::GH,
+                    r4_block: 64,
+                    r1_angles: 0x2A17_0040_8020_1103,
+                },
+                RotationSpec {
+                    r1: R1Kind::BFLY,
+                    r1_block: 32,
+                    r4: R4Kind::LH,
+                    r4_block: 16,
+                    r1_angles: 0x0102_0304_05,
+                },
             ],
         }
     }
@@ -1056,6 +1155,66 @@ mod tests {
         r4flip.layers[0].r4 = R4Kind::LH;
         r4flip.layers[0].r4_block = 16;
         assert_ne!(plan.fingerprint(), r4flip.fingerprint());
+    }
+
+    /// Angle words are part of the basis identity: flipping one stage
+    /// code changes the fingerprint, while all-zero angle words leave
+    /// pre-existing plan fingerprints untouched.
+    #[test]
+    fn plan_fingerprint_keys_on_angles() {
+        let plan = parametric_plan(7);
+        assert_eq!(plan.fingerprint(), parametric_plan(7).fingerprint());
+        let mut other = parametric_plan(7);
+        other.layers[0].r1_angles ^= 0x01;
+        assert_ne!(plan.fingerprint(), other.fingerprint());
+        // Angle-free plans fingerprint exactly as before the field
+        // existed (the chain only extends on nonzero words).
+        let legacy = hetero_plan(7);
+        assert!(legacy.layers.iter().all(|s| s.r1_angles == 0));
+        assert_eq!(legacy.fingerprint(), hetero_plan(7).fingerprint());
+    }
+
+    /// Fig. 1 with parametric (GIV/BFLY) layers: searched-angle
+    /// rotations are exactly orthogonal, so the fused forward still
+    /// reproduces the fp forward, including the basis transition
+    /// between the two parametric kinds.
+    #[test]
+    fn fig1_invariance_parametric_plan() {
+        let cfg = tiny_cfg();
+        let fp = random_fp(&cfg, 3);
+        let tokens: Vec<i32> = (0..12).map(|i| (i * 7 % 64) as i32).collect();
+        let expect = DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() }.forward(&tokens);
+        let rots = build_plan_rotations(&cfg, &parametric_plan(7)).unwrap();
+        let qp = fuse_to_dense_plan(&fp, &cfg, &rots);
+        assert!(qp.layers[1].basis_change.is_some());
+        let got = DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None }
+            .forward(&tokens);
+        let worst =
+            expect.iter().zip(&got).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(worst < 2e-3, "parametric plan diverges by {worst}");
+    }
+
+    /// Parametric plans round-trip through JSON with bit-identical
+    /// rebuilds (pure function of the spec — no RNG in the build), and
+    /// plans saved before `r1_angles` existed still load (default 0).
+    #[test]
+    fn parametric_plan_roundtrip_and_back_compat() {
+        let cfg = tiny_cfg();
+        let plan = parametric_plan(2025);
+        let text = plan.to_json().to_string_pretty();
+        let reloaded = RotationPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, reloaded);
+        let a = build_plan_rotations(&cfg, &plan).unwrap();
+        let b = build_plan_rotations(&cfg, &reloaded).unwrap();
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.r1.data, lb.r1.data, "parametric r1 must rebuild bit-identically");
+        }
+        // A pre-angle plan JSON (no r1_angles key) parses with angles 0.
+        let legacy = r#"{"seed":"7","layers":[
+            {"r1":"GSR","r1_block":8,"r4":"GH","r4_block":64},
+            {"r1":"GH","r1_block":32,"r4":"LH","r4_block":16}]}"#;
+        let parsed = RotationPlan::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(parsed, hetero_plan(7));
     }
 
     /// Calibrated GPTQ consumes real Hessians: the quantization visibly

@@ -1,8 +1,10 @@
 //! Candidate grid for the rotation search.
 
+use std::collections::BTreeSet;
+
 use crate::model::config::{ModelCfg, R4Kind};
 use crate::quant::RotationSpec;
-use crate::transform::R1Kind;
+use crate::transform::{default_angles, R1Kind};
 
 /// Grid axes (CLI-tunable via `gsr search --r1/--blocks/--r4`).
 #[derive(Debug, Clone)]
@@ -18,7 +20,9 @@ pub struct GridCfg {
 impl Default for GridCfg {
     fn default() -> Self {
         Self {
-            r1_kinds: R1Kind::ALL.to_vec(),
+            // The paper's four kinds plus the parametric GIV/BFLY
+            // families — the full searchable space.
+            r1_kinds: R1Kind::EXTENDED.to_vec(),
             blocks: vec![32, 64, 128, 256],
             r4_kinds: vec![R4Kind::GH, R4Kind::LH],
         }
@@ -29,8 +33,16 @@ impl Default for GridCfg {
 /// and deduplicated (global R1 kinds collapse the block axis),
 /// geometry-invalid candidates dropped, and the fixed-GSR baseline
 /// forced to slot 0 so a searched plan can never lose to it.
+/// Parametric kinds (GIV/BFLY) enter the grid at their default angle
+/// initialization; the scorer's coordinate descent refines the angles
+/// per layer. Dedup is a set keyed on the canonical spec (the grid
+/// grows superlinearly with the new axes; the old `Vec::contains` scan
+/// was O(n²)).
 pub fn candidate_grid(cfg: &ModelCfg, grid: &GridCfg) -> Vec<RotationSpec> {
-    let mut out = vec![RotationSpec::baseline(cfg).canonical(cfg)];
+    let baseline = RotationSpec::baseline(cfg).canonical(cfg);
+    let mut seen: BTreeSet<RotationSpec> = BTreeSet::new();
+    seen.insert(baseline);
+    let mut out = vec![baseline];
     for &r1 in &grid.r1_kinds {
         for &block in &grid.blocks {
             for &r4 in &grid.r4_kinds {
@@ -38,8 +50,15 @@ pub fn candidate_grid(cfg: &ModelCfg, grid: &GridCfg) -> Vec<RotationSpec> {
                     R4Kind::GH => cfg.d_ffn,
                     R4Kind::LH => cfg.group,
                 };
-                let spec = RotationSpec { r1, r1_block: block, r4, r4_block }.canonical(cfg);
-                if spec.validate(cfg).is_err() || out.contains(&spec) {
+                let spec = RotationSpec {
+                    r1,
+                    r1_block: block,
+                    r4,
+                    r4_block,
+                    r1_angles: default_angles(r1, block),
+                }
+                .canonical(cfg);
+                if spec.validate(cfg).is_err() || !seen.insert(spec) {
                     continue;
                 }
                 out.push(spec);
@@ -98,5 +117,42 @@ mod tests {
                 assert_ne!(a, b);
             }
         }
+    }
+
+    #[test]
+    fn parametric_kinds_enter_with_default_angles() {
+        let grid = candidate_grid(&cfg(), &GridCfg::default());
+        let parametric: Vec<_> = grid.iter().filter(|s| s.r1.is_parametric()).collect();
+        // Every (kind, block, R4) combination survives: 2 kinds × 4
+        // blocks × 2 R4 kinds.
+        assert_eq!(parametric.len(), 16, "{parametric:?}");
+        for s in &parametric {
+            assert_eq!(
+                s.r1_angles,
+                default_angles(s.r1, s.r1_block),
+                "{}: grid must seed default angles",
+                s.label()
+            );
+            assert_ne!(s.r1_angles, 0, "default init must carry live stages");
+        }
+        // Non-parametric specs never carry angle bits.
+        assert!(grid
+            .iter()
+            .filter(|s| !s.r1.is_parametric())
+            .all(|s| s.r1_angles == 0));
+    }
+
+    /// The set-backed dedup must behave exactly like the old linear
+    /// scan: first occurrence wins, later duplicates are dropped.
+    #[test]
+    fn duplicate_axes_collapse_once() {
+        let g = GridCfg {
+            r1_kinds: vec![R1Kind::GSR, R1Kind::GSR, R1Kind::GH, R1Kind::GH],
+            blocks: vec![64, 64, 128],
+            r4_kinds: vec![R4Kind::GH, R4Kind::GH],
+        };
+        let grid = candidate_grid(&cfg(), &g);
+        // baseline (GSR/64+GH) + GSR/128 + GH — duplicates all collapse.
+        assert_eq!(grid.len(), 3, "{grid:?}");
     }
 }

@@ -31,6 +31,19 @@
 //! search minimizes a diagonal proxy of the `‖X ΔW‖²` objective the
 //! Hessian-calibrated GPTQ pipeline actually optimizes.
 //!
+//! `gsr search --proxy full` upgrades that to the **full-Hessian**
+//! quadratic form `tr(ΔWᵀ·RᵀHR·ΔW)` ([`ProxyKind::Full`]): the rotated
+//! Hessian `RᵀHR` is hoisted once per distinct rotation (mirroring the
+//! diagonal cache) so the O(d³) work is paid per candidate, not per
+//! layer×candidate cell. The full proxy has no uncalibrated fallback —
+//! it is an error without `--calib`.
+//!
+//! Parametric candidates (`GIV` Givens chains, `BFLY` butterfly
+//! factorizations) carry per-stage angle codes in the spec itself;
+//! the objective refines them by training-free coordinate descent
+//! before scoring, so angle optimization is also a pure function of
+//! `(checkpoint, cfg, spec, seed)`.
+//!
 //! Determinism: every candidate score is a pure function of
 //! `(checkpoint, cfg, spec, seed)` — rotation builds are seeded by the
 //! spec itself and scores are reduced per layer in grid order, so the
@@ -43,8 +56,8 @@ pub mod planner;
 
 pub use grid::{candidate_grid, GridCfg};
 pub use objective::{
-    rotated_diag, score_candidate, score_r1_group, BaseHessians, CalibWeights, CandidateScore,
-    LayerCalib, LayerWeights, Objective,
+    hessian_rtn_mse, rotated_diag, rotated_full, score_candidate, score_r1_group, BaseHessians,
+    CalibWeights, CandidateScore, LayerCalib, LayerWeights, Objective, ProxyKind,
 };
 pub use planner::{
     search_plan, search_plan_calibrated, LayerSearchResult, SearchCfg, SearchOutcome,

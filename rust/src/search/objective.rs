@@ -25,10 +25,45 @@ use crate::calib::HessianSet;
 use crate::config::Json;
 use crate::model::config::{ModelCfg, R4Kind};
 use crate::model::weights::FpLayer;
-use crate::quant::pipeline::{build_plan_rotations, build_r4, r1_seed, r4_seed};
-use crate::quant::{RotationPlan, RotationSpec};
+use crate::quant::pipeline::{build_plan_rotations, build_r4, build_spec_r1, r4_seed};
+use crate::quant::{rtn_quantize, RotationPlan, RotationSpec};
 use crate::rng::SplitMix64;
-use crate::transform::{try_build_r1, Mat};
+use crate::transform::parametric::{stage_code, with_stage_code};
+use crate::transform::{
+    angle_stages, apply_parametric_t, default_angles, try_build_parametric, Mat,
+};
+
+/// Which `‖X ΔW‖²` surrogate ranks the candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProxyKind {
+    /// diag(RᵀHR)-weighted group-RTN MSE (cheap, the historical
+    /// default; identical to the uncalibrated objective when no
+    /// Hessians are supplied).
+    #[default]
+    Diag,
+    /// Full quadratic form `tr(ΔWᵀ · RᵀHR · ΔW)` — keeps the Hessian's
+    /// off-diagonal structure, closing the known diag-only proxy gap.
+    /// Requires calibration; the O(d³) basis change is hoisted once per
+    /// distinct rotation (per R1 group / per cached R4).
+    Full,
+}
+
+impl ProxyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProxyKind::Diag => "diag",
+            ProxyKind::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProxyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "diag" => Some(ProxyKind::Diag),
+            "full" => Some(ProxyKind::Full),
+            _ => None,
+        }
+    }
+}
 
 /// Quantization geometry the objective measures against.
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +75,8 @@ pub struct Objective {
     /// Seed for spec-keyed rotation builds (must match the plan seed so
     /// the scored matrices are the ones the pipeline will build).
     pub seed: u64,
+    /// Hessian proxy the candidates are ranked under ([`ProxyKind`]).
+    pub proxy: ProxyKind,
 }
 
 /// One layer's base-basis (un-rotated) activation Hessians — the
@@ -112,23 +149,51 @@ pub fn rotated_diag(h: &Mat, r: &Mat) -> Vec<f64> {
         .collect()
 }
 
-/// Per-layer calibration handle for scoring: the base Hessians plus an
-/// optional cache of down-projection diag weights per canonical
-/// `(r4, r4_block)`. The planner fills the cache once per layer so the
-/// O(d_ffn³) `diag(R4ᵀ H R4)` is computed once per distinct R4, not
-/// once per (R1 group × R4 spec); a missing entry falls back to the
-/// direct computation, bit-identically.
+/// Per-layer calibration handle for scoring: the base Hessians plus
+/// optional caches of down-projection weights per canonical
+/// `(r4, r4_block)` — diag weights for [`ProxyKind::Diag`], fully
+/// rotated `R4ᵀ H R4` matrices for [`ProxyKind::Full`]. The planner
+/// fills the cache matching the active proxy once per layer so the
+/// O(d_ffn³) work is done once per distinct R4, not once per
+/// (R1 group × R4 spec); a missing entry falls back to the direct
+/// computation, bit-identically.
 #[derive(Clone, Copy)]
 pub struct LayerCalib<'a> {
     pub base: &'a BaseHessians,
     pub down_diags: Option<&'a std::collections::BTreeMap<(R4Kind, usize), Vec<f64>>>,
+    pub down_mats: Option<&'a std::collections::BTreeMap<(R4Kind, usize), Mat>>,
 }
 
 impl<'a> LayerCalib<'a> {
     /// Uncached handle (used by `score_candidate` one-offs and tests).
     pub fn uncached(base: &'a BaseHessians) -> Self {
-        Self { base, down_diags: None }
+        Self { base, down_diags: None, down_mats: None }
     }
+}
+
+/// Full-Hessian RTN proxy: `tr(ΔWᵀ H ΔW) / |W|` where `ΔW` is the
+/// group-RTN dequantization error of `w` and `h` is the activation
+/// Hessian **in the same (rotated) basis as `w`'s rows**. This is the
+/// exact quadratic form `‖X ΔW‖²` (per element) that calibrated GPTQ
+/// minimizes — off-diagonal Hessian structure included, unlike the
+/// diag proxy.
+pub fn hessian_rtn_mse(w: &Mat, h: &Mat, group: usize, bits: u32) -> f64 {
+    debug_assert_eq!((h.rows, h.cols), (w.rows, w.rows));
+    let deq = rtn_quantize(w, bits, group, true).dequant();
+    let dw = Mat {
+        data: deq.data.iter().zip(&w.data).map(|(a, b)| a - b).collect(),
+        rows: w.rows,
+        cols: w.cols,
+    };
+    let hdw = h.matmul(&dw);
+    let quad: f64 = dw.data.iter().zip(&hdw.data).map(|(a, b)| a * b).sum();
+    quad / w.data.len() as f64
+}
+
+/// Dense `Rᵀ H R` — O(d³), hoisted by the callers (once per R1 group in
+/// the shared section, once per distinct R4 in the planner cache).
+pub fn rotated_full(h: &Mat, r: &Mat) -> Mat {
+    r.transpose().matmul(&h.matmul(r))
 }
 
 /// One layer's weights in objective form.
@@ -192,15 +257,24 @@ pub struct CandidateScore {
     pub seq_variance: f64,
 }
 
-/// Score a group of candidates sharing one canonical `(r1, r1_block)`:
-/// the R1-dependent work (rotation build, stream rotation + MSE,
-/// sequency variance — the dominant cost) is done **once**; each spec
-/// adds only its R4 term. R1 builds are seeded by `r1_seed`, which keys
-/// on `(r1, r1_block)` alone, so the shared matrix is exactly the one
-/// the pipeline will build for every spec in the group. With `calib`,
-/// every MSE term is weighted by that candidate basis's input-channel
-/// energy. Geometry errors come back as per-spec `Err` (the planner
-/// counts them as skipped).
+/// Score a group of candidates sharing one canonical
+/// `(r1, r1_block, r1_angles)`: the R1-dependent work (rotation build,
+/// stream rotation + MSE, sequency variance — the dominant cost) is
+/// done **once**; each spec adds only its R4 term. R1 matrices come
+/// from [`build_spec_r1`] — the exact ones the pipeline will build for
+/// every spec in the group. With `calib`, every MSE term is weighted by
+/// that candidate basis's input-channel energy (diag proxy) or the full
+/// rotated Hessian quadratic form (full proxy). Geometry errors come
+/// back as per-spec `Err` (the planner counts them as skipped).
+///
+/// **Angle coordinate descent**: when the group's R1 kind is parametric
+/// (GIV/BFLY) and arrives at its grid-default angle initialization, a
+/// deterministic training-free coordinate descent over the per-stage
+/// angles runs first, and the whole group is scored — and reported —
+/// at the descended angles. Descent is a pure function of
+/// `(layer weights, cfg, obj, calib, key)`, so re-scoring any reported
+/// spec (its angles are then non-default) reproduces the reported score
+/// bit-for-bit without re-entering the descent.
 pub fn score_r1_group(
     specs: &[RotationSpec],
     lw: &LayerWeights,
@@ -212,13 +286,46 @@ pub fn score_r1_group(
         Some(s) => s.canonical(cfg),
         None => return Vec::new(),
     };
+    if key0.r1.is_parametric()
+        && key0.validate(cfg).is_ok()
+        && key0.r1_angles == default_angles(key0.r1, key0.r1_block)
+    {
+        let angles = descend_angles(lw, cfg, obj, calib, &key0);
+        let descended: Vec<RotationSpec> = specs
+            .iter()
+            .map(|s| {
+                let mut c = s.canonical(cfg);
+                c.r1_angles = angles;
+                c
+            })
+            .collect();
+        return score_r1_group_inner(&descended, lw, cfg, obj, calib);
+    }
+    score_r1_group_inner(specs, lw, cfg, obj, calib)
+}
+
+fn score_r1_group_inner(
+    specs: &[RotationSpec],
+    lw: &LayerWeights,
+    cfg: &ModelCfg,
+    obj: &Objective,
+    calib: Option<LayerCalib>,
+) -> Vec<Result<CandidateScore, String>> {
+    let key0 = match specs.first() {
+        Some(s) => s.canonical(cfg),
+        None => return Vec::new(),
+    };
+    if obj.proxy == ProxyKind::Full && calib.is_none() {
+        let e = "full-Hessian proxy requires calibration (--calib)".to_string();
+        return specs.iter().map(|_| Err(e.clone())).collect();
+    }
+    // The full proxy's rotated stream Hessians, hoisted once per group.
     let shared = (|| -> Result<(Mat, f64, f64), String> {
-        let mut rng = SplitMix64::new(r1_seed(&key0, obj.seed));
-        let r1 = try_build_r1(key0.r1, cfg.d_model, key0.r1_block, &mut rng)?;
+        let r1 = build_spec_r1(cfg, &key0, obj.seed)?;
         let rotated_stream = r1.transpose().matmul(&lw.stream);
-        let mse_s = match calib {
-            None => group_rtn_mse(&rotated_stream, obj.group, obj.bits),
-            Some(lc) => {
+        let mse_s = match (obj.proxy, calib) {
+            (_, None) => group_rtn_mse(&rotated_stream, obj.group, obj.bits),
+            (ProxyKind::Diag, Some(lc)) => {
                 // Split the stream at the ln1/ln2 boundary: each half is
                 // weighted by its own site's rotated Hessian diagonal,
                 // then recombined by element count.
@@ -229,6 +336,16 @@ pub fn score_r1_group(
                 let (na, nf) = (attn.data.len() as f64, ffn.data.len() as f64);
                 let mse_a = group_rtn_mse_weighted(&attn, obj.group, obj.bits, &wa);
                 let mse_f = group_rtn_mse_weighted(&ffn, obj.group, obj.bits, &wf);
+                (mse_a * na + mse_f * nf) / (na + nf)
+            }
+            (ProxyKind::Full, Some(lc)) => {
+                let ha = rotated_full(&lc.base.attn, &r1);
+                let hf = rotated_full(&lc.base.ffn, &r1);
+                let attn = col_slice(&rotated_stream, 0, lw.ffn_col0);
+                let ffn = col_slice(&rotated_stream, lw.ffn_col0, rotated_stream.cols);
+                let (na, nf) = (attn.data.len() as f64, ffn.data.len() as f64);
+                let mse_a = hessian_rtn_mse(&attn, &ha, obj.group, obj.bits);
+                let mse_f = hessian_rtn_mse(&ffn, &hf, obj.group, obj.bits);
                 (mse_a * na + mse_f * nf) / (na + nf)
             }
         };
@@ -246,16 +363,16 @@ pub fn score_r1_group(
             spec.validate(cfg)?;
             let key = spec.canonical(cfg);
             debug_assert_eq!(
-                (key.r1, key.r1_block),
-                (key0.r1, key0.r1_block),
+                (key.r1, key.r1_block, key.r1_angles),
+                (key0.r1, key0.r1_block, key0.r1_angles),
                 "score_r1_group specs must share one canonical R1"
             );
             let mut rng = SplitMix64::new(r4_seed(&key, obj.seed));
             let (r4, _signs) = build_r4(cfg, key.r4, key.r4_block, &mut rng)?;
             let rotated_down = r4.transpose().matmul(&lw.wdown).matmul(&r1);
-            let mse_d = match calib {
-                None => group_rtn_mse(&rotated_down, obj.group, obj.bits),
-                Some(lc) => {
+            let mse_d = match (obj.proxy, calib) {
+                (_, None) => group_rtn_mse(&rotated_down, obj.group, obj.bits),
+                (ProxyKind::Diag, Some(lc)) => {
                     let cached =
                         lc.down_diags.and_then(|m| m.get(&(key.r4, key.r4_block)));
                     let computed;
@@ -268,12 +385,106 @@ pub fn score_r1_group(
                     };
                     group_rtn_mse_weighted(&rotated_down, obj.group, obj.bits, wd)
                 }
+                (ProxyKind::Full, Some(lc)) => {
+                    let cached = lc.down_mats.and_then(|m| m.get(&(key.r4, key.r4_block)));
+                    let computed;
+                    let hd: &Mat = match cached {
+                        Some(m) => m,
+                        None => {
+                            computed = rotated_full(&lc.base.down, &r4);
+                            &computed
+                        }
+                    };
+                    hessian_rtn_mse(&rotated_down, hd, obj.group, obj.bits)
+                }
             };
             let (ns, nd) = (lw.stream.data.len() as f64, lw.wdown.data.len() as f64);
             let quant_mse = (mse_s * ns + mse_d * nd) / (ns + nd);
             Ok(CandidateScore { spec: key, quant_mse, seq_variance })
         })
         .collect()
+}
+
+/// Angle codes the coarse pass probes per stage (every 1/8 turn).
+const COARSE_CODES: [u8; 8] = [0, 32, 64, 96, 128, 160, 192, 224];
+/// Hill-climb step schedule after the coarse pass (code units).
+const REFINE_STEPS: [u8; 5] = [16, 8, 4, 2, 1];
+
+/// Training-free coordinate descent over a parametric R1's per-stage
+/// angle codes, minimizing a cheap **surrogate** of the group objective:
+/// the (diag-weighted when calibrated) group-RTN MSE of the rotated
+/// stream. The R4-side term is deliberately excluded — it is shared-R1
+/// per group and second-order in the angles — and the surrogate stays
+/// diag-weighted even under the full proxy (the full quadratic form
+/// still ranks the *final* candidates; the surrogate only steers the
+/// angles). Each trial applies the rotation with O(stages · n · cols)
+/// stage ops instead of dense matmuls.
+///
+/// Deterministic by construction: fixed probe order, strict-improvement
+/// acceptance, no RNG — same `(lw, cfg, obj, calib, key)` always yields
+/// the same angles.
+fn descend_angles(
+    lw: &LayerWeights,
+    cfg: &ModelCfg,
+    obj: &Objective,
+    calib: Option<LayerCalib>,
+    key: &RotationSpec,
+) -> u64 {
+    let (kind, block) = (key.r1, key.r1_block);
+    let eval = |angles: u64| -> f64 {
+        let mut rs = lw.stream.clone();
+        apply_parametric_t(kind, block, angles, &mut rs);
+        match calib {
+            None => group_rtn_mse(&rs, obj.group, obj.bits),
+            Some(lc) => {
+                // diag(RᵀHR) via stage ops: t = RᵀH in O(stages·n²),
+                // then diag[j] = Σ_i t[j,i]·R[i,j] against the dense R
+                // (itself built with stage ops on the identity).
+                let r = try_build_parametric(kind, cfg.d_model, block, angles)
+                    .expect("descent key was validated");
+                let diag_of = |h: &Mat| -> Vec<f64> {
+                    let mut t = h.clone();
+                    apply_parametric_t(kind, block, angles, &mut t);
+                    (0..r.cols)
+                        .map(|j| (0..r.rows).map(|i| t[(j, i)] * r[(i, j)]).sum())
+                        .collect()
+                };
+                let wa = diag_of(&lc.base.attn);
+                let wf = diag_of(&lc.base.ffn);
+                let attn = col_slice(&rs, 0, lw.ffn_col0);
+                let ffn = col_slice(&rs, lw.ffn_col0, rs.cols);
+                let (na, nf) = (attn.data.len() as f64, ffn.data.len() as f64);
+                let mse_a = group_rtn_mse_weighted(&attn, obj.group, obj.bits, &wa);
+                let mse_f = group_rtn_mse_weighted(&ffn, obj.group, obj.bits, &wf);
+                (mse_a * na + mse_f * nf) / (na + nf)
+            }
+        }
+    };
+    let mut best_angles = key.r1_angles;
+    let mut best = eval(best_angles);
+    for stage in 0..angle_stages(kind, block) {
+        for code in COARSE_CODES {
+            let cand = with_stage_code(best_angles, stage, code);
+            let score = eval(cand);
+            if score < best {
+                best = score;
+                best_angles = cand;
+            }
+        }
+        for step in REFINE_STEPS {
+            for delta in [step, step.wrapping_neg()] {
+                // Wrapping byte arithmetic = exact 2π periodicity.
+                let code = stage_code(best_angles, stage).wrapping_add(delta);
+                let cand = with_stage_code(best_angles, stage, code);
+                let score = eval(cand);
+                if score < best {
+                    best = score;
+                    best_angles = cand;
+                }
+            }
+        }
+    }
+    best_angles
 }
 
 /// Measure one candidate on one layer's actual weights (singleton form
@@ -350,7 +561,7 @@ mod tests {
         let cfg = tiny_cfg();
         let fp = FpParams::synthetic(&cfg, 5);
         let lw = LayerWeights::from_layer(&fp.layers[1], &cfg);
-        let obj = Objective { bits: 2, group: cfg.group, seed: 9 };
+        let obj = Objective { bits: 2, group: cfg.group, seed: 9, proxy: ProxyKind::Diag };
         let spec = RotationSpec::baseline(&cfg);
         let a = score_candidate(&spec, &lw, &cfg, &obj, None).unwrap();
         let b = score_candidate(&spec, &lw, &cfg, &obj, None).unwrap();
@@ -364,12 +575,13 @@ mod tests {
         let cfg = tiny_cfg();
         let fp = FpParams::synthetic(&cfg, 5);
         let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
-        let obj = Objective { bits: 2, group: cfg.group, seed: 9 };
+        let obj = Objective { bits: 2, group: cfg.group, seed: 9, proxy: ProxyKind::Diag };
         let bad = RotationSpec {
             r1: R1Kind::GSR,
             r1_block: 24,
             r4: R4Kind::GH,
             r4_block: cfg.d_ffn,
+            r1_angles: 0,
         };
         assert!(score_candidate(&bad, &lw, &cfg, &obj, None).is_err());
     }
@@ -394,7 +606,7 @@ mod tests {
         let fp = FpParams::synthetic(&cfg, 5);
         let calib = captured_calib(&cfg, &fp);
         let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
-        let obj = Objective { bits: 2, group: cfg.group, seed: 21 };
+        let obj = Objective { bits: 2, group: cfg.group, seed: 21, proxy: ProxyKind::Diag };
         let spec = RotationSpec::baseline(&cfg);
         let lc = LayerCalib::uncached(&calib.layers[0]);
         let a = score_candidate(&spec, &lw, &cfg, &obj, Some(lc)).unwrap();
@@ -410,5 +622,103 @@ mod tests {
             a.quant_mse,
             plain.quant_mse
         );
+    }
+
+    /// The full quadratic form agrees with the diag proxy when H is
+    /// diagonal (sanity anchor for `hessian_rtn_mse`).
+    #[test]
+    fn full_proxy_reduces_to_weighted_mse_on_diagonal_hessian() {
+        let mut rng = SplitMix64::new(8);
+        let w = Mat::from_fn(16, 12, |_, _| rng.next_normal());
+        let diag: Vec<f64> = (0..16).map(|i| 0.5 + (i % 4) as f64).collect();
+        let mut h = Mat::zeros(16, 16);
+        for (i, &d) in diag.iter().enumerate() {
+            h[(i, i)] = d;
+        }
+        let full = hessian_rtn_mse(&w, &h, 8, 2);
+        // Weighted MSE normalizes by Σw·cols; the quadratic form by the
+        // element count — rescale to compare.
+        let weighted = group_rtn_mse_weighted(&w, 8, 2, &diag);
+        let wsum: f64 = diag.iter().sum();
+        let rescaled = weighted * (wsum * w.cols as f64) / w.data.len() as f64;
+        assert!(
+            (full - rescaled).abs() < 1e-12 * full.abs().max(1.0),
+            "diagonal-H full proxy diverges: {full} vs {rescaled}"
+        );
+    }
+
+    /// Full-proxy scoring: requires calibration, is deterministic, and
+    /// differs from the diag proxy (off-diagonal structure matters).
+    #[test]
+    fn full_proxy_scoring_requires_calib_and_is_deterministic() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 5);
+        let calib = captured_calib(&cfg, &fp);
+        let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let obj = Objective { bits: 2, group: cfg.group, seed: 21, proxy: ProxyKind::Full };
+        let spec = RotationSpec::baseline(&cfg);
+        assert!(score_candidate(&spec, &lw, &cfg, &obj, None).is_err());
+        let lc = LayerCalib::uncached(&calib.layers[0]);
+        let a = score_candidate(&spec, &lw, &cfg, &obj, Some(lc)).unwrap();
+        let b = score_candidate(&spec, &lw, &cfg, &obj, Some(lc)).unwrap();
+        assert_eq!(a.quant_mse.to_bits(), b.quant_mse.to_bits());
+        assert!(a.quant_mse.is_finite() && a.quant_mse > 0.0);
+        let diag_obj = Objective { proxy: ProxyKind::Diag, ..obj };
+        let d = score_candidate(&spec, &lw, &cfg, &diag_obj, Some(lc)).unwrap();
+        assert!(
+            (a.quant_mse - d.quant_mse).abs() > 1e-15,
+            "full proxy identical to diag proxy: {}",
+            a.quant_mse
+        );
+    }
+
+    /// Angle descent: deterministic, never worse than the default-angle
+    /// initialization, and the reported spec re-scores bit-identically
+    /// (the search-correctness contract).
+    #[test]
+    fn angle_descent_is_deterministic_and_never_hurts() {
+        use crate::transform::default_angles;
+
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 5);
+        let lw = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let obj = Objective { bits: 2, group: cfg.group, seed: 9, proxy: ProxyKind::Diag };
+        for kind in [R1Kind::GIV, R1Kind::BFLY] {
+            let seeded = RotationSpec {
+                r1: kind,
+                r1_block: 16,
+                r4: R4Kind::GH,
+                r4_block: cfg.d_ffn,
+                r1_angles: default_angles(kind, 16),
+            };
+            let a = score_candidate(&seeded, &lw, &cfg, &obj, None).unwrap();
+            let b = score_candidate(&seeded, &lw, &cfg, &obj, None).unwrap();
+            assert_eq!(a.spec, b.spec, "{kind}: descent must be deterministic");
+            assert_eq!(a.quant_mse.to_bits(), b.quant_mse.to_bits());
+            // Re-scoring the descended spec skips descent yet lands on
+            // the identical score.
+            let rescored = score_candidate(&a.spec, &lw, &cfg, &obj, None).unwrap();
+            assert_eq!(a.quant_mse.to_bits(), rescored.quant_mse.to_bits(), "{kind}");
+            // Descent never loses to the frozen default initialization
+            // (score the default angles via a group that must NOT
+            // trigger descent: perturb one dead... there are none, so
+            // compare against the inner score of the default spec).
+            let frozen = score_r1_group_inner(
+                std::slice::from_ref(&seeded),
+                &lw,
+                &cfg,
+                &obj,
+                None,
+            )
+            .pop()
+            .unwrap()
+            .unwrap();
+            assert!(
+                a.quant_mse <= frozen.quant_mse,
+                "{kind}: descent made things worse: {} > {}",
+                a.quant_mse,
+                frozen.quant_mse
+            );
+        }
     }
 }

@@ -15,15 +15,15 @@ use std::collections::BTreeMap;
 
 use super::grid::{candidate_grid, GridCfg};
 use super::objective::{
-    rotated_diag, score_r1_group, CalibWeights, CandidateScore, LayerCalib, LayerWeights,
-    Objective,
+    rotated_diag, rotated_full, score_r1_group, CalibWeights, CandidateScore, LayerCalib,
+    LayerWeights, Objective, ProxyKind,
 };
 use crate::model::config::{ModelCfg, R4Kind};
 use crate::model::weights::FpParams;
 use crate::quant::pipeline::{build_r4, r4_seed};
 use crate::quant::{RotationPlan, RotationSpec};
 use crate::rng::SplitMix64;
-use crate::transform::R1Kind;
+use crate::transform::{Mat, R1Kind};
 
 /// Search configuration (`gsr search` flags map 1:1 onto this).
 #[derive(Debug, Clone)]
@@ -38,11 +38,20 @@ pub struct SearchCfg {
     pub threads: usize,
     /// Seed for the spec-keyed rotation builds, recorded in the plan.
     pub seed: u64,
+    /// Hessian proxy (`--proxy diag|full`; full requires calibration).
+    pub proxy: ProxyKind,
 }
 
 impl Default for SearchCfg {
     fn default() -> Self {
-        Self { grid: GridCfg::default(), bits: 2, budget: 0, threads: 0, seed: 2025 }
+        Self {
+            grid: GridCfg::default(),
+            bits: 2,
+            budget: 0,
+            threads: 0,
+            seed: 2025,
+            proxy: ProxyKind::Diag,
+        }
     }
 }
 
@@ -124,6 +133,13 @@ pub fn search_plan_calibrated(
             );
         }
     }
+    if scfg.proxy == ProxyKind::Full && calib.is_none() {
+        return Err(
+            "--proxy full needs a calibration artifact (--calib): the full-Hessian \
+             quadratic form has no uncalibrated fallback"
+                .to_string(),
+        );
+    }
     let mut candidates = candidate_grid(cfg, &scfg.grid);
     if candidates.is_empty() {
         return Err("empty candidate grid".to_string());
@@ -131,60 +147,88 @@ pub fn search_plan_calibrated(
     if scfg.budget > 0 && candidates.len() > scfg.budget {
         candidates.truncate(scfg.budget); // baseline is slot 0, never cut
     }
-    let obj = Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed };
+    let obj = Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed, proxy: scfg.proxy };
     let layer_weights: Vec<LayerWeights> =
         fp.layers.iter().map(|l| LayerWeights::from_layer(l, cfg)).collect();
     if layer_weights.is_empty() {
         return Err("model has no layers to search".to_string());
     }
 
-    // Group candidates by canonical (r1, r1_block), preserving grid
-    // order (the baseline sits in group 0, slot 0): R4 variants inside
-    // a group share the dominant R1-side scoring work.
+    // Group candidates by canonical (r1, r1_block, r1_angles),
+    // preserving grid order (the baseline sits in group 0, slot 0): R4
+    // variants inside a group share the dominant R1-side scoring work,
+    // including one angle-descent run per parametric group.
     let mut groups: Vec<Vec<RotationSpec>> = Vec::new();
     {
-        let mut index: BTreeMap<(R1Kind, usize), usize> = BTreeMap::new();
+        let mut index: BTreeMap<(R1Kind, usize, u64), usize> = BTreeMap::new();
         for &spec in &candidates {
             let key = spec.canonical(cfg);
-            match index.get(&(key.r1, key.r1_block)).copied() {
+            match index.get(&(key.r1, key.r1_block, key.r1_angles)).copied() {
                 Some(i) => groups[i].push(spec),
                 None => {
-                    index.insert((key.r1, key.r1_block), groups.len());
+                    index.insert((key.r1, key.r1_block, key.r1_angles), groups.len());
                     groups.push(vec![spec]);
                 }
             }
         }
     }
 
-    // Calibrated mode: precompute each layer's down-projection diag
-    // weights once per distinct canonical R4 — they are identical for
-    // every R1 group, and the O(d_ffn³) diag(R4ᵀ H R4) would otherwise
-    // be recomputed per (R1 group × R4 spec).
-    let down_diags: Option<Vec<BTreeMap<(R4Kind, usize), Vec<f64>>>> = calib.map(|c| {
-        let mut r4_keys: Vec<(R4Kind, usize)> = Vec::new();
-        for spec in &candidates {
-            let k = spec.canonical(cfg);
-            if !r4_keys.contains(&(k.r4, k.r4_block)) {
-                r4_keys.push((k.r4, k.r4_block));
-            }
+    // Calibrated mode: precompute each layer's down-projection weights
+    // once per distinct canonical R4 — they are identical for every R1
+    // group, and the O(d_ffn³) basis change would otherwise be
+    // recomputed per (R1 group × R4 spec). Only the cache matching the
+    // active proxy is built: diag weights for Diag, the full rotated
+    // `R4ᵀ H R4` matrices for Full.
+    let mut r4_keys: Vec<(R4Kind, usize)> = Vec::new();
+    for spec in &candidates {
+        let k = spec.canonical(cfg);
+        if !r4_keys.contains(&(k.r4, k.r4_block)) {
+            r4_keys.push((k.r4, k.r4_block));
         }
-        c.layers
-            .iter()
-            .map(|bh| {
-                let mut per_layer = BTreeMap::new();
-                for &(r4, r4_block) in &r4_keys {
-                    // r4_seed keys on the R4 fields alone, so any R1
-                    // fields yield the exact matrix the scorer builds.
-                    let probe = RotationSpec { r1: R1Kind::GSR, r1_block: cfg.group, r4, r4_block };
-                    let mut rng = SplitMix64::new(r4_seed(&probe, scfg.seed));
-                    if let Ok((m, _)) = build_r4(cfg, r4, r4_block, &mut rng) {
-                        per_layer.insert((r4, r4_block), rotated_diag(&bh.down, &m));
+    }
+    // r4_seed keys on the R4 fields alone, so any R1 fields yield the
+    // exact matrix the scorer builds.
+    let probe_r4 = |r4: R4Kind, r4_block: usize| -> Option<Mat> {
+        let probe = RotationSpec {
+            r1: R1Kind::GSR,
+            r1_block: cfg.group,
+            r4,
+            r4_block,
+            r1_angles: 0,
+        };
+        let mut rng = SplitMix64::new(r4_seed(&probe, scfg.seed));
+        build_r4(cfg, r4, r4_block, &mut rng).ok().map(|(m, _)| m)
+    };
+    let down_diags: Option<Vec<BTreeMap<(R4Kind, usize), Vec<f64>>>> =
+        calib.filter(|_| scfg.proxy == ProxyKind::Diag).map(|c| {
+            c.layers
+                .iter()
+                .map(|bh| {
+                    let mut per_layer = BTreeMap::new();
+                    for &(r4, r4_block) in &r4_keys {
+                        if let Some(m) = probe_r4(r4, r4_block) {
+                            per_layer.insert((r4, r4_block), rotated_diag(&bh.down, &m));
+                        }
                     }
-                }
-                per_layer
-            })
-            .collect()
-    });
+                    per_layer
+                })
+                .collect()
+        });
+    let down_mats: Option<Vec<BTreeMap<(R4Kind, usize), Mat>>> =
+        calib.filter(|_| scfg.proxy == ProxyKind::Full).map(|c| {
+            c.layers
+                .iter()
+                .map(|bh| {
+                    let mut per_layer = BTreeMap::new();
+                    for &(r4, r4_block) in &r4_keys {
+                        if let Some(m) = probe_r4(r4, r4_block) {
+                            per_layer.insert((r4, r4_block), rotated_full(&bh.down, &m));
+                        }
+                    }
+                    per_layer
+                })
+                .collect()
+        });
 
     // One (layer, r1-group) cell per work item.
     let work: Vec<(usize, usize)> = (0..layer_weights.len())
@@ -205,6 +249,7 @@ pub fn search_plan_calibrated(
                 let lcal = calib.map(|c| LayerCalib {
                     base: &c.layers[l],
                     down_diags: down_diags.as_ref().map(|d| &d[l]),
+                    down_mats: down_mats.as_ref().map(|d| &d[l]),
                 });
                 let scores = score_r1_group(&groups[g], &layer_weights[l], cfg, &obj, lcal);
                 cells.lock().unwrap()[i] = Some(scores);
@@ -376,7 +421,8 @@ mod tests {
         // The planner's down-diag cache must not change scores: an
         // uncached rescore of the winning spec is bit-identical.
         let lw0 = LayerWeights::from_layer(&fp.layers[0], &cfg);
-        let obj = Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed };
+        let obj =
+            Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed, proxy: scfg.proxy };
         let rescore = crate::search::objective::score_candidate(
             &out.layers[0].best.spec,
             &lw0,
@@ -411,5 +457,125 @@ mod tests {
             search_plan(&fp, &cfg, &scfg).unwrap().plan
         };
         assert_eq!(mk(1), mk(4));
+    }
+
+    fn extended_grid() -> GridCfg {
+        GridCfg {
+            r1_kinds: vec![R1Kind::GSR, R1Kind::GIV, R1Kind::BFLY],
+            blocks: vec![8, 16],
+            r4_kinds: vec![R4Kind::GH],
+        }
+    }
+
+    fn captured(cfg: &ModelCfg, fp: &FpParams, seed: u64) -> CalibWeights {
+        use crate::calib::{capture_hessians, checkpoint_fingerprint, CaptureKey};
+        use crate::data::{draw_token_windows, CorpusGenerator};
+        use crate::quant::fuse_to_dense_plan;
+
+        let plan = RotationPlan::uniform(RotationSpec::baseline(cfg), cfg.n_layers, seed);
+        let rots = build_plan_rotations(cfg, &plan).unwrap();
+        let dense = fuse_to_dense_plan(fp, cfg, &rots);
+        let corpus = CorpusGenerator::new(23).generate(2048);
+        let seqs = draw_token_windows(&corpus, 6, 12, cfg.vocab, 7);
+        let key = CaptureKey {
+            calib_seed: 7,
+            basis_fingerprint: plan.fingerprint(),
+            checkpoint_fingerprint: checkpoint_fingerprint(fp),
+            plan_json: plan.to_json().to_string_pretty(),
+        };
+        let set = capture_hessians(cfg, &dense, &seqs, 0, &key);
+        CalibWeights::from_hessian_set(&set, cfg).unwrap()
+    }
+
+    /// `--proxy full` without calibration is refused up front.
+    #[test]
+    fn full_proxy_without_calib_is_an_error() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 11);
+        let scfg =
+            SearchCfg { grid: tiny_grid(), proxy: ProxyKind::Full, ..SearchCfg::default() };
+        let err = search_plan(&fp, &cfg, &scfg).unwrap_err();
+        assert!(err.contains("--calib"), "{err}");
+    }
+
+    /// The acceptance property under the full-Hessian proxy and the
+    /// expanded (GIV/BFLY) grid: the searched plan's proxy objective is
+    /// ≤ the fixed-GSR baseline on every layer, the plan builds, and
+    /// the full-proxy down-matrix cache never changes a score (uncached
+    /// rescore of the winner is bit-identical).
+    #[test]
+    fn full_proxy_expanded_grid_never_loses_to_baseline() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 19);
+        let scfg = SearchCfg {
+            grid: extended_grid(),
+            threads: 2,
+            proxy: ProxyKind::Full,
+            ..SearchCfg::default()
+        };
+        let calib = captured(&cfg, &fp, scfg.seed);
+        let out = search_plan_calibrated(&fp, &cfg, &scfg, Some(&calib)).unwrap();
+        for l in &out.layers {
+            assert!(
+                l.best.quant_mse <= l.baseline.quant_mse,
+                "layer {}: full-proxy searched {} > baseline {}",
+                l.layer,
+                l.best.quant_mse,
+                l.baseline.quant_mse
+            );
+        }
+        build_plan_rotations(&cfg, &out.plan).expect("full-proxy plan must build");
+        let lw0 = LayerWeights::from_layer(&fp.layers[0], &cfg);
+        let obj =
+            Objective { bits: scfg.bits, group: cfg.group, seed: scfg.seed, proxy: scfg.proxy };
+        let rescore = crate::search::objective::score_candidate(
+            &out.layers[0].best.spec,
+            &lw0,
+            &cfg,
+            &obj,
+            Some(LayerCalib::uncached(&calib.layers[0])),
+        )
+        .unwrap();
+        assert_eq!(
+            rescore.quant_mse.to_bits(),
+            out.layers[0].best.quant_mse.to_bits(),
+            "cached and uncached full-proxy scores must agree exactly"
+        );
+    }
+
+    /// Diag proxy over the expanded grid: parametric candidates descend
+    /// their angles, the baseline stays unbeatable, and the whole run is
+    /// deterministic — same seed/corpus/config twice (and across thread
+    /// counts) yields the identical plan and fingerprint.
+    #[test]
+    fn expanded_grid_descent_is_deterministic_and_never_loses() {
+        let cfg = tiny_cfg();
+        let fp = FpParams::synthetic(&cfg, 11);
+        let mk = |threads| {
+            let scfg = SearchCfg {
+                grid: extended_grid(),
+                threads,
+                ..SearchCfg::default()
+            };
+            search_plan(&fp, &cfg, &scfg).unwrap()
+        };
+        let a = mk(1);
+        let b = mk(3);
+        assert_eq!(a.plan, b.plan, "thread count changed the descended plan");
+        assert_eq!(a.plan.fingerprint(), mk(1).plan.fingerprint(), "rerun changed the plan");
+        for l in &a.layers {
+            assert!(l.best.quant_mse <= l.baseline.quant_mse, "layer {}", l.layer);
+        }
+        // Any parametric winner must carry canonical (masked) angles.
+        for s in &a.plan.layers {
+            if s.r1.is_parametric() {
+                assert_eq!(
+                    s.r1_angles,
+                    crate::transform::mask_angles(s.r1, s.r1_block, s.r1_angles),
+                    "winner carries dead angle bytes"
+                );
+            }
+        }
+        build_plan_rotations(&cfg, &a.plan).expect("descended plan must build");
     }
 }

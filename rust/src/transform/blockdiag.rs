@@ -3,7 +3,8 @@
 use super::{is_pow2, rht, try_walsh, Mat};
 use crate::rng::SplitMix64;
 
-/// The four R1 configurations compared in Table 1.
+/// The four R1 configurations compared in Table 1, plus the two
+/// parametric (angle-searched) families from the expanded grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum R1Kind {
     /// Global randomized Hadamard (QuaRot default).
@@ -15,10 +16,30 @@ pub enum R1Kind {
     /// Grouped Sequency-arranged Rotation — block-diagonal Walsh
     /// (the paper's contribution, Eq. 3).
     GSR,
+    /// Block-diagonal Givens chain: brick-wall stages of pairwise
+    /// rotations with per-stage searched angles (ParoQuant-style).
+    GIV,
+    /// Block-diagonal butterfly factorization: log₂(block) stages of
+    /// 2×2 orthogonal blocks with per-stage searched angles
+    /// (ButterflyQuant-style).
+    BFLY,
 }
 
 impl R1Kind {
+    /// The paper's original four kinds. Analysis tables and Figure 1
+    /// style comparisons stay scoped to these.
     pub const ALL: [R1Kind; 4] = [R1Kind::GH, R1Kind::GW, R1Kind::LH, R1Kind::GSR];
+
+    /// Every candidate kind the search grid knows, including the
+    /// parametric families.
+    pub const EXTENDED: [R1Kind; 6] = [
+        R1Kind::GH,
+        R1Kind::GW,
+        R1Kind::LH,
+        R1Kind::GSR,
+        R1Kind::GIV,
+        R1Kind::BFLY,
+    ];
 
     pub fn as_str(&self) -> &'static str {
         match self {
@@ -26,6 +47,8 @@ impl R1Kind {
             R1Kind::GW => "GW",
             R1Kind::LH => "LH",
             R1Kind::GSR => "GSR",
+            R1Kind::GIV => "GIV",
+            R1Kind::BFLY => "BFLY",
         }
     }
 
@@ -35,13 +58,21 @@ impl R1Kind {
             "GW" => Some(R1Kind::GW),
             "LH" => Some(R1Kind::LH),
             "GSR" => Some(R1Kind::GSR),
+            "GIV" => Some(R1Kind::GIV),
+            "BFLY" => Some(R1Kind::BFLY),
             _ => None,
         }
     }
 
     /// Is this a local (block-diagonal) rotation?
     pub fn is_local(&self) -> bool {
-        matches!(self, R1Kind::LH | R1Kind::GSR)
+        matches!(self, R1Kind::LH | R1Kind::GSR | R1Kind::GIV | R1Kind::BFLY)
+    }
+
+    /// Does this kind carry searchable per-stage angles
+    /// (`RotationSpec::r1_angles`)?
+    pub fn is_parametric(&self) -> bool {
+        matches!(self, R1Kind::GIV | R1Kind::BFLY)
     }
 }
 
@@ -114,6 +145,13 @@ pub fn try_build_r1(
             validate_block(n, block)?;
             try_block_diag(&try_walsh(block)?, n)
         }
+        // Parametric kinds at their all-π/4 initialization; searched
+        // angles flow through `try_build_parametric` directly (the
+        // plan builder passes `RotationSpec::r1_angles`).
+        R1Kind::GIV | R1Kind::BFLY => {
+            let angles = super::parametric::default_angles(kind, block);
+            super::parametric::try_build_parametric(kind, n, block, angles)
+        }
     }
 }
 
@@ -164,14 +202,32 @@ mod tests {
         assert!(!R1Kind::GW.is_local());
         assert!(R1Kind::LH.is_local());
         assert!(R1Kind::GSR.is_local());
+        assert!(R1Kind::GIV.is_local());
+        assert!(R1Kind::BFLY.is_local());
+    }
+
+    #[test]
+    fn parametric_flag() {
+        for kind in R1Kind::EXTENDED {
+            assert_eq!(kind.is_parametric(), matches!(kind, R1Kind::GIV | R1Kind::BFLY), "{kind}");
+        }
     }
 
     #[test]
     fn parse_roundtrip() {
-        for kind in R1Kind::ALL {
+        for kind in R1Kind::EXTENDED {
             assert_eq!(R1Kind::parse(kind.as_str()), Some(kind));
         }
         assert_eq!(R1Kind::parse("nope"), None);
+    }
+
+    #[test]
+    fn extended_kinds_orthonormal_at_default_angles() {
+        for kind in [R1Kind::GIV, R1Kind::BFLY] {
+            let mut rng = SplitMix64::new(5);
+            let m = try_build_r1(kind, 256, 64, &mut rng).unwrap();
+            assert!(m.orthogonality_defect() < 1e-12, "{kind}");
+        }
     }
 
     #[test]

@@ -9,11 +9,15 @@
 pub mod blockdiag;
 pub mod fwht;
 pub mod hadamard;
+pub mod parametric;
 pub mod rht;
 pub mod sequency;
 pub mod walsh;
 
 pub use blockdiag::{block_diag, build_r1, try_block_diag, try_build_r1, R1Kind};
+pub use parametric::{
+    angle_stages, apply_parametric_t, default_angles, mask_angles, try_build_parametric,
+};
 pub use fwht::{fwht, fwht_batch, grouped_fwht, grouped_fwht_batch};
 pub use hadamard::{hadamard, try_hadamard};
 pub use rht::rht;

@@ -1,0 +1,259 @@
+//! Parametric (angle-carrying) orthogonal rotation families for the
+//! search grid: Givens chains (ParoQuant-style pairwise rotations over a
+//! fixed brick-wall pairing) and butterfly factorizations
+//! (ButterflyQuant-style log₂(n) stages of 2×2 orthogonal blocks).
+//!
+//! Both families are **block-diagonal** (local) like GSR/LH, and both
+//! are pure functions of `(kind, block, angles)` — no RNG — so a plan
+//! reloaded from disk rebuilds bit-identical matrices from the spec
+//! alone. Angles are tied per stage and quantized to 8 bits
+//! (`θ = code · 2π/256`), with up to [`MAX_STAGES`] stage codes packed
+//! little-endian into one `u64` (byte `s` = stage `s`); wrapping byte
+//! arithmetic is exact because the angle domain is 2π-periodic.
+//!
+//! Every matrix here is a product of exact 2×2 rotations, hence exactly
+//! orthogonal for *any* angle packing — the property the search relies
+//! on (candidates never need re-orthonormalization) and the one the
+//! property suite pins at random angles.
+
+use super::{is_pow2, Mat};
+use crate::transform::R1Kind;
+
+/// Maximum optimizable stages per candidate (one packed byte each).
+pub const MAX_STAGES: usize = 8;
+
+/// Initialization code for every stage: 32/256 of a turn = π/4, where a
+/// 2×2 rotation has equal-magnitude entries (Hadamard-like mixing).
+pub const DEFAULT_ANGLE_CODE: u8 = 32;
+
+/// Number of angle-carrying stages for `(kind, block)`; 0 for
+/// non-parametric kinds or degenerate blocks.
+pub fn angle_stages(kind: R1Kind, block: usize) -> usize {
+    if block < 2 || !is_pow2(block) {
+        return 0;
+    }
+    match kind {
+        // Brick-wall chain: alternating even/odd adjacent pairings.
+        R1Kind::GIV => block.min(MAX_STAGES),
+        // One stage per butterfly span 1, 2, 4, … up to the block size.
+        R1Kind::BFLY => (block.trailing_zeros() as usize).min(MAX_STAGES),
+        _ => 0,
+    }
+}
+
+/// The packed all-π/4 initialization the grid seeds candidates with.
+pub fn default_angles(kind: R1Kind, block: usize) -> u64 {
+    let mut out = 0u64;
+    for s in 0..angle_stages(kind, block) {
+        out |= (DEFAULT_ANGLE_CODE as u64) << (8 * s);
+    }
+    out
+}
+
+/// Zero the dead bytes beyond the stage count (canonicalization: two
+/// packings that build the same matrix must compare equal).
+pub fn mask_angles(kind: R1Kind, block: usize, angles: u64) -> u64 {
+    let stages = angle_stages(kind, block);
+    if stages >= MAX_STAGES {
+        angles
+    } else {
+        angles & ((1u64 << (8 * stages)) - 1)
+    }
+}
+
+/// Stage `s`'s angle code out of a packed `u64`.
+pub fn stage_code(angles: u64, stage: usize) -> u8 {
+    (angles >> (8 * stage)) as u8
+}
+
+/// Replace stage `s`'s angle code inside a packed `u64`.
+pub fn with_stage_code(angles: u64, stage: usize, code: u8) -> u64 {
+    (angles & !(0xFFu64 << (8 * stage))) | ((code as u64) << (8 * stage))
+}
+
+/// Decode an 8-bit angle code: `θ = code · 2π/256`.
+pub fn angle_theta(code: u8) -> f64 {
+    code as f64 * (std::f64::consts::PI / 128.0)
+}
+
+/// Index pairs one stage rotates, within a single block.
+///
+/// * GIV stage `s`: adjacent pairs starting at offset `s % 2`
+///   (`(0,1),(2,3),…` on even stages; `(1,2),(3,4),…,(block-1,0)` with
+///   wrap on odd stages) — the brick-wall chain.
+/// * BFLY stage `s`: span-`2^s` butterflies `(i, i + 2^s)` for every
+///   `i` whose bit `s` is clear.
+fn stage_pairs(kind: R1Kind, block: usize, stage: usize) -> Vec<(usize, usize)> {
+    match kind {
+        R1Kind::GIV => {
+            let off = stage % 2;
+            (0..block / 2).map(|k| ((off + 2 * k) % block, (off + 2 * k + 1) % block)).collect()
+        }
+        R1Kind::BFLY => {
+            let span = 1usize << stage;
+            (0..block).filter(|i| i & span == 0).map(|i| (i, i + span)).collect()
+        }
+        _ => Vec::new(),
+    }
+}
+
+fn validate(kind: R1Kind, n: usize, block: usize) -> Result<(), String> {
+    if !kind.is_parametric() {
+        return Err(format!("{kind} is not a parametric rotation kind"));
+    }
+    if !is_pow2(block) || block < 2 {
+        return Err(format!(
+            "parametric rotation block must be a power of two >= 2, got {block}"
+        ));
+    }
+    if block > n || n % block != 0 {
+        return Err(format!("rotation block size {block} must divide dimension {n}"));
+    }
+    Ok(())
+}
+
+/// Dense `n×n` block-diagonal rotation for `(kind, block, angles)` —
+/// a pure function of its arguments (the plan round-trip guarantee).
+/// Stages multiply on the right: `R = G_0 · G_1 · … · G_{k-1}`.
+pub fn try_build_parametric(
+    kind: R1Kind,
+    n: usize,
+    block: usize,
+    angles: u64,
+) -> Result<Mat, String> {
+    validate(kind, n, block)?;
+    let mut m = Mat::identity(n);
+    for s in 0..angle_stages(kind, block) {
+        let theta = angle_theta(stage_code(angles, s));
+        let (c, sn) = (theta.cos(), theta.sin());
+        for (i, j) in stage_pairs(kind, block, s) {
+            for b in 0..n / block {
+                let (gi, gj) = (b * block + i, b * block + j);
+                // Column op M ← M·G with G[i,i]=c, G[i,j]=s, G[j,i]=-s.
+                for r in 0..n {
+                    let (a, d) = (m[(r, gi)], m[(r, gj)]);
+                    m[(r, gi)] = c * a - sn * d;
+                    m[(r, gj)] = sn * a + c * d;
+                }
+            }
+        }
+    }
+    Ok(m)
+}
+
+/// In-place `x ← Rᵀ·x` for `x: [n, cols]` without materializing `R`:
+/// each stage is an O(n·cols) pairwise row update, so a full
+/// application costs `stages · n · cols` instead of the `n²·cols`
+/// dense matmul — the workhorse of the angle coordinate descent.
+pub fn apply_parametric_t(kind: R1Kind, block: usize, angles: u64, x: &mut Mat) {
+    let n = x.rows;
+    debug_assert!(validate(kind, n, block).is_ok());
+    for s in 0..angle_stages(kind, block) {
+        let theta = angle_theta(stage_code(angles, s));
+        let (c, sn) = (theta.cos(), theta.sin());
+        for (i, j) in stage_pairs(kind, block, s) {
+            for b in 0..n / block {
+                let (gi, gj) = (b * block + i, b * block + j);
+                // Row op X ← GᵀX: rows (i, j) mix, everything else fixed.
+                let (lo, hi) = (gi.min(gj), gi.max(gj));
+                let (head, tail) = x.data.split_at_mut(hi * x.cols);
+                let ri = &mut head[lo * x.cols..lo * x.cols + x.cols];
+                let rj = &mut tail[..x.cols];
+                let (ra, rb) = if gi < gj { (ri, rj) } else { (rj, ri) };
+                for (a, d) in ra.iter_mut().zip(rb.iter_mut()) {
+                    let (va, vd) = (*a, *d);
+                    *a = c * va - sn * vd;
+                    *d = sn * va + c * vd;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn parametric_matrices_are_exactly_orthogonal() {
+        let mut rng = SplitMix64::new(0xA11);
+        for kind in [R1Kind::GIV, R1Kind::BFLY] {
+            for block in [2usize, 8, 32] {
+                for _ in 0..4 {
+                    let angles = rng.next_u64();
+                    let m = try_build_parametric(kind, 64, block, angles).unwrap();
+                    let defect = m.orthogonality_defect();
+                    assert!(defect < 1e-12, "{kind} block {block}: defect {defect}");
+                    // Block-diagonal structure: off-block entries exact 0.
+                    for r in 0..64 {
+                        for c in 0..64 {
+                            if r / block != c / block {
+                                assert_eq!(m[(r, c)], 0.0, "{kind} ({r},{c})");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_t_matches_dense_transpose_matmul() {
+        let mut rng = SplitMix64::new(0xB22);
+        for kind in [R1Kind::GIV, R1Kind::BFLY] {
+            let block = 16;
+            let angles = rng.next_u64();
+            let r = try_build_parametric(kind, 32, block, angles).unwrap();
+            let x = Mat::from_fn(32, 11, |_, _| rng.next_normal());
+            let want = r.transpose().matmul(&x);
+            let mut got = x.clone();
+            apply_parametric_t(kind, block, angles, &mut got);
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-12, "{kind}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_angles_pack_pi_over_four_per_stage() {
+        assert_eq!(angle_stages(R1Kind::BFLY, 64), 6);
+        assert_eq!(angle_stages(R1Kind::GIV, 64), MAX_STAGES);
+        assert_eq!(angle_stages(R1Kind::GSR, 64), 0);
+        let a = default_angles(R1Kind::BFLY, 64);
+        for s in 0..6 {
+            assert_eq!(stage_code(a, s), DEFAULT_ANGLE_CODE);
+        }
+        assert_eq!(stage_code(a, 6), 0);
+        assert_eq!(default_angles(R1Kind::GSR, 64), 0);
+    }
+
+    #[test]
+    fn mask_zeroes_dead_stage_bytes_only() {
+        let full = u64::MAX;
+        let masked = mask_angles(R1Kind::BFLY, 4, full); // 2 stages
+        assert_eq!(masked, 0xFFFF);
+        assert_eq!(mask_angles(R1Kind::GIV, 1 << 12, full), full); // capped at 8
+        assert_eq!(with_stage_code(masked, 1, 0x2A), 0x2AFF);
+        // Masked and unmasked packings build the same matrix.
+        let a = try_build_parametric(R1Kind::BFLY, 8, 4, full).unwrap();
+        let b = try_build_parametric(R1Kind::BFLY, 8, 4, masked).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn zero_angles_build_identity() {
+        for kind in [R1Kind::GIV, R1Kind::BFLY] {
+            let m = try_build_parametric(kind, 16, 8, 0).unwrap();
+            assert_eq!(m.data, Mat::identity(16).data, "{kind}");
+        }
+    }
+
+    #[test]
+    fn bad_geometry_is_an_error() {
+        assert!(try_build_parametric(R1Kind::GIV, 64, 24, 0).is_err());
+        assert!(try_build_parametric(R1Kind::BFLY, 64, 1, 0).is_err());
+        assert!(try_build_parametric(R1Kind::GIV, 64, 128, 0).is_err());
+        assert!(try_build_parametric(R1Kind::GSR, 64, 8, 0).is_err());
+    }
+}

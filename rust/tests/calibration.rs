@@ -162,6 +162,7 @@ fn fingerprint_guards_against_basis_mismatch() {
         r1_block: 8,
         r4: fx.plan.layers[0].r4,
         r4_block: fx.plan.layers[0].r4_block,
+        r1_angles: 0,
     };
     assert_ne!(other.fingerprint(), fx.plan.fingerprint());
     assert!(fx.set.check_basis(other.fingerprint()).is_err());

@@ -57,6 +57,7 @@ fn plans(cfg: &ModelCfg) -> Vec<(&'static str, RotationPlan)> {
             r1_block: cfg.d_model,
             r4: R4Kind::GH,
             r4_block: cfg.d_ffn,
+            r1_angles: 0,
         },
         cfg.n_layers,
         5,
@@ -67,6 +68,7 @@ fn plans(cfg: &ModelCfg) -> Vec<(&'static str, RotationPlan)> {
             r1_block: cfg.d_model,
             r4: R4Kind::GH,
             r4_block: cfg.d_ffn,
+            r1_angles: 0,
         },
         cfg.n_layers,
         6,
@@ -74,12 +76,19 @@ fn plans(cfg: &ModelCfg) -> Vec<(&'static str, RotationPlan)> {
     let het = RotationPlan {
         seed: 7,
         layers: vec![
-            RotationSpec { r1: R1Kind::GSR, r1_block: 8, r4: R4Kind::GH, r4_block: cfg.d_ffn },
+            RotationSpec {
+                r1: R1Kind::GSR,
+                r1_block: 8,
+                r4: R4Kind::GH,
+                r4_block: cfg.d_ffn,
+                r1_angles: 0,
+            },
             RotationSpec {
                 r1: R1Kind::GH,
                 r1_block: cfg.d_model,
                 r4: R4Kind::LH,
                 r4_block: 16,
+                r1_angles: 0,
             },
         ],
     };
@@ -277,5 +286,113 @@ fn pack4_layout_matches_python_reference_vectors() {
         let h = 1 + rng.next_below(30) as usize;
         let codes: Vec<i32> = (0..c * h).map(|_| rng.next_below(16) as i32).collect();
         assert_eq!(unpack4(&pack4(&codes, c, h), c, h), codes, "seed {seed}");
+    }
+}
+
+/// Parametric (GIV/BFLY) layers on the fast path: their rotations have
+/// no FWHT structure, so the fast kernels must (a) still serve the
+/// model within the pinned logit bound — via packed linears everywhere
+/// and a dense basis change where a parametric factor appears — and
+/// (b) account the fallback **exactly**: only the layer whose basis
+/// change involves a parametric factor registers one, and a uniform
+/// parametric plan (no transitions) registers zero.
+#[test]
+fn parametric_plans_conform_and_count_dense_fallbacks_exactly() {
+    use gsr::transform::default_angles;
+
+    let cfg = tiny_cfg();
+    let fp = FpParams::synthetic(&cfg, 29);
+    let uniform_giv = RotationPlan::uniform(
+        RotationSpec {
+            r1: R1Kind::GIV,
+            r1_block: 16,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+            r1_angles: 0x0718_2940_5B6C_7D8E,
+        },
+        cfg.n_layers,
+        9,
+    );
+    let hetero_bfly = RotationPlan {
+        seed: 10,
+        layers: vec![
+            RotationSpec {
+                r1: R1Kind::GSR,
+                r1_block: 8,
+                r4: R4Kind::GH,
+                r4_block: cfg.d_ffn,
+                r1_angles: 0,
+            },
+            RotationSpec {
+                r1: R1Kind::BFLY,
+                r1_block: 16,
+                r4: R4Kind::GH,
+                r4_block: cfg.d_ffn,
+                r1_angles: default_angles(R1Kind::BFLY, 16),
+            },
+        ],
+    };
+    // (plan, expected dense fallbacks beyond R3, which layers fall back)
+    let cases = [
+        ("uniform-giv", uniform_giv, 0usize, [false, false]),
+        ("hetero-bfly", hetero_bfly, 1usize, [false, true]),
+    ];
+    for (label, plan, extra_fallbacks, layer_falls_back) in cases {
+        let rots = build_plan_rotations(&cfg, &plan).unwrap();
+        let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+        // Every linear still packs — parametric kinds only affect the
+        // basis-change structure, never the packed-domain linears.
+        for (l, layer) in qp.layers.iter().enumerate() {
+            assert_eq!(layer.packed.len(), 7, "{label} layer {l}: packed linears");
+            assert_eq!(
+                layer.basis_change.is_some() && layer.basis_fast.is_none(),
+                layer_falls_back[l],
+                "{label} layer {l}: wrong fallback site"
+            );
+        }
+        assert!(qp.r3_fast.is_some(), "{label}: R3 must still be recognized");
+        let stats = qp.fast_path_stats();
+        assert_eq!(
+            stats.dense_fallbacks, extra_fallbacks,
+            "{label}: fallback counter must count exactly the parametric \
+             basis changes (got {stats:?})"
+        );
+        // Conformance: fast logits within the pinned bound of reference.
+        let reference =
+            Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp.clone(), a_bits: None });
+        let mut qpf = qp;
+        qpf.kernels = KernelMode::Fast;
+        let fast = Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qpf, a_bits: None });
+        for (i, seq) in (0..3).map(|s| window(s, 12, cfg.vocab)).enumerate() {
+            let got = fast.forward(&seq);
+            let want = reference.forward(&seq);
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                let tol = FAST_LOGIT_TOL * b.abs().max(1.0);
+                assert!(
+                    (a - b).abs() <= tol,
+                    "{label} seq {i} logit {j}: fast {a} vs reference {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Structure recognition must refuse parametric rotations rather than
+/// mis-classify them: `R1Desc::from_mat` returns `None` for GIV and
+/// BFLY matrices at any angle setting, which is what routes them to the
+/// counted dense fallback instead of a silently wrong FWHT path.
+#[test]
+fn r1desc_never_claims_parametric_structure() {
+    use gsr::transform::{default_angles, try_build_parametric};
+
+    for kind in [R1Kind::GIV, R1Kind::BFLY] {
+        for angles in [0u64, default_angles(kind, 16), 0xDEAD_BEEF_0123_4567] {
+            let m = try_build_parametric(kind, 32, 16, angles).unwrap();
+            assert!(
+                R1Desc::from_mat(kind, 16, &m).is_none(),
+                "{kind} angles {angles:#x}: parametric matrix must not be \
+                 claimed as structured"
+            );
+        }
     }
 }

@@ -207,7 +207,13 @@ fn prometheus_exposition_contains_serving_families() {
     let fp = FpParams::synthetic(&cfg, 31);
     let fp_m = Arc::new(DenseModel::Fp { cfg: cfg.clone(), params: fp.clone() });
     let plan = RotationPlan::uniform(
-        RotationSpec { r1: R1Kind::GSR, r1_block: cfg.group, r4: R4Kind::GH, r4_block: cfg.d_ffn },
+        RotationSpec {
+            r1: R1Kind::GSR,
+            r1_block: cfg.group,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+            r1_angles: 0,
+        },
         cfg.n_layers,
         7,
     );
@@ -339,7 +345,13 @@ fn per_layer_telemetry_shows_gsr_error_at_most_hadamard() {
     let gsr = telemetry_of(
         &cfg,
         &fp,
-        RotationSpec { r1: R1Kind::GSR, r1_block: cfg.group, r4: R4Kind::GH, r4_block: cfg.d_ffn },
+        RotationSpec {
+            r1: R1Kind::GSR,
+            r1_block: cfg.group,
+            r4: R4Kind::GH,
+            r4_block: cfg.d_ffn,
+            r1_angles: 0,
+        },
     );
     let gh = telemetry_of(
         &cfg,
@@ -349,6 +361,7 @@ fn per_layer_telemetry_shows_gsr_error_at_most_hadamard() {
             r1_block: cfg.d_model,
             r4: R4Kind::GH,
             r4_block: cfg.d_ffn,
+            r1_angles: 0,
         },
     );
     assert_eq!(gsr.len(), cfg.n_layers, "one telemetry entry per layer");

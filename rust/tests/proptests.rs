@@ -383,6 +383,7 @@ fn prop_cached_decode_bit_identical_to_full_forward() {
                 r1_block: cfg.d_model,
                 r4: R4Kind::GH,
                 r4_block: cfg.d_ffn,
+                r1_angles: 0,
             },
             cfg.n_layers,
             7 + seed,
@@ -395,12 +396,14 @@ fn prop_cached_decode_bit_identical_to_full_forward() {
                     r1_block: 8,
                     r4: R4Kind::GH,
                     r4_block: cfg.d_ffn,
+                    r1_angles: 0,
                 },
                 RotationSpec {
                     r1: R1Kind::GH,
                     r1_block: cfg.d_model,
                     r4: R4Kind::LH,
                     r4_block: 16,
+                    r1_angles: 0,
                 },
             ],
         };
@@ -470,6 +473,114 @@ fn prop_cached_decode_bit_identical_to_full_forward() {
                     );
                 }
                 assert_eq!(gen.len(), total, "seed {seed} {label}: cache occupancy");
+            }
+        }
+    });
+}
+
+/// Every candidate rotation family — the seeded kinds at random build
+/// seeds AND the parametric GIV/BFLY kinds at **random angle words** —
+/// produces an orthogonal matrix within tolerance, at every valid
+/// (n, block) geometry the sweep draws. Orthogonality is what makes a
+/// rotation "free": it is the invariant that lets a plan swap kinds
+/// per layer without touching model function.
+#[test]
+fn prop_all_candidate_kinds_orthonormal_including_random_angles() {
+    use gsr::transform::{try_build_parametric, try_build_r1};
+
+    for_seeds(24, |seed, rng| {
+        let n = rand_pow2(rng, 3, 8);
+        let block = rand_pow2(rng, 1, 6).min(n);
+        for kind in R1Kind::EXTENDED {
+            let m = if kind.is_parametric() {
+                let angles = rng.next_u64();
+                try_build_parametric(kind, n, block, angles)
+                    .unwrap_or_else(|e| panic!("seed {seed} kind {kind} n {n} block {block}: {e}"))
+            } else {
+                let b = if kind.is_local() { block } else { n };
+                try_build_r1(kind, n, b, rng)
+                    .unwrap_or_else(|e| panic!("seed {seed} kind {kind} n {n} block {block}: {e}"))
+            };
+            let defect = m.orthogonality_defect();
+            assert!(defect < 1e-9, "seed {seed} kind {kind} n {n} block {block} defect {defect}");
+        }
+    });
+}
+
+/// A searched-style heterogeneous plan whose layers use the parametric
+/// GIV/BFLY kinds (at non-default angle words) quantizes to a model
+/// whose forward is **bit-exactly** invariant under (a) a plan-JSON
+/// round-trip — the reloaded plan rebuilds the identical rotations from
+/// the spec alone — and (b) the executor thread count (1 vs 3).
+#[test]
+fn prop_parametric_plan_forward_invariant_under_roundtrip_and_threads() {
+    use gsr::config::Json;
+    use gsr::exec::{Backend, NativeBackend};
+    use gsr::model::{DenseModel, FpParams, ModelCfg, R4Kind};
+    use gsr::quant::{build_plan_rotations, quantize_native_plan, RotationPlan, RotationSpec};
+    use std::sync::Arc;
+
+    let cfg = ModelCfg {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 64,
+        group: 16,
+        rope_base: 10_000.0,
+        norm_eps: 1e-5,
+    };
+    for_seeds(3, |seed, rng| {
+        let fp = FpParams::synthetic(&cfg, 300 + seed);
+        let plan = RotationPlan {
+            seed: 17 + seed,
+            layers: vec![
+                RotationSpec {
+                    r1: R1Kind::GIV,
+                    r1_block: 16,
+                    r4: R4Kind::GH,
+                    r4_block: cfg.d_ffn,
+                    r1_angles: rng.next_u64(),
+                }
+                .canonical(&cfg),
+                RotationSpec {
+                    r1: R1Kind::BFLY,
+                    r1_block: 8,
+                    r4: R4Kind::LH,
+                    r4_block: 8,
+                    r1_angles: rng.next_u64(),
+                }
+                .canonical(&cfg),
+            ],
+        };
+        let text = plan.to_json().to_string_pretty();
+        let reloaded = RotationPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reloaded, plan, "seed {seed}: JSON round-trip must be lossless");
+        assert_eq!(reloaded.fingerprint(), plan.fingerprint(), "seed {seed}");
+
+        let tokens: Vec<i32> =
+            (0..12).map(|_| rng.next_below(cfg.vocab as u64) as i32).collect();
+        let mut logits = Vec::new();
+        for p in [&plan, &reloaded] {
+            let rots = build_plan_rotations(&cfg, p).unwrap();
+            let (qp, _, _) = quantize_native_plan(&fp, &cfg, &rots, 2);
+            let model =
+                Arc::new(DenseModel::Quant { cfg: cfg.clone(), params: qp, a_bits: None });
+            for threads in [1usize, 3] {
+                let backend = NativeBackend::new(Arc::clone(&model), 1, tokens.len(), threads);
+                logits.push(backend.forward_batch(&tokens).unwrap());
+            }
+        }
+        let want = &logits[0];
+        for (i, got) in logits.iter().enumerate().skip(1) {
+            assert_eq!(got.len(), want.len(), "seed {seed} variant {i}");
+            for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} variant {i} logit {j}: forward must be bit-invariant \
+                     under plan round-trip and thread count"
+                );
             }
         }
     });

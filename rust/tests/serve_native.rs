@@ -33,8 +33,20 @@ fn hetero_plan(cfg: &ModelCfg, seed: u64) -> RotationPlan {
     RotationPlan {
         seed,
         layers: vec![
-            RotationSpec { r1: R1Kind::GSR, r1_block: 8, r4: R4Kind::GH, r4_block: 64 },
-            RotationSpec { r1: R1Kind::GH, r1_block: cfg.d_model, r4: R4Kind::LH, r4_block: 16 },
+            RotationSpec {
+                r1: R1Kind::GSR,
+                r1_block: 8,
+                r4: R4Kind::GH,
+                r4_block: 64,
+                r1_angles: 0,
+            },
+            RotationSpec {
+                r1: R1Kind::GH,
+                r1_block: cfg.d_model,
+                r4: R4Kind::LH,
+                r4_block: 16,
+                r1_angles: 0,
+            },
         ],
     }
 }

@@ -73,10 +73,44 @@ for mode in "greedy" "sampled"; do
   echo "speculative smoke OK ($mode)"
 done
 
+# Search smoke: calibrate a tiny synthetic checkpoint, then run
+# `gsr search` over the expanded candidate grid (fixed GSR plus the
+# parametric Givens/butterfly families) under both Hessian proxies.
+# The calibrate defaults (seed, synthetic config, uniform-GSR basis)
+# match the search defaults, so the artifact is directly consumable.
+echo "== search smoke (expanded grid, --proxy diag|full) =="
+./target/release/gsr calibrate --synthetic --seqs 4 --seq-len 16 --threads 2 \
+  --out "$OBS_TMP/hessians.bin" >/dev/null
+./target/release/gsr search --synthetic --threads 2 \
+  --r1 GSR,GIV,BFLY --blocks 64 --r4 GH \
+  --proxy diag --out "$OBS_TMP/plan_diag.json" >/dev/null
+./target/release/gsr search --synthetic --threads 2 \
+  --r1 GSR,GIV,BFLY --blocks 64 --r4 GH \
+  --calib "$OBS_TMP/hessians.bin" \
+  --proxy full --out "$OBS_TMP/plan_full.json" >/dev/null
+grep -q '"layers"' "$OBS_TMP/plan_diag.json"
+grep -q '"layers"' "$OBS_TMP/plan_full.json"
+if ./target/release/gsr search --synthetic --threads 2 \
+  --r1 GSR,GIV,BFLY --blocks 64 --r4 GH \
+  --proxy full --out "$OBS_TMP/plan_bad.json" >/dev/null 2>&1; then
+  echo "--proxy full without --calib must fail loudly"; exit 1
+fi
+echo "search smoke OK"
+
 # Benches are not run in tier-1 (wall-clock noise), but they must keep
 # compiling — they double as integration surface for the public API.
 echo "== cargo bench --no-run =="
 cargo bench --no-run
+
+# Guard committed bench baselines: the differ is a no-op when no fresh
+# BENCH_*.json runs exist (tier-1 never runs benches), but when a run
+# is present it fails the build on any >=2% direction-aware regression.
+if command -v python3 >/dev/null 2>&1; then
+  echo "== bench_diff --fail-on-regression =="
+  python3 ../scripts/bench_diff.py --fail-on-regression
+else
+  echo "python3 unavailable — bench baseline diff skipped"
+fi
 
 # Scalar-fallback pass: the fast kernels must build and hold their
 # conformance bound without the `simd` feature (non-x86_64 targets,
